@@ -1,0 +1,6 @@
+"""Make the build-time `compile` package importable when pytest runs from
+the repository root (tests also run from python/ via `make test`)."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent / "python"))

@@ -1,0 +1,21 @@
+//! Scenario: cross-modal generalization (paper §5.3.1 / Fig 9) — Qwen2-Audio
+//! on an audio-language workload. The audio encoder's final average pool
+//! balances encoder/LLM compute, the regime where DFLOP's decoupled
+//! parallelism helps most.
+//!
+//!   cargo run --release --offline --example audio_modality -- [--nodes 4]
+
+use dflop::figures::{fig09, FigOpts};
+use dflop::util::cli::{Args, Spec};
+
+fn main() -> anyhow::Result<()> {
+    let spec = Spec { valued: vec!["nodes", "gbs", "iters", "seed"], boolean: vec![] };
+    let args = Args::parse(std::env::args().skip(1), &spec)?;
+    let mut o = FigOpts::default();
+    o.nodes = args.get_usize("nodes", 4)?;
+    o.gbs = args.get_usize("gbs", 128)?;
+    o.iters = args.get_usize("iters", 4)?;
+    o.seed = args.get_u64("seed", 42)?;
+    print!("{}", fig09(&o));
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Scenario: the paper's headline experiment — LLaVA-OV training on the
+//! heterogeneous mixed dataset (Table 2), DFLOP vs Megatron-LM vs PyTorch
+//! on a simulated 4-node HGX A100 cluster (Fig 7 / Fig 13 style).
+//!
+//!   cargo run --release --offline --example mixed_dataset_sim -- [--nodes 4] [--gbs 128]
+
+use dflop::model::catalog::{llava_ov, llama3, qwen25};
+use dflop::sim::{run_system, RunConfig, SystemKind};
+use dflop::util::cli::{Args, Spec};
+use dflop::util::table::{f, speedup, Table};
+
+fn main() -> anyhow::Result<()> {
+    let spec = Spec { valued: vec!["nodes", "gbs", "iters", "seed"], boolean: vec![] };
+    let args = Args::parse(std::env::args().skip(1), &spec)?;
+    let cfg = RunConfig::new(
+        args.get_usize("nodes", 4)?,
+        args.get_usize("gbs", 128)?,
+        args.get_usize("iters", 4)?,
+        args.get_u64("seed", 42)?,
+    );
+    let mut t = Table::new(
+        "mixed-dataset training (simulated HGX A100 cluster)",
+        &["model", "system", "TFLOP/s per GPU", "iter time (s)", "idle GPU·s", "vs DFLOP"],
+    );
+    for (label, m) in [
+        ("LLaVA-OV (Llama-3 8B)", llava_ov(llama3("8b"))),
+        ("LLaVA-OV (Qwen-2.5 72B)", llava_ov(qwen25("72b"))),
+    ] {
+        let d = run_system(SystemKind::Dflop, &m, "mixed", &cfg);
+        for (kind, r) in [
+            (SystemKind::Dflop, &d),
+            (SystemKind::Megatron, &run_system(SystemKind::Megatron, &m, "mixed", &cfg)),
+            (SystemKind::Pytorch, &run_system(SystemKind::Pytorch, &m, "mixed", &cfg)),
+        ] {
+            t.row(vec![
+                label.to_string(),
+                kind.label().to_string(),
+                f(r.per_gpu_throughput / 1e12, 1),
+                f(r.mean_iteration_time, 2),
+                f(r.mean_idle, 1),
+                speedup(d.speedup_over(r)),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}

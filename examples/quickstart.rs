@@ -1,0 +1,98 @@
+//! Quickstart: the full DFLOP offline + online flow on one workload.
+//!
+//!   cargo run --release --offline --example quickstart
+//!
+//! Profiles the model and dataset, runs the Data-aware 3D Parallelism
+//! Optimizer (Algorithm 1), schedules one global batch with the hybrid
+//! ILP/LPT mechanism, and simulates the resulting iteration against the
+//! A100 cluster model — comparing with random microbatching.
+
+use dflop::data::dataset::Dataset;
+use dflop::model::catalog::{llava_ov, llama3};
+use dflop::optimizer::search::{optimize, OptimizerInputs};
+use dflop::perfmodel::{ClusterSpec, Truth};
+use dflop::pipeline::build::{iterate, SystemPlan};
+use dflop::profiling::backend::SimBackend;
+use dflop::profiling::engine::{profile_data, ModelProfiler, ProfilerGrids};
+use dflop::profiling::estimator::Estimator;
+use dflop::scheduler::correction::{Correction, CorrectionConfig};
+use dflop::scheduler::online::{OnlineScheduler, SchedulerConfig};
+use dflop::util::table::secs;
+
+fn main() {
+    // 1. The workload: LLaVA-OV (Llama-3 8B) on the Table-2 mixed dataset,
+    //    one HGX A100 node.
+    let m = llava_ov(llama3("8b"));
+    let cluster = ClusterSpec::hgx_a100(1);
+    let truth = Truth::new(cluster);
+    let gbs = 64;
+
+    // 2. Profiling Engine (§3.2): model grids + dataset statistics.
+    let mut backend = SimBackend::new(truth.clone());
+    let profile =
+        ModelProfiler::new(&mut backend, ProfilerGrids::standard(8)).profile(&m);
+    let mut ds = Dataset::mixed(42);
+    let data = profile_data(&m, &mut ds, 512);
+    println!(
+        "profiled {}: mean eff. batch {:.1}, mean packed seq {:.0}",
+        profile.model_name,
+        data.mean_units(),
+        data.mean_seq()
+    );
+
+    // 3. Data-aware 3D Parallelism Optimizer (§3.3, Algorithm 1).
+    let inp = OptimizerInputs {
+        m: &m,
+        profile: &profile,
+        data: &data,
+        n_gpus: cluster.total_gpus(),
+        gpus_per_node: cluster.gpus_per_node,
+        mem_capacity: cluster.gpu.mem_bytes,
+        gbs,
+        assume_balanced: true,
+    };
+    let plan = optimize(&inp).expect("feasible configuration");
+    println!(
+        "theta* = {}  (expected makespan {}, {} candidates, {:?})",
+        plan.theta,
+        secs(plan.expected_makespan),
+        plan.candidates_scanned,
+        plan.elapsed
+    );
+
+    // 4. Online Microbatch Scheduler (§3.4) on one global batch.
+    let est = Estimator::new(&m, &profile.throughput);
+    let scheduler = OnlineScheduler::new(
+        plan.theta,
+        SchedulerConfig::default(),
+        Correction::new(CorrectionConfig::default()),
+    );
+    let shapes = ds.shaped_batch(&m, gbs);
+    let sched = scheduler.schedule(&est, &shapes);
+    println!(
+        "scheduled {} items into {} buckets in {} ({:?}, imbalance {:.2}%)",
+        gbs,
+        sched.assignment.buckets.len(),
+        secs(sched.elapsed.as_secs_f64()),
+        sched.solver,
+        sched.imbalance * 100.0
+    );
+
+    // 5. Execute the iteration on the simulated cluster (vs random).
+    let sys = SystemPlan { m: &m, truth: &truth, theta: plan.theta };
+    let to_buckets = |groups: &Vec<Vec<usize>>| -> Vec<Vec<_>> {
+        groups.iter().map(|g| g.iter().map(|&i| shapes[i]).collect()).collect()
+    };
+    let balanced = iterate(&sys, &to_buckets(&sched.assignment.buckets));
+    let mut rng = dflop::util::rng::Rng::new(7);
+    let rand = scheduler.schedule_random(&est, &shapes, &mut rng);
+    let random = iterate(&sys, &to_buckets(&rand.assignment.buckets));
+    println!(
+        "iteration time: DFLOP {} vs random {}  ({:.2}x); idle {} vs {}",
+        secs(balanced.iteration_time),
+        secs(random.iteration_time),
+        random.iteration_time / balanced.iteration_time,
+        secs(balanced.total_idle()),
+        secs(random.total_idle()),
+    );
+}

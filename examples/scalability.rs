@@ -1,0 +1,19 @@
+//! Scenario: cluster-scale sweep (paper §5.3.4 / Fig 12) — how the
+//! DFLOP-vs-baseline gap evolves from 1 to 8 measured nodes plus the
+//! 16/32-node projection.
+//!
+//!   cargo run --release --offline --example scalability -- [--gbs 128]
+
+use dflop::figures::{fig12, FigOpts};
+use dflop::util::cli::{Args, Spec};
+
+fn main() -> anyhow::Result<()> {
+    let spec = Spec { valued: vec!["gbs", "iters", "seed"], boolean: vec![] };
+    let args = Args::parse(std::env::args().skip(1), &spec)?;
+    let mut o = FigOpts::default();
+    o.gbs = args.get_usize("gbs", 128)?;
+    o.iters = args.get_usize("iters", 3)?;
+    o.seed = args.get_u64("seed", 42)?;
+    print!("{}", fig12(&o));
+    Ok(())
+}

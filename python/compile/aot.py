@@ -1,0 +1,197 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts + manifest.
+
+Run once by ``make artifacts``; python never executes at training time.
+
+Outputs (under ``artifacts/``):
+
+- ``train_step_<cfg>_i<n_img>_s<seq>.hlo.txt`` — one SGD step per shape
+  bucket. Inputs (in order): every parameter tensor (in ``param_specs``
+  order), then ``patches``, ``token_ids``, ``segment_ids``, ``img_index``,
+  ``lr``. Outputs: every new parameter tensor, then the scalar loss.
+- ``encoder_fwd_<cfg>_i<n>.hlo.txt`` — encoder+connector forward for the
+  PJRT profiling backend's effective-batch grid.
+- ``llm_fwd_<cfg>_s<seq>.hlo.txt`` — LLM forward for the sequence grid.
+- ``params_<cfg>.bin`` — initial parameters, concatenated f32
+  little-endian in spec order.
+- ``manifest.json`` — shapes, offsets, bucket list, task constants; parsed
+  by ``rust/src/runtime/artifacts.rs``.
+
+Interchange is HLO text, NOT ``.serialize()``: jax ≥ 0.5 emits protos with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile import task
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train_step(cfg, specs, n_img, seq):
+    names = [n for n, _ in specs]
+
+    def step_fn(*args):
+        n = len(names)
+        params = dict(zip(names, args[:n]))
+        patches, token_ids, segment_ids, img_index, lr = args[n:]
+        new_params, loss = M.train_step(
+            params, cfg, (patches, token_ids, segment_ids, img_index), lr
+        )
+        return tuple(new_params[name] for name in names) + (loss,)
+
+    arg_specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in specs
+    ] + [
+        jax.ShapeDtypeStruct((n_img, cfg.tokens_per_image, cfg.patch_dim), jnp.float32),
+        jax.ShapeDtypeStruct((seq,), jnp.int32),
+        jax.ShapeDtypeStruct((seq,), jnp.int32),
+        jax.ShapeDtypeStruct((seq,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    ]
+    return to_hlo_text(jax.jit(step_fn).lower(*arg_specs))
+
+
+def lower_encoder_fwd(cfg, specs, n_img):
+    names = [n for n, _ in specs]
+
+    def fwd(*args):
+        params = dict(zip(names, args[: len(names)]))
+        return (M.encoder_forward(params, cfg, args[len(names)]),)
+
+    arg_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs] + [
+        jax.ShapeDtypeStruct((n_img, cfg.tokens_per_image, cfg.patch_dim), jnp.float32)
+    ]
+    return to_hlo_text(jax.jit(fwd).lower(*arg_specs))
+
+
+def lower_llm_fwd(cfg, specs, seq):
+    names = [n for n, _ in specs]
+
+    def fwd(*args):
+        params = dict(zip(names, args[: len(names)]))
+        token_ids, segment_ids, img_index, visual = args[len(names):]
+        return (M.llm_forward(params, cfg, token_ids, segment_ids, img_index, visual),)
+
+    arg_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs] + [
+        jax.ShapeDtypeStruct((seq,), jnp.int32),
+        jax.ShapeDtypeStruct((seq,), jnp.int32),
+        jax.ShapeDtypeStruct((seq,), jnp.int32),
+        jax.ShapeDtypeStruct((1, cfg.hidden), jnp.float32),
+    ]
+    return to_hlo_text(jax.jit(fwd).lower(*arg_specs))
+
+
+def parse_buckets(spec: str):
+    out = []
+    for part in spec.split(","):
+        n, s = part.strip().split("x")
+        out.append((int(n), int(s)))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="small", choices=["small", "base"])
+    ap.add_argument("--buckets", default="2x256,4x512")
+    ap.add_argument("--enc-grid", default="1,2,4")
+    ap.add_argument("--llm-grid", default="128,256,512")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = M.config_by_name(args.config)
+    specs = M.param_specs(cfg)
+    os.makedirs(args.out_dir, exist_ok=True)
+    buckets = parse_buckets(args.buckets)
+    enc_grid = [int(x) for x in args.enc_grid.split(",")]
+    llm_grid = [int(x) for x in args.llm_grid.split(",")]
+
+    # ---- initial parameters ----
+    params = M.init_params(cfg, args.seed)
+    param_entries = []
+    offset = 0
+    blob = bytearray()
+    for name, shape in specs:
+        arr = np.asarray(params[name], dtype=np.float32)
+        assert arr.shape == tuple(shape), (name, arr.shape, shape)
+        raw = arr.tobytes()  # little-endian f32 on all supported hosts
+        param_entries.append(
+            {"name": name, "shape": list(shape), "offset": offset, "bytes": len(raw)}
+        )
+        blob.extend(raw)
+        offset += len(raw)
+    params_file = f"params_{args.config}.bin"
+    with open(os.path.join(args.out_dir, params_file), "wb") as f:
+        f.write(bytes(blob))
+
+    # ---- train_step per bucket ----
+    bucket_entries = []
+    for n_img, seq in buckets:
+        text = lower_train_step(cfg, specs, n_img, seq)
+        fname = f"train_step_{args.config}_i{n_img}_s{seq}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        bucket_entries.append({"n_img": n_img, "seq": seq, "file": fname})
+        print(f"wrote {fname} ({len(text) / 1e6:.1f} MB)")
+
+    # ---- profiling forward passes ----
+    enc_entries = []
+    for n in enc_grid:
+        text = lower_encoder_fwd(cfg, specs, n)
+        fname = f"encoder_fwd_{args.config}_i{n}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        enc_entries.append({"n_img": n, "file": fname})
+    llm_entries = []
+    for s in llm_grid:
+        text = lower_llm_fwd(cfg, specs, s)
+        fname = f"llm_fwd_{args.config}_s{s}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        llm_entries.append({"seq": s, "file": fname})
+
+    manifest = {
+        "config": args.config,
+        "model": {
+            "vocab": cfg.vocab,
+            "hidden": cfg.hidden,
+            "heads": cfg.heads,
+            "enc_layers": cfg.enc_layers,
+            "llm_layers": cfg.llm_layers,
+            "mlp_ratio": cfg.mlp_ratio,
+            "tokens_per_image": cfg.tokens_per_image,
+            "patch_dim": cfg.patch_dim,
+            "total_params": M.count_params(cfg),
+        },
+        "task": {"n_keys": task.N_KEYS, "noise": task.NOISE},
+        "params_file": params_file,
+        "params": param_entries,
+        "train_steps": bucket_entries,
+        "encoder_fwd": enc_entries,
+        "llm_fwd": llm_entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(
+        f"manifest.json: {M.count_params(cfg):,} params, "
+        f"{len(bucket_entries)} train buckets"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Layer-1 Pallas kernels (interpret mode) and their pure-jnp oracles."""
+from .attention import packed_attention
+from .mlp import fused_mlp
+from . import ref

@@ -1,0 +1,174 @@
+"""Packed varlen flash attention as a Pallas kernel (Layer 1).
+
+The paper's §3.2.1 observation — under sequence packing, *linear* layer cost
+depends on the packed total while *attention* cost depends on individual
+instance lengths — is realized here as a segment-masked flash kernel: one
+kernel serves any packing, the segment-id mask confines attention (and its
+cost structure) to instances.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): instead of CUDA varlen
+index arithmetic (cu_seqlens) the TPU-style kernel tiles Q into MXU-aligned
+VMEM blocks, iterates KV blocks in an online-softmax loop (running max +
+normalizer), and masks by segment id — no S×S score tensor ever exists in
+HBM.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, and interpret mode lowers the kernel to plain HLO so the AOT
+artifacts run on the rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, seg_ref, o_ref, *, block_k, causal,
+                      block_q, seq_len):
+    """One (head, q-block) grid cell.
+
+    Block shapes:
+      q_ref:   (block_q, D)   — the Q tile in VMEM
+      k_ref:   (S, D)         — full K for this head (S ≤ a few K tokens)
+      v_ref:   (S, D)
+      seg_ref: (S,)           — segment ids (shared across heads)
+      o_ref:   (block_q, D)
+    """
+    iq = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    q_pos = iq * block_q + jax.lax.iota(jnp.int32, block_q)
+    seg_q = seg_ref[pl.dslice(iq * block_q, block_q)]
+
+    n_kv = seq_len // block_k
+
+    def body(j, carry):
+        acc, m_prev, l_prev = carry
+        k_blk = k_ref[pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        v_blk = v_ref[pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        seg_k = seg_ref[pl.dslice(j * block_k, block_k)]
+        s = q @ k_blk.T * scale  # (block_q, block_k)
+        k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = (seg_q[:, None] == seg_k[None, :]) & (seg_q[:, None] != 0)
+        if causal:
+            mask = mask & (q_pos[:, None] >= k_pos[None, :])
+        s = jnp.where(mask, s, NEG_INF)
+        # Online softmax update.
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        # Rows where everything is masked: keep p at 0.
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + p @ v_blk
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_kv, body, (acc0, m0, l0))
+    out = acc / jnp.where(l > 0.0, l, 1.0)[:, None]
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _attention_fwd_impl(q, k, v, segment_ids, causal, block_q, block_k):
+    """Launch the Pallas kernel (forward only)."""
+    h, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (
+        f"seq {s} not a multiple of blocks ({block_q}, {block_k})"
+    )
+    kernel = functools.partial(
+        _attention_kernel,
+        block_k=block_k,
+        causal=causal,
+        block_q=block_q,
+        seq_len=s,
+    )
+    grid = (h, s // block_q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda ih, iq: (ih, iq, 0)),
+            pl.BlockSpec((None, s, d), lambda ih, iq: (ih, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda ih, iq: (ih, 0, 0)),
+            pl.BlockSpec((s,), lambda ih, iq: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda ih, iq: (ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), q.dtype),
+        interpret=True,
+    )(q, k, v, segment_ids)
+
+
+def _ref_attention(q, k, v, segment_ids, causal):
+    """Dense formulation used only to derive the backward pass (the flash
+    kernel runs forward; the VJP is the standard recompute-based gradient
+    expressed in XLA ops — the common fwd-kernel + XLA-bwd split)."""
+    s = q.shape[1]
+    d = q.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    seg_q = segment_ids[:, None]
+    seg_k = segment_ids[None, :]
+    mask = (seg_q == seg_k) & (seg_q != 0)
+    if causal:
+        pos = jnp.arange(s)
+        mask = mask & (pos[:, None] >= pos[None, :])
+    scores = jnp.where(mask[None], scores, NEG_INF)
+    weights = jax.nn.softmax(scores, axis=-1)
+    valid = mask.any(axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", weights, v)
+    return jnp.where(valid[None, :, None], out, 0.0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _packed_attention_core(q, k, v, segment_ids, causal, block_q, block_k):
+    return _attention_fwd_impl(q, k, v, segment_ids, causal, block_q, block_k)
+
+
+def _core_fwd(q, k, v, segment_ids, causal, block_q, block_k):
+    out = _attention_fwd_impl(q, k, v, segment_ids, causal, block_q, block_k)
+    return out, (q, k, v, segment_ids)
+
+
+def _core_bwd(causal, block_q, block_k, residuals, g):
+    q, k, v, segment_ids = residuals
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _ref_attention(q_, k_, v_, segment_ids, causal),
+        q,
+        k,
+        v,
+    )
+    dq, dk, dv = vjp(g)
+    import numpy as np
+
+    dseg = np.zeros(segment_ids.shape, dtype=jax.dtypes.float0)
+    return dq, dk, dv, dseg
+
+
+_packed_attention_core.defvjp(_core_fwd, _core_bwd)
+
+
+def packed_attention(q, k, v, segment_ids, causal=True, block_q=128, block_k=128):
+    """Segment-masked flash attention over a packed sequence.
+
+    Args:
+      q, k, v: ``(H, S, D)``; S must be a multiple of the block sizes
+        (callers pad to the AOT shape buckets anyway).
+      segment_ids: ``(S,)`` int32, 0 = padding.
+      causal: causal masking within segments (True for the LLM tower,
+        False for the encoder).
+
+    Returns:
+      ``(H, S, D)``, zeros at padding rows. Differentiable in q, k, v.
+    """
+    s = q.shape[1]
+    return _packed_attention_core(
+        q, k, v, segment_ids, causal, min(block_q, s), min(block_k, s)
+    )

@@ -1,0 +1,89 @@
+"""Fused transformer MLP as a Pallas kernel (Layer 1).
+
+``gelu(x @ w1 + b1) @ w2 + b2`` with the (4×hidden) intermediate activation
+kept entirely in VMEM: the kernel tiles the packed token dimension into
+MXU-aligned blocks and runs up-projection, activation, and down-projection
+inside one grid cell, so the intermediate never round-trips HBM — the
+TPU analogue of the fused-MLP CUDA kernels the paper's throughput profile
+attributes its "linear path" to (§3.2.1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.nn import gelu
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    h = gelu(x @ w1_ref[...] + b1_ref[...][None, :], approximate=True)
+    o_ref[...] = (h @ w2_ref[...] + b2_ref[...][None, :]).astype(o_ref.dtype)
+
+
+def _mlp_fwd_impl(x, w1, b1, w2, b2, block_t):
+    """Fused MLP over packed tokens.
+
+    Args:
+      x: ``(T, H)`` packed token activations; T must divide by ``block_t``
+        (AOT shape buckets are multiples of 128).
+      w1: ``(H, F)``; b1: ``(F,)``; w2: ``(F, H)``; b2: ``(H,)``.
+
+    Returns:
+      ``(T, H)``.
+    """
+    t, h = x.shape
+    f = w1.shape[1]
+    block_t = min(block_t, t)
+    assert t % block_t == 0, f"tokens {t} not a multiple of block {block_t}"
+    grid = (t // block_t,)
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, h), lambda i: (i, 0)),
+            pl.BlockSpec((h, f), lambda i: (0, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_t, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+
+
+def _ref_mlp(x, w1, b1, w2, b2):
+    return gelu(x @ w1 + b1, approximate=True) @ w2 + b2
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _fused_mlp_core(x, w1, b1, w2, b2, block_t):
+    return _mlp_fwd_impl(x, w1, b1, w2, b2, block_t)
+
+
+def _core_fwd(x, w1, b1, w2, b2, block_t):
+    return _mlp_fwd_impl(x, w1, b1, w2, b2, block_t), (x, w1, b1, w2, b2)
+
+
+def _core_bwd(block_t, residuals, g):
+    x, w1, b1, w2, b2 = residuals
+    _, vjp = jax.vjp(_ref_mlp, x, w1, b1, w2, b2)
+    return vjp(g)
+
+
+_fused_mlp_core.defvjp(_core_fwd, _core_bwd)
+
+
+def fused_mlp(x, w1, b1, w2, b2, block_t=128):
+    """Fused MLP over packed tokens (Pallas forward, XLA backward).
+
+    Args:
+      x: ``(T, H)`` packed token activations.
+      w1: ``(H, F)``; b1: ``(F,)``; w2: ``(F, H)``; b2: ``(H,)``.
+
+    Returns:
+      ``(T, H)``; differentiable in all five operands.
+    """
+    return _fused_mlp_core(x, w1, b1, w2, b2, min(block_t, x.shape[0]))

@@ -1,0 +1,53 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every kernel in this package must
+match its oracle to float32 tolerance across the pytest shape sweep
+(`python/tests/test_kernels.py`). They are deliberately written in the most
+obvious dense form — O(S²) score materialization, unfused MLP — so a reviewer
+can audit them at a glance.
+"""
+
+import jax.numpy as jnp
+from jax.nn import gelu, softmax
+
+NEG_INF = -1e30
+
+
+def packed_attention_ref(q, k, v, segment_ids, causal=True):
+    """Dense reference for packed varlen attention.
+
+    Args:
+      q, k, v: ``(H, S, D)`` arrays.
+      segment_ids: ``(S,)`` int32; 0 marks padding, equal non-zero ids mark
+        tokens of the same packed instance. Attention never crosses segment
+        boundaries (the paper's §3.2.1: attention must "process each original
+        instance separately to maintain causal integrity").
+      causal: apply a causal mask within each segment (LLM side). The
+        encoder side uses ``causal=False``.
+
+    Returns:
+      ``(H, S, D)`` attention output; padding rows are zero.
+    """
+    h, s, d = q.shape
+    del h
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    seg_q = segment_ids[:, None]
+    seg_k = segment_ids[None, :]
+    mask = (seg_q == seg_k) & (seg_q != 0)
+    if causal:
+        pos = jnp.arange(s)
+        mask = mask & (pos[:, None] >= pos[None, :])
+    scores = jnp.where(mask[None, :, :], scores, NEG_INF)
+    weights = softmax(scores, axis=-1)
+    # Rows with no valid key (padding) would be uniform after softmax over
+    # NEG_INF; zero them explicitly.
+    valid_row = mask.any(axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", weights, v)
+    return jnp.where(valid_row[None, :, None], out, 0.0)
+
+
+def fused_mlp_ref(x, w1, b1, w2, b2):
+    """Dense reference for the fused MLP: ``gelu(x @ w1 + b1) @ w2 + b2``."""
+    hidden = gelu(x @ w1 + b1, approximate=True)
+    return hidden @ w2 + b2

@@ -1,0 +1,230 @@
+"""Layer-2: a real (small) multimodal LLM in JAX, built on the L1 kernels.
+
+Architecture (a miniature of the paper's encoder → connector → LLM stack):
+
+- **Encoder**: linear patch embedding + transformer blocks over the packed
+  per-image token sequence (non-causal, segment-masked so images never
+  attend across each other), using `kernels.packed_attention` and
+  `kernels.fused_mlp`.
+- **Connector**: mean-pool each image's tokens + linear projection — the
+  token-reducing connector family of §2.1.
+- **LLM**: token embedding + per-token visual conditioning (each text token
+  receives its image's connector output), causal segment-masked decoder
+  blocks on the *packed* sequence (batch = 1, §3.2.1), LM head.
+- **Loss**: next-token cross-entropy within segments.
+- **train_step**: SGD on all parameters; returns (new_params, loss).
+
+Everything is shape-static per (n_images, seq_len) bucket; `aot.py` lowers
+`train_step` once per bucket to HLO text for the rust runtime. Python never
+runs at training time.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import fused_mlp, packed_attention
+
+
+class ModelConfig(NamedTuple):
+    vocab: int = 512
+    hidden: int = 256
+    heads: int = 4
+    enc_layers: int = 2
+    llm_layers: int = 4
+    mlp_ratio: int = 4
+    # Patch grid per image: tokens_per_image patches of patch_dim floats.
+    tokens_per_image: int = 16
+    patch_dim: int = 48
+
+
+SMALL = ModelConfig()
+# ≈100M parameters: the e2e example's "full-size" configuration.
+BASE = ModelConfig(
+    vocab=4096,
+    hidden=768,
+    heads=12,
+    enc_layers=4,
+    llm_layers=12,
+    tokens_per_image=16,
+    patch_dim=48,
+)
+
+
+def config_by_name(name: str) -> ModelConfig:
+    return {"small": SMALL, "base": BASE}[name]
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig):
+    """Ordered (name, shape) list — the rust runtime relies on this order."""
+    h, f = cfg.hidden, cfg.hidden * cfg.mlp_ratio
+    specs = [("enc_patch_w", (cfg.patch_dim, h)), ("enc_patch_b", (h,))]
+    for i in range(cfg.enc_layers):
+        specs += _block_specs(f"enc_{i}", h, f)
+    specs += [("conn_w", (h, h)), ("conn_b", (h,))]
+    specs += [("tok_embed", (cfg.vocab, h))]
+    for i in range(cfg.llm_layers):
+        specs += _block_specs(f"llm_{i}", h, f)
+    specs += [("head_w", (h, cfg.vocab)), ("head_b", (cfg.vocab,))]
+    return specs
+
+
+def _block_specs(prefix, h, f):
+    return [
+        (f"{prefix}_ln1_g", (h,)),
+        (f"{prefix}_ln1_b", (h,)),
+        (f"{prefix}_wqkv", (h, 3 * h)),
+        (f"{prefix}_wo", (h, h)),
+        (f"{prefix}_ln2_g", (h,)),
+        (f"{prefix}_ln2_b", (h,)),
+        (f"{prefix}_w1", (h, f)),
+        (f"{prefix}_b1", (f,)),
+        (f"{prefix}_w2", (f, h)),
+        (f"{prefix}_b2", (h,)),
+    ]
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """He-style init; returns a dict in `param_specs` order."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_b", "_b1", "_b2", "ln1_b", "ln2_b")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name.endswith(("ln1_g", "ln2_g")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            scale = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) * scale
+            )
+    return params
+
+
+def count_params(cfg: ModelConfig) -> int:
+    total = 0
+    for _, shape in param_specs(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+# --------------------------------------------------------------------------
+# Model
+# --------------------------------------------------------------------------
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _block(params, prefix, x, segment_ids, heads, causal):
+    """Pre-norm transformer block on a packed (S, H) sequence."""
+    s, h = x.shape
+    d = h // heads
+    y = _layer_norm(x, params[f"{prefix}_ln1_g"], params[f"{prefix}_ln1_b"])
+    qkv = y @ params[f"{prefix}_wqkv"]  # (S, 3H)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    # (S, H) -> (heads, S, d)
+    to_heads = lambda t: t.reshape(s, heads, d).transpose(1, 0, 2)
+    attn = packed_attention(
+        to_heads(q), to_heads(k), to_heads(v), segment_ids, causal=causal
+    )
+    attn = attn.transpose(1, 0, 2).reshape(s, h)
+    x = x + attn @ params[f"{prefix}_wo"]
+    y = _layer_norm(x, params[f"{prefix}_ln2_g"], params[f"{prefix}_ln2_b"])
+    x = x + fused_mlp(
+        y,
+        params[f"{prefix}_w1"],
+        params[f"{prefix}_b1"],
+        params[f"{prefix}_w2"],
+        params[f"{prefix}_b2"],
+    )
+    return x
+
+
+def encode_images(params, cfg: ModelConfig, patches):
+    """Encoder + connector.
+
+    Args:
+      patches: ``(n_img, tokens_per_image, patch_dim)``.
+
+    Returns:
+      ``(n_img, hidden)`` visual embeddings.
+    """
+    n_img, t, p = patches.shape
+    x = patches.reshape(n_img * t, p) @ params["enc_patch_w"] + params["enc_patch_b"]
+    # One segment per image; no padding segments on the encoder side.
+    seg = jnp.repeat(jnp.arange(1, n_img + 1, dtype=jnp.int32), t)
+    for i in range(cfg.enc_layers):
+        x = _block(params, f"enc_{i}", x, seg, cfg.heads, causal=False)
+    pooled = x.reshape(n_img, t, cfg.hidden).mean(axis=1)
+    return pooled @ params["conn_w"] + params["conn_b"]
+
+
+def forward_loss(params, cfg: ModelConfig, batch):
+    """Packed-sequence next-token loss.
+
+    `batch` fields (shape-static per bucket):
+      patches:     (n_img, tokens_per_image, patch_dim) f32
+      token_ids:   (S,) i32
+      segment_ids: (S,) i32, 0 = padding
+      img_index:   (S,) i32 — index into the image list for each token
+                   (n_img, a zero row, for tokens without an image).
+    """
+    patches, token_ids, segment_ids, img_index = batch
+    visual = encode_images(params, cfg, patches)
+    # Row n_img is a zero "no image" embedding.
+    visual = jnp.concatenate([visual, jnp.zeros((1, cfg.hidden), visual.dtype)])
+    x = params["tok_embed"][token_ids] + visual[img_index]
+    for i in range(cfg.llm_layers):
+        x = _block(params, f"llm_{i}", x, segment_ids, cfg.heads, causal=True)
+    logits = x @ params["head_w"] + params["head_b"]  # (S, V)
+
+    # Next-token targets within segments.
+    targets = jnp.roll(token_ids, -1)
+    same_seg = jnp.roll(segment_ids, -1) == segment_ids
+    valid = (segment_ids != 0) & same_seg
+    valid = valid.at[-1].set(False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[:, None], axis=-1)[:, 0]
+    denom = jnp.maximum(valid.sum(), 1)
+    return (nll * valid).sum() / denom
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def train_step(params, cfg: ModelConfig, batch, lr):
+    """One SGD step with global-norm gradient clipping at 1.0."""
+    loss, grads = jax.value_and_grad(forward_loss)(params, cfg, batch)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g * g) for g in jax.tree_util.tree_leaves(grads))
+    )
+    scale = jnp.minimum(1.0, 1.0 / jnp.maximum(gnorm, 1e-8))
+    new_params = jax.tree_util.tree_map(
+        lambda p, g: p - lr * scale * g, params, grads
+    )
+    return new_params, loss
+
+
+# Module-level fwd-only entry points for the PJRT profiling artifacts.
+def encoder_forward(params, cfg: ModelConfig, patches):
+    return encode_images(params, cfg, patches)
+
+
+def llm_forward(params, cfg: ModelConfig, token_ids, segment_ids, img_index, visual):
+    visual = jnp.concatenate([visual, jnp.zeros((1, cfg.hidden), visual.dtype)])
+    x = params["tok_embed"][token_ids] + visual[img_index]
+    for i in range(cfg.llm_layers):
+        x = _block(params, f"llm_{i}", x, segment_ids, cfg.heads, causal=True)
+    return x @ params["head_w"] + params["head_b"]

@@ -1,0 +1,64 @@
+"""Synthetic multimodal captioning task for the end-to-end example.
+
+Each instance is an (image, token sequence) pair where the sequence is only
+predictable if the model reads the image: the image carries a hidden *key*
+``k ∈ [0, N_KEYS)`` (its patches are noise around prototype ``k``), and the
+text follows ``t[j+1] = (t[j] + 1 + k) mod vocab``. A model that learns to
+decode the key from the connector output drives the next-token loss toward
+zero; one that ignores images plateaus at ``ln(N_KEYS)`` above it.
+
+The prototype construction is a closed formula (no RNG) so the rust-side
+data generator (`examples/e2e_train.rs`) reproduces the same distribution
+without sharing random state with python.
+"""
+
+import numpy as np
+
+N_KEYS = 8
+NOISE = 0.5
+
+
+def prototype(key: int, patch_dim: int) -> np.ndarray:
+    """Deterministic prototype direction for a key (same formula in rust)."""
+    j = np.arange(patch_dim, dtype=np.float64)
+    return np.sin(0.1 + 1.7 * key + 0.37 * j).astype(np.float32)
+
+
+def make_instance(rng, cfg, key: int, length: int, t0: int):
+    """One instance: patches (tokens_per_image, patch_dim) + token list."""
+    proto = prototype(key, cfg.patch_dim)
+    patches = proto[None, :] + NOISE * rng.standard_normal(
+        (cfg.tokens_per_image, cfg.patch_dim)
+    ).astype(np.float32)
+    toks = np.empty(length, dtype=np.int32)
+    toks[0] = t0 % cfg.vocab
+    for j in range(1, length):
+        toks[j] = (toks[j - 1] + 1 + key) % cfg.vocab
+    return patches, toks
+
+
+def make_batch(rng, cfg, n_img: int, seq: int):
+    """A packed batch for one (n_img, seq) shape bucket.
+
+    Returns (patches, token_ids, segment_ids, img_index) with
+    patches ``(n_img, T, P)`` and the three ``(seq,)`` int32 vectors.
+    """
+    per = seq // n_img
+    patches = np.zeros((n_img, cfg.tokens_per_image, cfg.patch_dim), np.float32)
+    token_ids = np.zeros(seq, np.int32)
+    segment_ids = np.zeros(seq, np.int32)
+    img_index = np.full(seq, n_img, np.int32)  # n_img = the zero row
+    pos = 0
+    for i in range(n_img):
+        # Variable instance lengths (multiples of 1, ≥ 8) within the bucket.
+        length = per if i < n_img - 1 else seq - pos
+        length = max(8, length - int(rng.integers(0, per // 4 + 1)))
+        length = min(length, seq - pos)
+        key = int(rng.integers(0, N_KEYS))
+        p, toks = make_instance(rng, cfg, key, length, int(rng.integers(0, cfg.vocab)))
+        patches[i] = p
+        token_ids[pos : pos + length] = toks
+        segment_ids[pos : pos + length] = i + 1
+        img_index[pos : pos + length] = i
+        pos += length
+    return patches, token_ids, segment_ids, img_index

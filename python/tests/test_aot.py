@@ -1,0 +1,73 @@
+"""AOT artifact emission: manifest structure and HLO text round-trip."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+PKG_DIR = Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--config",
+            "small",
+            "--buckets",
+            "1x128",
+            "--enc-grid",
+            "1",
+            "--llm-grid",
+            "128",
+            "--out-dir",
+            str(out),
+        ],
+        cwd=PKG_DIR,
+        check=True,
+    )
+    return out
+
+
+def test_manifest_complete(artifacts):
+    manifest = json.loads((artifacts / "manifest.json").read_text())
+    assert manifest["config"] == "small"
+    assert manifest["model"]["total_params"] > 1e6
+    assert len(manifest["train_steps"]) == 1
+    assert manifest["train_steps"][0]["n_img"] == 1
+    assert manifest["train_steps"][0]["seq"] == 128
+    assert len(manifest["encoder_fwd"]) == 1
+    assert len(manifest["llm_fwd"]) == 1
+    # Param entries tile the blob exactly.
+    offset = 0
+    for p in manifest["params"]:
+        assert p["offset"] == offset
+        n = int(np.prod(p["shape"])) if p["shape"] else 1
+        assert p["bytes"] == 4 * n
+        offset += p["bytes"]
+    blob = (artifacts / manifest["params_file"]).read_bytes()
+    assert len(blob) == offset == 4 * manifest["model"]["total_params"]
+
+
+def test_hlo_text_is_parseable_text(artifacts):
+    manifest = json.loads((artifacts / "manifest.json").read_text())
+    for entry in manifest["train_steps"]:
+        text = (artifacts / entry["file"]).read_text()
+        assert text.startswith("HloModule"), text[:80]
+        assert "ENTRY" in text
+
+
+def test_params_blob_values_finite(artifacts):
+    manifest = json.loads((artifacts / "manifest.json").read_text())
+    blob = np.frombuffer(
+        (artifacts / manifest["params_file"]).read_bytes(), dtype="<f4"
+    )
+    assert np.isfinite(blob).all()
+    assert blob.std() > 0.001  # actually initialized, not zeros

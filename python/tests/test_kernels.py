@@ -1,0 +1,158 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+The CORE correctness signal of the compile path: a seeded randomized sweep
+over shapes, segment layouts, and masking modes (hypothesis is not
+installed in this image, so the sweep uses a seeded generator with the same
+coverage intent), plus gradient checks through the custom VJPs.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import fused_mlp, packed_attention
+from compile.kernels.ref import fused_mlp_ref, packed_attention_ref
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def random_segments(rng, s, max_segments=5, pad_frac=0.25):
+    """Contiguous non-zero segments with an optional padded tail."""
+    n_pad = int(s * pad_frac * rng.random())
+    body = s - n_pad
+    n_seg = int(rng.integers(1, max_segments + 1))
+    cuts = np.sort(rng.choice(np.arange(1, body), size=n_seg - 1, replace=False)) if n_seg > 1 else np.array([], int)
+    seg = np.zeros(s, np.int32)
+    bounds = [0, *cuts.tolist(), body]
+    for i in range(n_seg):
+        seg[bounds[i] : bounds[i + 1]] = i + 1
+    return jnp.asarray(seg)
+
+
+@pytest.mark.parametrize("case", range(12))
+def test_attention_matches_ref_random_sweep(case):
+    rng = np.random.default_rng(1000 + case)
+    h = int(rng.choice([1, 2, 4]))
+    s = int(rng.choice([128, 256, 384]))
+    d = int(rng.choice([16, 32, 64]))
+    causal = bool(rng.integers(0, 2))
+    q, k, v = (
+        jnp.asarray(rng.standard_normal((h, s, d)), jnp.float32) for _ in range(3)
+    )
+    seg = random_segments(rng, s)
+    out = packed_attention(q, k, v, seg, causal=causal)
+    exp = packed_attention_ref(q, k, v, seg, causal=causal)
+    np.testing.assert_allclose(out, exp, rtol=RTOL, atol=ATOL)
+
+
+def test_attention_all_padding_is_zero():
+    rng = np.random.default_rng(7)
+    q, k, v = (
+        jnp.asarray(rng.standard_normal((2, 128, 32)), jnp.float32) for _ in range(3)
+    )
+    seg = jnp.zeros(128, jnp.int32)
+    out = packed_attention(q, k, v, seg, causal=True)
+    np.testing.assert_allclose(out, np.zeros_like(out), atol=1e-6)
+
+
+def test_attention_single_segment_equals_dense_causal():
+    rng = np.random.default_rng(8)
+    s = 256
+    q, k, v = (
+        jnp.asarray(rng.standard_normal((1, s, 32)), jnp.float32) for _ in range(3)
+    )
+    seg = jnp.ones(s, jnp.int32)
+    out = packed_attention(q, k, v, seg, causal=True)
+    # Dense causal softmax attention.
+    scale = 1.0 / np.sqrt(32.0)
+    scores = np.einsum("hqd,hkd->hqk", q, k) * scale
+    mask = np.tril(np.ones((s, s), bool))
+    scores = np.where(mask[None], scores, -1e30)
+    w = jax.nn.softmax(jnp.asarray(scores), axis=-1)
+    exp = np.einsum("hqk,hkd->hqd", w, v)
+    np.testing.assert_allclose(out, exp, rtol=RTOL, atol=ATOL)
+
+
+def test_attention_segments_are_isolated():
+    # Changing segment B's content must not affect segment A's output.
+    rng = np.random.default_rng(9)
+    s = 256
+    q = jnp.asarray(rng.standard_normal((2, s, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, s, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, s, 32)), jnp.float32)
+    seg = jnp.asarray(np.repeat([1, 2], s // 2), jnp.int32)
+    out1 = packed_attention(q, k, v, seg, causal=True)
+    k2 = k.at[:, s // 2 :, :].set(0.0)
+    v2 = v.at[:, s // 2 :, :].set(9.0)
+    out2 = packed_attention(q, k2, v2, seg, causal=True)
+    np.testing.assert_allclose(
+        out1[:, : s // 2], out2[:, : s // 2], rtol=RTOL, atol=ATOL
+    )
+
+
+def test_attention_gradients_match_ref():
+    rng = np.random.default_rng(10)
+    h, s, d = 2, 128, 16
+    q, k, v = (
+        jnp.asarray(rng.standard_normal((h, s, d)), jnp.float32) for _ in range(3)
+    )
+    seg = random_segments(rng, s)
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(packed_attention(q, k, v, seg, causal=True) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(packed_attention_ref(q, k, v, seg, causal=True) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("case", range(8))
+def test_mlp_matches_ref_random_sweep(case):
+    rng = np.random.default_rng(2000 + case)
+    t = int(rng.choice([128, 256, 512]))
+    h = int(rng.choice([32, 64, 128]))
+    f = 4 * h
+    x = jnp.asarray(rng.standard_normal((t, h)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((h, f)) * 0.05, jnp.float32)
+    b1 = jnp.asarray(rng.standard_normal(f) * 0.01, jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((f, h)) * 0.05, jnp.float32)
+    b2 = jnp.asarray(rng.standard_normal(h) * 0.01, jnp.float32)
+    out = fused_mlp(x, w1, b1, w2, b2)
+    exp = fused_mlp_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(out, exp, rtol=RTOL, atol=ATOL)
+
+
+def test_mlp_gradients_match_ref():
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((128, 32)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((32, 128)) * 0.1, jnp.float32)
+    b1 = jnp.zeros(128, jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((128, 32)) * 0.1, jnp.float32)
+    b2 = jnp.zeros(32, jnp.float32)
+    gk = jax.grad(lambda *a: jnp.sum(fused_mlp(*a) ** 2), argnums=(0, 1, 2, 3, 4))(
+        x, w1, b1, w2, b2
+    )
+    gr = jax.grad(
+        lambda *a: jnp.sum(fused_mlp_ref(*a) ** 2), argnums=(0, 1, 2, 3, 4)
+    )(x, w1, b1, w2, b2)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_mlp_block_size_invariance():
+    rng = np.random.default_rng(12)
+    x = jnp.asarray(rng.standard_normal((256, 64)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((64, 256)) * 0.05, jnp.float32)
+    b1 = jnp.zeros(256, jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((256, 64)) * 0.05, jnp.float32)
+    b2 = jnp.zeros(64, jnp.float32)
+    a = fused_mlp(x, w1, b1, w2, b2, block_t=64)
+    b = fused_mlp(x, w1, b1, w2, b2, block_t=256)
+    np.testing.assert_allclose(a, b, rtol=RTOL, atol=ATOL)

@@ -1,0 +1,107 @@
+"""L2 model tests: shapes, learning signal, masking invariants."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model as M
+from compile import task
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    cfg = M.SMALL
+    params = M.init_params(cfg, 0)
+    return cfg, params
+
+
+def make_batch(cfg, seed=0, n_img=2, seq=256):
+    rng = np.random.default_rng(seed)
+    return tuple(jnp.asarray(x) for x in task.make_batch(rng, cfg, n_img, seq))
+
+
+def test_param_count_bands():
+    # "small" is a few M params; "base" is ≈100M (the e2e full-size config).
+    assert 2e6 < M.count_params(M.SMALL) < 20e6
+    assert 80e6 < M.count_params(M.BASE) < 150e6
+
+
+def test_param_specs_match_init(small_setup):
+    cfg, params = small_setup
+    for name, shape in M.param_specs(cfg):
+        assert params[name].shape == tuple(shape), name
+    assert len(params) == len(M.param_specs(cfg))
+
+
+def test_encoder_output_shape(small_setup):
+    cfg, params = small_setup
+    patches = jnp.zeros((3, cfg.tokens_per_image, cfg.patch_dim), jnp.float32)
+    out = M.encode_images(params, cfg, patches)
+    assert out.shape == (3, cfg.hidden)
+
+
+def test_initial_loss_near_uniform(small_setup):
+    cfg, params = small_setup
+    batch = make_batch(cfg)
+    loss = M.forward_loss(params, cfg, batch)
+    # Untrained next-token loss should be within a few nats of ln(vocab).
+    assert abs(float(loss) - np.log(cfg.vocab)) < 6.0
+
+
+def test_loss_decreases_over_steps(small_setup):
+    cfg, params = small_setup
+    rng = np.random.default_rng(3)
+    p = params
+    lr = jnp.float32(0.02)
+    losses = []
+    for _ in range(30):
+        batch = tuple(
+            jnp.asarray(x) for x in task.make_batch(rng, cfg, 2, 256)
+        )
+        p, loss = M.train_step(p, cfg, batch, lr)
+        losses.append(float(loss))
+    early = np.mean(losses[:5])
+    late = np.mean(losses[-5:])
+    assert late < early - 0.5, f"no learning: {early:.2f} -> {late:.2f}"
+    assert np.isfinite(losses).all()
+
+
+def test_padding_does_not_affect_loss(small_setup):
+    # Extending the padded tail with garbage tokens must not change loss.
+    cfg, params = small_setup
+    patches, tok, seg, img = make_batch(cfg)
+    loss_a = float(M.forward_loss(params, cfg, (patches, tok, seg, img)))
+    pad = np.asarray(seg) == 0
+    tok_b = np.asarray(tok).copy()
+    tok_b[pad] = 17  # garbage in padding
+    loss_b = float(
+        M.forward_loss(params, cfg, (patches, jnp.asarray(tok_b), seg, img))
+    )
+    np.testing.assert_allclose(loss_a, loss_b, rtol=1e-6)
+
+
+def test_train_step_is_deterministic(small_setup):
+    cfg, params = small_setup
+    batch = make_batch(cfg, seed=5)
+    p1, l1 = M.train_step(params, cfg, batch, jnp.float32(0.01))
+    p2, l2 = M.train_step(params, cfg, batch, jnp.float32(0.01))
+    assert float(l1) == float(l2)
+    np.testing.assert_array_equal(p1["head_w"], p2["head_w"])
+
+
+def test_image_conditioning_matters(small_setup):
+    # Zeroing the images must change the loss: the model consumes them.
+    cfg, params = small_setup
+    # Take a few gradient steps first so image pathways carry signal.
+    rng = np.random.default_rng(4)
+    p = params
+    for _ in range(10):
+        batch = tuple(jnp.asarray(x) for x in task.make_batch(rng, cfg, 2, 256))
+        p, _ = M.train_step(p, cfg, batch, jnp.float32(0.02))
+    patches, tok, seg, img = make_batch(cfg, seed=6)
+    loss_with = float(M.forward_loss(p, cfg, (patches, tok, seg, img)))
+    loss_without = float(
+        M.forward_loss(p, cfg, (jnp.zeros_like(patches), tok, seg, img))
+    )
+    assert abs(loss_with - loss_without) > 1e-4

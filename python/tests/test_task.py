@@ -1,0 +1,59 @@
+"""Synthetic task generator invariants (mirrored by the rust data gen)."""
+
+import numpy as np
+
+from compile import model as M
+from compile import task
+
+
+def test_prototypes_are_distinct():
+    protos = [task.prototype(k, 48) for k in range(task.N_KEYS)]
+    for i in range(task.N_KEYS):
+        for j in range(i + 1, task.N_KEYS):
+            assert np.linalg.norm(protos[i] - protos[j]) > 1.0, (i, j)
+
+
+def test_instance_token_recurrence():
+    rng = np.random.default_rng(0)
+    cfg = M.SMALL
+    _, toks = task.make_instance(rng, cfg, key=3, length=32, t0=100)
+    for j in range(1, 32):
+        assert toks[j] == (toks[j - 1] + 1 + 3) % cfg.vocab
+
+
+def test_batch_structure():
+    rng = np.random.default_rng(1)
+    cfg = M.SMALL
+    for n_img, seq in [(1, 128), (2, 256), (4, 512)]:
+        patches, tok, seg, img = task.make_batch(rng, cfg, n_img, seq)
+        assert patches.shape == (n_img, cfg.tokens_per_image, cfg.patch_dim)
+        assert tok.shape == seg.shape == img.shape == (seq,)
+        # Segments are contiguous, start at 1, ascend.
+        nz = seg[seg != 0]
+        assert nz.min() == 1 and nz.max() <= n_img
+        changes = np.flatnonzero(np.diff(seg))
+        assert len(changes) <= n_img  # contiguous blocks + padding tail
+        # img_index consistent with segments.
+        for i in range(1, n_img + 1):
+            sel = seg == i
+            if sel.any():
+                assert (img[sel] == i - 1).all()
+        assert (img[seg == 0] == n_img).all()
+        # Tokens within range.
+        assert tok.min() >= 0 and tok.max() < cfg.vocab
+
+
+def test_batch_keys_vary():
+    rng = np.random.default_rng(2)
+    cfg = M.SMALL
+    # Across many instances the implied keys should cover several values.
+    keys = set()
+    for _ in range(20):
+        _, tok, seg, _ = task.make_batch(rng, cfg, 2, 256)
+        for i in (1, 2):
+            sel = np.flatnonzero(seg == i)
+            if len(sel) >= 2:
+                a, b = tok[sel[0]], tok[sel[1]]
+                keys.add((int(b) - int(a) - 1) % cfg.vocab)
+    assert len(keys) >= 4
+    assert all(k < task.N_KEYS for k in keys)

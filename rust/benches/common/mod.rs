@@ -1,0 +1,36 @@
+//! Minimal bench harness (criterion is not in the offline vendor set):
+//! warm-up + repeated timing with mean/min/max reporting.
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Measured repetitions (reported in the printed line).
+    #[allow(dead_code)]
+    pub reps: usize,
+}
+
+pub fn bench<F: FnMut()>(name: &str, reps: usize, mut f: F) -> BenchResult {
+    f(); // warm-up
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / reps as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    let r = BenchResult { name: name.to_string(), mean, min, max, reps };
+    println!(
+        "{:56} mean {:>10} min {:>10} max {:>10} ({} reps)",
+        r.name,
+        dflop::util::table::secs(r.mean),
+        dflop::util::table::secs(r.min),
+        dflop::util::table::secs(r.max),
+        reps
+    );
+    r
+}

@@ -1,0 +1,16 @@
+//! Bench: wall-clock of every figure regeneration (one per paper
+//! table/figure). The whole evaluation section must regenerate in minutes.
+mod common;
+use common::bench;
+use dflop::figures::{by_id, FigOpts};
+
+fn main() {
+    println!("== figures_bench (per-figure regeneration cost) ==");
+    let mut o = FigOpts::default();
+    o.iters = 3;
+    for id in ["1", "2", "4", "7", "8", "9", "10", "11", "12", "13", "14", "15", "16"] {
+        bench(&format!("figure {id}"), 1, || {
+            std::hint::black_box(by_id(id, &o).expect("figure id").len());
+        });
+    }
+}

@@ -1,0 +1,37 @@
+//! Bench: Data-aware 3D Parallelism Optimizer (paper Fig 16a).
+//!
+//! Target: < 200 ms at 1024 GPUs / GBS 2048 (the paper's "negligible even
+//! for large clusters" claim).
+mod common;
+use common::bench;
+use dflop::data::dataset::Dataset;
+use dflop::model::catalog::{llava_ov, llama3};
+use dflop::optimizer::search::{optimize, OptimizerInputs};
+use dflop::perfmodel::{ClusterSpec, Truth};
+use dflop::profiling::backend::SimBackend;
+use dflop::profiling::engine::{profile_data, ModelProfiler, ProfilerGrids};
+
+fn main() {
+    let m = llava_ov(llama3("8b"));
+    let mut backend = SimBackend::new(Truth::new(ClusterSpec::hgx_a100(1)));
+    let profile = ModelProfiler::new(&mut backend, ProfilerGrids::standard(8)).profile(&m);
+    let mut ds = Dataset::mixed(42);
+    let data = profile_data(&m, &mut ds, 256);
+    println!("== optimizer_bench (Fig 16a) ==");
+    for &(gpus, gbs) in &[(64usize, 512usize), (256, 1024), (1024, 2048)] {
+        let inp = OptimizerInputs {
+            m: &m,
+            profile: &profile,
+            data: &data,
+            n_gpus: gpus,
+            gpus_per_node: 8,
+            mem_capacity: ClusterSpec::hgx_a100(1).gpu.mem_bytes,
+            gbs,
+            assume_balanced: true,
+        };
+        bench(&format!("optimize gpus={gpus} gbs={gbs}"), 3, || {
+            let r = optimize(&inp).expect("feasible");
+            std::hint::black_box(r.theta);
+        });
+    }
+}

@@ -1,0 +1,44 @@
+//! Bench: 1F1B pipeline engine + full iteration simulation (supports the
+//! end-to-end figures — one simulated iteration must stay in the ms range
+//! so the figure sweeps complete in seconds).
+mod common;
+use common::bench;
+use dflop::data::dataset::Dataset;
+use dflop::model::catalog::{llava_ov, llama3};
+use dflop::optimizer::plan::{ModPar, Theta};
+use dflop::perfmodel::{ClusterSpec, Truth};
+use dflop::pipeline::build::{iterate, SystemPlan};
+use dflop::pipeline::sim::{simulate, Route};
+
+fn main() {
+    println!("== pipeline_bench ==");
+    // Raw engine: 256 buckets × 16 stages.
+    let routes: Vec<Route> = (0..256)
+        .map(|i| Route {
+            stages: (0..16).collect(),
+            fwd: vec![1.0 + (i % 7) as f64 * 0.1; 16],
+            bwd: vec![2.0; 16],
+            comm: vec![0.0; 16],
+        })
+        .collect();
+    bench("1F1B engine 256 buckets x 16 stages", 10, || {
+        std::hint::black_box(simulate(16, &routes).makespan);
+    });
+
+    // Full iteration with ground-truth durations.
+    let m = llava_ov(llama3("8b"));
+    let truth = Truth::new(ClusterSpec::hgx_a100(4));
+    let theta = Theta {
+        enc: ModPar { tp: 1, pp: 1, dp: 4 },
+        llm: ModPar { tp: 2, pp: 7, dp: 2 },
+        n_mb: 16,
+    };
+    let plan = SystemPlan { m: &m, truth: &truth, theta };
+    let mut ds = Dataset::mixed(1);
+    let buckets: Vec<Vec<_>> = (0..theta.buckets())
+        .map(|_| ds.shaped_batch(&m, 4))
+        .collect();
+    bench("full iteration (32 GPUs, 128 items)", 10, || {
+        std::hint::black_box(iterate(&plan, &buckets).iteration_time);
+    });
+}

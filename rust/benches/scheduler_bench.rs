@@ -1,0 +1,35 @@
+//! Bench: Online Microbatch Scheduler (paper Fig 16b).
+//!
+//! ILP with a strict 50 ms limit; LPT fallback at large GBS; imbalance vs
+//! the perfect-balance lower bound stays ≈1% (the paper's claim).
+mod common;
+use common::bench;
+use dflop::data::dataset::Dataset;
+use dflop::model::catalog::{llava_ov, llama3};
+use dflop::scheduler::ilp;
+use dflop::scheduler::lpt::{self, ItemCost};
+use std::time::Duration;
+
+fn main() {
+    let m = llava_ov(llama3("8b"));
+    let mut ds = Dataset::mixed(42);
+    println!("== scheduler_bench (Fig 16b) ==");
+    for &gbs in &[64usize, 256, 1024, 2048] {
+        let shapes = ds.shaped_batch(&m, gbs);
+        let items: Vec<ItemCost> = shapes
+            .iter()
+            .map(|s| ItemCost { enc: s.units as f64, llm: s.llm_seq as f64 })
+            .collect();
+        let buckets = (gbs / 8).max(2);
+        let lb = lpt::lower_bound(&items, buckets);
+        let mut imb = 0.0;
+        bench(&format!("hybrid ILP/LPT gbs={gbs} m={buckets}"), 5, || {
+            let r = ilp::solve(&items, buckets, Duration::from_millis(50));
+            imb = (r.assignment.c_max() / lb - 1.0).max(0.0);
+        });
+        println!("    imbalance vs lower bound: {:.3}%", imb * 100.0);
+        bench(&format!("LPT only gbs={gbs} m={buckets}"), 5, || {
+            std::hint::black_box(lpt::lpt(&items, buckets).c_max());
+        });
+    }
+}

@@ -1,0 +1,260 @@
+//! Homogeneous 3D-parallelism tuners for the baseline systems.
+
+use crate::data::item::ItemShape;
+use crate::model::catalog::Mllm;
+use crate::optimizer::plan::{ModPar, Theta};
+use crate::perfmodel::{ClusterSpec, Truth};
+
+/// Software-stack overhead of the plain-PyTorch baseline relative to
+/// Megatron-grade fused kernels (~6% — unfused LayerNorm/bias-add paths).
+pub const PYTORCH_SOFTWARE_FACTOR: f64 = 1.06;
+
+/// A tuned homogeneous configuration expressed in DFLOP's θ terms:
+/// encoder on pipeline stage 0 (`enc.pp = 1`), LLM on the remaining
+/// `pp − 1` stages, shared TP and DP.
+#[derive(Clone, Copy, Debug)]
+pub struct HomogeneousChoice {
+    pub theta: Theta,
+    /// Point-estimate iteration time used for tuning (diagnostics).
+    pub est_makespan: f64,
+}
+
+/// Memory feasibility for a homogeneous candidate, using the ground-truth
+/// closed forms (the baselines are assumed competently configured — they
+/// do not OOM in the paper either).
+fn fits_memory(
+    m: &Mllm,
+    cluster: &ClusterSpec,
+    tp: usize,
+    llm_pp: usize,
+    mean_units_mb: f64,
+    mean_seq_mb: f64,
+    total_pp: usize,
+) -> bool {
+    let cap = cluster.gpu.mem_bytes;
+    let e_layers = m.encoder.layers as f64;
+    let l_layers = m.llm.layers as f64 / llm_pp as f64;
+    let mem_e = m.encoder_model_state_bytes(e_layers, tp)
+        + total_pp as f64 * m.encoder_act_bytes(e_layers, tp, mean_units_mb);
+    let mem_l = m.llm_model_state_bytes(l_layers, tp)
+        + llm_pp as f64 * m.llm_act_bytes(l_layers, tp, mean_seq_mb);
+    mem_e <= cap && mem_l <= cap
+}
+
+/// Point-estimate (mean-shape) iteration time of a homogeneous candidate —
+/// the data-agnostic tuning objective.
+fn point_estimate(
+    m: &Mllm,
+    truth: &Truth,
+    theta: Theta,
+    mean_units: f64,
+    mean_seq: f64,
+    gbs: usize,
+) -> f64 {
+    let items_per_mb = gbs as f64 / (theta.n_mb as f64 * theta.llm.dp as f64);
+    let e_t = truth.encoder_stage_time(
+        m,
+        mean_units * items_per_mb,
+        m.encoder.layers as f64 / theta.enc.pp as f64,
+        theta.enc.tp,
+    );
+    // Point estimate treats the microbatch as one packed mean-shape batch —
+    // exactly the homogeneity assumption the paper criticizes.
+    let seqs = vec![mean_seq; items_per_mb.round().max(1.0) as usize];
+    let l_t = truth.llm_stage_time(
+        m,
+        &seqs,
+        m.llm.layers as f64 / theta.llm.pp as f64,
+        theta.llm.tp,
+    );
+    (theta.n_mb + theta.pipeline_depth() - 1) as f64 * e_t.max(l_t)
+}
+
+/// All homogeneous candidates for a cluster: `tp · pp · dp = N_gpus`,
+/// `pp ≥ 2` (stage 0 hosts the encoder), `dp | GBS`.
+fn homogeneous_candidates(
+    cluster: &ClusterSpec,
+    max_pp: usize,
+    gbs: usize,
+) -> Vec<(usize, usize, usize)> {
+    let n = cluster.total_gpus();
+    let mut out = Vec::new();
+    let mut tp = 1;
+    while tp <= cluster.gpus_per_node {
+        if n % tp == 0 {
+            let rest = n / tp;
+            for pp in 2..=rest.min(max_pp) {
+                if rest % pp == 0 {
+                    let dp = rest / pp;
+                    if gbs % dp == 0 || dp <= gbs {
+                        out.push((tp, pp, dp));
+                    }
+                }
+            }
+        }
+        tp *= 2;
+    }
+    out
+}
+
+fn choice_from(
+    m: &Mllm,
+    truth: &Truth,
+    tp: usize,
+    pp: usize,
+    dp: usize,
+    n_mb: usize,
+    mean_units: f64,
+    mean_seq: f64,
+    gbs: usize,
+) -> HomogeneousChoice {
+    let theta = Theta {
+        enc: ModPar { tp, pp: 1, dp },
+        llm: ModPar { tp, pp: pp - 1, dp },
+        n_mb,
+    };
+    let est = point_estimate(m, truth, theta, mean_units, mean_seq, gbs);
+    HomogeneousChoice { theta, est_makespan: est }
+}
+
+/// Megatron-LM-style tuning: exhaustively score homogeneous candidates on
+/// the mean shape and pick the best; microbatch count maximized (one item
+/// per microbatch where memory allows) for minimal theoretical bubble
+/// fraction — the conventional best practice the paper contrasts with
+/// DFLOP's deliberately smaller `N_mb` (§5.3.5).
+pub fn megatron_tune(
+    m: &Mllm,
+    truth: &Truth,
+    gbs: usize,
+    mean_units: f64,
+    mean_seq: f64,
+) -> Option<HomogeneousChoice> {
+    let cluster = &truth.cluster;
+    let mut best: Option<HomogeneousChoice> = None;
+    for (tp, pp, dp) in homogeneous_candidates(cluster, m.llm.layers + 1, gbs) {
+        // Max microbatches given per-DP-group item budget.
+        let max_mb = (gbs / dp).max(1);
+        for n_mb in [max_mb, max_mb.div_ceil(2), max_mb.div_ceil(4)] {
+            let items_mb = gbs as f64 / (n_mb as f64 * dp as f64);
+            if !fits_memory(
+                m,
+                cluster,
+                tp,
+                pp - 1,
+                mean_units * items_mb,
+                mean_seq * items_mb,
+                pp,
+            ) {
+                continue;
+            }
+            let c = choice_from(m, truth, tp, pp, dp, n_mb, mean_units, mean_seq, gbs);
+            if best
+                .as_ref()
+                .map(|b| c.est_makespan < b.est_makespan)
+                .unwrap_or(true)
+            {
+                best = Some(c);
+            }
+        }
+    }
+    best
+}
+
+/// Plain-PyTorch-style tuning: the common hand recipe — smallest TP that
+/// fits, smallest workable PP, the rest DP; microbatches maximized.
+pub fn pytorch_tune(
+    m: &Mllm,
+    truth: &Truth,
+    gbs: usize,
+    mean_units: f64,
+    mean_seq: f64,
+) -> Option<HomogeneousChoice> {
+    let cluster = &truth.cluster;
+    let mut cands = homogeneous_candidates(cluster, m.llm.layers + 1, gbs);
+    // Hand-tuning order: prefer small tp, then small pp (maximize dp).
+    cands.sort_by_key(|&(tp, pp, _)| (tp, pp));
+    for (tp, pp, dp) in cands {
+        let n_mb = (gbs / dp).max(1);
+        let items_mb = gbs as f64 / (n_mb as f64 * dp as f64);
+        if fits_memory(
+            m,
+            cluster,
+            tp,
+            pp - 1,
+            mean_units * items_mb,
+            mean_seq * items_mb,
+            pp,
+        ) {
+            return Some(choice_from(
+                m, truth, tp, pp, dp, n_mb, mean_units, mean_seq, gbs,
+            ));
+        }
+    }
+    None
+}
+
+/// Random microbatch partition used by both baselines: equal *counts* per
+/// bucket, composition uncontrolled (§3.4).
+pub fn random_buckets(
+    shapes: &[ItemShape],
+    n_buckets: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> Vec<Vec<ItemShape>> {
+    let mut order: Vec<usize> = (0..shapes.len()).collect();
+    rng.shuffle(&mut order);
+    let mut out: Vec<Vec<ItemShape>> = vec![Vec::new(); n_buckets];
+    for (pos, &i) in order.iter().enumerate() {
+        out[pos % n_buckets].push(shapes[i]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::catalog::{llava_ov, llama3, qwen25};
+
+    #[test]
+    fn megatron_finds_feasible_homogeneous_config() {
+        let m = llava_ov(llama3("8b"));
+        let truth = Truth::new(ClusterSpec::hgx_a100(4));
+        let c = megatron_tune(&m, &truth, 128, 15.0, 3000.0).expect("config");
+        // Homogeneity invariants.
+        assert_eq!(c.theta.enc.tp, c.theta.llm.tp);
+        assert_eq!(c.theta.enc.dp, c.theta.llm.dp);
+        assert_eq!(c.theta.enc.pp, 1);
+        assert_eq!(c.theta.gpus(), 32);
+    }
+
+    #[test]
+    fn pytorch_prefers_small_tp() {
+        let m = llava_ov(llama3("8b"));
+        let truth = Truth::new(ClusterSpec::hgx_a100(4));
+        let c = pytorch_tune(&m, &truth, 128, 15.0, 3000.0).expect("config");
+        // 8B fits at tp=1 with modest pp.
+        assert_eq!(c.theta.llm.tp, 1, "{:?}", c.theta);
+    }
+
+    #[test]
+    fn big_model_forces_model_parallel_baseline() {
+        let m = llava_ov(qwen25("72b"));
+        let truth = Truth::new(ClusterSpec::hgx_a100(8));
+        let c = megatron_tune(&m, &truth, 256, 15.0, 3000.0).expect("config");
+        let slice = c.theta.llm.tp * (c.theta.llm.pp + 1);
+        assert!(slice >= 16, "72B needs a large model-parallel slice: {:?}", c.theta);
+    }
+
+    #[test]
+    fn random_buckets_partition_with_even_counts() {
+        let shapes: Vec<ItemShape> = (0..37)
+            .map(|i| ItemShape { units: i as u32 % 5, llm_seq: 100 + i as u32, source: 0 })
+            .collect();
+        let mut rng = crate::util::rng::Rng::new(3);
+        let buckets = random_buckets(&shapes, 8, &mut rng);
+        let total: usize = buckets.iter().map(Vec::len).sum();
+        assert_eq!(total, 37);
+        let max = buckets.iter().map(Vec::len).max().unwrap();
+        let min = buckets.iter().map(Vec::len).min().unwrap();
+        assert!(max - min <= 1, "counts must be even: {max} vs {min}");
+    }
+}

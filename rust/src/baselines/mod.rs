@@ -1,0 +1,29 @@
+//! Baseline systems (§5.1): Megatron-LM-style and plain-PyTorch-style
+//! homogeneous 3D parallelism.
+//!
+//! Both baselines share the structural constraints the paper attributes to
+//! conventional frameworks:
+//!
+//! - **homogeneous parallelism**: one (TP, DP) pair for the whole model;
+//!   the modality encoder occupies pipeline stage 0 and the LLM the
+//!   remaining stages (Fig 1 "real case"), so the encoder stage gets exactly
+//!   one pipeline stage's worth of GPUs regardless of its compute share;
+//! - **data-agnostic tuning**: the configuration is selected against a
+//!   single point estimate (the mean input shape), not the distribution;
+//! - **random microbatching**: items are assigned to microbatches randomly
+//!   (equal counts, uncontrolled loads).
+//!
+//! They differ in tuning quality and software overhead:
+//!
+//! - [`megatron_tune`] searches all homogeneous candidates and picks the
+//!   best mean-shape makespan ("manually tuned following conventional best
+//!   practices to achieve their best possible performance", §5.1) and runs
+//!   at `software_factor = 1.0`;
+//! - [`pytorch_tune`] follows the common hand-tuning recipe — smallest TP
+//!   that fits memory, then pipeline depth by memory need, microbatch count
+//!   maxed for bubble amortization — and carries a small constant kernel
+//!   overhead (no custom fused kernels).
+
+pub mod homogeneous;
+
+pub use homogeneous::{megatron_tune, pytorch_tune, HomogeneousChoice, PYTORCH_SOFTWARE_FACTOR};

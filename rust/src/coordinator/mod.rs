@@ -1,0 +1,8 @@
+//! L3 coordinator: ties the Online Microbatch Scheduler to the real PJRT
+//! runtime for end-to-end training, with the paper's asynchronous
+//! scheduling (§3.4.2: "while the model executes the computation for the
+//! current iteration, the scheduler processes the subsequent global batch
+//! in parallel on the CPU").
+pub mod leader;
+
+pub use leader::{Leader, LeaderConfig, LeaderReport, SchedMode};

@@ -1,0 +1,140 @@
+//! Dataset mixtures and batch streams.
+//!
+//! A [`Dataset`] is a weighted mixture of [`Source`]s (Table 2); it yields
+//! deterministic global batches of raw items. The three Fig 11 workload
+//! scenarios (multiple-image, video, mixed) are alternative mixtures over
+//! the same sources.
+
+use crate::data::item::{shape_for, ItemShape, RawItem};
+use crate::data::sources::{audio_sources, table2_sources, Source};
+use crate::model::catalog::Mllm;
+use crate::util::rng::Rng;
+
+/// A weighted mixture of sources with a deterministic sampling stream.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub sources: Vec<Source>,
+    weights: Vec<f64>,
+    rng: Rng,
+}
+
+impl Dataset {
+    pub fn new(name: &str, sources: Vec<Source>, seed: u64) -> Dataset {
+        let weights = sources.iter().map(|s| s.samples as f64).collect();
+        Dataset { name: name.to_string(), sources, weights, rng: Rng::new(seed) }
+    }
+
+    /// The paper's mixed dataset (Table 2: all five sources).
+    pub fn mixed(seed: u64) -> Dataset {
+        Dataset::new("mixed", table2_sources(), seed)
+    }
+
+    /// Fig 11's multiple-image scenario (M4-Instruct only).
+    pub fn multi_image(seed: u64) -> Dataset {
+        let m4 = table2_sources().into_iter().nth(3).expect("m4 source");
+        Dataset::new("multiple-image", vec![m4], seed)
+    }
+
+    /// Fig 11's video scenario (LLaVA-Video only).
+    pub fn video(seed: u64) -> Dataset {
+        let v = table2_sources().into_iter().nth(4).expect("video source");
+        Dataset::new("video", vec![v], seed)
+    }
+
+    /// Fig 9's audio workload.
+    pub fn audio(seed: u64) -> Dataset {
+        Dataset::new("audio", audio_sources(), seed)
+    }
+
+    /// Look up a scenario by CLI key.
+    pub fn by_key(key: &str, seed: u64) -> Option<Dataset> {
+        match key {
+            "mixed" => Some(Dataset::mixed(seed)),
+            "multi-image" | "multiple-image" => Some(Dataset::multi_image(seed)),
+            "video" => Some(Dataset::video(seed)),
+            "audio" => Some(Dataset::audio(seed)),
+            _ => None,
+        }
+    }
+
+    /// Total corpus size implied by the mixture (Table 2's sample counts).
+    pub fn corpus_size(&self) -> u64 {
+        self.sources.iter().map(|s| s.samples).sum()
+    }
+
+    /// Sample one raw item.
+    pub fn sample(&mut self) -> RawItem {
+        let idx = self.rng.categorical(&self.weights);
+        self.sources[idx].sample(&mut self.rng, idx as u8)
+    }
+
+    /// Sample a global batch of `n` raw items.
+    pub fn batch(&mut self, n: usize) -> Vec<RawItem> {
+        (0..n).map(|_| self.sample()).collect()
+    }
+
+    /// Sample a global batch already preprocessed into shapes for `m`.
+    pub fn shaped_batch(&mut self, m: &Mllm, n: usize) -> Vec<ItemShape> {
+        (0..n).map(|_| shape_for(m, &self.sample())).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::catalog::{llava_ov, llama3};
+
+    #[test]
+    fn mixture_proportions_track_table2() {
+        let mut d = Dataset::mixed(123);
+        let n = 50_000;
+        let mut counts = [0u64; 5];
+        for _ in 0..n {
+            counts[d.sample().source as usize] += 1;
+        }
+        // 60k/185k ≈ 32.4% for M4 and Video, 28k/185k ≈ 15.1% for Wild.
+        let frac = |i: usize| counts[i] as f64 / n as f64;
+        assert!((frac(3) - 60.0 / 185.0).abs() < 0.01, "m4 {}", frac(3));
+        assert!((frac(4) - 60.0 / 185.0).abs() < 0.01, "video {}", frac(4));
+        assert!((frac(0) - 28.0 / 185.0).abs() < 0.01, "wild {}", frac(0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Dataset::mixed(9).batch(64);
+        let b = Dataset::mixed(9).batch(64);
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(&b).for_each(|(x, y)| assert_eq!(x, y));
+    }
+
+    #[test]
+    fn scenarios_have_expected_heterogeneity_order() {
+        // Fig 11b: multiple-image is narrow, video broad, mixed broadest
+        // relative to its mean (bimodal). Compare LLM seq-len CV.
+        let m = llava_ov(llama3("8b"));
+        let cv = |mut d: Dataset| {
+            let shapes = d.shaped_batch(&m, 4000);
+            let seqs: Vec<f64> = shapes.iter().map(|s| s.llm_seq as f64).collect();
+            crate::util::stats::Summary::of(&seqs).cv()
+        };
+        let multi = cv(Dataset::multi_image(5));
+        let video = cv(Dataset::video(5));
+        let mixed = cv(Dataset::mixed(5));
+        assert!(video > multi, "video {video} multi {multi}");
+        assert!(mixed > multi, "mixed {mixed} multi {multi}");
+    }
+
+    #[test]
+    fn by_key_covers_scenarios() {
+        for key in ["mixed", "multi-image", "video", "audio"] {
+            assert!(Dataset::by_key(key, 1).is_some(), "{key}");
+        }
+        assert!(Dataset::by_key("bogus", 1).is_none());
+    }
+
+    #[test]
+    fn corpus_size_matches_paper_total() {
+        assert_eq!(Dataset::mixed(1).corpus_size(), 185_000);
+    }
+}

@@ -1,0 +1,185 @@
+//! Data items and their model-specific input shapes.
+//!
+//! DFLOP never looks at pixels or waveforms — only at *input shapes*
+//! (§3.2.2: the Data Profiler computes "the precise input shapes for each
+//! sampled item within the target architecture"). A raw [`RawItem`] carries
+//! modality-level counts (tiles, images, frames, audio seconds, text
+//! tokens); [`shape_for`] applies an architecture's preprocessing to produce
+//! the [`ItemShape`] the rest of the system reasons about.
+
+use crate::model::catalog::{Mllm, Modality};
+
+/// The visual/audio payload of a training instance, before preprocessing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Payload {
+    /// One image, already expressed as the number of anyres tiles the
+    /// architecture's dynamic-resolution pipeline produces (base + grid).
+    SingleImage { tiles: u32 },
+    /// Interleaved multi-image instance: `images` images, each one tile.
+    MultiImage { images: u32 },
+    /// A video: `frames` sampled frames.
+    Video { frames: u32 },
+    /// An audio clip of `seconds` seconds.
+    Audio { seconds: u32 },
+    /// Pure text (no encoder work).
+    TextOnly,
+}
+
+/// A raw training instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RawItem {
+    pub payload: Payload,
+    /// Text tokens (prompt + answer).
+    pub text_tokens: u32,
+    /// Which Table-2 source the item was drawn from (index into the
+    /// mixture; used for per-source statistics).
+    pub source: u8,
+}
+
+/// Architecture-specific input shape of one item — the unit of work the
+/// Profiling Engine, optimizer and scheduler all operate on.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ItemShape {
+    /// Encoder effective batch contribution: number of vision/audio units
+    /// (tiles, frames, audio-seconds) this item puts through the encoder.
+    pub units: u32,
+    /// LLM packed sequence length: connector outputs + text tokens.
+    pub llm_seq: u32,
+    /// Source index carried through for diagnostics.
+    pub source: u8,
+}
+
+/// Apply an architecture's preprocessing to a raw item (§3.2.2: "the
+/// varying input dimensions ... are strictly governed by the MLLM's
+/// architecture and its data processing pipeline").
+///
+/// - LLaVA-OV: image tiles keep all 729 tokens (MLP connector); video
+///   frames are additionally pooled ~4× (bilinear) before the LLM.
+/// - InternVL-2.5: every tile is pixel-unshuffled 4× by the connector
+///   (handled by `Connector::Pool` inside the model).
+/// - Qwen2-Audio: 8× average-pool at the end of the encoder.
+pub fn shape_for(m: &Mllm, item: &RawItem) -> ItemShape {
+    let (units, visual_tokens): (u32, u32) = match (m.modality, item.payload) {
+        (Modality::Vision, Payload::SingleImage { tiles }) => {
+            (tiles, m.llm_visual_tokens(tiles as usize) as u32)
+        }
+        (Modality::Vision, Payload::MultiImage { images }) => {
+            (images, m.llm_visual_tokens(images as usize) as u32)
+        }
+        (Modality::Vision, Payload::Video { frames }) => {
+            // Video frames get an extra 4× token pool before the LLM
+            // (LLaVA-OV's frame pooling; InternVL samples fewer tokens per
+            // frame to the same effect).
+            let per_frame = m.connector.llm_tokens(m.tokens_per_unit).div_ceil(4);
+            (frames, frames * per_frame as u32)
+        }
+        (Modality::Audio, Payload::Audio { seconds }) => {
+            (seconds, m.llm_visual_tokens(seconds as usize) as u32)
+        }
+        // Cross-modality payloads contribute no encoder work.
+        (_, Payload::TextOnly) | (Modality::Audio, _) | (Modality::Vision, Payload::Audio { .. }) => {
+            (0, 0)
+        }
+    };
+    ItemShape {
+        units,
+        llm_seq: visual_tokens + item.text_tokens,
+        source: item.source,
+    }
+}
+
+impl ItemShape {
+    /// Encoder fwd+bwd FLOP of this item under architecture `m`.
+    pub fn encoder_flop(&self, m: &Mllm) -> f64 {
+        if self.units == 0 {
+            0.0
+        } else {
+            m.encoder_flop_total(self.units as usize)
+        }
+    }
+
+    /// LLM fwd+bwd FLOP of this item under architecture `m`.
+    pub fn llm_flop(&self, m: &Mllm) -> f64 {
+        m.llm_flop_total(self.llm_seq as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::catalog::{internvl_25, llava_ov, llama3, qwen25, qwen2_audio};
+
+    #[test]
+    fn llava_single_image_keeps_all_tokens() {
+        let m = llava_ov(llama3("8b"));
+        let item = RawItem {
+            payload: Payload::SingleImage { tiles: 5 },
+            text_tokens: 100,
+            source: 0,
+        };
+        let s = shape_for(&m, &item);
+        assert_eq!(s.units, 5);
+        assert_eq!(s.llm_seq, 5 * 729 + 100);
+    }
+
+    #[test]
+    fn internvl_tiles_are_pooled_4x() {
+        let m = internvl_25(qwen25("72b"));
+        let item = RawItem {
+            payload: Payload::SingleImage { tiles: 4 },
+            text_tokens: 0,
+            source: 0,
+        };
+        let s = shape_for(&m, &item);
+        assert_eq!(s.llm_seq, 4 * 256);
+    }
+
+    #[test]
+    fn video_frames_pooled_extra_4x() {
+        let m = llava_ov(llama3("8b"));
+        let item = RawItem {
+            payload: Payload::Video { frames: 32 },
+            text_tokens: 50,
+            source: 4,
+        };
+        let s = shape_for(&m, &item);
+        assert_eq!(s.units, 32);
+        assert_eq!(s.llm_seq, 32 * 183 + 50); // ceil(729/4) = 183
+    }
+
+    #[test]
+    fn audio_model_ignores_vision_payload() {
+        let m = qwen2_audio();
+        let item = RawItem {
+            payload: Payload::Video { frames: 8 },
+            text_tokens: 77,
+            source: 0,
+        };
+        let s = shape_for(&m, &item);
+        assert_eq!(s.units, 0);
+        assert_eq!(s.llm_seq, 77);
+    }
+
+    #[test]
+    fn audio_payload_pools_8x() {
+        let m = qwen2_audio();
+        let item = RawItem {
+            payload: Payload::Audio { seconds: 16 },
+            text_tokens: 0,
+            source: 0,
+        };
+        let s = shape_for(&m, &item);
+        assert_eq!(s.units, 16);
+        assert_eq!(s.llm_seq, 16 * 7); // ceil(50/8) = 7
+    }
+
+    #[test]
+    fn flop_accessors_are_positive_and_monotone() {
+        let m = llava_ov(llama3("8b"));
+        let small = ItemShape { units: 1, llm_seq: 500, source: 0 };
+        let big = ItemShape { units: 8, llm_seq: 4000, source: 0 };
+        assert!(small.encoder_flop(&m) > 0.0);
+        assert!(big.encoder_flop(&m) > small.encoder_flop(&m));
+        assert!(big.llm_flop(&m) > small.llm_flop(&m));
+    }
+}

@@ -1,0 +1,6 @@
+//! Workload substrate: synthetic equivalents of the paper's datasets
+//! (Table 2), per-architecture preprocessing into input shapes, and
+//! deterministic batch streams.
+pub mod dataset;
+pub mod item;
+pub mod sources;

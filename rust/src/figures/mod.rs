@@ -1,0 +1,702 @@
+//! Regeneration harness for every table and figure in the paper's
+//! evaluation (§5). Each `figNN` function runs the relevant experiment on
+//! the simulated cluster and prints the same rows/series the paper reports.
+//! Absolute numbers come from the analytic A100 model; the comparisons
+//! (who wins, by what factor, where crossovers fall) are the reproduction
+//! target — see EXPERIMENTS.md for paper-vs-measured.
+
+pub mod timeline;
+
+use crate::data::dataset::Dataset;
+use crate::model::catalog::{llava_ov, llama3, paper_configs, qwen2_audio, qwen25, Mllm};
+use crate::optimizer::plan::{ModPar, Theta};
+use crate::optimizer::search::{optimize, OptimizerInputs};
+use crate::perfmodel::{ClusterSpec, Truth};
+use crate::pipeline::build::{iterate, SystemPlan};
+use crate::pipeline::sim::ideal_bubble_fraction;
+use crate::profiling::backend::SimBackend;
+use crate::profiling::engine::{profile_data, ModelProfiler, ProfilerGrids};
+use crate::scheduler::ilp;
+use crate::scheduler::lpt::{self, ItemCost};
+use crate::sim::{run_system, RunConfig, RunResult, SystemKind};
+use crate::util::stats::{BoxPlot, Histogram, Summary};
+use crate::util::table::{bytes, f, secs, speedup, Table};
+
+/// Shared experiment options (paper scale by default where affordable).
+#[derive(Clone, Copy, Debug)]
+pub struct FigOpts {
+    pub nodes: usize,
+    pub gbs: usize,
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        FigOpts { nodes: 4, gbs: 128, iters: 4, seed: 42 }
+    }
+}
+
+fn run(kind: SystemKind, m: &Mllm, dataset: &str, o: &FigOpts) -> RunResult {
+    run_system(kind, m, dataset, &RunConfig::new(o.nodes, o.gbs, o.iters, o.seed))
+}
+
+// ------------------------------------------------------------------
+// Fig 1 — ideal vs real 1F1B schedules
+// ------------------------------------------------------------------
+
+pub fn fig01(o: &FigOpts) -> String {
+    let m = llava_ov(llama3("8b"));
+    let truth = Truth::new(ClusterSpec::hgx_a100(1));
+    // 6 microbatches through encoder stage 0 + 3 LLM stages (the paper's
+    // Fig 1 layout).
+    let theta = Theta {
+        enc: ModPar { tp: 2, pp: 1, dp: 1 },
+        llm: ModPar { tp: 2, pp: 3, dp: 1 },
+        n_mb: 6,
+    };
+    let plan = SystemPlan { m: &m, truth: &truth, theta };
+    let mut out = String::new();
+
+    // Twelve concrete mixed-dataset items; the ideal case replaces each
+    // with the batch mean so both schedules carry identical total work.
+    let mut ds = Dataset::mixed(o.seed);
+    let items = ds.shaped_batch(&m, 12);
+    let mean_shape = crate::data::item::ItemShape {
+        units: (items.iter().map(|s| s.units as f64).sum::<f64>() / 12.0).round() as u32,
+        llm_seq: (items.iter().map(|s| s.llm_seq as f64).sum::<f64>() / 12.0).round()
+            as u32,
+        source: 0,
+    };
+    let ideal_buckets: Vec<Vec<_>> = (0..6).map(|_| vec![mean_shape; 2]).collect();
+    let ideal = iterate(&plan, &ideal_buckets);
+    out.push_str("Fig 1 (top) — ideal 1F1B: identical microbatches\n");
+    out.push_str(&timeline::render(&ideal.timeline, ideal.n_stages, 96));
+    out.push_str(&format!(
+        "makespan {}  total idle {}\n\n",
+        secs(ideal.pipeline_makespan),
+        secs(ideal.total_idle())
+    ));
+
+    // Real: the same items in heterogeneous random-composition buckets.
+    let real_buckets: Vec<Vec<_>> = items.chunks(2).map(|c| c.to_vec()).collect();
+    let real = iterate(&plan, &real_buckets);
+    out.push_str("Fig 1 (bottom) — real 1F1B: mixed single-image/multi-image/video microbatches\n");
+    out.push_str(&timeline::render(&real.timeline, real.n_stages, 96));
+    out.push_str(&format!(
+        "makespan {}  total idle {}  (idle inflation {})\n",
+        secs(real.pipeline_makespan),
+        secs(real.total_idle()),
+        speedup(real.total_idle() / ideal.total_idle().max(1e-12))
+    ));
+    out
+}
+
+// ------------------------------------------------------------------
+// Fig 2 — throughput vs input shape and TP degree
+// ------------------------------------------------------------------
+
+pub fn fig02(_o: &FigOpts) -> String {
+    let truth = Truth::new(ClusterSpec::hgx_a100(1));
+    let m = llava_ov(qwen25("7b"));
+    let mut out = String::new();
+
+    let mut t = Table::new(
+        "Fig 2a — SigLIP encoder throughput (TFLOP/s per GPU) vs effective batch",
+        &["eff. batch", "tp=1", "tp=2", "tp=4", "tp=8", "tp8/tp1"],
+    );
+    for &units in &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0] {
+        let thr: Vec<f64> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&tp| truth.encoder_throughput(&m, units, tp) / 1e12)
+            .collect();
+        t.row(vec![
+            format!("{units}"),
+            f(thr[0], 1),
+            f(thr[1], 1),
+            f(thr[2], 1),
+            f(thr[3], 1),
+            f(thr[3] / thr[0], 2),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    let mut t = Table::new(
+        "Fig 2b — Qwen-2.5 LLM throughput (TFLOP/s per GPU) vs sequence length",
+        &["seq len", "tp=1", "tp=2", "tp=4", "tp=8", "tp8/tp1"],
+    );
+    for &seq in &[256.0, 512.0, 1024.0, 2048.0, 4096.0, 8192.0, 16384.0] {
+        let thr: Vec<f64> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&tp| truth.llm_throughput(&m, seq, tp) / 1e12)
+            .collect();
+        t.row(vec![
+            format!("{seq}"),
+            f(thr[0], 1),
+            f(thr[1], 1),
+            f(thr[2], 1),
+            f(thr[3], 1),
+            f(thr[3] / thr[0], 2),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+// ------------------------------------------------------------------
+// Fig 4 — stage-wise duration distributions across data items
+// ------------------------------------------------------------------
+
+pub fn fig04(o: &FigOpts) -> String {
+    let m = llava_ov(qwen25("7b"));
+    let truth = Truth::new(ClusterSpec::hgx_a100(o.nodes));
+    let mut ds = Dataset::mixed(o.seed);
+    let items = ds.shaped_batch(&m, 2000);
+    let enc: Vec<f64> = items
+        .iter()
+        .filter(|s| s.units > 0)
+        .map(|s| truth.encoder_stage_time(&m, s.units as f64, m.encoder.layers as f64, 1) * 1e3)
+        .collect();
+    let llm: Vec<f64> = items
+        .iter()
+        .map(|s| truth.llm_stage_time(&m, &[s.llm_seq as f64], m.llm.layers as f64, 1) * 1e3)
+        .collect();
+    let mut out = String::new();
+    for (name, xs) in [("modality encoder (SigLIP)", &enc), ("LLM (Qwen-2.5)", &llm)] {
+        let s = Summary::of(xs);
+        let h = Histogram::of(xs, 40);
+        out.push_str(&format!(
+            "Fig 4 — {name} per-item duration (ms): mean {:.1}  p50 {:.1}  p95 {:.1}  cv {:.2}\n  {}\n",
+            s.mean, s.p50, s.p95, s.cv(), h.sparkline()
+        ));
+    }
+    out
+}
+
+// ------------------------------------------------------------------
+// Fig 7 — end-to-end performance across MLLM configurations
+// ------------------------------------------------------------------
+
+pub fn fig07(o: &FigOpts) -> String {
+    let mut t = Table::new(
+        "Fig 7a — per-GPU throughput (TFLOP/s) and DFLOP speedups (mixed dataset)",
+        &["configuration", "DFLOP", "Megatron", "PyTorch", "vs Mega", "vs PyTorch"],
+    );
+    let mut t2 = Table::new(
+        "Fig 7b — total training time (hours, one pass over the 185k-sample mixed corpus)",
+        &["configuration", "DFLOP", "Megatron", "PyTorch", "saved vs best baseline"],
+    );
+    for cfg in paper_configs() {
+        let d = run(SystemKind::Dflop, &cfg.mllm, "mixed", o);
+        let mg = run(SystemKind::Megatron, &cfg.mllm, "mixed", o);
+        let pt = run(SystemKind::Pytorch, &cfg.mllm, "mixed", o);
+        t.row(vec![
+            cfg.label.to_string(),
+            f(d.per_gpu_throughput / 1e12, 1),
+            f(mg.per_gpu_throughput / 1e12, 1),
+            f(pt.per_gpu_throughput / 1e12, 1),
+            speedup(d.speedup_over(&mg)),
+            speedup(d.speedup_over(&pt)),
+        ]);
+        let steps = 185_000.0 / o.gbs as f64;
+        let hours = |r: &RunResult| steps * r.mean_iteration_time / 3600.0;
+        let best_base = hours(&mg).min(hours(&pt));
+        t2.row(vec![
+            cfg.label.to_string(),
+            f(hours(&d), 1),
+            f(hours(&mg), 1),
+            f(hours(&pt), 1),
+            format!("{} h", f(best_base - hours(&d), 1)),
+        ]);
+    }
+    t.render() + &t2.render()
+}
+
+// ------------------------------------------------------------------
+// Fig 8 — gain vs computational-load ratio
+// ------------------------------------------------------------------
+
+pub fn fig08(o: &FigOpts) -> String {
+    let mut t = Table::new(
+        "Fig 8 — encoder/LLM FLOP ratio vs max DFLOP gain",
+        &["configuration", "enc/LLM FLOP ratio", "max gain"],
+    );
+    let mut points: Vec<(f64, f64, String)> = Vec::new();
+    for cfg in paper_configs() {
+        let mut ds = Dataset::mixed(o.seed);
+        let probe = ds.shaped_batch(&cfg.mllm, 256);
+        let mean_units =
+            probe.iter().map(|s| s.units as f64).sum::<f64>() / 256.0;
+        let mean_seq =
+            probe.iter().map(|s| s.llm_seq as f64).sum::<f64>() / 256.0;
+        let ratio = cfg.mllm.compute_ratio(mean_units, mean_seq);
+        let d = run(SystemKind::Dflop, &cfg.mllm, "mixed", o);
+        let mg = run(SystemKind::Megatron, &cfg.mllm, "mixed", o);
+        let pt = run(SystemKind::Pytorch, &cfg.mllm, "mixed", o);
+        let gain = d.speedup_over(&mg).max(d.speedup_over(&pt));
+        points.push((ratio, gain, cfg.label.to_string()));
+    }
+    points.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("NaN"));
+    for (ratio, gain, label) in &points {
+        t.row(vec![label.clone(), f(*ratio, 3), speedup(*gain)]);
+    }
+    // Rank correlation between ratio (toward balance) and gain.
+    let n = points.len() as f64;
+    let mean_r = points.iter().map(|p| p.0).sum::<f64>() / n;
+    let mean_g = points.iter().map(|p| p.1).sum::<f64>() / n;
+    let cov: f64 = points.iter().map(|p| (p.0 - mean_r) * (p.1 - mean_g)).sum();
+    let var_r: f64 = points.iter().map(|p| (p.0 - mean_r).powi(2)).sum();
+    let var_g: f64 = points.iter().map(|p| (p.1 - mean_g).powi(2)).sum();
+    let corr = cov / (var_r.sqrt() * var_g.sqrt()).max(1e-12);
+    t.render() + &format!("Pearson correlation(ratio, gain) = {corr:.2}\n")
+}
+
+// ------------------------------------------------------------------
+// Fig 9 — audio-modality generalization (Qwen2-Audio)
+// ------------------------------------------------------------------
+
+pub fn fig09(o: &FigOpts) -> String {
+    let m = qwen2_audio();
+    // Audio items are small (pooled ~7 tokens/s of audio); the paper's
+    // audio recipe uses a correspondingly larger global batch.
+    let mut oo = *o;
+    oo.gbs = o.gbs * 4;
+    let d = run(SystemKind::Dflop, &m, "audio", &oo);
+    let mg = run(SystemKind::Megatron, &m, "audio", &oo);
+    let pt = run(SystemKind::Pytorch, &m, "audio", &oo);
+    let mut t = Table::new(
+        "Fig 9 — Qwen2-Audio on the audio workload",
+        &["system", "TFLOP/s per GPU", "DFLOP speedup"],
+    );
+    t.row(vec!["DFLOP".into(), f(d.per_gpu_throughput / 1e12, 1), "1.00x".into()]);
+    t.row(vec![
+        "Megatron-LM".into(),
+        f(mg.per_gpu_throughput / 1e12, 1),
+        speedup(d.speedup_over(&mg)),
+    ]);
+    t.row(vec![
+        "PyTorch".into(),
+        f(pt.per_gpu_throughput / 1e12, 1),
+        speedup(d.speedup_over(&pt)),
+    ]);
+    t.render()
+}
+
+// ------------------------------------------------------------------
+// Fig 10 — ablation: incremental components
+// ------------------------------------------------------------------
+
+pub fn fig10(o: &FigOpts) -> String {
+    let configs = [
+        ("LLaVA-OV (Llama-3 8B)", llava_ov(llama3("8b"))),
+        ("LLaVA-OV (Qwen-2.5 32B)", llava_ov(qwen25("32b"))),
+        ("InternVL 2.5 (Qwen-2.5 72B)", crate::model::catalog::internvl_25(qwen25("72b"))),
+    ];
+    let mut t = Table::new(
+        "Fig 10 — component ablation (gain over the PyTorch baseline)",
+        &["configuration", "+optimizer", "+scheduler", "full DFLOP"],
+    );
+    for (label, m) in configs {
+        let pt = run(SystemKind::Pytorch, &m, "mixed", o);
+        let opt = run(SystemKind::DflopOptimizerOnly, &m, "mixed", o);
+        let sched = run(SystemKind::DflopSchedulerOnly, &m, "mixed", o);
+        let full = run(SystemKind::Dflop, &m, "mixed", o);
+        t.row(vec![
+            label.to_string(),
+            speedup(opt.speedup_over(&pt)),
+            speedup(sched.speedup_over(&pt)),
+            speedup(full.speedup_over(&pt)),
+        ]);
+    }
+    t.render()
+}
+
+// ------------------------------------------------------------------
+// Fig 11 — robustness across dataset scenarios
+// ------------------------------------------------------------------
+
+pub fn fig11(o: &FigOpts) -> String {
+    let m = llava_ov(llama3("8b"));
+    let mut t = Table::new(
+        "Fig 11a — per-GPU throughput (TFLOP/s) across workload scenarios",
+        &["dataset", "DFLOP", "Megatron", "PyTorch", "DFLOP max gain"],
+    );
+    let mut out2 = String::from("Fig 11b — LLM input shape distributions (packed seq len):\n");
+    for key in ["multi-image", "video", "mixed"] {
+        let d = run(SystemKind::Dflop, &m, key, o);
+        let mg = run(SystemKind::Megatron, &m, key, o);
+        let pt = run(SystemKind::Pytorch, &m, key, o);
+        let gain = d.speedup_over(&mg).max(d.speedup_over(&pt));
+        t.row(vec![
+            key.to_string(),
+            f(d.per_gpu_throughput / 1e12, 1),
+            f(mg.per_gpu_throughput / 1e12, 1),
+            f(pt.per_gpu_throughput / 1e12, 1),
+            speedup(gain),
+        ]);
+        let mut ds = Dataset::by_key(key, o.seed).expect("dataset");
+        let seqs: Vec<f64> = ds
+            .shaped_batch(&m, 2000)
+            .iter()
+            .map(|s| s.llm_seq as f64)
+            .collect();
+        let s = Summary::of(&seqs);
+        out2.push_str(&format!(
+            "  {key:12} mean {:6.0}  p95 {:6.0}  cv {:.2}  {}\n",
+            s.mean,
+            s.p95,
+            s.cv(),
+            Histogram::of(&seqs, 40).sparkline()
+        ));
+    }
+    t.render() + &out2
+}
+
+// ------------------------------------------------------------------
+// Fig 12 — GPU cluster scalability
+// ------------------------------------------------------------------
+
+pub fn fig12(o: &FigOpts) -> String {
+    let m = llava_ov(llama3("8b"));
+    let mut t = Table::new(
+        "Fig 12 — total cluster throughput (PFLOP/s) vs node count (16/32 projected)",
+        &["nodes", "DFLOP", "Megatron", "PyTorch", "DFLOP max gain"],
+    );
+    let mut dflop_series = Vec::new();
+    for &nodes in &[1usize, 2, 4, 8] {
+        let mut oo = *o;
+        oo.nodes = nodes;
+        oo.gbs = (o.gbs * nodes / 4).max(32);
+        let d = run(SystemKind::Dflop, &m, "mixed", &oo);
+        let mg = run(SystemKind::Megatron, &m, "mixed", &oo);
+        let pt = run(SystemKind::Pytorch, &m, "mixed", &oo);
+        let total = |r: &RunResult| r.per_gpu_throughput * r.n_gpus as f64 / 1e15;
+        dflop_series.push((nodes as f64, total(&d), total(&mg), total(&pt)));
+        t.row(vec![
+            format!("{nodes}"),
+            f(total(&d), 2),
+            f(total(&mg), 2),
+            f(total(&pt), 2),
+            speedup(d.speedup_over(&mg).max(d.speedup_over(&pt))),
+        ]);
+    }
+    // Projection: extend the measured per-node efficiency trend (paper
+    // projects 16/32 nodes from 1–8 node measurements).
+    let last = dflop_series.last().expect("series");
+    let prev = dflop_series[dflop_series.len() - 2];
+    for &nodes in &[16.0f64, 32.0] {
+        let scale = nodes / last.0;
+        let eff = |l: f64, p: f64| (l / p / 2.0).min(1.0); // efficiency of last doubling
+        let proj = |li: f64, pi: f64| li * scale * eff(li, pi).powf((nodes / last.0).log2());
+        t.row(vec![
+            format!("{nodes} (proj)"),
+            f(proj(last.1, prev.1), 2),
+            f(proj(last.2, prev.2), 2),
+            f(proj(last.3, prev.3), 2),
+            "-".into(),
+        ]);
+    }
+    t.render()
+}
+
+// ------------------------------------------------------------------
+// Fig 13 — pipeline-bubble idle time
+// ------------------------------------------------------------------
+
+pub fn fig13(o: &FigOpts) -> String {
+    let m = llava_ov(llama3("8b"));
+    let mut t = Table::new(
+        "Fig 13 — GPU idle time from pipeline bubbles (GPU·s per iteration)",
+        &["system", "ideal (1F1B formula)", "real (measured)", "real/ideal"],
+    );
+    let mut reals = Vec::new();
+    for kind in [SystemKind::Dflop, SystemKind::Megatron, SystemKind::Pytorch] {
+        let r = run(kind, &m, "mixed", o);
+        let p = r.theta.pipeline_depth();
+        let frac = ideal_bubble_fraction(p, r.theta.n_mb);
+        // Ideal idle GPU·s: bubble fraction × stages × iteration time.
+        let n_stages = r.theta.enc.pp * r.theta.enc.dp + r.theta.llm.pp * r.theta.llm.dp;
+        let ideal = frac * n_stages as f64 * r.mean_iteration_time;
+        reals.push((kind, r.mean_idle));
+        t.row(vec![
+            kind.label().to_string(),
+            f(ideal, 2),
+            f(r.mean_idle, 2),
+            f(r.mean_idle / ideal.max(1e-9), 2),
+        ]);
+    }
+    let dflop = reals[0].1;
+    let mut out = t.render();
+    for (kind, idle) in &reals[1..] {
+        out.push_str(&format!(
+            "idle reduction vs {}: {:.0}%\n",
+            kind.label(),
+            (1.0 - dflop / idle) * 100.0
+        ));
+    }
+    out
+}
+
+// ------------------------------------------------------------------
+// Fig 14 — stage-wise throughput distribution
+// ------------------------------------------------------------------
+
+pub fn fig14(o: &FigOpts) -> String {
+    let m = llava_ov(llama3("8b"));
+    let mut t = Table::new(
+        "Fig 14 — stage throughput distribution (TFLOP/s per stage-GPU group)",
+        &["system", "median", "q1", "q3", "whisker lo", "whisker hi"],
+    );
+    for kind in [SystemKind::Dflop, SystemKind::Megatron, SystemKind::Pytorch] {
+        let r = run(kind, &m, "mixed", o);
+        // Normalize stage-group throughput to per-GPU: encoder stages hold
+        // E_tp GPUs, LLM stages L_tp (stage layout: enc first).
+        let enc_stages = r.theta.enc.pp * r.theta.enc.dp;
+        let mut samples = Vec::new();
+        for it in &r.iterations {
+            for (sidx, (flop, busy)) in
+                it.stage_flop.iter().zip(&it.stage_busy).enumerate()
+            {
+                if *flop > 0.0 && *busy > 0.0 {
+                    let tp = if sidx < enc_stages { r.theta.enc.tp } else { r.theta.llm.tp };
+                    samples.push(flop / busy / tp as f64 / 1e12);
+                }
+            }
+        }
+        let b = BoxPlot::of(&samples);
+        t.row(vec![
+            kind.label().to_string(),
+            f(b.median, 1),
+            f(b.q1, 1),
+            f(b.q3, 1),
+            f(b.whisker_lo, 1),
+            f(b.whisker_hi, 1),
+        ]);
+    }
+    t.render()
+}
+
+// ------------------------------------------------------------------
+// Fig 15 — Adaptive Correction cost-benefit
+// ------------------------------------------------------------------
+
+pub fn fig15(o: &FigOpts) -> String {
+    let m = llava_ov(llama3("8b"));
+    // Monitoring cost (the paper measures ≈4% by toggling the tracker).
+    const COST: f64 = 0.04;
+    let mut t = Table::new(
+        "Fig 15 — Adaptive Correction net speedup (gain − 4% monitoring cost)",
+        &["anomaly rate", "latency +25%", "+50%", "+75%", "+100%"],
+    );
+    // Shape buckets that actually occur in the workload.
+    let mut ds = Dataset::mixed(o.seed);
+    let probe = ds.shaped_batch(&m, 512);
+    let mut buckets: Vec<u64> = probe
+        .iter()
+        .map(|s| Truth::llm_bucket(s.llm_seq as f64))
+        .collect();
+    buckets.sort_unstable();
+    buckets.dedup();
+    for &(label, rate) in &[("low (1%)", 0.01f64), ("medium (3%)", 0.03), ("high (5%)", 0.05)] {
+        let mut row = vec![label.to_string()];
+        for &latency in &[0.25f64, 0.50, 0.75, 1.00] {
+            let n_anomalous = ((buckets.len() as f64 * rate).ceil() as usize).max(1);
+            let injected: Vec<(u64, f64)> = buckets
+                .iter()
+                .step_by((buckets.len() / n_anomalous).max(1))
+                .take(n_anomalous)
+                .map(|&b| (b, 1.0 / (1.0 + latency)))
+                .collect();
+            // Warm-up iterations let the tracker accumulate observations
+            // before the steady-state window is measured (the paper's
+            // initial training phase, §3.4.3).
+            let warmup = 4usize;
+            let mut cfg_on = RunConfig::new(o.nodes, o.gbs, o.iters + 2 * warmup, o.seed);
+            cfg_on.injected = injected.clone();
+            let mut cfg_off = cfg_on.clone();
+            cfg_off.disable_correction = true;
+            let on = run_system(SystemKind::Dflop, &m, "mixed", &cfg_on);
+            let off = run_system(SystemKind::Dflop, &m, "mixed", &cfg_off);
+            let steady = |r: &RunResult| {
+                let iters = &r.iterations[warmup..];
+                iters.iter().map(|s| s.iteration_time).sum::<f64>() / iters.len() as f64
+            };
+            let gain = steady(&off) / steady(&on) - 1.0;
+            let net = gain - COST;
+            row.push(if net <= 0.0 {
+                format!("{:+.1}% (off)", net * 100.0)
+            } else {
+                format!("{:+.1}%", net * 100.0)
+            });
+        }
+        t.row(row);
+    }
+    t.render()
+}
+
+// ------------------------------------------------------------------
+// Fig 16 — component overheads at scale
+// ------------------------------------------------------------------
+
+pub fn fig16(o: &FigOpts) -> String {
+    let m = llava_ov(llama3("8b"));
+    let mut out = String::new();
+
+    // 16a: optimizer wall-clock vs GPUs × GBS.
+    let mut t = Table::new(
+        "Fig 16a — Data-aware 3D Parallelism Optimizer wall-clock",
+        &["GPUs", "GBS=512", "GBS=1024", "GBS=2048"],
+    );
+    let truth = Truth::new(ClusterSpec::hgx_a100(1));
+    let mut backend = SimBackend::new(truth);
+    let profile = ModelProfiler::new(&mut backend, ProfilerGrids::standard(8)).profile(&m);
+    let mut ds = Dataset::mixed(o.seed);
+    let data = profile_data(&m, &mut ds, 256);
+    for &gpus in &[64usize, 256, 1024] {
+        let mut row = vec![format!("{gpus}")];
+        for &gbs in &[512usize, 1024, 2048] {
+            let inp = OptimizerInputs {
+                m: &m,
+                profile: &profile,
+                data: &data,
+                n_gpus: gpus,
+                gpus_per_node: 8,
+                mem_capacity: ClusterSpec::hgx_a100(1).gpu.mem_bytes,
+                gbs,
+                assume_balanced: true,
+            };
+            let r = optimize(&inp).expect("feasible");
+            row.push(secs(r.elapsed.as_secs_f64()));
+        }
+        t.row(row);
+    }
+    out.push_str(&t.render());
+
+    // 16b: scheduler wall-clock vs GBS with the paper's fallback behaviour.
+    let mut t = Table::new(
+        "Fig 16b — Online Microbatch Scheduler wall-clock (50 ms ILP limit)",
+        &["GBS", "time", "solver", "imbalance vs LB"],
+    );
+    let mut ds = Dataset::mixed(o.seed ^ 1);
+    for &gbs in &[64usize, 128, 256, 512, 1024, 2048] {
+        let shapes = ds.shaped_batch(&m, gbs);
+        let items: Vec<ItemCost> = shapes
+            .iter()
+            .map(|s| ItemCost {
+                enc: s.units as f64,
+                llm: s.llm_seq as f64,
+            })
+            .collect();
+        let mbuckets = (gbs / 8).max(2);
+        let t0 = std::time::Instant::now();
+        let r = ilp::solve(&items, mbuckets, std::time::Duration::from_millis(50));
+        let elapsed = t0.elapsed().as_secs_f64();
+        let lb = lpt::lower_bound(&items, mbuckets);
+        t.row(vec![
+            format!("{gbs}"),
+            secs(elapsed),
+            if r.optimal { "ILP (optimal)".into() } else { "LPT fallback".to_string() },
+            format!("{:.3}%", (r.assignment.c_max() / lb - 1.0).max(0.0) * 100.0),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+// ------------------------------------------------------------------
+// Tables 2 and 4
+// ------------------------------------------------------------------
+
+pub fn table2(_o: &FigOpts) -> String {
+    let mut t = Table::new(
+        "Table 2 — composition of the mixed dataset",
+        &["dataset", "data type", "# of samples"],
+    );
+    let kinds = ["Single Image", "Single Image", "Single Image", "Multiple Images", "Video"];
+    for (src, kind) in Dataset::mixed(0).sources.iter().zip(kinds) {
+        t.row(vec![src.name.to_string(), kind.to_string(), format!("{}k", src.samples / 1000)]);
+    }
+    t.render()
+}
+
+pub fn table4(o: &FigOpts) -> String {
+    let mut t = Table::new(
+        "Table 4 — total training time and DFLOP overhead (mixed dataset)",
+        &["model", "training time", "DFLOP overhead", "relative"],
+    );
+    for cfg in paper_configs() {
+        let mut oo = *o;
+        oo.nodes = 8;
+        let d = run(SystemKind::Dflop, &cfg.mllm, "mixed", &oo);
+        let steps = 185_000.0 / oo.gbs as f64;
+        let train_h = steps * d.mean_iteration_time / 3600.0;
+        let overhead_min =
+            (d.profiling_seconds + d.optimizer_elapsed.as_secs_f64()) / 60.0;
+        t.row(vec![
+            cfg.label.to_string(),
+            format!("{:.2} h", train_h),
+            format!("{:.2} min", overhead_min),
+            format!("{:.1}%", overhead_min / 60.0 / train_h * 100.0),
+        ]);
+    }
+    t.render()
+}
+
+/// Memory footprint report (supporting the Eq 4–5 feasibility checks).
+pub fn memory_report(_o: &FigOpts) -> String {
+    let mut t = Table::new(
+        "memory model — per-GPU model states at TP=8, PP=1",
+        &["model", "LLM state", "encoder state"],
+    );
+    for cfg in paper_configs() {
+        let m = &cfg.mllm;
+        t.row(vec![
+            cfg.label.to_string(),
+            bytes(m.llm_model_state_bytes(m.llm.layers as f64, 8)),
+            bytes(m.encoder_model_state_bytes(m.encoder.layers as f64, 8)),
+        ]);
+    }
+    t.render()
+}
+
+/// Run every figure and table in order.
+pub fn all(o: &FigOpts) -> String {
+    let mut out = String::new();
+    out.push_str(&fig01(o));
+    out.push_str(&fig02(o));
+    out.push_str(&fig04(o));
+    out.push_str(&fig07(o));
+    out.push_str(&fig08(o));
+    out.push_str(&fig09(o));
+    out.push_str(&fig10(o));
+    out.push_str(&fig11(o));
+    out.push_str(&fig12(o));
+    out.push_str(&fig13(o));
+    out.push_str(&fig14(o));
+    out.push_str(&fig15(o));
+    out.push_str(&fig16(o));
+    out.push_str(&table2(o));
+    out.push_str(&table4(o));
+    out
+}
+
+/// Dispatch by figure id.
+pub fn by_id(id: &str, o: &FigOpts) -> Option<String> {
+    Some(match id {
+        "1" => fig01(o),
+        "2" => fig02(o),
+        "4" => fig04(o),
+        "7" => fig07(o),
+        "8" => fig08(o),
+        "9" => fig09(o),
+        "10" => fig10(o),
+        "11" => fig11(o),
+        "12" => fig12(o),
+        "13" => fig13(o),
+        "14" => fig14(o),
+        "15" => fig15(o),
+        "16" => fig16(o),
+        "all" => all(o),
+        _ => return None,
+    })
+}

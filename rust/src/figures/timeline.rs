@@ -1,0 +1,56 @@
+//! ASCII rendering of 1F1B pipeline timelines (Fig 1).
+
+use crate::pipeline::sim::OpRecord;
+
+/// Render a per-stage timeline: digits = forward ops (bucket index mod 10),
+/// '#' = backward ops, '.' = idle. `width` columns span the makespan.
+pub fn render(timeline: &[OpRecord], n_stages: usize, width: usize) -> String {
+    let makespan = timeline
+        .iter()
+        .map(|o| o.finish)
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+    let mut rows = vec![vec!['.'; width]; n_stages];
+    for op in timeline {
+        let c0 = ((op.start / makespan) * width as f64) as usize;
+        let c1 = (((op.finish / makespan) * width as f64).ceil() as usize).min(width);
+        let ch = if op.is_forward {
+            char::from_digit((op.bucket % 10) as u32, 10).expect("digit")
+        } else {
+            '#'
+        };
+        for c in c0..c1.max(c0 + 1).min(width) {
+            rows[op.stage][c] = ch;
+        }
+    }
+    let mut out = String::new();
+    for (s, row) in rows.iter().enumerate() {
+        out.push_str(&format!("stage {s:>2} |"));
+        out.extend(row.iter());
+        out.push_str("|\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::sim::{simulate, Route};
+
+    #[test]
+    fn renders_all_stages() {
+        let routes: Vec<Route> = (0..4)
+            .map(|_| Route {
+                stages: vec![0, 1],
+                fwd: vec![1.0; 2],
+                bwd: vec![2.0; 2],
+                comm: vec![0.0; 2],
+            })
+            .collect();
+        let r = simulate(2, &routes);
+        let text = render(&r.timeline, 2, 60);
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.contains('#'), "backward ops rendered");
+        assert!(text.contains('0'), "forward ops rendered");
+    }
+}

@@ -1,0 +1,30 @@
+//! # DFLOP — data-driven framework for multimodal LLM training pipeline
+//! # optimization (reproduction)
+//!
+//! Three-layer reproduction of An et al., "DFLOP" (CS.DC 2026):
+//!
+//! - **L3 (this crate)** — the paper's system contribution in rust: the
+//!   Profiling Engine (§3.2), Data-aware 3D Parallelism Optimizer (§3.3),
+//!   Online Microbatch Scheduler with ILP + LPT + Adaptive Correction
+//!   (§3.4), plus every substrate they need: an A100 cluster ground-truth
+//!   model, a 1F1B pipeline executor, Megatron/PyTorch-style baselines, a
+//!   workload synthesizer, and a PJRT runtime for real execution.
+//! - **L2 (python/compile/model.py)** — a real small MLLM (encoder →
+//!   connector → LLM) in JAX, AOT-lowered to HLO text artifacts.
+//! - **L1 (python/compile/kernels/)** — Pallas kernels (packed varlen
+//!   attention, fused MLP) called from L2.
+//!
+//! See DESIGN.md for the system inventory and per-experiment index.
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod figures;
+pub mod perfmodel;
+pub mod pipeline;
+pub mod optimizer;
+pub mod profiling;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod model;
+pub mod util;

@@ -1,0 +1,170 @@
+//! DFLOP launcher: figure/table regeneration, simulated system runs,
+//! optimizer/scheduler inspection, and real-artifact profiling.
+//!
+//! ```text
+//! dflop figures --fig <1|2|4|7|8|9|10|11|12|13|14|15|16|all> [--nodes N] [--gbs N] [--iters N] [--seed S]
+//! dflop table   --n <2|4>
+//! dflop run     --system <dflop|megatron|pytorch|opt-only|sched-only> --model <key> --dataset <key>
+//! dflop optimize --model <key> --nodes N --gbs N
+//! dflop profile-real [--artifacts DIR]      # PJRT timing of AOT artifacts
+//! dflop models                              # list catalog keys
+//! ```
+
+use dflop::figures::{by_id, table2, table4, FigOpts};
+use dflop::model::catalog;
+use dflop::sim::{run_system, RunConfig, SystemKind};
+use dflop::util::cli::{Args, Spec};
+use std::process::ExitCode;
+
+fn opts_from(args: &Args) -> anyhow::Result<FigOpts> {
+    let d = FigOpts::default();
+    Ok(FigOpts {
+        nodes: args.get_usize("nodes", d.nodes)?,
+        gbs: args.get_usize("gbs", d.gbs)?,
+        iters: args.get_usize("iters", d.iters)?,
+        seed: args.get_u64("seed", d.seed)?,
+    })
+}
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let spec = Spec {
+        valued: vec![
+            "fig", "n", "nodes", "gbs", "iters", "seed", "system", "model", "dataset",
+            "artifacts",
+        ],
+        boolean: vec!["help"],
+    };
+    let args = Args::parse(std::env::args().skip(1), &spec)?;
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match sub.as_str() {
+        "figures" => {
+            let o = opts_from(&args)?;
+            let id = args.get_or("fig", "all");
+            match by_id(&id, &o) {
+                Some(text) => print!("{text}"),
+                None => anyhow::bail!("unknown figure id '{id}'"),
+            }
+        }
+        "table" => {
+            let o = opts_from(&args)?;
+            match args.get_or("n", "2").as_str() {
+                "2" => print!("{}", table2(&o)),
+                "4" => print!("{}", table4(&o)),
+                other => anyhow::bail!("unknown table '{other}'"),
+            }
+        }
+        "run" => {
+            let o = opts_from(&args)?;
+            let kind = match args.get_or("system", "dflop").as_str() {
+                "dflop" => SystemKind::Dflop,
+                "megatron" => SystemKind::Megatron,
+                "pytorch" => SystemKind::Pytorch,
+                "opt-only" => SystemKind::DflopOptimizerOnly,
+                "sched-only" => SystemKind::DflopSchedulerOnly,
+                other => anyhow::bail!("unknown system '{other}'"),
+            };
+            let model_key = args.get_or("model", "llava-ov-llama3-8b");
+            let m = catalog::by_key(&model_key)
+                .ok_or_else(|| anyhow::anyhow!("unknown model '{model_key}' (try `dflop models`)"))?;
+            let dataset = args.get_or("dataset", "mixed");
+            let r = run_system(kind, &m, &dataset, &RunConfig::new(o.nodes, o.gbs, o.iters, o.seed));
+            println!("system        : {}", kind.label());
+            println!("model         : {model_key}");
+            println!("dataset       : {dataset}");
+            println!("theta         : {}", r.theta);
+            println!("per-GPU thr   : {:.1} TFLOP/s", r.per_gpu_throughput / 1e12);
+            println!("iteration time: {:.3} s", r.mean_iteration_time);
+            println!("idle GPU·s    : {:.2}", r.mean_idle);
+            println!("profiling     : {:.1} min", r.profiling_seconds / 60.0);
+            println!("optimizer     : {:?}", r.optimizer_elapsed);
+            println!("LPT fallbacks : {}/{}", r.lpt_fallbacks, r.sched_elapsed.len());
+        }
+        "optimize" => {
+            use dflop::data::dataset::Dataset;
+            use dflop::optimizer::search::{optimize, OptimizerInputs};
+            use dflop::perfmodel::{ClusterSpec, Truth};
+            use dflop::profiling::backend::SimBackend;
+            use dflop::profiling::engine::{profile_data, ModelProfiler, ProfilerGrids};
+            let o = opts_from(&args)?;
+            let model_key = args.get_or("model", "llava-ov-llama3-8b");
+            let m = catalog::by_key(&model_key)
+                .ok_or_else(|| anyhow::anyhow!("unknown model '{model_key}'"))?;
+            let cluster = ClusterSpec::hgx_a100(o.nodes);
+            let mut backend = SimBackend::new(Truth::new(cluster));
+            let profile =
+                ModelProfiler::new(&mut backend, ProfilerGrids::standard(8)).profile(&m);
+            let dataset = args.get_or("dataset", "mixed");
+            let mut ds = Dataset::by_key(&dataset, o.seed)
+                .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
+            let data = profile_data(&m, &mut ds, 512);
+            let inp = OptimizerInputs {
+                m: &m,
+                profile: &profile,
+                data: &data,
+                n_gpus: cluster.total_gpus(),
+                gpus_per_node: cluster.gpus_per_node,
+                mem_capacity: cluster.gpu.mem_bytes,
+                gbs: o.gbs,
+                assume_balanced: true,
+            };
+            match optimize(&inp) {
+                Some(r) => {
+                    println!("theta*            : {}", r.theta);
+                    println!("expected makespan : {:.3} s", r.expected_makespan);
+                    println!("candidates scanned: {}", r.candidates_scanned);
+                    println!("memory-rejected   : {}", r.memory_rejected);
+                    println!("elapsed           : {:?}", r.elapsed);
+                }
+                None => anyhow::bail!("no feasible configuration"),
+            }
+        }
+        "profile-real" => {
+            use dflop::runtime::artifacts::Manifest;
+            use dflop::runtime::profiler::profile_real;
+            let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+            let manifest = Manifest::load(&dir)?;
+            println!(
+                "profiling real AOT artifacts ({} config, {} params)…",
+                manifest.config, manifest.model.total_params
+            );
+            let p = profile_real(&manifest, 3, args.get_u64("seed", 42)?)?;
+            println!("encoder forward (PJRT CPU):");
+            for pt in &p.encoder {
+                println!("  n_img {:>3}: {:>10.3} ms", pt.coord, pt.seconds * 1e3);
+            }
+            println!("llm forward (PJRT CPU):");
+            for pt in &p.llm {
+                println!("  seq {:>5}: {:>10.3} ms", pt.coord, pt.seconds * 1e3);
+            }
+        }
+        "models" => {
+            for key in [
+                "llava-ov-qwen25-7b",
+                "llava-ov-llama3-8b",
+                "llava-ov-qwen25-32b",
+                "llava-ov-llama3-70b",
+                "llava-ov-qwen25-72b",
+                "internvl-qwen25-72b",
+                "qwen2-audio",
+            ] {
+                let m = catalog::by_key(key).expect("catalog key");
+                println!("{key:24} encoder={} llm={}", m.encoder.name, m.llm.name);
+            }
+        }
+        "help" | _ => {
+            println!("usage: dflop <figures|table|run|optimize|profile-real|models> [options]");
+            println!("see rust/src/main.rs header or README.md for details");
+        }
+    }
+    Ok(())
+}

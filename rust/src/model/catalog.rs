@@ -1,0 +1,399 @@
+//! Catalog of the MLLM configurations evaluated in the paper (Table 3 plus
+//! the Fig 9 audio model), with per-item FLOP / memory closed forms.
+//!
+//! Each `Mllm` couples a modality-encoder tower, a connector, and an LLM
+//! tower, and knows how the architecture's preprocessing maps a raw data
+//! item (images / video frames / audio seconds / text tokens) to the two
+//! shapes DFLOP reasons about: the encoder *effective batch size* (number of
+//! vision units) and the LLM *packed sequence length* (§3.2.2).
+
+use super::arch::{Connector, Tower, MODEL_STATE_BYTES_PER_PARAM};
+
+/// Modality of the non-text tower.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Modality {
+    Vision,
+    Audio,
+}
+
+/// A full multimodal model: encoder → connector → LLM.
+#[derive(Clone, Debug)]
+pub struct Mllm {
+    pub name: &'static str,
+    pub modality: Modality,
+    pub encoder: Tower,
+    pub connector: Connector,
+    pub llm: Tower,
+    /// Tokens the encoder produces per vision unit (image tile / video
+    /// frame / 30 ms audio hop group) — fixed per architecture (§3.2.1:
+    /// "E_seq_len remains fixed for the modality encoder").
+    pub tokens_per_unit: usize,
+    /// MLP matrices per layer in each tower (2 = classic, 3 = gated).
+    pub enc_mlp_matrices: usize,
+    pub llm_mlp_matrices: usize,
+}
+
+impl Mllm {
+    // ---------------- FLOP accounting (per data item) ----------------
+
+    /// Forward FLOP of the encoder for an item with `units` vision units.
+    /// Each unit is an independent sequence of `tokens_per_unit` tokens, so
+    /// attention is quadratic per unit, linear in the number of units.
+    pub fn encoder_flop_fwd(&self, units: usize) -> f64 {
+        let s = self.tokens_per_unit as f64;
+        let tokens = units as f64 * s;
+        self.encoder
+            .linear_flop_fwd(tokens, self.encoder.layers as f64, self.enc_mlp_matrices)
+            + units as f64
+                * self.encoder.attn_flop_fwd(s, self.encoder.layers as f64)
+    }
+
+    /// Forward FLOP of the LLM for an item whose packed sequence length is
+    /// `seq` (visual tokens after the connector + text tokens). Sequence
+    /// packing keeps batch = 1; attention remains per-item quadratic.
+    pub fn llm_flop_fwd(&self, seq: usize) -> f64 {
+        let s = seq as f64;
+        self.llm
+            .linear_flop_fwd(s, self.llm.layers as f64, self.llm_mlp_matrices)
+            + self.llm.attn_flop_fwd(s, self.llm.layers as f64)
+    }
+
+    /// fwd+bwd multiplier: backward is ~2× forward (paper Fig 1).
+    pub const BWD_FACTOR: f64 = 2.0;
+
+    /// Total (fwd+bwd) encoder FLOP for an item.
+    pub fn encoder_flop_total(&self, units: usize) -> f64 {
+        self.encoder_flop_fwd(units) * (1.0 + Self::BWD_FACTOR)
+    }
+
+    /// Encoder FLOP is exactly linear in the unit count, so the fractional
+    /// form is exact (used for packed-bucket estimates).
+    pub fn encoder_flop_total_f64(&self, units: f64) -> f64 {
+        self.encoder_flop_total(1) * units
+    }
+
+    /// Total (fwd+bwd) LLM FLOP for an item.
+    pub fn llm_flop_total(&self, seq: usize) -> f64 {
+        self.llm_flop_fwd(seq) * (1.0 + Self::BWD_FACTOR)
+    }
+
+    /// LLM tokens contributed by `units` vision units after the connector.
+    pub fn llm_visual_tokens(&self, units: usize) -> usize {
+        units * self.connector.llm_tokens(self.tokens_per_unit)
+    }
+
+    // ---------------- Memory accounting ----------------
+
+    /// Model-state bytes per GPU for `layers` encoder layers at TP `tp`.
+    pub fn encoder_model_state_bytes(&self, layers: f64, tp: usize) -> f64 {
+        layers * self.encoder.params_per_layer(self.enc_mlp_matrices)
+            * MODEL_STATE_BYTES_PER_PARAM
+            / tp as f64
+    }
+
+    /// Model-state bytes per GPU for `layers` LLM layers at TP `tp`
+    /// (embedding + head included, divided across PP stages upstream).
+    pub fn llm_model_state_bytes(&self, layers: f64, tp: usize) -> f64 {
+        let layer_part = layers * self.llm.params_per_layer(self.llm_mlp_matrices);
+        let emb_part = 2.0 * self.llm.vocab as f64 * self.llm.hidden as f64
+            * layers
+            / self.llm.layers as f64;
+        (layer_part + emb_part) * MODEL_STATE_BYTES_PER_PARAM / tp as f64
+    }
+
+    /// Activation bytes per GPU for the encoder processing `units` vision
+    /// units through `layers` layers at TP `tp` (one microbatch).
+    pub fn encoder_act_bytes(&self, layers: f64, tp: usize, units: f64) -> f64 {
+        let tokens = units * self.tokens_per_unit as f64;
+        tokens * layers * self.encoder.act_bytes_per_token_layer() / tp as f64
+    }
+
+    /// Activation bytes per GPU for the LLM processing a packed sequence of
+    /// `seq` tokens through `layers` layers at TP `tp` (one microbatch).
+    pub fn llm_act_bytes(&self, layers: f64, tp: usize, seq: f64) -> f64 {
+        seq * layers * self.llm.act_bytes_per_token_layer() / tp as f64
+    }
+
+    /// Ratio of encoder to LLM compute for a "mean" item — the x-axis of
+    /// Fig 8. `mean_units`/`mean_seq` come from the Data Profiler.
+    pub fn compute_ratio(&self, mean_units: f64, mean_seq: f64) -> f64 {
+        let e = self.encoder_flop_total(mean_units.round() as usize);
+        let l = self.llm_flop_total(mean_seq.round() as usize);
+        e / l
+    }
+}
+
+// ---------------- Towers used in the paper ----------------
+
+/// SigLIP-SO400M @ 384px, patch 14 → 27×27 = 729 tokens per image tile.
+pub fn siglip_so400m() -> Tower {
+    Tower {
+        name: "siglip-so400m",
+        layers: 27,
+        hidden: 1152,
+        heads: 16,
+        kv_heads: 16,
+        intermediate: 4304,
+        vocab: 0,
+    }
+}
+
+/// InternViT-6B (InternVL-2.5's large vision tower), 448px tiles → 1025
+/// tokens pre-shuffle, 256 after pixel unshuffle (factor 4).
+pub fn internvit_6b() -> Tower {
+    Tower {
+        name: "internvit-6b",
+        layers: 45,
+        hidden: 3200,
+        heads: 25,
+        kv_heads: 25,
+        intermediate: 12800,
+        vocab: 0,
+    }
+}
+
+/// Whisper-large-v3 style audio encoder used by Qwen2-Audio.
+pub fn whisper_large() -> Tower {
+    Tower {
+        name: "whisper-large-audio",
+        layers: 32,
+        hidden: 1280,
+        heads: 20,
+        kv_heads: 20,
+        intermediate: 5120,
+        vocab: 0,
+    }
+}
+
+pub fn qwen25(size: &str) -> Tower {
+    match size {
+        "7b" => Tower {
+            name: "qwen-2.5-7b",
+            layers: 28,
+            hidden: 3584,
+            heads: 28,
+            kv_heads: 4,
+            intermediate: 18944,
+            vocab: 152_064,
+        },
+        "32b" => Tower {
+            name: "qwen-2.5-32b",
+            layers: 64,
+            hidden: 5120,
+            heads: 40,
+            kv_heads: 8,
+            intermediate: 27648,
+            vocab: 152_064,
+        },
+        "72b" => Tower {
+            name: "qwen-2.5-72b",
+            layers: 80,
+            hidden: 8192,
+            heads: 64,
+            kv_heads: 8,
+            intermediate: 29568,
+            vocab: 152_064,
+        },
+        other => panic!("unknown qwen-2.5 size '{other}'"),
+    }
+}
+
+pub fn llama3(size: &str) -> Tower {
+    match size {
+        "8b" => Tower {
+            name: "llama-3-8b",
+            layers: 32,
+            hidden: 4096,
+            heads: 32,
+            kv_heads: 8,
+            intermediate: 14336,
+            vocab: 128_256,
+        },
+        "70b" => Tower {
+            name: "llama-3-70b",
+            layers: 80,
+            hidden: 8192,
+            heads: 64,
+            kv_heads: 8,
+            intermediate: 28672,
+            vocab: 128_256,
+        },
+        other => panic!("unknown llama-3 size '{other}'"),
+    }
+}
+
+/// Qwen2-Audio's 7B LLM backbone.
+pub fn qwen2_7b_audio_llm() -> Tower {
+    Tower {
+        name: "qwen2-7b",
+        layers: 28,
+        hidden: 3584,
+        heads: 28,
+        kv_heads: 4,
+        intermediate: 18944,
+        vocab: 152_064,
+    }
+}
+
+// ---------------- MLLM catalog (Table 3 + Fig 9) ----------------
+
+/// LLaVA-OneVision: SigLIP encoder, MLP connector (identity token count for
+/// images; video frames are pooled ~4× via bilinear interpolation).
+pub fn llava_ov(llm: Tower) -> Mllm {
+    Mllm {
+        name: "llava-ov",
+        modality: Modality::Vision,
+        encoder: siglip_so400m(),
+        connector: Connector::Mlp,
+        llm,
+        tokens_per_unit: 729,
+        enc_mlp_matrices: 2,
+        llm_mlp_matrices: 3,
+    }
+}
+
+/// InternVL-2.5: InternViT-6B encoder, pixel-unshuffle connector (4×
+/// token reduction: 1024 → 256 tokens per 448px tile).
+pub fn internvl_25(llm: Tower) -> Mllm {
+    Mllm {
+        name: "internvl-2.5",
+        modality: Modality::Vision,
+        encoder: internvit_6b(),
+        connector: Connector::Pool { factor: 4 },
+        llm,
+        tokens_per_unit: 1024,
+        enc_mlp_matrices: 2,
+        llm_mlp_matrices: 3,
+    }
+}
+
+/// Qwen2-Audio: Whisper-style encoder with a final average pool that cuts
+/// the token count ~8× before the LLM (§5.3.1: the pooling balances the
+/// compute distribution between encoder and LLM).
+pub fn qwen2_audio() -> Mllm {
+    Mllm {
+        name: "qwen2-audio",
+        modality: Modality::Audio,
+        encoder: whisper_large(),
+        connector: Connector::Pool { factor: 8 },
+        llm: qwen2_7b_audio_llm(),
+        // One unit = 1 s of audio ≈ 50 post-conv frames.
+        tokens_per_unit: 50,
+        enc_mlp_matrices: 2,
+        llm_mlp_matrices: 3,
+    }
+}
+
+/// A named evaluation configuration (one bar group in Fig 7).
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    pub label: &'static str,
+    pub mllm: Mllm,
+}
+
+/// The six Fig 7 / Table 4 configurations, in paper order.
+pub fn paper_configs() -> Vec<EvalConfig> {
+    vec![
+        EvalConfig { label: "LLaVA-OV (Qwen-2.5 7B)", mllm: llava_ov(qwen25("7b")) },
+        EvalConfig { label: "LLaVA-OV (Llama-3 8B)", mllm: llava_ov(llama3("8b")) },
+        EvalConfig { label: "LLaVA-OV (Qwen-2.5 32B)", mllm: llava_ov(qwen25("32b")) },
+        EvalConfig { label: "LLaVA-OV (Llama-3 70B)", mllm: llava_ov(llama3("70b")) },
+        EvalConfig { label: "LLaVA-OV (Qwen-2.5 72B)", mllm: llava_ov(qwen25("72b")) },
+        EvalConfig { label: "InternVL (Qwen-2.5 72B)", mllm: internvl_25(qwen25("72b")) },
+    ]
+}
+
+/// Look up a catalog model by a CLI-friendly key.
+pub fn by_key(key: &str) -> Option<Mllm> {
+    match key {
+        "llava-ov-qwen25-7b" => Some(llava_ov(qwen25("7b"))),
+        "llava-ov-llama3-8b" => Some(llava_ov(llama3("8b"))),
+        "llava-ov-qwen25-32b" => Some(llava_ov(qwen25("32b"))),
+        "llava-ov-llama3-70b" => Some(llava_ov(llama3("70b"))),
+        "llava-ov-qwen25-72b" => Some(llava_ov(qwen25("72b"))),
+        "internvl-qwen25-72b" => Some(internvl_25(qwen25("72b"))),
+        "qwen2-audio" => Some(qwen2_audio()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qwen_param_counts_in_band() {
+        let p7 = qwen25("7b").total_params(3);
+        let p72 = qwen25("72b").total_params(3);
+        assert!((6.0e9..9.0e9).contains(&p7), "{p7:.3e}");
+        assert!((65.0e9..80.0e9).contains(&p72), "{p72:.3e}");
+    }
+
+    #[test]
+    fn siglip_params_in_band() {
+        // SO400M ≈ 0.4B.
+        let p = siglip_so400m().total_params(2);
+        assert!((0.25e9..0.6e9).contains(&p), "{p:.3e}");
+    }
+
+    #[test]
+    fn internvit_params_in_band() {
+        let p = internvit_6b().total_params(2);
+        assert!((4.5e9..7.5e9).contains(&p), "{p:.3e}");
+    }
+
+    #[test]
+    fn encoder_flop_scales_linearly_in_units() {
+        let m = llava_ov(llama3("8b"));
+        let f1 = m.encoder_flop_fwd(1);
+        let f8 = m.encoder_flop_fwd(8);
+        assert!((f8 / f1 - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn internvl_compute_ratio_higher_than_llava_7b() {
+        // InternViT-6B vs SigLIP-0.4B against the same 72B LLM: InternVL's
+        // encoder/LLM ratio must be much larger (drives Fig 8).
+        let a = internvl_25(qwen25("72b")).compute_ratio(8.0, 3000.0);
+        let b = llava_ov(qwen25("72b")).compute_ratio(8.0, 3000.0);
+        assert!(a > 5.0 * b, "internvl {a} vs llava {b}");
+    }
+
+    #[test]
+    fn audio_pooling_reduces_llm_tokens() {
+        let m = qwen2_audio();
+        // 30 s of audio = 30 units = 1500 encoder tokens → ~188 LLM tokens.
+        let t = m.llm_visual_tokens(30);
+        assert!(t < 30 * 50 / 7, "{t}");
+    }
+
+    #[test]
+    fn catalog_lookup_round_trip() {
+        for cfg in paper_configs() {
+            // Every paper config is reachable via some CLI key.
+            let key = match cfg.label {
+                "LLaVA-OV (Qwen-2.5 7B)" => "llava-ov-qwen25-7b",
+                "LLaVA-OV (Llama-3 8B)" => "llava-ov-llama3-8b",
+                "LLaVA-OV (Qwen-2.5 32B)" => "llava-ov-qwen25-32b",
+                "LLaVA-OV (Llama-3 70B)" => "llava-ov-llama3-70b",
+                "LLaVA-OV (Qwen-2.5 72B)" => "llava-ov-qwen25-72b",
+                "InternVL (Qwen-2.5 72B)" => "internvl-qwen25-72b",
+                other => panic!("unmapped config {other}"),
+            };
+            let m = by_key(key).expect(key);
+            assert_eq!(m.llm.name, cfg.mllm.llm.name);
+        }
+        assert!(by_key("nope").is_none());
+    }
+
+    #[test]
+    fn memory_accounting_divides_by_tp() {
+        let m = llava_ov(llama3("8b"));
+        let full = m.llm_model_state_bytes(32.0, 1);
+        let tp8 = m.llm_model_state_bytes(32.0, 8);
+        assert!((full / tp8 - 8.0).abs() < 1e-9);
+        let act1 = m.llm_act_bytes(32.0, 1, 4096.0);
+        let act4 = m.llm_act_bytes(32.0, 4, 4096.0);
+        assert!((act1 / act4 - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,3 @@
+//! MLLM architecture catalog and closed-form compute/memory accounting.
+pub mod arch;
+pub mod catalog;

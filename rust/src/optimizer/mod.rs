@@ -1,0 +1,6 @@
+//! The Data-aware 3D Parallelism Optimizer (§3.3, Algorithm 1).
+pub mod plan;
+pub mod search;
+
+pub use plan::{find_combs, ModPar, Theta};
+pub use search::{optimize, OptimizerInputs, OptimizerResult};

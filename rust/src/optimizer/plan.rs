@@ -1,0 +1,123 @@
+//! Parallelism strategy types: the parameter vector θ of §3.3.1.
+
+use std::fmt;
+
+/// 3D parallelism degrees for one module; `tp · pp · dp` GPUs total.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ModPar {
+    pub tp: usize,
+    pub pp: usize,
+    pub dp: usize,
+}
+
+impl ModPar {
+    pub fn gpus(&self) -> usize {
+        self.tp * self.pp * self.dp
+    }
+}
+
+impl fmt::Display for ModPar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(tp={}, pp={}, dp={})", self.tp, self.pp, self.dp)
+    }
+}
+
+/// The complete strategy θ = (E_tp, E_pp, E_dp, L_tp, L_pp, L_dp, N_mb).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Theta {
+    pub enc: ModPar,
+    pub llm: ModPar,
+    /// Microbatches per pipeline (per LLM data-parallel group).
+    pub n_mb: usize,
+}
+
+impl Theta {
+    /// Total pipeline depth `E_pp + L_pp`.
+    pub fn pipeline_depth(&self) -> usize {
+        self.enc.pp + self.llm.pp
+    }
+
+    /// GPU accounting constraint (Eq 3).
+    pub fn gpus(&self) -> usize {
+        self.enc.gpus() + self.llm.gpus()
+    }
+
+    /// Buckets per iteration `m = N_mb · L_dp` (§3.4).
+    pub fn buckets(&self) -> usize {
+        self.n_mb * self.llm.dp
+    }
+}
+
+impl fmt::Display for Theta {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "enc{} llm{} n_mb={}",
+            self.enc, self.llm, self.n_mb
+        )
+    }
+}
+
+/// Enumerate all (tp, pp, dp) factorizations of `gpus` with
+/// `tp ∈ {1, 2, 4, …, gpus_per_node}` (Eq 2: TP stays intra-node),
+/// `pp ≤ max_pp` (cannot exceed layer count), and `dp ≥ 1`
+/// — Algorithm 1's `FindCombs`.
+pub fn find_combs(gpus: usize, gpus_per_node: usize, max_pp: usize) -> Vec<ModPar> {
+    let mut out = Vec::new();
+    let mut tp = 1;
+    while tp <= gpus_per_node {
+        if gpus % tp == 0 {
+            let rest = gpus / tp;
+            for pp in 1..=rest.min(max_pp) {
+                if rest % pp == 0 {
+                    out.push(ModPar { tp, pp, dp: rest / pp });
+                }
+            }
+        }
+        tp *= 2;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn find_combs_products_are_exact() {
+        for gpus in [1usize, 4, 8, 24, 32] {
+            for c in find_combs(gpus, 8, 64) {
+                assert_eq!(c.gpus(), gpus, "{c}");
+                assert!(c.tp.is_power_of_two());
+                assert!(c.tp <= 8);
+            }
+        }
+    }
+
+    #[test]
+    fn find_combs_respects_max_pp() {
+        let combs = find_combs(32, 8, 2);
+        assert!(combs.iter().all(|c| c.pp <= 2));
+        // (tp=1, pp=1, dp=32) must be present.
+        assert!(combs.contains(&ModPar { tp: 1, pp: 1, dp: 32 }));
+    }
+
+    #[test]
+    fn find_combs_count_example() {
+        // gpus=8, node=8, max_pp=8: tp ∈ {1,2,4,8}; for each tp the
+        // divisors of 8/tp define pp. 4+3+2+1 = 10 strategies.
+        assert_eq!(find_combs(8, 8, 8).len(), 10);
+    }
+
+    #[test]
+    fn theta_accounting() {
+        let t = Theta {
+            enc: ModPar { tp: 2, pp: 1, dp: 4 },
+            llm: ModPar { tp: 4, pp: 3, dp: 2 },
+            n_mb: 6,
+        };
+        assert_eq!(t.gpus(), 8 + 24);
+        assert_eq!(t.pipeline_depth(), 4);
+        assert_eq!(t.buckets(), 12);
+    }
+}

@@ -1,0 +1,140 @@
+//! Hardware specifications of the simulated testbed.
+//!
+//! Mirrors the paper's cluster: HGX A100 8-GPU nodes (NVLink intra-node)
+//! connected by 800 Gbps InfiniBand (§5.1). All quantities are SI: FLOP/s,
+//! bytes, bytes/s, seconds.
+
+/// One GPU's capabilities.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Peak dense bf16 FLOP/s (A100: 312 TFLOPS).
+    pub peak_flops: f64,
+    /// HBM capacity in bytes (A100 80GB).
+    pub mem_bytes: f64,
+    /// HBM bandwidth (A100: ~2.0 TB/s).
+    pub hbm_bw: f64,
+    /// Per-kernel launch/dispatch overhead in seconds.
+    pub kernel_overhead: f64,
+}
+
+impl GpuSpec {
+    pub fn a100_80g() -> GpuSpec {
+        GpuSpec {
+            name: "A100-80G",
+            peak_flops: 312e12,
+            mem_bytes: 80.0 * 1024.0 * 1024.0 * 1024.0,
+            hbm_bw: 2.0e12,
+            kernel_overhead: 6e-6,
+        }
+    }
+}
+
+/// Cluster topology.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClusterSpec {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub gpu: GpuSpec,
+    /// Per-GPU NVLink bandwidth within a node (A100 HGX: 600 GB/s).
+    pub nvlink_bw: f64,
+    /// Per-node InfiniBand bandwidth (800 Gbps = 100 GB/s).
+    pub ib_bw: f64,
+    /// One-way collective latency within a node / across nodes.
+    pub nvlink_latency: f64,
+    pub ib_latency: f64,
+}
+
+impl ClusterSpec {
+    /// The paper's node type: HGX A100 8×80G + 800 Gbps IB.
+    pub fn hgx_a100(nodes: usize) -> ClusterSpec {
+        ClusterSpec {
+            nodes,
+            gpus_per_node: 8,
+            gpu: GpuSpec::a100_80g(),
+            nvlink_bw: 600e9,
+            ib_bw: 100e9,
+            nvlink_latency: 8e-6,
+            ib_latency: 25e-6,
+        }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Ring all-reduce time for `bytes` over `n` ranks.
+    ///
+    /// Classic cost model: 2·(n−1)/n · bytes / bw, plus per-step latency.
+    /// `intra_node` selects NVLink vs IB bandwidth.
+    pub fn allreduce_time(&self, bytes: f64, n: usize, intra_node: bool) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let (bw, lat) = if intra_node {
+            (self.nvlink_bw, self.nvlink_latency)
+        } else {
+            (self.ib_bw, self.ib_latency)
+        };
+        let steps = 2 * (n - 1);
+        2.0 * (n as f64 - 1.0) / n as f64 * bytes / bw + steps as f64 * lat
+    }
+
+    /// Point-to-point transfer time for `bytes` (pipeline stage hand-off /
+    /// inter-model communicator hop).
+    pub fn p2p_time(&self, bytes: f64, intra_node: bool) -> f64 {
+        let (bw, lat) = if intra_node {
+            (self.nvlink_bw, self.nvlink_latency)
+        } else {
+            (self.ib_bw, self.ib_latency)
+        };
+        bytes / bw + lat
+    }
+
+    /// Whether a TP group of the given degree fits inside one node
+    /// (the paper's Eq 2 restricts TP to intra-node GPUs).
+    pub fn tp_fits_in_node(&self, tp: usize) -> bool {
+        tp <= self.gpus_per_node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hgx_topology() {
+        let c = ClusterSpec::hgx_a100(4);
+        assert_eq!(c.total_gpus(), 32);
+        assert!(c.tp_fits_in_node(8));
+        assert!(!c.tp_fits_in_node(16));
+    }
+
+    #[test]
+    fn allreduce_scales_with_bytes_and_ranks() {
+        let c = ClusterSpec::hgx_a100(1);
+        let t1 = c.allreduce_time(1e9, 2, true);
+        let t2 = c.allreduce_time(2e9, 2, true);
+        assert!(t2 > t1);
+        // n=1 is free.
+        assert_eq!(c.allreduce_time(1e9, 1, true), 0.0);
+        // Inter-node is slower than intra-node for the same payload.
+        assert!(c.allreduce_time(1e9, 4, false) > c.allreduce_time(1e9, 4, true));
+    }
+
+    #[test]
+    fn allreduce_bandwidth_term_converges() {
+        // As n grows the bandwidth term approaches 2·bytes/bw.
+        let c = ClusterSpec::hgx_a100(8);
+        let t = c.allreduce_time(10e9, 64, false);
+        let asymptote = 2.0 * 10e9 / c.ib_bw;
+        assert!(t > asymptote && t < asymptote * 1.2, "{t} vs {asymptote}");
+    }
+
+    #[test]
+    fn p2p_time_includes_latency() {
+        let c = ClusterSpec::hgx_a100(1);
+        assert!(c.p2p_time(0.0, true) > 0.0);
+        assert!(c.p2p_time(1e9, false) > c.p2p_time(1e9, true));
+    }
+}

@@ -1,0 +1,11 @@
+//! Ground-truth cluster performance model (the simulated A100 testbed).
+//!
+//! See DESIGN.md "Reproduction posture": the paper's physical cluster is
+//! replaced by an analytic model that reproduces the shape-dependent
+//! efficiency, TP-degradation, and kernel-regime behaviours DFLOP's design
+//! responds to.
+pub mod gpu;
+pub mod truth;
+
+pub use gpu::{ClusterSpec, GpuSpec};
+pub use truth::Truth;

@@ -1,0 +1,8 @@
+//! 1F1B pipeline execution simulation: the generic engine, the
+//! cluster-level builder (heterogeneous encoder/LLM pipelines with the
+//! Inter-model Communicator), and iteration statistics.
+pub mod build;
+pub mod sim;
+
+pub use build::{iterate, IterationStats, SystemPlan};
+pub use sim::{ideal_bubble_fraction, simulate, OpRecord, PipelineResult, Route};

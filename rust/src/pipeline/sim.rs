@@ -1,0 +1,435 @@
+//! Generic dependency-driven 1F1B pipeline execution engine.
+//!
+//! The engine simulates a 1F1B schedule over an arbitrary set of physical
+//! stages and per-bucket routes with *variable* forward/backward durations —
+//! the setting of Fig 1's "real case". Unlike the closed-form makespan
+//! formula (which assumes uniform microbatches), execution times here flow
+//! from data dependencies:
+//!
+//! - `F(k, r)` starts after `F(k, r−1)` finishes plus the communication hop;
+//! - `B(k, r)` starts after `B(k, r+1)` (or `F(k, last)` for the last
+//!   stage) plus the hop;
+//! - each physical stage executes its ops in the static 1F1B order
+//!   (warm-up forwards, then alternating backward/forward, then drain),
+//!   and is busy with at most one op at a time.
+//!
+//! The engine reports per-stage busy/idle time (Fig 13), the full op
+//! timeline (Fig 1), and the iteration makespan.
+
+/// One bucket's path through the pipeline.
+#[derive(Clone, Debug)]
+pub struct Route {
+    /// Physical stage ids, in traversal order.
+    pub stages: Vec<usize>,
+    /// Forward duration at each route position.
+    pub fwd: Vec<f64>,
+    /// Backward duration at each route position.
+    pub bwd: Vec<f64>,
+    /// Communication time for the hop *into* route position r (index 0 is
+    /// unused / 0.0; index r is the transfer from stage r−1 to r).
+    pub comm: Vec<f64>,
+}
+
+impl Route {
+    pub fn depth(&self) -> usize {
+        self.stages.len()
+    }
+}
+
+/// A simulated operation for timeline rendering.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpRecord {
+    pub bucket: usize,
+    pub stage: usize,
+    pub is_forward: bool,
+    pub start: f64,
+    pub finish: f64,
+}
+
+/// Simulation output.
+#[derive(Clone, Debug)]
+pub struct PipelineResult {
+    /// Time at which every backward has drained.
+    pub makespan: f64,
+    /// Per physical stage: time spent executing ops.
+    pub stage_busy: Vec<f64>,
+    /// Per physical stage: `makespan − busy` (bubbles + warm-up/drain).
+    pub stage_idle: Vec<f64>,
+    pub timeline: Vec<OpRecord>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct OpId {
+    bucket: usize,
+    /// Position along the bucket's route.
+    pos: usize,
+    forward: bool,
+}
+
+/// Simulate the 1F1B execution of `routes` over `n_stages` physical stages.
+///
+/// Buckets routed through the same stage are ordered by bucket index
+/// (their arrival order from the scheduler). Panics if the op order
+/// deadlocks — which would indicate an invalid route set, e.g. two buckets
+/// traversing shared stages in opposite orders.
+pub fn simulate(n_stages: usize, routes: &[Route]) -> PipelineResult {
+    // ---- build the static per-stage op order (1F1B) ----
+    // For each stage, gather the buckets that traverse it (with their route
+    // position), sorted by bucket index.
+    let mut stage_buckets: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n_stages];
+    for (b, r) in routes.iter().enumerate() {
+        for (pos, &s) in r.stages.iter().enumerate() {
+            assert!(s < n_stages, "route references unknown stage {s}");
+            stage_buckets[s].push((b, pos));
+        }
+    }
+    let max_depth = routes.iter().map(Route::depth).max().unwrap_or(0);
+
+    // Fan-out per stage: when a stage feeds several distinct downstream
+    // stages (e.g. one encoder DP group serving multiple LLM pipelines),
+    // its warm-up must cover each of them — count distinct successors.
+    let mut successors: Vec<std::collections::HashSet<usize>> =
+        vec![std::collections::HashSet::new(); n_stages];
+    for r in routes {
+        for w in r.stages.windows(2) {
+            successors[w[0]].insert(w[1]);
+        }
+    }
+
+    // 1F1B op order per stage: warm-up = stage depth × fan-out forwards,
+    // then alternate B/F, then drain backwards.
+    let mut stage_order: Vec<Vec<OpId>> = Vec::with_capacity(n_stages);
+    for s in 0..n_stages {
+        let buckets = &stage_buckets[s];
+        let mut order = Vec::with_capacity(buckets.len() * 2);
+        if buckets.is_empty() {
+            stage_order.push(order);
+            continue;
+        }
+        // The stage's pipeline depth (distance from the end) governs how
+        // many in-flight forwards 1F1B allows it; fan-out multiplies it.
+        let depth_here = buckets
+            .iter()
+            .map(|&(b, pos)| routes[b].depth() - pos)
+            .max()
+            .expect("non-empty");
+        let n = buckets.len();
+        let fan_out = successors[s].len().max(1);
+        let warmup = (depth_here * fan_out).min(n);
+        for &(b, pos) in buckets.iter().take(warmup) {
+            order.push(OpId { bucket: b, pos, forward: true });
+        }
+        for k in 0..n - warmup {
+            let (bb, bp) = buckets[k];
+            order.push(OpId { bucket: bb, pos: bp, forward: false });
+            let (fb, fp) = buckets[k + warmup];
+            order.push(OpId { bucket: fb, pos: fp, forward: true });
+        }
+        for &(b, pos) in buckets.iter().skip(n - warmup) {
+            order.push(OpId { bucket: b, pos, forward: false });
+        }
+        stage_order.push(order);
+    }
+
+    // ---- worklist execution ----
+    // finish[op] once computed; flat-indexed by (bucket, pos, dir) with a
+    // NaN sentinel (a HashMap here dominated the optimizer's refinement
+    // loop — see EXPERIMENTS.md §Perf).
+    let stride = max_depth.max(1);
+    let idx_of = |op: &OpId| (op.bucket * stride + op.pos) * 2 + op.forward as usize;
+    let mut finish_v = vec![f64::NAN; routes.len() * stride * 2];
+    struct Finish<'a> {
+        v: &'a mut Vec<f64>,
+    }
+    let mut finish = Finish { v: &mut finish_v };
+    impl<'a> Finish<'a> {
+        #[inline]
+        fn get_at(&self, i: usize) -> Option<f64> {
+            let x = self.v[i];
+            if x.is_nan() {
+                None
+            } else {
+                Some(x)
+            }
+        }
+        #[inline]
+        fn set_at(&mut self, i: usize, t: f64) {
+            self.v[i] = t;
+        }
+    }
+    let mut stage_ptr = vec![0usize; n_stages];
+    let mut stage_free = vec![0.0f64; n_stages];
+    let mut stage_busy = vec![0.0f64; n_stages];
+    let mut timeline = Vec::new();
+    let total_ops: usize = stage_order.iter().map(Vec::len).sum();
+    let mut done = 0usize;
+
+    while done < total_ops {
+        let mut progressed = false;
+        for s in 0..n_stages {
+            // Execute as many consecutive ready ops as possible per sweep.
+            while stage_ptr[s] < stage_order[s].len() {
+                let op = stage_order[s][stage_ptr[s]];
+                let route = &routes[op.bucket];
+                // Dependency finish time (None → not ready yet).
+                let dep: Option<f64> = if op.forward {
+                    if op.pos == 0 {
+                        Some(0.0)
+                    } else {
+                        finish
+                            .get_at(idx_of(&OpId {
+                                bucket: op.bucket,
+                                pos: op.pos - 1,
+                                forward: true,
+                            }))
+                            .map(|f| f + route.comm[op.pos])
+                    }
+                } else if op.pos + 1 == route.depth() {
+                    // Last stage: backward follows own forward directly.
+                    finish.get_at(idx_of(&OpId {
+                        bucket: op.bucket,
+                        pos: op.pos,
+                        forward: true,
+                    }))
+                } else {
+                    finish
+                        .get_at(idx_of(&OpId {
+                            bucket: op.bucket,
+                            pos: op.pos + 1,
+                            forward: false,
+                        }))
+                        .map(|f| f + route.comm[op.pos + 1])
+                };
+                let Some(dep_t) = dep else { break };
+                let dur = if op.forward { route.fwd[op.pos] } else { route.bwd[op.pos] };
+                let start = stage_free[s].max(dep_t);
+                let end = start + dur;
+                stage_free[s] = end;
+                stage_busy[s] += dur;
+                finish.set_at(idx_of(&op), end);
+                timeline.push(OpRecord {
+                    bucket: op.bucket,
+                    stage: s,
+                    is_forward: op.forward,
+                    start,
+                    finish: end,
+                });
+                stage_ptr[s] += 1;
+                done += 1;
+                progressed = true;
+            }
+        }
+        if !progressed && done < total_ops {
+            // Work-conserving fallback: the static 1F1B order stalled
+            // (possible under exotic DP-group topologies where the
+            // warm-up heuristic under-provisions). Pull the earliest
+            // *ready* op forward in some stage's order — dependencies are
+            // still honored, only the local 1F1B ordering is relaxed.
+            let mut recovered = false;
+            'outer: for s in 0..n_stages {
+                for idx in stage_ptr[s] + 1..stage_order[s].len() {
+                    let op = stage_order[s][idx];
+                    let route = &routes[op.bucket];
+                    let ready = if op.forward {
+                        op.pos == 0
+                            || finish
+                                .get_at(idx_of(&OpId {
+                                    bucket: op.bucket,
+                                    pos: op.pos - 1,
+                                    forward: true,
+                                }))
+                                .is_some()
+                    } else if op.pos + 1 == route.depth() {
+                        finish
+                            .get_at(idx_of(&OpId {
+                                bucket: op.bucket,
+                                pos: op.pos,
+                                forward: true,
+                            }))
+                            .is_some()
+                    } else {
+                        finish
+                            .get_at(idx_of(&OpId {
+                                bucket: op.bucket,
+                                pos: op.pos + 1,
+                                forward: false,
+                            }))
+                            .is_some()
+                    };
+                    if ready {
+                        // Hoist the ready op to the current position.
+                        let op = stage_order[s].remove(idx);
+                        stage_order[s].insert(stage_ptr[s], op);
+                        recovered = true;
+                        break 'outer;
+                    }
+                }
+            }
+            assert!(
+                recovered,
+                "1F1B schedule deadlocked with no ready op at {done}/{total_ops} \
+                 (max_depth {max_depth}, {} routes) — dependency cycle in routes",
+                routes.len()
+            );
+        }
+    }
+
+    let makespan = stage_free.iter().cloned().fold(0.0, f64::max);
+    let stage_idle = stage_busy.iter().map(|&b| makespan - b).collect();
+    PipelineResult { makespan, stage_busy, stage_idle, timeline }
+}
+
+/// The theoretical minimum bubble *fraction* of a uniform 1F1B pipeline:
+/// `(p − 1) / (m + p − 1)` (§5.3.5, [44]).
+pub fn ideal_bubble_fraction(p: usize, m: usize) -> f64 {
+    (p as f64 - 1.0) / (m as f64 + p as f64 - 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Uniform linear pipeline helper: `m` buckets through `p` stages.
+    fn uniform(p: usize, m: usize, fwd: f64, bwd: f64) -> Vec<Route> {
+        (0..m)
+            .map(|_| Route {
+                stages: (0..p).collect(),
+                fwd: vec![fwd; p],
+                bwd: vec![bwd; p],
+                comm: vec![0.0; p],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_stage_single_bucket() {
+        let r = simulate(1, &uniform(1, 1, 1.0, 2.0));
+        assert!((r.makespan - 3.0).abs() < 1e-12);
+        assert_eq!(r.timeline.len(), 2);
+        assert!((r.stage_busy[0] - 3.0).abs() < 1e-12);
+        assert!(r.stage_idle[0].abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_pipeline_matches_1f1b_closed_form() {
+        // With fwd = f, bwd = 2f, p stages, m ≥ p buckets, the 1F1B
+        // makespan is (p−1)·f (warmup) + m·(f+2f) (steady state on stage
+        // 0) + (p−1)·2f (drain) = (p−1)·3f + 3mf.
+        for (p, m) in [(2usize, 4usize), (4, 6), (4, 4), (3, 8)] {
+            let f = 1.0;
+            let r = simulate(p, &uniform(p, m, f, 2.0 * f));
+            let expect = (p as f64 - 1.0) * 3.0 * f + 3.0 * m as f64 * f;
+            assert!(
+                (r.makespan - expect).abs() < 1e-9,
+                "p={p} m={m}: got {} expect {expect}",
+                r.makespan
+            );
+        }
+    }
+
+    #[test]
+    fn bubble_fraction_tracks_ideal_for_uniform_input() {
+        // Idle on the *last* stage of a uniform 1F1B pipeline equals the
+        // classic (p−1)/(m+p−1) fraction of the makespan (fwd+bwd = 3f
+        // per bucket, warm-up+drain bubbles of 3f per missing slot).
+        let (p, m) = (4usize, 12usize);
+        let r = simulate(p, &uniform(p, m, 1.0, 2.0));
+        let last = p - 1;
+        let measured = r.stage_idle[last] / r.makespan;
+        let ideal = ideal_bubble_fraction(p, m);
+        assert!(
+            (measured - ideal).abs() < 0.02,
+            "measured {measured} ideal {ideal}"
+        );
+    }
+
+    #[test]
+    fn ops_never_overlap_on_a_stage() {
+        let mut routes = uniform(3, 5, 1.0, 2.0);
+        // Perturb durations to exercise the variable-duration path.
+        for (i, r) in routes.iter_mut().enumerate() {
+            for s in 0..3 {
+                r.fwd[s] = 1.0 + 0.3 * ((i + s) % 3) as f64;
+                r.bwd[s] = 2.0 + 0.5 * ((i * s) % 2) as f64;
+            }
+        }
+        let res = simulate(3, &routes);
+        for s in 0..3 {
+            let mut ops: Vec<&OpRecord> =
+                res.timeline.iter().filter(|o| o.stage == s).collect();
+            ops.sort_by(|a, b| a.start.partial_cmp(&b.start).expect("NaN"));
+            for w in ops.windows(2) {
+                assert!(
+                    w[1].start >= w[0].finish - 1e-9,
+                    "overlap on stage {s}: {:?} then {:?}",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dependencies_respected() {
+        let routes = uniform(4, 6, 1.0, 2.0);
+        let res = simulate(4, &routes);
+        let get = |bucket: usize, stage: usize, fw: bool| {
+            res.timeline
+                .iter()
+                .find(|o| o.bucket == bucket && o.stage == stage && o.is_forward == fw)
+                .expect("op present")
+        };
+        for b in 0..6 {
+            for s in 1..4 {
+                assert!(get(b, s, true).start >= get(b, s - 1, true).finish - 1e-9);
+            }
+            for s in 0..3 {
+                assert!(get(b, s, false).start >= get(b, s + 1, false).finish - 1e-9);
+            }
+            assert!(get(b, 3, false).start >= get(b, 3, true).finish - 1e-9);
+        }
+    }
+
+    #[test]
+    fn comm_hops_delay_downstream_stages() {
+        let mut with_comm = uniform(2, 2, 1.0, 2.0);
+        for r in &mut with_comm {
+            r.comm[1] = 5.0;
+        }
+        let base = simulate(2, &uniform(2, 2, 1.0, 2.0));
+        let delayed = simulate(2, &with_comm);
+        assert!(delayed.makespan > base.makespan + 5.0 - 1e-9);
+    }
+
+    #[test]
+    fn heterogeneous_durations_create_extra_bubbles() {
+        // One slow bucket inflates idle time versus uniform (Fig 1 bottom).
+        let uniform_res = simulate(4, &uniform(4, 8, 1.0, 2.0));
+        let mut skew = uniform(4, 8, 1.0, 2.0);
+        for s in 0..4 {
+            skew[3].fwd[s] = 4.0;
+            skew[3].bwd[s] = 8.0;
+        }
+        let skew_res = simulate(4, &skew);
+        let idle_u: f64 = uniform_res.stage_idle.iter().sum();
+        let idle_s: f64 = skew_res.stage_idle.iter().sum();
+        assert!(idle_s > idle_u * 1.5, "uniform {idle_u} skewed {idle_s}");
+    }
+
+    #[test]
+    fn disjoint_pipelines_run_concurrently() {
+        // Two independent 1-stage pipelines: makespan is the max, not sum.
+        let routes = vec![
+            Route { stages: vec![0], fwd: vec![1.0], bwd: vec![2.0], comm: vec![0.0] },
+            Route { stages: vec![1], fwd: vec![1.0], bwd: vec![2.0], comm: vec![0.0] },
+        ];
+        let r = simulate(2, &routes);
+        assert!((r.makespan - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ideal_bubble_formula() {
+        assert!((ideal_bubble_fraction(4, 12) - 3.0 / 15.0).abs() < 1e-12);
+        assert_eq!(ideal_bubble_fraction(1, 8), 0.0);
+    }
+}

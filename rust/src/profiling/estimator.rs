@@ -1,0 +1,188 @@
+//! Per-item duration estimation from fitted profiles.
+//!
+//! Implements the paper's duration model (§3.3.1):
+//!
+//! ```text
+//! E_dur(d;θ) = E_FLOP(d;θ) / E_thr(b(d), E_tp)
+//! L_dur(d;θ) = L_FLOP(d;θ) / L_thr(s(d), L_tp)
+//! ```
+//!
+//! with the LLM side split into linear and attention components measured
+//! independently (§3.2.1). Durations are for the *whole module*; pipeline
+//! stage durations divide by the module's PP degree at the call site
+//! (Algorithm 1 lines 25–26).
+
+use crate::data::item::ItemShape;
+use crate::model::catalog::Mllm;
+use crate::profiling::engine::ThroughputModel;
+
+/// Estimates per-item durations under a fitted throughput model.
+pub struct Estimator<'a> {
+    pub m: &'a Mllm,
+    pub thr: &'a ThroughputModel,
+}
+
+impl<'a> Estimator<'a> {
+    pub fn new(m: &'a Mllm, thr: &'a ThroughputModel) -> Self {
+        Estimator { m, thr }
+    }
+
+    /// Predicted full-encoder fwd+bwd time for one item at TP `tp`.
+    pub fn enc_item_dur(&self, shape: &ItemShape, tp: usize) -> f64 {
+        if shape.units == 0 {
+            return 0.0;
+        }
+        let units = shape.units as f64;
+        let flop = shape.encoder_flop(self.m);
+        flop / (self.thr.e_thr.eval(units, tp) * tp as f64)
+    }
+
+    /// Predicted full-LLM fwd+bwd time for one item at TP `tp`.
+    pub fn llm_item_dur(&self, shape: &ItemShape, tp: usize) -> f64 {
+        let seq = shape.llm_seq as f64;
+        if seq <= 0.0 {
+            return 0.0;
+        }
+        let layers = self.m.llm.layers as f64;
+        let lin_flop = self
+            .m
+            .llm
+            .linear_flop_fwd(seq, layers, self.m.llm_mlp_matrices)
+            * (1.0 + Mllm::BWD_FACTOR);
+        let attn_flop =
+            self.m.llm.attn_flop_fwd(seq, layers) * (1.0 + Mllm::BWD_FACTOR);
+        lin_flop / (self.thr.l_lin_thr.eval(seq, tp) * tp as f64)
+            + attn_flop / (self.thr.l_attn_thr.eval(seq, tp) * tp as f64)
+    }
+
+    /// Predicted fwd+bwd time of a whole *packed* encoder microbatch with
+    /// `units_total` units at TP `tp` — effective-batch efficiency applies
+    /// to the packed total (`E_thr(b, tp)`), not per item.
+    pub fn enc_bucket_dur(&self, units_total: f64, tp: usize) -> f64 {
+        if units_total <= 0.0 {
+            return 0.0;
+        }
+        let flop = self.m.encoder_flop_total_f64(units_total);
+        flop / (self.thr.e_thr.eval(units_total, tp) * tp as f64)
+    }
+
+    /// Predicted fwd+bwd time of a whole *packed* LLM microbatch: linear
+    /// work is priced at the packed total's throughput (`L_lin_thr(ΣS)`),
+    /// attention per instance (§3.2.1) — this is what makes packing small
+    /// items into one microbatch cheaper than pricing them separately.
+    pub fn llm_bucket_dur(&self, seqs: &[f64], tp: usize) -> f64 {
+        let total: f64 = seqs.iter().sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let layers = self.m.llm.layers as f64;
+        let lin_flop = self
+            .m
+            .llm
+            .linear_flop_fwd(total, layers, self.m.llm_mlp_matrices)
+            * (1.0 + Mllm::BWD_FACTOR);
+        let mut t = lin_flop / (self.thr.l_lin_thr.eval(total, tp) * tp as f64);
+        for &s in seqs {
+            if s <= 0.0 {
+                continue;
+            }
+            let attn_flop =
+                self.m.llm.attn_flop_fwd(s, layers) * (1.0 + Mllm::BWD_FACTOR);
+            t += attn_flop / (self.thr.l_attn_thr.eval(s, tp) * tp as f64);
+        }
+        t
+    }
+
+    /// [`Self::llm_bucket_dur`] for a pack of `count` identical sequences
+    /// of length `seq` (fractional counts allowed) — allocation-free form
+    /// for the optimizer's mean-phase inner loop.
+    pub fn llm_bucket_dur_uniform(&self, seq: f64, count: f64, tp: usize) -> f64 {
+        let total = seq * count;
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let layers = self.m.llm.layers as f64;
+        let lin_flop = self
+            .m
+            .llm
+            .linear_flop_fwd(total, layers, self.m.llm_mlp_matrices)
+            * (1.0 + Mllm::BWD_FACTOR);
+        let attn_flop =
+            self.m.llm.attn_flop_fwd(seq, layers) * (1.0 + Mllm::BWD_FACTOR) * count;
+        lin_flop / (self.thr.l_lin_thr.eval(total, tp) * tp as f64)
+            + attn_flop / (self.thr.l_attn_thr.eval(seq, tp) * tp as f64)
+    }
+
+    /// Predicted per-GPU LLM throughput for a packed sequence (used by
+    /// Adaptive Correction to compare against observed throughput, Eq 7).
+    pub fn llm_pred_throughput(&self, seq: f64, tp: usize) -> f64 {
+        // Weighted combination of the two paths by their FLOP shares.
+        let layers = self.m.llm.layers as f64;
+        let lin = self.m.llm.linear_flop_fwd(seq, layers, self.m.llm_mlp_matrices);
+        let attn = self.m.llm.attn_flop_fwd(seq, layers);
+        let t = lin / self.thr.l_lin_thr.eval(seq, tp)
+            + attn / self.thr.l_attn_thr.eval(seq, tp);
+        (lin + attn) / t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::catalog::{llava_ov, llama3};
+    use crate::perfmodel::{ClusterSpec, Truth};
+    use crate::profiling::backend::SimBackend;
+    use crate::profiling::engine::{ModelProfiler, ProfilerGrids};
+
+    #[test]
+    fn estimates_track_ground_truth_for_smooth_model() {
+        let truth = Truth::smooth(ClusterSpec::hgx_a100(1));
+        let m = llava_ov(llama3("8b"));
+        let mut backend = SimBackend::new(truth.clone());
+        let profile =
+            ModelProfiler::new(&mut backend, ProfilerGrids::standard(8)).profile(&m);
+        let est = Estimator::new(&m, &profile.throughput);
+
+        let shape = ItemShape { units: 6, llm_seq: 3200, source: 0 };
+        for &tp in &[1usize, 2, 4] {
+            let pred_e = est.enc_item_dur(&shape, tp);
+            let true_e =
+                truth.encoder_stage_time(&m, 6.0, m.encoder.layers as f64, tp);
+            let err_e = (pred_e / true_e - 1.0).abs();
+            assert!(err_e < 0.08, "enc tp {tp}: err {err_e}");
+
+            let pred_l = est.llm_item_dur(&shape, tp);
+            let true_l =
+                truth.llm_stage_time(&m, &[3200.0], m.llm.layers as f64, tp);
+            let err_l = (pred_l / true_l - 1.0).abs();
+            assert!(err_l < 0.08, "llm tp {tp}: err {err_l}");
+        }
+    }
+
+    #[test]
+    fn zero_shapes_cost_nothing() {
+        let truth = Truth::smooth(ClusterSpec::hgx_a100(1));
+        let m = llava_ov(llama3("8b"));
+        let mut backend = SimBackend::new(truth);
+        let profile =
+            ModelProfiler::new(&mut backend, ProfilerGrids::coarse(8)).profile(&m);
+        let est = Estimator::new(&m, &profile.throughput);
+        let shape = ItemShape { units: 0, llm_seq: 0, source: 0 };
+        assert_eq!(est.enc_item_dur(&shape, 1), 0.0);
+        assert_eq!(est.llm_item_dur(&shape, 1), 0.0);
+    }
+
+    #[test]
+    fn durations_decrease_with_tp() {
+        let truth = Truth::smooth(ClusterSpec::hgx_a100(1));
+        let m = llava_ov(llama3("8b"));
+        let mut backend = SimBackend::new(truth);
+        let profile =
+            ModelProfiler::new(&mut backend, ProfilerGrids::standard(8)).profile(&m);
+        let est = Estimator::new(&m, &profile.throughput);
+        // Large enough work that TP actually helps despite comm overhead.
+        let shape = ItemShape { units: 64, llm_seq: 16000, source: 0 };
+        assert!(est.enc_item_dur(&shape, 4) < est.enc_item_dur(&shape, 1));
+        assert!(est.llm_item_dur(&shape, 4) < est.llm_item_dur(&shape, 1));
+    }
+}

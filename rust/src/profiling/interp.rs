@@ -1,0 +1,164 @@
+//! Piecewise-linear interpolation over measurement grids.
+//!
+//! The paper's Model Profiler characterizes throughput and memory "via
+//! linear interpolation" over a grid of measured input shapes (§3.2.1).
+//! This module provides the 1-D interpolant and the per-TP family used by
+//! the throughput models (`E_thr`, `L_lin_thr`, `L_attn_thr`): TP degrees
+//! are powers of two and measured exactly, so only the shape axis is
+//! interpolated.
+
+/// 1-D piecewise-linear interpolant with linear extrapolation at the ends.
+#[derive(Clone, Debug)]
+pub struct Interp1D {
+    /// Strictly increasing sample coordinates.
+    xs: Vec<f64>,
+    ys: Vec<f64>,
+}
+
+impl Interp1D {
+    pub fn new(xs: Vec<f64>, ys: Vec<f64>) -> Interp1D {
+        assert_eq!(xs.len(), ys.len(), "interp grid size mismatch");
+        assert!(xs.len() >= 2, "need at least two grid points");
+        assert!(
+            xs.windows(2).all(|w| w[0] < w[1]),
+            "grid coordinates must be strictly increasing"
+        );
+        Interp1D { xs, ys }
+    }
+
+    /// Evaluate at `x`. Outside the grid, extrapolates linearly from the
+    /// closest segment (clamped at zero — throughputs and byte counts are
+    /// never negative).
+    pub fn eval(&self, x: f64) -> f64 {
+        let n = self.xs.len();
+        // Find segment via binary search.
+        let seg = match self
+            .xs
+            .binary_search_by(|probe| probe.partial_cmp(&x).expect("NaN"))
+        {
+            Ok(i) => return self.ys[i],
+            Err(0) => 0,
+            Err(i) if i >= n => n - 2,
+            Err(i) => i - 1,
+        };
+        let (x0, x1) = (self.xs[seg], self.xs[seg + 1]);
+        let (y0, y1) = (self.ys[seg], self.ys[seg + 1]);
+        let t = (x - x0) / (x1 - x0);
+        (y0 + t * (y1 - y0)).max(0.0)
+    }
+
+    /// Grid coordinates (used by tests and reporting).
+    pub fn grid(&self) -> &[f64] {
+        &self.xs
+    }
+}
+
+/// A family of 1-D interpolants keyed by TP degree.
+///
+/// `E_thr(batch, tp)`-style models: the shape axis is interpolated, the TP
+/// axis is looked up exactly (TP is profiled at every power of two up to
+/// `N_gpu_node`, Eq 2).
+#[derive(Clone, Debug)]
+pub struct PerTp {
+    curves: Vec<(usize, Interp1D)>,
+}
+
+impl PerTp {
+    pub fn new(curves: Vec<(usize, Interp1D)>) -> PerTp {
+        assert!(!curves.is_empty());
+        PerTp { curves }
+    }
+
+    /// Evaluate at (x, tp). Panics if `tp` was not profiled — the optimizer
+    /// only explores profiled TP degrees (Eq 2).
+    pub fn eval(&self, x: f64, tp: usize) -> f64 {
+        self.curves
+            .iter()
+            .find(|(t, _)| *t == tp)
+            .unwrap_or_else(|| panic!("TP degree {tp} was not profiled"))
+            .1
+            .eval(x)
+    }
+
+    pub fn tps(&self) -> Vec<usize> {
+        self.curves.iter().map(|(t, _)| *t).collect()
+    }
+}
+
+/// Linear model `y = a·x + b` fitted from exactly two measurements — the
+/// paper's memory model is built by "varying the number of layers between
+/// two distinct small values" and interpolating linearly (§3.2.1).
+#[derive(Clone, Copy, Debug)]
+pub struct Linear2 {
+    pub a: f64,
+    pub b: f64,
+}
+
+impl Linear2 {
+    pub fn fit(x0: f64, y0: f64, x1: f64, y1: f64) -> Linear2 {
+        assert!(x0 != x1, "degenerate linear fit");
+        let a = (y1 - y0) / (x1 - x0);
+        Linear2 { a, b: y0 - a * x0 }
+    }
+
+    pub fn eval(&self, x: f64) -> f64 {
+        self.a * x + self.b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interp_hits_grid_points() {
+        let it = Interp1D::new(vec![1.0, 2.0, 4.0], vec![10.0, 20.0, 40.0]);
+        assert_eq!(it.eval(1.0), 10.0);
+        assert_eq!(it.eval(2.0), 20.0);
+        assert_eq!(it.eval(4.0), 40.0);
+    }
+
+    #[test]
+    fn interp_linear_between() {
+        let it = Interp1D::new(vec![0.0, 10.0], vec![0.0, 100.0]);
+        assert!((it.eval(2.5) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn extrapolates_clamped_at_zero() {
+        let it = Interp1D::new(vec![1.0, 2.0], vec![10.0, 20.0]);
+        assert!((it.eval(3.0) - 30.0).abs() < 1e-12);
+        assert_eq!(it.eval(-100.0), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn rejects_unsorted_grid() {
+        Interp1D::new(vec![2.0, 1.0], vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn per_tp_family_lookup() {
+        let f = PerTp::new(vec![
+            (1, Interp1D::new(vec![0.0, 1.0], vec![0.0, 10.0])),
+            (2, Interp1D::new(vec![0.0, 1.0], vec![0.0, 5.0])),
+        ]);
+        assert!((f.eval(0.5, 1) - 5.0).abs() < 1e-12);
+        assert!((f.eval(0.5, 2) - 2.5).abs() < 1e-12);
+        assert_eq!(f.tps(), vec![1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "was not profiled")]
+    fn per_tp_rejects_unknown_tp() {
+        let f = PerTp::new(vec![(1, Interp1D::new(vec![0.0, 1.0], vec![0.0, 1.0]))]);
+        f.eval(0.5, 4);
+    }
+
+    #[test]
+    fn linear2_fit_recovers_line() {
+        let l = Linear2::fit(2.0, 7.0, 4.0, 11.0);
+        assert!((l.eval(0.0) - 3.0).abs() < 1e-12);
+        assert!((l.eval(10.0) - 23.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,10 @@
+//! The Profiling Engine (§3.2): measurement backends, interpolation,
+//! the Model Profiler, the Data Profiler, and per-item duration estimation.
+pub mod backend;
+pub mod engine;
+pub mod estimator;
+pub mod interp;
+
+pub use backend::{MeasureBackend, SimBackend};
+pub use engine::{profile_data, DataProfile, ModelProfile, ModelProfiler, ProfilerGrids};
+pub use estimator::Estimator;

@@ -1,0 +1,275 @@
+//! Artifact manifest parsing and parameter-blob loading.
+//!
+//! `python/compile/aot.py` emits `artifacts/manifest.json` plus HLO-text
+//! files and a concatenated f32 parameter blob; this module reads them into
+//! typed structures the runtime consumes. The manifest is the only contract
+//! between the python compile path and the rust request path.
+
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One parameter tensor in the blob.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One compiled train-step shape bucket.
+#[derive(Clone, Debug)]
+pub struct BucketSpec {
+    pub n_img: usize,
+    pub seq: usize,
+    pub file: PathBuf,
+}
+
+/// Profiling forward-pass artifacts.
+#[derive(Clone, Debug)]
+pub struct FwdSpec {
+    /// Grid coordinate: number of images (encoder) or sequence (LLM).
+    pub coord: usize,
+    pub file: PathBuf,
+}
+
+/// Model hyperparameters recorded by the compile path.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelInfo {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub enc_layers: usize,
+    pub llm_layers: usize,
+    pub mlp_ratio: usize,
+    pub tokens_per_image: usize,
+    pub patch_dim: usize,
+    pub total_params: usize,
+}
+
+/// Synthetic-task constants shared with `python/compile/task.py`.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskInfo {
+    pub n_keys: usize,
+    pub noise: f64,
+}
+
+/// The full parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: String,
+    pub model: ModelInfo,
+    pub task: TaskInfo,
+    pub params: Vec<ParamSpec>,
+    pub params_file: PathBuf,
+    pub train_steps: Vec<BucketSpec>,
+    pub encoder_fwd: Vec<FwdSpec>,
+    pub llm_fwd: Vec<FwdSpec>,
+}
+
+fn usize_field(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("manifest missing numeric field '{key}'"))
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let root = parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+
+        let model_j = root.get("model").ok_or_else(|| anyhow!("missing model"))?;
+        let model = ModelInfo {
+            vocab: usize_field(model_j, "vocab")?,
+            hidden: usize_field(model_j, "hidden")?,
+            heads: usize_field(model_j, "heads")?,
+            enc_layers: usize_field(model_j, "enc_layers")?,
+            llm_layers: usize_field(model_j, "llm_layers")?,
+            mlp_ratio: usize_field(model_j, "mlp_ratio")?,
+            tokens_per_image: usize_field(model_j, "tokens_per_image")?,
+            patch_dim: usize_field(model_j, "patch_dim")?,
+            total_params: usize_field(model_j, "total_params")?,
+        };
+        let task_j = root.get("task").ok_or_else(|| anyhow!("missing task"))?;
+        let task = TaskInfo {
+            n_keys: usize_field(task_j, "n_keys")?,
+            noise: task_j
+                .get("noise")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("missing task.noise"))?,
+        };
+
+        let mut params = Vec::new();
+        let mut expect_offset = 0usize;
+        for p in root
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing params"))?
+        {
+            let spec = ParamSpec {
+                name: p
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("param name"))?
+                    .to_string(),
+                shape: p
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("param shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<_>>()?,
+                offset: usize_field(p, "offset")?,
+                bytes: usize_field(p, "bytes")?,
+            };
+            if spec.offset != expect_offset {
+                bail!("param '{}' offset {} != expected {expect_offset}", spec.name, spec.offset);
+            }
+            if spec.bytes != 4 * spec.elements() {
+                bail!("param '{}' byte/shape mismatch", spec.name);
+            }
+            expect_offset += spec.bytes;
+            params.push(spec);
+        }
+
+        let buckets = root
+            .get("train_steps")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing train_steps"))?
+            .iter()
+            .map(|b| {
+                Ok(BucketSpec {
+                    n_img: usize_field(b, "n_img")?,
+                    seq: usize_field(b, "seq")?,
+                    file: dir.join(
+                        b.get("file")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("bucket file"))?,
+                    ),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let fwd = |key: &str, coord_key: &str| -> Result<Vec<FwdSpec>> {
+            root.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing {key}"))?
+                .iter()
+                .map(|e| {
+                    Ok(FwdSpec {
+                        coord: usize_field(e, coord_key)?,
+                        file: dir.join(
+                            e.get("file")
+                                .and_then(Json::as_str)
+                                .ok_or_else(|| anyhow!("{key} file"))?,
+                        ),
+                    })
+                })
+                .collect()
+        };
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            config: root
+                .get("config")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            model,
+            task,
+            params_file: dir.join(
+                root.get("params_file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("missing params_file"))?,
+            ),
+            params,
+            train_steps: buckets,
+            encoder_fwd: fwd("encoder_fwd", "n_img")?,
+            llm_fwd: fwd("llm_fwd", "seq")?,
+        })
+    }
+
+    /// Read the parameter blob into per-tensor f32 vectors (spec order).
+    pub fn load_params(&self) -> Result<Vec<Vec<f32>>> {
+        let blob = std::fs::read(&self.params_file)
+            .with_context(|| format!("reading {}", self.params_file.display()))?;
+        let expected: usize = self.params.iter().map(|p| p.bytes).sum();
+        if blob.len() != expected {
+            bail!("params blob {} bytes, manifest says {expected}", blob.len());
+        }
+        let mut out = Vec::with_capacity(self.params.len());
+        for spec in &self.params {
+            let raw = &blob[spec.offset..spec.offset + spec.bytes];
+            let vals: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            out.push(vals);
+        }
+        Ok(out)
+    }
+
+    /// Pick the smallest bucket that fits (n_img, seq); None if none fits.
+    pub fn bucket_for(&self, n_img: usize, seq: usize) -> Option<&BucketSpec> {
+        self.train_steps
+            .iter()
+            .filter(|b| b.n_img >= n_img && b.seq >= seq)
+            .min_by_key(|b| (b.n_img, b.seq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The checked-in artifacts dir (built by `make artifacts`); tests that
+    /// need it are skipped gracefully when it has not been built yet.
+    pub fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn manifest_round_trip() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).expect("manifest parses");
+        assert!(!m.train_steps.is_empty());
+        assert!(m.model.total_params > 1_000_000);
+        let params = m.load_params().expect("params blob");
+        assert_eq!(params.len(), m.params.len());
+        let total: usize = params.iter().map(Vec::len).sum();
+        assert_eq!(total, m.model.total_params);
+        // Values finite and non-degenerate.
+        assert!(params.iter().flatten().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn bucket_selection_prefers_smallest_fit() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).expect("manifest");
+        if m.train_steps.len() < 2 {
+            return;
+        }
+        let smallest = m.train_steps.iter().map(|b| b.seq).min().unwrap();
+        let b = m.bucket_for(1, smallest).expect("bucket");
+        assert_eq!(b.seq, smallest);
+        // Oversized request yields None.
+        assert!(m.bucket_for(1, 1 << 20).is_none());
+    }
+}

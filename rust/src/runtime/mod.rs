@@ -1,0 +1,14 @@
+//! PJRT runtime: artifact loading, the training session, the synthetic
+//! task generator, and the real-execution profiler.
+//!
+//! Adapted from /opt/xla-example/load_hlo: HLO *text* is the interchange
+//! format (`HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile` → `execute`).
+pub mod artifacts;
+pub mod profiler;
+pub mod session;
+pub mod taskgen;
+
+pub use artifacts::Manifest;
+pub use session::TrainSession;
+pub use taskgen::{batch_for_bucket, make_batch, TrainBatch};

@@ -1,0 +1,100 @@
+//! Real-execution profiling backend: times the AOT forward-pass artifacts
+//! on the PJRT CPU client, playing the Model Profiler's measurement role
+//! against real execution instead of the analytic cluster model.
+
+use crate::runtime::artifacts::Manifest;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Context, Result};
+use std::time::Instant;
+
+/// One measured grid point.
+#[derive(Clone, Copy, Debug)]
+pub struct MeasuredPoint {
+    /// Grid coordinate: n_img for the encoder, seq for the LLM.
+    pub coord: usize,
+    /// Mean wall-clock seconds per execution.
+    pub seconds: f64,
+}
+
+/// Measured throughput curves from real PJRT execution.
+#[derive(Clone, Debug)]
+pub struct RealProfile {
+    pub encoder: Vec<MeasuredPoint>,
+    pub llm: Vec<MeasuredPoint>,
+}
+
+fn compile(client: &xla::PjRtClient, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .with_context(|| format!("parsing {}", path.display()))?;
+    Ok(client.compile(&xla::XlaComputation::from_proto(&proto))?)
+}
+
+/// Time each encoder/LLM forward artifact (`reps` measured runs after one
+/// warm-up). This is the Profiling Engine's PJRT measurement backend: the
+/// same grid-measure-fit flow as `SimBackend`, against real execution.
+pub fn profile_real(manifest: &Manifest, reps: usize, seed: u64) -> Result<RealProfile> {
+    let client = xla::PjRtClient::cpu()?;
+    let mut rng = Rng::new(seed);
+    let m = &manifest.model;
+    let params = manifest.load_params()?;
+    let mut param_lits = Vec::with_capacity(params.len());
+    for (vals, spec) in params.iter().zip(&manifest.params) {
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        param_lits.push(xla::Literal::vec1(vals).reshape(&dims)?);
+    }
+
+    let mut encoder = Vec::new();
+    for e in &manifest.encoder_fwd {
+        let exe = compile(&client, &e.file)?;
+        let n = e.coord;
+        let patches: Vec<f32> = (0..n * m.tokens_per_image * m.patch_dim)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let patches_lit = xla::Literal::vec1(&patches).reshape(&[
+            n as i64,
+            m.tokens_per_image as i64,
+            m.patch_dim as i64,
+        ])?;
+        let mut args: Vec<&xla::Literal> = param_lits.iter().collect();
+        args.push(&patches_lit);
+        // Warm-up, then measure.
+        exe.execute::<&xla::Literal>(&args)?;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let r = exe.execute::<&xla::Literal>(&args)?;
+            let _ = r[0][0].to_literal_sync()?;
+        }
+        encoder.push(MeasuredPoint { coord: n, seconds: t0.elapsed().as_secs_f64() / reps as f64 });
+    }
+
+    let mut llm = Vec::new();
+    for e in &manifest.llm_fwd {
+        let exe = compile(&client, &e.file)?;
+        let s = e.coord;
+        let token_ids: Vec<i32> =
+            (0..s).map(|_| rng.below(m.vocab as u64) as i32).collect();
+        let segment_ids: Vec<i32> = vec![1; s];
+        let img_index: Vec<i32> = vec![0; s];
+        let visual: Vec<f32> = (0..m.hidden).map(|_| rng.normal() as f32).collect();
+        let tok = xla::Literal::vec1(&token_ids).reshape(&[s as i64])?;
+        let seg = xla::Literal::vec1(&segment_ids).reshape(&[s as i64])?;
+        let img = xla::Literal::vec1(&img_index).reshape(&[s as i64])?;
+        let vis = xla::Literal::vec1(&visual).reshape(&[1, m.hidden as i64])?;
+        let mut args: Vec<&xla::Literal> = param_lits.iter().collect();
+        args.push(&tok);
+        args.push(&seg);
+        args.push(&img);
+        args.push(&vis);
+        exe.execute::<&xla::Literal>(&args)?;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let r = exe.execute::<&xla::Literal>(&args)?;
+            let _ = r[0][0].to_literal_sync()?;
+        }
+        llm.push(MeasuredPoint { coord: s, seconds: t0.elapsed().as_secs_f64() / reps as f64 });
+    }
+
+    Ok(RealProfile { encoder, llm })
+}

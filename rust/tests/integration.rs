@@ -1,0 +1,249 @@
+//! Cross-module integration tests: full-system runs over the simulated
+//! cluster, optimizer-vs-exhaustive checks, figure harness smoke tests, and
+//! end-to-end invariants that only hold when every layer composes.
+
+use dflop::data::dataset::Dataset;
+use dflop::figures::{by_id, FigOpts};
+use dflop::model::catalog::{llava_ov, llama3, paper_configs};
+use dflop::optimizer::plan::find_combs;
+use dflop::optimizer::search::{optimize, OptimizerInputs};
+use dflop::perfmodel::{ClusterSpec, Truth};
+use dflop::profiling::backend::SimBackend;
+use dflop::profiling::engine::{profile_data, ModelProfiler, ProfilerGrids};
+use dflop::sim::{run_system, RunConfig, SystemKind};
+use dflop::util::prop::forall;
+
+fn quick_cfg(nodes: usize, gbs: usize) -> RunConfig {
+    let mut c = RunConfig::new(nodes, gbs, 3, 42);
+    c.profile_samples = 256;
+    c
+}
+
+#[test]
+fn dflop_wins_on_every_paper_configuration() {
+    // The headline claim (Fig 7): DFLOP ≥ both baselines on every Table-3
+    // configuration, gains within the paper's reported band.
+    let cfg = quick_cfg(4, 128);
+    for pc in paper_configs() {
+        let d = run_system(SystemKind::Dflop, &pc.mllm, "mixed", &cfg);
+        let mg = run_system(SystemKind::Megatron, &pc.mllm, "mixed", &cfg);
+        let pt = run_system(SystemKind::Pytorch, &pc.mllm, "mixed", &cfg);
+        let vs_mega = d.speedup_over(&mg);
+        let vs_torch = d.speedup_over(&pt);
+        assert!(vs_mega > 1.0, "{}: vs Megatron {vs_mega:.2}", pc.label);
+        assert!(vs_torch > 1.0, "{}: vs PyTorch {vs_torch:.2}", pc.label);
+        assert!(
+            vs_mega.max(vs_torch) < 4.5,
+            "{}: implausible gain {:.2}",
+            pc.label,
+            vs_mega.max(vs_torch)
+        );
+    }
+}
+
+#[test]
+fn dflop_reduces_idle_time_substantially() {
+    // Fig 13: idle-time reduction vs both baselines.
+    let cfg = quick_cfg(4, 128);
+    let m = llava_ov(llama3("8b"));
+    let d = run_system(SystemKind::Dflop, &m, "mixed", &cfg);
+    let mg = run_system(SystemKind::Megatron, &m, "mixed", &cfg);
+    let pt = run_system(SystemKind::Pytorch, &m, "mixed", &cfg);
+    assert!(
+        d.mean_idle < 0.7 * mg.mean_idle,
+        "DFLOP idle {:.1} vs Megatron {:.1}",
+        d.mean_idle,
+        mg.mean_idle
+    );
+    assert!(
+        d.mean_idle < 0.5 * pt.mean_idle,
+        "DFLOP idle {:.1} vs PyTorch {:.1}",
+        d.mean_idle,
+        pt.mean_idle
+    );
+}
+
+#[test]
+fn gap_does_not_collapse_with_scale() {
+    // Fig 12's direction: the DFLOP advantage persists as nodes grow.
+    let m = llava_ov(llama3("8b"));
+    let mut gains = Vec::new();
+    for nodes in [1usize, 4] {
+        let cfg = quick_cfg(nodes, 32 * nodes);
+        let d = run_system(SystemKind::Dflop, &m, "mixed", &cfg);
+        let mg = run_system(SystemKind::Megatron, &m, "mixed", &cfg);
+        gains.push(d.speedup_over(&mg));
+    }
+    assert!(gains[1] > gains[0] * 0.85, "gap collapsed: {gains:?}");
+}
+
+#[test]
+fn optimizer_beats_every_random_feasible_candidate() {
+    // θ* must score at least as well (in realized simulation) as a sample
+    // of random feasible alternatives — an adversarial sanity check on
+    // Algorithm 1's objective.
+    let m = llava_ov(llama3("8b"));
+    let cluster = ClusterSpec::hgx_a100(1);
+    let truth = Truth::new(cluster);
+    let mut backend = SimBackend::new(truth.clone());
+    let profile =
+        ModelProfiler::new(&mut backend, ProfilerGrids::standard(8)).profile(&m);
+    let mut ds = Dataset::mixed(5);
+    let data = profile_data(&m, &mut ds, 256);
+    let gbs = 32;
+    let inp = OptimizerInputs {
+        m: &m,
+        profile: &profile,
+        data: &data,
+        n_gpus: 8,
+        gpus_per_node: 8,
+        mem_capacity: cluster.gpu.mem_bytes,
+        gbs,
+        assume_balanced: true,
+    };
+    let star = optimize(&inp).expect("feasible");
+
+    // Simulated realized time of a θ via balanced scheduling.
+    let realized = |theta: dflop::optimizer::plan::Theta| -> f64 {
+        use dflop::pipeline::build::{iterate, SystemPlan};
+        use dflop::profiling::estimator::Estimator;
+        use dflop::scheduler::correction::{Correction, CorrectionConfig};
+        use dflop::scheduler::online::{OnlineScheduler, SchedulerConfig};
+        let est = Estimator::new(&m, &profile.throughput);
+        let sched = OnlineScheduler::new(
+            theta,
+            SchedulerConfig::default(),
+            Correction::new(CorrectionConfig::default()),
+        );
+        let mut ds = Dataset::mixed(77);
+        let mut total = 0.0;
+        for _ in 0..3 {
+            let shapes = ds.shaped_batch(&m, gbs);
+            let s = sched.schedule(&est, &shapes);
+            let buckets: Vec<Vec<_>> = s
+                .assignment
+                .buckets
+                .iter()
+                .map(|g| g.iter().map(|&i| shapes[i]).collect())
+                .collect();
+            let plan = SystemPlan { m: &m, truth: &truth, theta };
+            total += iterate(&plan, &buckets).iteration_time;
+        }
+        total
+    };
+    let star_time = realized(star.theta);
+
+    // A handful of alternative feasible candidates.
+    let mut rng = dflop::util::rng::Rng::new(3);
+    let mut checked = 0;
+    for _ in 0..40 {
+        let e_gpus = rng.range(1, 7) as usize;
+        let l_gpus = 8 - e_gpus;
+        let e_combs = find_combs(e_gpus, 8, m.encoder.layers);
+        let l_combs = find_combs(l_gpus, 8, m.llm.layers);
+        if e_combs.is_empty() || l_combs.is_empty() {
+            continue;
+        }
+        let enc = *rng.choose(&e_combs);
+        let llm = *rng.choose(&l_combs);
+        if enc.dp % llm.dp != 0 && llm.dp % enc.dp != 0 {
+            continue;
+        }
+        let n_mb = (rng.range(1, (gbs / llm.dp).max(1) as i64)) as usize;
+        let theta = dflop::optimizer::plan::Theta { enc, llm, n_mb };
+        let t = realized(theta);
+        checked += 1;
+        assert!(
+            star_time <= t * 1.25,
+            "random candidate {theta} realized {t:.2}s beats θ* {star_time:.2}s by >25%"
+        );
+    }
+    assert!(checked > 10, "too few candidates checked: {checked}");
+}
+
+#[test]
+fn find_combs_is_exhaustive() {
+    forall("find_combs exhaustive", 100, |g| {
+        let gpus = g.size(48);
+        let combs = find_combs(gpus, 8, 64);
+        // Every returned combo multiplies out; brute-force count matches.
+        let mut expect = 0;
+        for tp in [1usize, 2, 4, 8] {
+            if gpus % tp != 0 {
+                continue;
+            }
+            let rest = gpus / tp;
+            for pp in 1..=rest.min(64) {
+                if rest % pp == 0 {
+                    expect += 1;
+                }
+            }
+        }
+        (
+            format!("gpus={gpus} combs={} expect={expect}", combs.len()),
+            combs.len() == expect && combs.iter().all(|c| c.gpus() == gpus),
+        )
+    });
+}
+
+#[test]
+fn figure_harness_smoke() {
+    // Each quick figure produces non-empty output with its own header.
+    let mut o = FigOpts::default();
+    o.nodes = 1;
+    o.gbs = 32;
+    o.iters = 2;
+    for (id, needle) in [
+        ("1", "Fig 1"),
+        ("2", "Fig 2a"),
+        ("4", "Fig 4"),
+        ("13", "Fig 13"),
+        ("16", "Fig 16a"),
+    ] {
+        let text = by_id(id, &o).expect("known figure id");
+        assert!(text.contains(needle), "figure {id} missing header");
+        assert!(text.len() > 100, "figure {id} suspiciously short");
+    }
+    assert!(by_id("99", &o).is_none());
+}
+
+#[test]
+fn correction_pays_off_under_heavy_anomalies() {
+    // Fig 15's positive corner: high anomaly rate × high latency ⇒ the
+    // corrected scheduler must not be slower than the uncorrected one.
+    let m = llava_ov(llama3("8b"));
+    let mut ds = Dataset::mixed(42);
+    let probe = ds.shaped_batch(&m, 256);
+    let mut buckets: Vec<u64> = probe
+        .iter()
+        .map(|s| Truth::llm_bucket(s.llm_seq as f64))
+        .collect();
+    buckets.sort_unstable();
+    buckets.dedup();
+    let injected: Vec<(u64, f64)> = buckets
+        .iter()
+        .step_by(6)
+        .map(|&b| (b, 0.45))
+        .collect();
+    let mut on = quick_cfg(2, 96);
+    on.iters = 10;
+    on.injected = injected.clone();
+    let mut off = on.clone();
+    off.disable_correction = true;
+    let r_on = run_system(SystemKind::Dflop, &m, "mixed", &on);
+    let r_off = run_system(SystemKind::Dflop, &m, "mixed", &off);
+    let steady = |r: &dflop::sim::RunResult| {
+        r.iterations[4..]
+            .iter()
+            .map(|s| s.iteration_time)
+            .sum::<f64>()
+    };
+    // Allow a small tolerance: the paper's own Fig 15 shows the benefit
+    // can be marginal; what must not happen is a large regression.
+    assert!(
+        steady(&r_on) <= steady(&r_off) * 1.03,
+        "correction hurt: on {:.2} off {:.2}",
+        steady(&r_on),
+        steady(&r_off)
+    );
+}
