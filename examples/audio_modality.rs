@@ -8,7 +8,7 @@
 use dflop::figures::{fig09, FigOpts};
 use dflop::util::cli::{Args, Spec};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dflop::util::error::Result<()> {
     let spec = Spec { valued: vec!["nodes", "gbs", "iters", "seed"], boolean: vec![] };
     let args = Args::parse(std::env::args().skip(1), &spec)?;
     let mut o = FigOpts::default();

@@ -24,7 +24,7 @@ use std::time::Duration;
 fn run_mode(
     artifacts: &PathBuf,
     cfg: &LeaderConfig,
-) -> anyhow::Result<dflop::coordinator::LeaderReport> {
+) -> dflop::util::error::Result<dflop::coordinator::LeaderReport> {
     let session = TrainSession::load(artifacts)?;
     eprintln!(
         "loaded {} ({} params, buckets {:?}) on {}",
@@ -37,7 +37,7 @@ fn run_mode(
     leader.run()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dflop::util::error::Result<()> {
     let spec = Spec {
         valued: vec!["iters", "gbs", "n-mb", "mode", "lr", "seed", "artifacts"],
         boolean: vec![],

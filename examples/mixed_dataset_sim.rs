@@ -9,7 +9,7 @@ use dflop::sim::{run_system, RunConfig, SystemKind};
 use dflop::util::cli::{Args, Spec};
 use dflop::util::table::{f, speedup, Table};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dflop::util::error::Result<()> {
     let spec = Spec { valued: vec!["nodes", "gbs", "iters", "seed"], boolean: vec![] };
     let args = Args::parse(std::env::args().skip(1), &spec)?;
     let cfg = RunConfig::new(

@@ -1,6 +1,17 @@
 //! Minimal bench harness (criterion is not in the offline vendor set):
 //! warm-up + repeated timing with mean/min/max reporting.
+//!
+//! Setting `DFLOP_BENCH_QUICK=1` switches every target to smoke mode — a
+//! single measured repetition (and, where a target honours it, a reduced
+//! workload) — so CI can execute the full bench suite in seconds and fail
+//! loudly on gross regressions without paying for stable statistics.
 use std::time::Instant;
+
+/// True when the CI smoke mode is requested via `DFLOP_BENCH_QUICK`.
+#[allow(dead_code)] // not every bench target reduces its workload
+pub fn quick() -> bool {
+    std::env::var("DFLOP_BENCH_QUICK").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
 
 pub struct BenchResult {
     pub name: String,
@@ -13,6 +24,7 @@ pub struct BenchResult {
 }
 
 pub fn bench<F: FnMut()>(name: &str, reps: usize, mut f: F) -> BenchResult {
+    let reps = if quick() { 1 } else { reps };
     f(); // warm-up
     let mut times = Vec::with_capacity(reps);
     for _ in 0..reps {

@@ -1,14 +1,28 @@
 //! Bench: wall-clock of every figure regeneration (one per paper
-//! table/figure). The whole evaluation section must regenerate in minutes.
+//! table/figure). The whole evaluation section must regenerate in minutes;
+//! the system-level figures sweep their evaluation grids on the
+//! `util::parallel` pool, so these numbers scale with the core count.
 mod common;
-use common::bench;
+use common::{bench, quick};
 use dflop::figures::{by_id, FigOpts};
 
 fn main() {
     println!("== figures_bench (per-figure regeneration cost) ==");
-    let mut o = FigOpts::default();
-    o.iters = 3;
-    for id in ["1", "2", "4", "7", "8", "9", "10", "11", "12", "13", "14", "15", "16"] {
+    // Quick mode (CI smoke): tiny experiment scale and the cheap figures
+    // only, so the target finishes in seconds while still exercising the
+    // pipeline, grid, and timeline layers.
+    let (o, ids): (FigOpts, &[&str]) = if quick() {
+        (
+            FigOpts { nodes: 1, gbs: 32, iters: 2, seed: 42 },
+            &["1", "2", "4", "13"],
+        )
+    } else {
+        (
+            FigOpts { iters: 3, ..FigOpts::default() },
+            &["1", "2", "4", "7", "8", "9", "10", "11", "12", "13", "14", "15", "16"],
+        )
+    };
+    for id in ids {
         bench(&format!("figure {id}"), 1, || {
             std::hint::black_box(by_id(id, &o).expect("figure id").len());
         });

@@ -17,8 +17,8 @@ use crate::runtime::session::TrainSession;
 use crate::runtime::taskgen::{prototype, TrainBatch};
 use crate::scheduler::ilp;
 use crate::scheduler::lpt::ItemCost;
+use crate::util::error::Result;
 use crate::util::rng::Rng;
-use anyhow::Result;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 

@@ -3,6 +3,8 @@
 //! scheduling (§3.4.2: "while the model executes the computation for the
 //! current iteration, the scheduler processes the subsequent global batch
 //! in parallel on the CPU").
+#[cfg(feature = "xla")]
 pub mod leader;
 
+#[cfg(feature = "xla")]
 pub use leader::{Leader, LeaderConfig, LeaderReport, SchedMode};

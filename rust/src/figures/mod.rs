@@ -4,6 +4,15 @@
 //! Absolute numbers come from the analytic A100 model; the comparisons
 //! (who wins, by what factor, where crossovers fall) are the reproduction
 //! target — see EXPERIMENTS.md for paper-vs-measured.
+//!
+//! System-level figures build their full (system × model × dataset ×
+//! cluster) evaluation grid up front and sweep it with [`run_cells`] on
+//! the `util::parallel` pool, so a figure's wall-clock is its slowest
+//! cell, not the sum of all of them. Rows are always assembled from the
+//! results in grid order, so thread count never reorders output; the one
+//! remaining wall-clock sensitivity is DFLOP cells whose per-iteration
+//! ILP budget expires mid-search (the incumbent then depends on timing,
+//! as it always did — see `scheduler::ilp`).
 
 pub mod timeline;
 
@@ -18,7 +27,7 @@ use crate::profiling::backend::SimBackend;
 use crate::profiling::engine::{profile_data, ModelProfiler, ProfilerGrids};
 use crate::scheduler::ilp;
 use crate::scheduler::lpt::{self, ItemCost};
-use crate::sim::{run_system, RunConfig, RunResult, SystemKind};
+use crate::sim::{run_cells, Cell, RunConfig, RunResult, SystemKind};
 use crate::util::stats::{BoxPlot, Histogram, Summary};
 use crate::util::table::{bytes, f, secs, speedup, Table};
 
@@ -37,8 +46,38 @@ impl Default for FigOpts {
     }
 }
 
-fn run(kind: SystemKind, m: &Mllm, dataset: &str, o: &FigOpts) -> RunResult {
-    run_system(kind, m, dataset, &RunConfig::new(o.nodes, o.gbs, o.iters, o.seed))
+/// The three headline systems, in every figure's column order.
+const SYSTEMS: [SystemKind; 3] = [SystemKind::Dflop, SystemKind::Megatron, SystemKind::Pytorch];
+
+/// Cross a model list with a system list on one dataset: models outer,
+/// systems inner — the order every figure's row assembly indexes by.
+fn cross_specs<'d>(
+    models: &[&Mllm],
+    kinds: &[SystemKind],
+    dataset: &'d str,
+) -> Vec<(SystemKind, Mllm, &'d str)> {
+    let mut specs = Vec::with_capacity(models.len() * kinds.len());
+    for m in models {
+        for &kind in kinds {
+            specs.push((kind, (*m).clone(), dataset));
+        }
+    }
+    specs
+}
+
+/// Evaluate (system, model, dataset) cells at this figure's options on the
+/// worker pool; results come back in spec order.
+fn run_grid(specs: Vec<(SystemKind, Mllm, &str)>, o: &FigOpts) -> Vec<RunResult> {
+    let cells: Vec<Cell> = specs
+        .into_iter()
+        .map(|(kind, m, dataset)| Cell {
+            kind,
+            m,
+            dataset: dataset.to_string(),
+            cfg: RunConfig::new(o.nodes, o.gbs, o.iters, o.seed),
+        })
+        .collect();
+    run_cells(&cells)
 }
 
 // ------------------------------------------------------------------
@@ -186,27 +225,28 @@ pub fn fig07(o: &FigOpts) -> String {
         "Fig 7b — total training time (hours, one pass over the 185k-sample mixed corpus)",
         &["configuration", "DFLOP", "Megatron", "PyTorch", "saved vs best baseline"],
     );
-    for cfg in paper_configs() {
-        let d = run(SystemKind::Dflop, &cfg.mllm, "mixed", o);
-        let mg = run(SystemKind::Megatron, &cfg.mllm, "mixed", o);
-        let pt = run(SystemKind::Pytorch, &cfg.mllm, "mixed", o);
+    let configs = paper_configs();
+    let models: Vec<&Mllm> = configs.iter().map(|c| &c.mllm).collect();
+    let results = run_grid(cross_specs(&models, &SYSTEMS, "mixed"), o);
+    for (i, cfg) in configs.iter().enumerate() {
+        let (d, mg, pt) = (&results[3 * i], &results[3 * i + 1], &results[3 * i + 2]);
         t.row(vec![
             cfg.label.to_string(),
             f(d.per_gpu_throughput / 1e12, 1),
             f(mg.per_gpu_throughput / 1e12, 1),
             f(pt.per_gpu_throughput / 1e12, 1),
-            speedup(d.speedup_over(&mg)),
-            speedup(d.speedup_over(&pt)),
+            speedup(d.speedup_over(mg)),
+            speedup(d.speedup_over(pt)),
         ]);
         let steps = 185_000.0 / o.gbs as f64;
         let hours = |r: &RunResult| steps * r.mean_iteration_time / 3600.0;
-        let best_base = hours(&mg).min(hours(&pt));
+        let best_base = hours(mg).min(hours(pt));
         t2.row(vec![
             cfg.label.to_string(),
-            f(hours(&d), 1),
-            f(hours(&mg), 1),
-            f(hours(&pt), 1),
-            format!("{} h", f(best_base - hours(&d), 1)),
+            f(hours(d), 1),
+            f(hours(mg), 1),
+            f(hours(pt), 1),
+            format!("{} h", f(best_base - hours(d), 1)),
         ]);
     }
     t.render() + &t2.render()
@@ -222,18 +262,17 @@ pub fn fig08(o: &FigOpts) -> String {
         &["configuration", "enc/LLM FLOP ratio", "max gain"],
     );
     let mut points: Vec<(f64, f64, String)> = Vec::new();
-    for cfg in paper_configs() {
+    let configs = paper_configs();
+    let models: Vec<&Mllm> = configs.iter().map(|c| &c.mllm).collect();
+    let results = run_grid(cross_specs(&models, &SYSTEMS, "mixed"), o);
+    for (i, cfg) in configs.iter().enumerate() {
         let mut ds = Dataset::mixed(o.seed);
         let probe = ds.shaped_batch(&cfg.mllm, 256);
-        let mean_units =
-            probe.iter().map(|s| s.units as f64).sum::<f64>() / 256.0;
-        let mean_seq =
-            probe.iter().map(|s| s.llm_seq as f64).sum::<f64>() / 256.0;
+        let mean_units = probe.iter().map(|s| s.units as f64).sum::<f64>() / 256.0;
+        let mean_seq = probe.iter().map(|s| s.llm_seq as f64).sum::<f64>() / 256.0;
         let ratio = cfg.mllm.compute_ratio(mean_units, mean_seq);
-        let d = run(SystemKind::Dflop, &cfg.mllm, "mixed", o);
-        let mg = run(SystemKind::Megatron, &cfg.mllm, "mixed", o);
-        let pt = run(SystemKind::Pytorch, &cfg.mllm, "mixed", o);
-        let gain = d.speedup_over(&mg).max(d.speedup_over(&pt));
+        let (d, mg, pt) = (&results[3 * i], &results[3 * i + 1], &results[3 * i + 2]);
+        let gain = d.speedup_over(mg).max(d.speedup_over(pt));
         points.push((ratio, gain, cfg.label.to_string()));
     }
     points.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("NaN"));
@@ -261,9 +300,8 @@ pub fn fig09(o: &FigOpts) -> String {
     // audio recipe uses a correspondingly larger global batch.
     let mut oo = *o;
     oo.gbs = o.gbs * 4;
-    let d = run(SystemKind::Dflop, &m, "audio", &oo);
-    let mg = run(SystemKind::Megatron, &m, "audio", &oo);
-    let pt = run(SystemKind::Pytorch, &m, "audio", &oo);
+    let results = run_grid(cross_specs(&[&m], &SYSTEMS, "audio"), &oo);
+    let (d, mg, pt) = (&results[0], &results[1], &results[2]);
     let mut t = Table::new(
         "Fig 9 — Qwen2-Audio on the audio workload",
         &["system", "TFLOP/s per GPU", "DFLOP speedup"],
@@ -272,12 +310,12 @@ pub fn fig09(o: &FigOpts) -> String {
     t.row(vec![
         "Megatron-LM".into(),
         f(mg.per_gpu_throughput / 1e12, 1),
-        speedup(d.speedup_over(&mg)),
+        speedup(d.speedup_over(mg)),
     ]);
     t.row(vec![
         "PyTorch".into(),
         f(pt.per_gpu_throughput / 1e12, 1),
-        speedup(d.speedup_over(&pt)),
+        speedup(d.speedup_over(pt)),
     ]);
     t.render()
 }
@@ -296,16 +334,24 @@ pub fn fig10(o: &FigOpts) -> String {
         "Fig 10 — component ablation (gain over the PyTorch baseline)",
         &["configuration", "+optimizer", "+scheduler", "full DFLOP"],
     );
-    for (label, m) in configs {
-        let pt = run(SystemKind::Pytorch, &m, "mixed", o);
-        let opt = run(SystemKind::DflopOptimizerOnly, &m, "mixed", o);
-        let sched = run(SystemKind::DflopSchedulerOnly, &m, "mixed", o);
-        let full = run(SystemKind::Dflop, &m, "mixed", o);
+    let kinds = [
+        SystemKind::Pytorch,
+        SystemKind::DflopOptimizerOnly,
+        SystemKind::DflopSchedulerOnly,
+        SystemKind::Dflop,
+    ];
+    let models: Vec<&Mllm> = configs.iter().map(|(_, m)| m).collect();
+    let results = run_grid(cross_specs(&models, &kinds, "mixed"), o);
+    for (i, (label, _)) in configs.iter().enumerate() {
+        let pt = &results[4 * i];
+        let opt = &results[4 * i + 1];
+        let sched = &results[4 * i + 2];
+        let full = &results[4 * i + 3];
         t.row(vec![
             label.to_string(),
-            speedup(opt.speedup_over(&pt)),
-            speedup(sched.speedup_over(&pt)),
-            speedup(full.speedup_over(&pt)),
+            speedup(opt.speedup_over(pt)),
+            speedup(sched.speedup_over(pt)),
+            speedup(full.speedup_over(pt)),
         ]);
     }
     t.render()
@@ -322,11 +368,12 @@ pub fn fig11(o: &FigOpts) -> String {
         &["dataset", "DFLOP", "Megatron", "PyTorch", "DFLOP max gain"],
     );
     let mut out2 = String::from("Fig 11b — LLM input shape distributions (packed seq len):\n");
-    for key in ["multi-image", "video", "mixed"] {
-        let d = run(SystemKind::Dflop, &m, key, o);
-        let mg = run(SystemKind::Megatron, &m, key, o);
-        let pt = run(SystemKind::Pytorch, &m, key, o);
-        let gain = d.speedup_over(&mg).max(d.speedup_over(&pt));
+    let keys = ["multi-image", "video", "mixed"];
+    let specs = keys.iter().flat_map(|key| cross_specs(&[&m], &SYSTEMS, key)).collect();
+    let results = run_grid(specs, o);
+    for (i, key) in keys.into_iter().enumerate() {
+        let (d, mg, pt) = (&results[3 * i], &results[3 * i + 1], &results[3 * i + 2]);
+        let gain = d.speedup_over(mg).max(d.speedup_over(pt));
         t.row(vec![
             key.to_string(),
             f(d.per_gpu_throughput / 1e12, 1),
@@ -363,21 +410,30 @@ pub fn fig12(o: &FigOpts) -> String {
         &["nodes", "DFLOP", "Megatron", "PyTorch", "DFLOP max gain"],
     );
     let mut dflop_series = Vec::new();
-    for &nodes in &[1usize, 2, 4, 8] {
-        let mut oo = *o;
-        oo.nodes = nodes;
-        oo.gbs = (o.gbs * nodes / 4).max(32);
-        let d = run(SystemKind::Dflop, &m, "mixed", &oo);
-        let mg = run(SystemKind::Megatron, &m, "mixed", &oo);
-        let pt = run(SystemKind::Pytorch, &m, "mixed", &oo);
+    let node_counts = [1usize, 2, 4, 8];
+    let mut cells = Vec::new();
+    for &nodes in &node_counts {
+        let gbs = (o.gbs * nodes / 4).max(32);
+        for kind in SYSTEMS {
+            cells.push(Cell {
+                kind,
+                m: m.clone(),
+                dataset: "mixed".to_string(),
+                cfg: RunConfig::new(nodes, gbs, o.iters, o.seed),
+            });
+        }
+    }
+    let results = run_cells(&cells);
+    for (i, &nodes) in node_counts.iter().enumerate() {
+        let (d, mg, pt) = (&results[3 * i], &results[3 * i + 1], &results[3 * i + 2]);
         let total = |r: &RunResult| r.per_gpu_throughput * r.n_gpus as f64 / 1e15;
-        dflop_series.push((nodes as f64, total(&d), total(&mg), total(&pt)));
+        dflop_series.push((nodes as f64, total(d), total(mg), total(pt)));
         t.row(vec![
             format!("{nodes}"),
-            f(total(&d), 2),
-            f(total(&mg), 2),
-            f(total(&pt), 2),
-            speedup(d.speedup_over(&mg).max(d.speedup_over(&pt))),
+            f(total(d), 2),
+            f(total(mg), 2),
+            f(total(pt), 2),
+            speedup(d.speedup_over(mg).max(d.speedup_over(pt))),
         ]);
     }
     // Projection: extend the measured per-node efficiency trend (paper
@@ -410,8 +466,8 @@ pub fn fig13(o: &FigOpts) -> String {
         &["system", "ideal (1F1B formula)", "real (measured)", "real/ideal"],
     );
     let mut reals = Vec::new();
-    for kind in [SystemKind::Dflop, SystemKind::Megatron, SystemKind::Pytorch] {
-        let r = run(kind, &m, "mixed", o);
+    let results = run_grid(cross_specs(&[&m], &SYSTEMS, "mixed"), o);
+    for (kind, r) in SYSTEMS.into_iter().zip(&results) {
         let p = r.theta.pipeline_depth();
         let frac = ideal_bubble_fraction(p, r.theta.n_mb);
         // Ideal idle GPU·s: bubble fraction × stages × iteration time.
@@ -447,8 +503,8 @@ pub fn fig14(o: &FigOpts) -> String {
         "Fig 14 — stage throughput distribution (TFLOP/s per stage-GPU group)",
         &["system", "median", "q1", "q3", "whisker lo", "whisker hi"],
     );
-    for kind in [SystemKind::Dflop, SystemKind::Megatron, SystemKind::Pytorch] {
-        let r = run(kind, &m, "mixed", o);
+    let results = run_grid(cross_specs(&[&m], &SYSTEMS, "mixed"), o);
+    for (kind, r) in SYSTEMS.into_iter().zip(&results) {
         // Normalize stage-group throughput to per-GPU: encoder stages hold
         // E_tp GPUs, LLM stages L_tp (stage layout: enc first).
         let enc_stages = r.theta.enc.pp * r.theta.enc.dp;
@@ -497,9 +553,17 @@ pub fn fig15(o: &FigOpts) -> String {
         .collect();
     buckets.sort_unstable();
     buckets.dedup();
-    for &(label, rate) in &[("low (1%)", 0.01f64), ("medium (3%)", 0.03), ("high (5%)", 0.05)] {
-        let mut row = vec![label.to_string()];
-        for &latency in &[0.25f64, 0.50, 0.75, 1.00] {
+    // Warm-up iterations let the tracker accumulate observations before
+    // the steady-state window is measured (the paper's initial training
+    // phase, §3.4.3).
+    let warmup = 4usize;
+    let rates = [("low (1%)", 0.01f64), ("medium (3%)", 0.03), ("high (5%)", 0.05)];
+    let latencies = [0.25f64, 0.50, 0.75, 1.00];
+    // The whole 3×4 grid of corrected/uncorrected pairs is one batch of
+    // independent cells — 24 simulated systems swept across the pool.
+    let mut cells = Vec::new();
+    for &(_, rate) in &rates {
+        for &latency in &latencies {
             let n_anomalous = ((buckets.len() as f64 * rate).ceil() as usize).max(1);
             let injected: Vec<(u64, f64)> = buckets
                 .iter()
@@ -507,21 +571,31 @@ pub fn fig15(o: &FigOpts) -> String {
                 .take(n_anomalous)
                 .map(|&b| (b, 1.0 / (1.0 + latency)))
                 .collect();
-            // Warm-up iterations let the tracker accumulate observations
-            // before the steady-state window is measured (the paper's
-            // initial training phase, §3.4.3).
-            let warmup = 4usize;
             let mut cfg_on = RunConfig::new(o.nodes, o.gbs, o.iters + 2 * warmup, o.seed);
-            cfg_on.injected = injected.clone();
+            cfg_on.injected = injected;
             let mut cfg_off = cfg_on.clone();
             cfg_off.disable_correction = true;
-            let on = run_system(SystemKind::Dflop, &m, "mixed", &cfg_on);
-            let off = run_system(SystemKind::Dflop, &m, "mixed", &cfg_off);
+            for cfg in [cfg_on, cfg_off] {
+                cells.push(Cell {
+                    kind: SystemKind::Dflop,
+                    m: m.clone(),
+                    dataset: "mixed".to_string(),
+                    cfg,
+                });
+            }
+        }
+    }
+    let results = run_cells(&cells);
+    for (ri, &(label, _)) in rates.iter().enumerate() {
+        let mut row = vec![label.to_string()];
+        for li in 0..latencies.len() {
+            let pair = (ri * latencies.len() + li) * 2;
+            let (on, off) = (&results[pair], &results[pair + 1]);
             let steady = |r: &RunResult| {
                 let iters = &r.iterations[warmup..];
                 iters.iter().map(|s| s.iteration_time).sum::<f64>() / iters.len() as f64
             };
-            let gain = steady(&off) / steady(&on) - 1.0;
+            let gain = steady(off) / steady(on) - 1.0;
             let net = gain - COST;
             row.push(if net <= 0.0 {
                 format!("{:+.1}% (off)", net * 100.0)
@@ -542,7 +616,10 @@ pub fn fig16(o: &FigOpts) -> String {
     let m = llava_ov(llama3("8b"));
     let mut out = String::new();
 
-    // 16a: optimizer wall-clock vs GPUs × GBS.
+    // 16a: optimizer wall-clock vs GPUs × GBS. The grid itself stays
+    // serial on purpose: each `optimize()` call parallelizes internally,
+    // and the reported number is its wall-clock — running cells
+    // concurrently would contend for the same cores and inflate it.
     let mut t = Table::new(
         "Fig 16a — Data-aware 3D Parallelism Optimizer wall-clock",
         &["GPUs", "GBS=512", "GBS=1024", "GBS=2048"],
@@ -624,11 +701,19 @@ pub fn table4(o: &FigOpts) -> String {
         "Table 4 — total training time and DFLOP overhead (mixed dataset)",
         &["model", "training time", "DFLOP overhead", "relative"],
     );
-    for cfg in paper_configs() {
-        let mut oo = *o;
-        oo.nodes = 8;
-        let d = run(SystemKind::Dflop, &cfg.mllm, "mixed", &oo);
-        let steps = 185_000.0 / oo.gbs as f64;
+    let configs = paper_configs();
+    let cells: Vec<Cell> = configs
+        .iter()
+        .map(|cfg| Cell {
+            kind: SystemKind::Dflop,
+            m: cfg.mllm.clone(),
+            dataset: "mixed".to_string(),
+            cfg: RunConfig::new(8, o.gbs, o.iters, o.seed),
+        })
+        .collect();
+    let results = run_cells(&cells);
+    for (cfg, d) in configs.iter().zip(&results) {
+        let steps = 185_000.0 / o.gbs as f64;
         let train_h = steps * d.mean_iteration_time / 3600.0;
         let overhead_min =
             (d.profiling_seconds + d.optimizer_elapsed.as_secs_f64()) / 60.0;

@@ -15,6 +15,16 @@
 //!   attention, fused MLP) called from L2.
 //!
 //! See DESIGN.md for the system inventory and per-experiment index.
+
+// The `xla` feature gates the real PJRT path, which needs the vendored
+// `xla` crate. Fail with instructions instead of E0432 until it is wired
+// in (delete this guard as part of adding the path dependency).
+#[cfg(feature = "xla")]
+compile_error!(
+    "the `xla` feature needs the vendored `xla` crate: add it as a path dependency in \
+     rust/Cargo.toml and remove this guard (see DESIGN.md, \"Reproduction posture\")"
+);
+
 pub mod baselines;
 pub mod coordinator;
 pub mod data;

@@ -2,21 +2,30 @@
 //! optimizer/scheduler inspection, and real-artifact profiling.
 //!
 //! ```text
-//! dflop figures --fig <1|2|4|7|8|9|10|11|12|13|14|15|16|all> [--nodes N] [--gbs N] [--iters N] [--seed S]
+//! dflop figures --fig <1|2|4|7|8|9|10|11|12|13|14|15|16|all> [--nodes N] [--gbs N] [--iters N] [--seed S] [--threads N]
 //! dflop table   --n <2|4>
 //! dflop run     --system <dflop|megatron|pytorch|opt-only|sched-only> --model <key> --dataset <key>
 //! dflop optimize --model <key> --nodes N --gbs N
-//! dflop profile-real [--artifacts DIR]      # PJRT timing of AOT artifacts
+//! dflop profile-real [--artifacts DIR]      # PJRT timing (needs `xla` feature)
 //! dflop models                              # list catalog keys
 //! ```
+//!
+//! Every subcommand accepts `--threads N` to cap the evaluation thread
+//! pool (default: all available cores). Results do not depend on the
+//! thread count, with one caveat: scheduling calls whose ILP budget
+//! expires return a wall-clock-dependent incumbent (see `scheduler::ilp`),
+//! so DFLOP-system runs can drift between invocations — serial ones too.
 
+use dflop::bail;
+use dflop::err;
 use dflop::figures::{by_id, table2, table4, FigOpts};
 use dflop::model::catalog;
 use dflop::sim::{run_system, RunConfig, SystemKind};
 use dflop::util::cli::{Args, Spec};
+use dflop::util::error::Result;
 use std::process::ExitCode;
 
-fn opts_from(args: &Args) -> anyhow::Result<FigOpts> {
+fn opts_from(args: &Args) -> Result<FigOpts> {
     let d = FigOpts::default();
     Ok(FigOpts {
         nodes: args.get_usize("nodes", d.nodes)?,
@@ -36,15 +45,17 @@ fn main() -> ExitCode {
     }
 }
 
-fn real_main() -> anyhow::Result<()> {
+fn real_main() -> Result<()> {
     let spec = Spec {
         valued: vec![
             "fig", "n", "nodes", "gbs", "iters", "seed", "system", "model", "dataset",
-            "artifacts",
+            "artifacts", "threads",
         ],
         boolean: vec!["help"],
     };
     let args = Args::parse(std::env::args().skip(1), &spec)?;
+    // Pool width for every parallel section below (0 = auto-detect).
+    dflop::util::parallel::set_max_threads(args.get_usize("threads", 0)?);
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
     match sub.as_str() {
         "figures" => {
@@ -52,7 +63,7 @@ fn real_main() -> anyhow::Result<()> {
             let id = args.get_or("fig", "all");
             match by_id(&id, &o) {
                 Some(text) => print!("{text}"),
-                None => anyhow::bail!("unknown figure id '{id}'"),
+                None => bail!("unknown figure id '{id}'"),
             }
         }
         "table" => {
@@ -60,7 +71,7 @@ fn real_main() -> anyhow::Result<()> {
             match args.get_or("n", "2").as_str() {
                 "2" => print!("{}", table2(&o)),
                 "4" => print!("{}", table4(&o)),
-                other => anyhow::bail!("unknown table '{other}'"),
+                other => bail!("unknown table '{other}'"),
             }
         }
         "run" => {
@@ -71,11 +82,11 @@ fn real_main() -> anyhow::Result<()> {
                 "pytorch" => SystemKind::Pytorch,
                 "opt-only" => SystemKind::DflopOptimizerOnly,
                 "sched-only" => SystemKind::DflopSchedulerOnly,
-                other => anyhow::bail!("unknown system '{other}'"),
+                other => bail!("unknown system '{other}'"),
             };
             let model_key = args.get_or("model", "llava-ov-llama3-8b");
             let m = catalog::by_key(&model_key)
-                .ok_or_else(|| anyhow::anyhow!("unknown model '{model_key}' (try `dflop models`)"))?;
+                .ok_or_else(|| err!("unknown model '{model_key}' (try `dflop models`)"))?;
             let dataset = args.get_or("dataset", "mixed");
             let r = run_system(kind, &m, &dataset, &RunConfig::new(o.nodes, o.gbs, o.iters, o.seed));
             println!("system        : {}", kind.label());
@@ -98,14 +109,14 @@ fn real_main() -> anyhow::Result<()> {
             let o = opts_from(&args)?;
             let model_key = args.get_or("model", "llava-ov-llama3-8b");
             let m = catalog::by_key(&model_key)
-                .ok_or_else(|| anyhow::anyhow!("unknown model '{model_key}'"))?;
+                .ok_or_else(|| err!("unknown model '{model_key}'"))?;
             let cluster = ClusterSpec::hgx_a100(o.nodes);
             let mut backend = SimBackend::new(Truth::new(cluster));
             let profile =
                 ModelProfiler::new(&mut backend, ProfilerGrids::standard(8)).profile(&m);
             let dataset = args.get_or("dataset", "mixed");
             let mut ds = Dataset::by_key(&dataset, o.seed)
-                .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
+                .ok_or_else(|| err!("unknown dataset '{dataset}'"))?;
             let data = profile_data(&m, &mut ds, 512);
             let inp = OptimizerInputs {
                 m: &m,
@@ -125,9 +136,10 @@ fn real_main() -> anyhow::Result<()> {
                     println!("memory-rejected   : {}", r.memory_rejected);
                     println!("elapsed           : {:?}", r.elapsed);
                 }
-                None => anyhow::bail!("no feasible configuration"),
+                None => bail!("no feasible configuration"),
             }
         }
+        #[cfg(feature = "xla")]
         "profile-real" => {
             use dflop::runtime::artifacts::Manifest;
             use dflop::runtime::profiler::profile_real;
@@ -147,6 +159,14 @@ fn real_main() -> anyhow::Result<()> {
                 println!("  seq {:>5}: {:>10.3} ms", pt.coord, pt.seconds * 1e3);
             }
         }
+        #[cfg(not(feature = "xla"))]
+        "profile-real" => {
+            bail!(
+                "this binary was built without PJRT support: add the vendored `xla` \
+                 crate as a path dependency in rust/Cargo.toml, then rebuild with \
+                 --features xla (see rust/DESIGN.md)"
+            );
+        }
         "models" => {
             for key in [
                 "llava-ov-qwen25-7b",
@@ -161,9 +181,10 @@ fn real_main() -> anyhow::Result<()> {
                 println!("{key:24} encoder={} llm={}", m.encoder.name, m.llm.name);
             }
         }
-        "help" | _ => {
+        _ => {
             println!("usage: dflop <figures|table|run|optimize|profile-real|models> [options]");
-            println!("see rust/src/main.rs header or README.md for details");
+            println!("common options: --threads N (evaluation thread pool; default all cores)");
+            println!("see rust/src/main.rs header or DESIGN.md for details");
         }
     }
     Ok(())

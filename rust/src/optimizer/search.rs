@@ -14,12 +14,19 @@
 //!   re-scored as `1/|D| · Σ_d T(d;θ)` over the Data Profiler's samples,
 //!   which is what the objective actually asks for. Per-item durations are
 //!   precomputed per TP degree, so refinement costs O(K·|D|).
+//!
+//! Both tiers run on the `util::parallel` pool: each split's (pair × N_mb)
+//! scan is scored across workers and merged in candidate order, and the
+//! REFINE_K expected-makespan evaluations (the dominant cost) run one per
+//! worker. Merging preserves the serial insertion order, so θ* is
+//! bit-identical to the single-threaded search at any `--threads` value.
 
 use crate::data::item::ItemShape;
 use crate::model::catalog::Mllm;
 use crate::optimizer::plan::{find_combs, ModPar, Theta};
 use crate::profiling::engine::{DataProfile, ModelProfile};
 use crate::profiling::estimator::Estimator;
+use crate::util::parallel::par_map;
 
 /// Inputs fixed for one optimization run.
 pub struct OptimizerInputs<'a> {
@@ -286,12 +293,22 @@ pub fn optimize(inp: &OptimizerInputs) -> Option<OptimizerResult> {
         }
         v
     };
-    let mut pairs_seen = 0usize;
+    // Serial-order top-K insertion (shared by the serial and merged paths).
+    let push_top = |top: &mut Vec<(f64, Theta)>, t: f64, theta: Theta| {
+        if top.len() < REFINE_K {
+            top.push((t, theta));
+            top.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("NaN score"));
+        } else if t < top.last().expect("non-empty top").0 {
+            top.pop();
+            let pos = top
+                .binary_search_by(|probe| probe.0.partial_cmp(&t).expect("NaN"))
+                .unwrap_or_else(|p| p);
+            top.insert(pos, (t, theta));
+        }
+    };
     for &(split_lb, e_gpus) in &splits {
         // Prune whole splits once the bound cannot enter a full top-K.
-        if top.len() == REFINE_K
-            && split_lb >= top.last().expect("top full").0
-        {
+        if top.len() == REFINE_K && split_lb >= top.last().expect("top full").0 {
             break;
         }
         let l_gpus = inp.n_gpus - e_gpus;
@@ -310,35 +327,45 @@ pub fn optimize(inp: &OptimizerInputs) -> Option<OptimizerResult> {
                 pairs.push((e, l));
             }
         }
-        pairs_seen += pairs.len();
-    for &(enc, llm) in &pairs {
-        let n_max = (inp.gbs / llm.dp).max(1);
-        for n_mb in n_mb_grid(n_max) {
-            scanned += 1;
-            // Mean shape per microbatch (Algorithm 1 lines 18–19).
-            let mb_units = mean_units * inp.gbs as f64 / (n_mb as f64 * enc.dp as f64);
-            let mb_seq = mean_seq * inp.gbs as f64 / (n_mb as f64 * llm.dp as f64);
-            if !memory_feasible(inp, enc, llm, mb_units, mb_seq) {
-                mem_rejected += 1;
-                continue;
+        // Score one pair's whole N_mb sweep: (scanned, rejected, candidates
+        // in sweep order). Candidates merge below in (pair, n_mb) order —
+        // exactly the serial insertion sequence — so the resulting top-K is
+        // independent of how the pairs were distributed over workers.
+        let score_pair = |pi: usize| -> (usize, usize, Vec<(f64, Theta)>) {
+            let (enc, llm) = pairs[pi];
+            let n_max = (inp.gbs / llm.dp).max(1);
+            let mut found = Vec::new();
+            let mut pair_scanned = 0usize;
+            let mut pair_rejected = 0usize;
+            for n_mb in n_mb_grid(n_max) {
+                pair_scanned += 1;
+                // Mean shape per microbatch (Algorithm 1 lines 18–19).
+                let mb_units = mean_units * inp.gbs as f64 / (n_mb as f64 * enc.dp as f64);
+                let mb_seq = mean_seq * inp.gbs as f64 / (n_mb as f64 * llm.dp as f64);
+                if !memory_feasible(inp, enc, llm, mb_units, mb_seq) {
+                    pair_rejected += 1;
+                    continue;
+                }
+                let (e_dur, l_dur) = mean_stage_durations(inp, &est, enc, llm, n_mb);
+                let t = makespan(n_mb, enc.pp, llm.pp, e_dur, l_dur);
+                found.push((t, Theta { enc, llm, n_mb }));
             }
-            let (e_dur, l_dur) = mean_stage_durations(inp, &est, enc, llm, n_mb);
-            let t = makespan(n_mb, enc.pp, llm.pp, e_dur, l_dur);
-            let theta = Theta { enc, llm, n_mb };
-            if top.len() < REFINE_K {
-                top.push((t, theta));
-                top.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("NaN score"));
-            } else if t < top.last().expect("non-empty top").0 {
-                top.pop();
-                let pos = top
-                    .binary_search_by(|probe| probe.0.partial_cmp(&t).expect("NaN"))
-                    .unwrap_or_else(|p| p);
-                top.insert(pos, (t, theta));
+            (pair_scanned, pair_rejected, found)
+        };
+        // Below ~16 pairs the sweep is cheaper than spawning workers.
+        let scored: Vec<(usize, usize, Vec<(f64, Theta)>)> = if pairs.len() >= 16 {
+            par_map(pairs.len(), score_pair)
+        } else {
+            (0..pairs.len()).map(score_pair).collect()
+        };
+        for (pair_scanned, pair_rejected, found) in scored {
+            scanned += pair_scanned;
+            mem_rejected += pair_rejected;
+            for (t, theta) in found {
+                push_top(&mut top, t, theta);
             }
         }
     }
-    }
-    let _ = pairs_seen;
 
     if top.is_empty() {
         return None;
@@ -364,17 +391,25 @@ pub fn optimize(inp: &OptimizerInputs) -> Option<OptimizerResult> {
             inp.data.samples.iter().map(|s| est.llm_item_dur(s, tp)).collect(),
         ));
     }
-    let by_tp = |v: &[(usize, Vec<f64>)], tp: usize| -> Vec<f64> {
-        v.iter().find(|(t, _)| *t == tp).expect("precomputed tp").1.clone()
-    };
+    fn durs_for(v: &[(usize, Vec<f64>)], tp: usize) -> &[f64] {
+        &v.iter().find(|(t, _)| *t == tp).expect("precomputed tp").1
+    }
 
+    // Eq-1 scoring dominates the optimizer's wall-clock (each candidate
+    // runs LPT plus the 1F1B engine over up to 512 items): fan the top-K
+    // out over the pool, then select serially in rank order — the strict
+    // `<` keeps the earliest-ranked of tied scores, matching the serial
+    // scan's winner.
+    let scores = par_map(top.len(), |k| {
+        let theta = &top[k].1;
+        let e = durs_for(&enc_durs, theta.enc.tp);
+        let l = durs_for(&llm_durs, theta.llm.tp);
+        expected_makespan(inp, e, l, theta.enc, theta.llm, theta.n_mb)
+    });
     let mut best: Option<(f64, Theta)> = None;
-    for (_, theta) in &top {
-        let e = by_tp(&enc_durs, theta.enc.tp);
-        let l = by_tp(&llm_durs, theta.llm.tp);
-        let score = expected_makespan(inp, &e, &l, theta.enc, theta.llm, theta.n_mb);
-        if best.map(|(b, _)| score < b).unwrap_or(true) {
-            best = Some((score, *theta));
+    for (score, (_, theta)) in scores.iter().zip(&top) {
+        if best.map(|(b, _)| *score < b).unwrap_or(true) {
+            best = Some((*score, *theta));
         }
     }
 

@@ -5,8 +5,10 @@
 //! typed structures the runtime consumes. The manifest is the only contract
 //! between the python compile path and the rust request path.
 
+use crate::bail;
+use crate::err;
+use crate::util::error::{Context, Result};
 use crate::util::json::{parse, Json};
-use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One parameter tensor in the blob.
@@ -78,7 +80,7 @@ pub struct Manifest {
 fn usize_field(v: &Json, key: &str) -> Result<usize> {
     v.get(key)
         .and_then(Json::as_usize)
-        .ok_or_else(|| anyhow!("manifest missing numeric field '{key}'"))
+        .ok_or_else(|| err!("manifest missing numeric field '{key}'"))
 }
 
 impl Manifest {
@@ -86,9 +88,9 @@ impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
-        let root = parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let root = parse(&text).map_err(|e| err!("manifest: {e}"))?;
 
-        let model_j = root.get("model").ok_or_else(|| anyhow!("missing model"))?;
+        let model_j = root.get("model").ok_or_else(|| err!("missing model"))?;
         let model = ModelInfo {
             vocab: usize_field(model_j, "vocab")?,
             hidden: usize_field(model_j, "hidden")?,
@@ -100,13 +102,13 @@ impl Manifest {
             patch_dim: usize_field(model_j, "patch_dim")?,
             total_params: usize_field(model_j, "total_params")?,
         };
-        let task_j = root.get("task").ok_or_else(|| anyhow!("missing task"))?;
+        let task_j = root.get("task").ok_or_else(|| err!("missing task"))?;
         let task = TaskInfo {
             n_keys: usize_field(task_j, "n_keys")?,
             noise: task_j
                 .get("noise")
                 .and_then(Json::as_f64)
-                .ok_or_else(|| anyhow!("missing task.noise"))?,
+                .ok_or_else(|| err!("missing task.noise"))?,
         };
 
         let mut params = Vec::new();
@@ -114,20 +116,20 @@ impl Manifest {
         for p in root
             .get("params")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("missing params"))?
+            .ok_or_else(|| err!("missing params"))?
         {
             let spec = ParamSpec {
                 name: p
                     .get("name")
                     .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow!("param name"))?
+                    .ok_or_else(|| err!("param name"))?
                     .to_string(),
                 shape: p
                     .get("shape")
                     .and_then(Json::as_arr)
-                    .ok_or_else(|| anyhow!("param shape"))?
+                    .ok_or_else(|| err!("param shape"))?
                     .iter()
-                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .map(|d| d.as_usize().ok_or_else(|| err!("bad dim")))
                     .collect::<Result<_>>()?,
                 offset: usize_field(p, "offset")?,
                 bytes: usize_field(p, "bytes")?,
@@ -145,7 +147,7 @@ impl Manifest {
         let buckets = root
             .get("train_steps")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("missing train_steps"))?
+            .ok_or_else(|| err!("missing train_steps"))?
             .iter()
             .map(|b| {
                 Ok(BucketSpec {
@@ -154,7 +156,7 @@ impl Manifest {
                     file: dir.join(
                         b.get("file")
                             .and_then(Json::as_str)
-                            .ok_or_else(|| anyhow!("bucket file"))?,
+                            .ok_or_else(|| err!("bucket file"))?,
                     ),
                 })
             })
@@ -163,7 +165,7 @@ impl Manifest {
         let fwd = |key: &str, coord_key: &str| -> Result<Vec<FwdSpec>> {
             root.get(key)
                 .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("missing {key}"))?
+                .ok_or_else(|| err!("missing {key}"))?
                 .iter()
                 .map(|e| {
                     Ok(FwdSpec {
@@ -171,7 +173,7 @@ impl Manifest {
                         file: dir.join(
                             e.get("file")
                                 .and_then(Json::as_str)
-                                .ok_or_else(|| anyhow!("{key} file"))?,
+                                .ok_or_else(|| err!("{key} file"))?,
                         ),
                     })
                 })
@@ -190,7 +192,7 @@ impl Manifest {
             params_file: dir.join(
                 root.get("params_file")
                     .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow!("missing params_file"))?,
+                    .ok_or_else(|| err!("missing params_file"))?,
             ),
             params,
             train_steps: buckets,

@@ -5,10 +5,13 @@
 //! format (`HloModuleProto::from_text_file` → `XlaComputation` →
 //! `PjRtClient::compile` → `execute`).
 pub mod artifacts;
+#[cfg(feature = "xla")]
 pub mod profiler;
+#[cfg(feature = "xla")]
 pub mod session;
 pub mod taskgen;
 
 pub use artifacts::Manifest;
+#[cfg(feature = "xla")]
 pub use session::TrainSession;
 pub use taskgen::{batch_for_bucket, make_batch, TrainBatch};

@@ -2,9 +2,10 @@
 //! on the PJRT CPU client, playing the Model Profiler's measurement role
 //! against real execution instead of the analytic cluster model.
 
+use crate::err;
 use crate::runtime::artifacts::Manifest;
+use crate::util::error::{Context, Result};
 use crate::util::rng::Rng;
-use anyhow::{anyhow, Context, Result};
 use std::time::Instant;
 
 /// One measured grid point.
@@ -25,7 +26,7 @@ pub struct RealProfile {
 
 fn compile(client: &xla::PjRtClient, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
     let proto = xla::HloModuleProto::from_text_file(
-        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        path.to_str().ok_or_else(|| err!("non-utf8 path"))?,
     )
     .with_context(|| format!("parsing {}", path.display()))?;
     Ok(client.compile(&xla::XlaComputation::from_proto(&proto))?)

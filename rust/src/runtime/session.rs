@@ -2,9 +2,11 @@
 //! runtime, execute train steps. Python never runs here — the HLO text
 //! emitted once by `aot.py` is the entire contract.
 
+use crate::bail;
+use crate::err;
 use crate::runtime::artifacts::Manifest;
 use crate::runtime::taskgen::TrainBatch;
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{Context, Result};
 use std::path::Path;
 use std::time::{Duration, Instant};
 
@@ -46,7 +48,7 @@ impl TrainSession {
         let mut buckets = Vec::new();
         for b in &manifest.train_steps {
             let proto = xla::HloModuleProto::from_text_file(
-                b.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                b.file.to_str().ok_or_else(|| err!("non-utf8 path"))?,
             )
             .with_context(|| format!("parsing {}", b.file.display()))?;
             let comp = xla::XlaComputation::from_proto(&proto);
@@ -88,7 +90,7 @@ impl TrainSession {
             .iter()
             .find(|b| b.n_img == batch.n_img && b.seq == batch.seq)
             .ok_or_else(|| {
-                anyhow!(
+                err!(
                     "no compiled bucket for (n_img={}, seq={}); have {:?}",
                     batch.n_img,
                     batch.seq,
@@ -120,7 +122,7 @@ impl TrainSession {
         let mut parts = out.to_tuple()?;
         let n = self.params.len();
         if parts.len() != n + 1 {
-            anyhow::bail!("expected {} outputs, got {}", n + 1, parts.len());
+            bail!("expected {} outputs, got {}", n + 1, parts.len());
         }
         let loss_lit = parts.pop().expect("loss output");
         let loss: f32 = loss_lit.get_first_element()?;
@@ -136,7 +138,7 @@ impl TrainSession {
             .params
             .iter()
             .position(|p| p.name == name)
-            .ok_or_else(|| anyhow!("unknown param '{name}'"))?;
+            .ok_or_else(|| err!("unknown param '{name}'"))?;
         Ok(self.params[idx].to_vec::<f32>()?)
     }
 }

@@ -15,8 +15,27 @@
 //!   empty buckets are interchangeable;
 //! - wall-clock budget checked every `CHECK_EVERY` nodes; on expiry the
 //!   incumbent (≥ LPT quality) is returned with `optimal = false`.
+//!
+//! The search tree is split at the root: the first few levels of
+//! item→bucket placements are enumerated into a **fixed** set of disjoint
+//! prefixes (fixed = independent of thread count), ordered by their entry
+//! bound (most promising first), and each prefix's subtree is searched on
+//! the `util::parallel` pool under the one shared deadline. Subtrees
+//! deliberately do *not* share an incumbent — each warm-starts from the
+//! same LPT solution — so a subtree explores exactly the same nodes
+//! wherever and whenever it runs, and the deterministic merge
+//! (strictly-better C_max, earliest in bound order wins ties) makes the
+//! returned assignment independent of thread count. The price is some
+//! redundant exploration versus a shared bound — later subtrees re-derive
+//! improvements the first ones already found, which matters most when
+//! this runs nested-serial inside a simulation cell — the bound ordering
+//! is what keeps an expiring budget spent where the old best-first
+//! descent would have gone first. `--threads 1` and `--threads N` agree
+//! bit-for-bit whenever the budget suffices; on expiry the incumbent is
+//! timing-dependent, exactly as the serial search already was.
 
 use crate::scheduler::lpt::{lower_bound, lpt, Assignment, ItemCost};
+use crate::util::parallel::par_map;
 use std::time::{Duration, Instant};
 
 /// Solver outcome.
@@ -32,7 +51,7 @@ pub struct IlpResult {
 
 struct Search<'a> {
     items: &'a [ItemCost],
-    order: Vec<usize>,
+    order: &'a [usize],
     m: usize,
     deadline: Instant,
     // incumbent
@@ -43,14 +62,64 @@ struct Search<'a> {
     enc_loads: Vec<f64>,
     llm_loads: Vec<f64>,
     // suffix sums of remaining work (by position in `order`)
-    suffix_enc: Vec<f64>,
-    suffix_llm: Vec<f64>,
+    suffix_enc: &'a [f64],
+    suffix_llm: &'a [f64],
     nodes: u64,
     timed_out: bool,
     global_lb: f64,
 }
 
 const CHECK_EVERY: u64 = 4096;
+
+/// Root-split width: prefixes are expanded breadth-first until at least
+/// this many subtrees exist (or the tree is exhausted). A constant — never
+/// derived from the pool width — so the subtree decomposition, and with it
+/// the merged result, is identical at every thread count.
+const ROOT_SPLIT_TARGET: usize = 64;
+
+/// One partial assignment of the first `assign.len()` items (in branch
+/// order), with its running loads — the root of an independent subtree.
+#[derive(Clone)]
+struct Prefix {
+    assign: Vec<usize>,
+    enc_loads: Vec<f64>,
+    llm_loads: Vec<f64>,
+    used: usize,
+    cmax: f64,
+}
+
+/// Enumerate the symmetric search tree's first levels into disjoint
+/// subtree roots (no pruning here — subtrees prune themselves).
+fn root_prefixes(items: &[ItemCost], order: &[usize], m: usize) -> Vec<Prefix> {
+    let mut level = vec![Prefix {
+        assign: Vec::new(),
+        enc_loads: vec![0.0; m],
+        llm_loads: vec![0.0; m],
+        used: 0,
+        cmax: 0.0,
+    }];
+    while level.len() < ROOT_SPLIT_TARGET && level[0].assign.len() < order.len() {
+        let pos = level[0].assign.len();
+        let item = items[order[pos]];
+        let mut next = Vec::with_capacity(level.len() * 2);
+        for p in &level {
+            // Same child set as the serial branch step: existing buckets
+            // plus at most one fresh bucket (symmetry breaking).
+            let limit = (p.used + 1).min(m);
+            for j in 0..limit {
+                let mut q = p.clone();
+                q.assign.push(j);
+                q.enc_loads[j] += item.enc;
+                q.llm_loads[j] += item.llm;
+                q.used = p.used.max(j + 1);
+                q.cmax = p.cmax.max(q.enc_loads[j].max(q.llm_loads[j]));
+                next.push(q);
+            }
+        }
+        level = next;
+    }
+    level
+}
 
 impl<'a> Search<'a> {
     fn dfs(&mut self, pos: usize, used_buckets: usize, cur_cmax: f64) {
@@ -157,29 +226,79 @@ pub fn solve(items: &[ItemCost], m: usize, budget: Duration) -> IlpResult {
     }
 
     let global_lb = lower_bound(items, m);
-    let mut search = Search {
-        items,
-        order: order.clone(),
-        m,
-        deadline: start + budget,
-        best_cmax: warm.c_max(),
-        best_assign: lpt_assign,
-        cur_assign: vec![0usize; n],
-        enc_loads: vec![0.0; m],
-        llm_loads: vec![0.0; m],
-        suffix_enc,
-        suffix_llm,
-        nodes: 0,
-        timed_out: false,
-        global_lb,
-    };
+    let deadline = start + budget;
+    let mut best_cmax = warm.c_max();
+    let mut best_assign = lpt_assign.clone();
+    let mut nodes = 0u64;
+    let mut timed_out = false;
     // LPT may already be optimal.
     if warm.c_max() > global_lb + 1e-12 {
-        search.dfs(0, 0, 0.0);
+        // Deadline-shared parallel root split: search each fixed prefix's
+        // subtree independently (own incumbent, common LPT warm start),
+        // then merge in a fixed order.
+        let mut prefixes = root_prefixes(items, &order, m);
+        // Most-promising-first: order subtrees by their entry bound (the
+        // same bound dfs prunes with), drop the ones the warm start
+        // already beats. Both steps depend only on fixed inputs, so the
+        // schedule — and the merge order — is thread-count independent,
+        // while an expiring budget gets spent where the old best-first
+        // descent would have gone first.
+        let entry_bound = |p: &Prefix| -> f64 {
+            let d = p.assign.len();
+            p.cmax.max((suffix_enc[d] / m as f64).max(suffix_llm[d] / m as f64))
+        };
+        prefixes.sort_by(|a, b| {
+            entry_bound(a).partial_cmp(&entry_bound(b)).expect("NaN bound")
+        });
+        prefixes.retain(|p| entry_bound(p) < warm.c_max() - 1e-12);
+        let subtree = |pi: usize| -> (f64, Vec<usize>, u64, bool) {
+            let p = &prefixes[pi];
+            // Budget already spent: report the warm start without paying
+            // for a CHECK_EVERY granule of doomed exploration.
+            if Instant::now() >= deadline {
+                return (warm.c_max(), lpt_assign.clone(), 0, true);
+            }
+            let depth = p.assign.len();
+            let mut cur_assign = vec![0usize; n];
+            cur_assign[..depth].copy_from_slice(&p.assign);
+            // No cross-subtree lb-hit shortcut on purpose: stopping
+            // siblings once one subtree reaches `global_lb` would make
+            // *which* lb-achieving assignment wins depend on timing
+            // (exact-lb ties are common when the largest item is the
+            // binding bound), breaking the thread-count determinism
+            // contract. Each subtree still stops itself on lb-hit, and
+            // the deadline caps the residual exploration.
+            let mut search = Search {
+                items,
+                order: &order,
+                m,
+                deadline,
+                best_cmax: warm.c_max(),
+                best_assign: lpt_assign.clone(),
+                cur_assign,
+                enc_loads: p.enc_loads.clone(),
+                llm_loads: p.llm_loads.clone(),
+                suffix_enc: &suffix_enc,
+                suffix_llm: &suffix_llm,
+                nodes: 0,
+                timed_out: false,
+                global_lb,
+            };
+            search.dfs(depth, p.used, p.cmax);
+            (search.best_cmax, search.best_assign, search.nodes, search.timed_out)
+        };
+        for (cmax, assign, sub_nodes, sub_timed_out) in par_map(prefixes.len(), subtree) {
+            nodes += sub_nodes;
+            timed_out |= sub_timed_out;
+            if cmax < best_cmax {
+                best_cmax = cmax;
+                best_assign = assign;
+            }
+        }
     }
 
     let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); m];
-    for (pos, &j) in search.best_assign.iter().enumerate() {
+    for (pos, &j) in best_assign.iter().enumerate() {
         buckets[j].push(order[pos]);
     }
     for b in &mut buckets {
@@ -187,8 +306,9 @@ pub fn solve(items: &[ItemCost], m: usize, budget: Duration) -> IlpResult {
     }
     let assignment = Assignment::from_buckets(buckets, items);
     IlpResult {
-        optimal: !search.timed_out,
-        nodes: search.nodes,
+        // Exhausted the space, or proved the bound — either way optimal.
+        optimal: !timed_out || best_cmax <= global_lb + 1e-12,
+        nodes,
         elapsed: start.elapsed(),
         assignment,
     }

@@ -1,5 +1,6 @@
 //! Iteration-level training simulation of complete systems (DFLOP,
-//! ablations, baselines) over the ground-truth cluster.
+//! ablations, baselines) over the ground-truth cluster, plus the parallel
+//! evaluation-grid substrate the figure harness sweeps with.
 pub mod trainer;
 
-pub use trainer::{run_system, RunConfig, RunResult, SystemKind};
+pub use trainer::{run_cells, run_system, Cell, RunConfig, RunResult, SystemKind};

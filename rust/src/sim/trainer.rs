@@ -129,6 +129,31 @@ fn materialize(shapes: &[ItemShape], groups: &[Vec<usize>]) -> Vec<Vec<ItemShape
         .collect()
 }
 
+/// One independent (system × model × dataset × cluster) evaluation cell of
+/// the paper's grid. Cells are self-contained — the model, dataset key,
+/// and full [`RunConfig`] (cluster size included) travel with the cell —
+/// so a batch of them can run on any worker in any order.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub kind: SystemKind,
+    pub m: Mllm,
+    pub dataset: String,
+    pub cfg: RunConfig,
+}
+
+/// Evaluate a batch of cells on the `util::parallel` pool.
+///
+/// Results come back in cell order, and every cell is seeded from its own
+/// `cfg.seed`, so the output is identical to calling [`run_system`] in a
+/// serial loop — this is what lets the figure harness sweep a whole
+/// (system × model × dataset) grid across all cores.
+pub fn run_cells(cells: &[Cell]) -> Vec<RunResult> {
+    crate::util::parallel::par_map(cells.len(), |i| {
+        let c = &cells[i];
+        run_system(c.kind, &c.m, &c.dataset, &c.cfg)
+    })
+}
+
 /// Run one system on one workload.
 pub fn run_system(
     kind: SystemKind,
@@ -150,12 +175,7 @@ pub fn run_system(
     let mut profile_ds = Dataset::by_key(dataset_key, cfg.seed ^ 0xDA7A)
         .unwrap_or_else(|| panic!("unknown dataset '{dataset_key}'"));
     let data = profile_data(m, &mut profile_ds, cfg.profile_samples);
-    let profiling_seconds = backend.measured_seconds().max(data.profiling_seconds)
-        + if matches!(kind, SystemKind::Dflop | SystemKind::DflopOptimizerOnly | SystemKind::DflopSchedulerOnly) {
-            0.0
-        } else {
-            0.0
-        };
+    let profiling_seconds = backend.measured_seconds().max(data.profiling_seconds);
 
     let (theta, optimizer_elapsed) = match kind {
         SystemKind::Dflop | SystemKind::DflopOptimizerOnly => {

@@ -1,0 +1,128 @@
+//! Minimal dynamic error type for fallible paths (artifact loading, CLI,
+//! the PJRT runtime).
+//!
+//! `anyhow` is not in the offline vendor set, so the crate carries the
+//! small subset it actually uses: a string-backed [`Error`], a [`Result`]
+//! alias, a [`Context`] extension trait, and the [`err!`](crate::err) /
+//! [`bail!`](crate::bail) macros. Like `anyhow::Error`, [`Error`] does
+//! *not* implement `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` conversion (and therefore `?` on any
+//! standard error) coherent.
+
+use std::fmt;
+
+/// A type-erased, message-carrying error.
+pub struct Error(String);
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error(m.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// Crate-wide result alias (mirrors `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error as it propagates (`anyhow::Context` subset).
+pub trait Context<T> {
+    /// Prefix the error with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Prefix the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, ctx: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, ctx: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", ctx())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, ctx: F) -> Result<T> {
+        self.ok_or_else(|| Error(ctx().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (`anyhow::anyhow!` analogue).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] (`anyhow::bail!` analogue).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn question_mark_converts_standard_errors() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("17").unwrap(), 17);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn context_prefixes_messages() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        let e = r.context("reading manifest").unwrap_err();
+        let text = e.to_string();
+        assert!(text.starts_with("reading manifest: "), "{text}");
+        assert!(text.contains("gone"), "{text}");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        fn pick(v: Option<u8>) -> Result<u8> {
+            let x = v.context("missing value")?;
+            if x > 10 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(pick(Some(3)).unwrap(), 3);
+        assert_eq!(pick(None).unwrap_err().to_string(), "missing value");
+        assert_eq!(pick(Some(11)).unwrap_err().to_string(), "too big: 11");
+        assert_eq!(err!("x={}", 5).to_string(), "x=5");
+    }
+}

@@ -1,13 +1,16 @@
 //! Shared substrates: deterministic RNG, statistics, JSON, CLI parsing,
-//! property testing, and table rendering.
+//! property testing, table rendering, error handling, and the scoped
+//! thread pool.
 //!
 //! These exist because the offline build environment vendors only the `xla`
 //! crate's dependency closure — `rand`, `serde`, `clap`, `proptest`,
-//! `criterion` are unavailable, so the library carries minimal from-scratch
-//! equivalents (see DESIGN.md "Reproduction posture").
+//! `criterion`, `anyhow`, `rayon` are unavailable, so the library carries
+//! minimal from-scratch equivalents (see DESIGN.md "Reproduction posture").
 
 pub mod cli;
+pub mod error;
 pub mod json;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,196 @@
+//! Dependency-free scoped thread pool for the evaluation substrate.
+//!
+//! `rayon` is not in the offline vendor set, so this module carries the
+//! minimal parallel-iteration primitives the hot paths need: [`par_map`] /
+//! [`par_for_each`] over index ranges, executed by scoped worker threads
+//! that self-schedule chunks from a shared atomic index queue (chunked
+//! work stealing — an idle worker keeps claiming the next chunk until the
+//! range is drained, so stragglers cannot leave cores idle).
+//!
+//! **Determinism contract.** Output order is by index, never by completion
+//! order, and callers hand out independent per-task RNG streams (see
+//! `util::rng::Rng::fork` and the per-cell seeding in `sim::trainer`), so
+//! every result is bit-identical to the serial path regardless of thread
+//! count. The determinism test suite (`tests/determinism.rs`) enforces
+//! this for the optimizer, the simulator, and the ILP scheduler.
+//!
+//! **Nesting.** Worker threads mark themselves, and any `par_map` issued
+//! from inside a worker runs serially in place: outer parallelism (e.g. a
+//! figure's evaluation grid) claims the cores, inner parallelism (the
+//! optimizer scan inside one cell) degrades to the serial path instead of
+//! oversubscribing the machine.
+//!
+//! The pool size comes from, in order: [`set_max_threads`] (the `--threads`
+//! CLI flag), the `DFLOP_THREADS` environment variable, and
+//! `std::thread::available_parallelism()`.
+
+use std::cell::Cell;
+use std::panic::resume_unwind;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Configured pool width; 0 means "not yet resolved" (auto-detect).
+static MAX_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// True on pool worker threads: nested calls run serially.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+fn detect_threads() -> usize {
+    if let Ok(v) = std::env::var("DFLOP_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The number of worker threads parallel sections may use.
+pub fn max_threads() -> usize {
+    let n = MAX_THREADS.load(Ordering::Relaxed);
+    if n != 0 {
+        return n;
+    }
+    let detected = detect_threads();
+    // First caller wins; later callers read a stable value.
+    let _ = MAX_THREADS.compare_exchange(0, detected, Ordering::Relaxed, Ordering::Relaxed);
+    MAX_THREADS.load(Ordering::Relaxed)
+}
+
+/// Set the pool width (the `--threads` flag). `0` resets to auto-detect.
+pub fn set_max_threads(n: usize) {
+    MAX_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Map `f` over `0..n` on the pool; results are returned in index order.
+///
+/// Falls back to a plain serial map when the pool is width 1, the range is
+/// trivial, or the caller is itself a pool worker (nested section). A
+/// panic in any task is propagated to the caller after all workers have
+/// drained.
+pub fn par_map<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = max_threads().min(n);
+    if threads <= 1 || IN_POOL.with(|c| c.get()) {
+        return (0..n).map(f).collect();
+    }
+    // ~4 chunks per worker: coarse enough to amortize queue traffic, fine
+    // enough that one slow chunk cannot serialize the tail.
+    let chunk = n.div_ceil(threads * 4).max(1);
+    let next = AtomicUsize::new(0);
+    let next = &next;
+    let f = &f;
+    std::thread::scope(|s| {
+        let workers: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(move || {
+                    IN_POOL.with(|c| c.set(true));
+                    let mut part: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let start = next.fetch_add(chunk, Ordering::Relaxed);
+                        if start >= n {
+                            break;
+                        }
+                        let end = (start + chunk).min(n);
+                        for i in start..end {
+                            part.push((i, f(i)));
+                        }
+                    }
+                    part
+                })
+            })
+            .collect();
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut panic = None;
+        for w in workers {
+            match w.join() {
+                Ok(part) => {
+                    for (i, v) in part {
+                        slots[i] = Some(v);
+                    }
+                }
+                Err(p) => panic = Some(p),
+            }
+        }
+        if let Some(p) = panic {
+            resume_unwind(p);
+        }
+        slots
+            .into_iter()
+            .map(|slot| slot.expect("every index produced exactly once"))
+            .collect()
+    })
+}
+
+/// Run `f` for every index in `0..n` on the pool (no results collected).
+pub fn par_for_each<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    par_map(n, f);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn matches_serial_map() {
+        let par = par_map(257, |i| i * i + 1);
+        let ser: Vec<usize> = (0..257).map(|i| i * i + 1).collect();
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn empty_range_yields_empty_vec() {
+        let out: Vec<u64> = par_map(0, |_| unreachable!("no tasks"));
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_element_runs_inline() {
+        assert_eq!(par_map(1, |i| i + 41), vec![41]);
+    }
+
+    #[test]
+    fn propagates_worker_panics() {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            par_map(64, |i| {
+                if i == 23 {
+                    panic!("task 23 exploded");
+                }
+                i
+            })
+        }));
+        assert!(r.is_err(), "panic must cross the pool boundary");
+    }
+
+    #[test]
+    fn nested_sections_run_serially_and_correctly() {
+        let out = par_map(8, |i| par_map(8, |j| i * 8 + j).iter().sum::<usize>());
+        let expect: Vec<usize> = (0..8).map(|i| (0..8).map(|j| i * 8 + j).sum()).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn for_each_visits_every_index_once() {
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        par_for_each(100, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    // The thread-width-independence contract is deliberately NOT tested
+    // here: flipping the process-global width would race against the
+    // crate's other unit tests. The cross-width bitwise checks live in
+    // tests/determinism.rs, which serializes every flip behind WIDTH_LOCK
+    // in its own test binary.
+}

@@ -1,0 +1,143 @@
+//! Thread-count-independence tests for the parallel evaluation substrate.
+//!
+//! The `util::parallel` pool is threaded through the optimizer's Phase-2
+//! scan and Eq-1 refinement, the simulator's evaluation cells, and the ILP
+//! scheduler's root split. The contract is that none of that is allowed to
+//! change a single bit of output: the same seed must produce identical
+//! results at `--threads 1` and `--threads 8`. (The one documented
+//! exception is an ILP call whose *budget expires* — the incumbent then
+//! depends on wall-clock, exactly as it did in the serial solver — so the
+//! ILP check below uses an instance the budget comfortably exhausts.)
+
+use dflop::data::dataset::Dataset;
+use dflop::model::catalog::{llama3, llava_ov};
+use dflop::optimizer::search::{optimize, OptimizerInputs};
+use dflop::perfmodel::{ClusterSpec, Truth};
+use dflop::profiling::backend::SimBackend;
+use dflop::profiling::engine::{profile_data, ModelProfiler, ProfilerGrids};
+use dflop::scheduler::ilp;
+use dflop::scheduler::lpt::ItemCost;
+use dflop::sim::{run_cells, Cell, RunConfig, SystemKind};
+use dflop::util::parallel::set_max_threads;
+use dflop::util::rng::Rng;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// The pool width is process-global; tests that flip it hold this lock so
+/// the two runs being compared really execute at the width they claim.
+static WIDTH_LOCK: Mutex<()> = Mutex::new(());
+
+fn width_guard() -> std::sync::MutexGuard<'static, ()> {
+    WIDTH_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn optimizer_theta_identical_across_thread_counts() {
+    let _g = width_guard();
+    let m = llava_ov(llama3("8b"));
+    let cluster = ClusterSpec::hgx_a100(2);
+    let mut backend = SimBackend::new(Truth::new(cluster));
+    let profile = ModelProfiler::new(&mut backend, ProfilerGrids::standard(8)).profile(&m);
+    let mut ds = Dataset::mixed(1234);
+    let data = profile_data(&m, &mut ds, 256);
+    let inp = OptimizerInputs {
+        m: &m,
+        profile: &profile,
+        data: &data,
+        n_gpus: cluster.total_gpus(),
+        gpus_per_node: cluster.gpus_per_node,
+        mem_capacity: cluster.gpu.mem_bytes,
+        gbs: 64,
+        assume_balanced: true,
+    };
+    set_max_threads(1);
+    let serial = optimize(&inp).expect("feasible");
+    set_max_threads(8);
+    let parallel = optimize(&inp).expect("feasible");
+    set_max_threads(0);
+    assert_eq!(serial.theta, parallel.theta);
+    assert_eq!(
+        serial.expected_makespan.to_bits(),
+        parallel.expected_makespan.to_bits(),
+        "Eq-1 score drifted: {} vs {}",
+        serial.expected_makespan,
+        parallel.expected_makespan
+    );
+    assert_eq!(serial.candidates_scanned, parallel.candidates_scanned);
+    assert_eq!(serial.memory_rejected, parallel.memory_rejected);
+}
+
+#[test]
+fn simulated_runs_identical_across_thread_counts() {
+    let _g = width_guard();
+    let m = llava_ov(llama3("8b"));
+    let mut cfg = RunConfig::new(1, 32, 3, 42);
+    cfg.profile_samples = 256;
+    // Megatron/PyTorch cover the baseline path, optimizer-only covers the
+    // Algorithm-1 path inside a cell; all three are budget-free (no ILP
+    // deadline), so their statistics must match to the bit.
+    let cells: Vec<Cell> = [
+        SystemKind::Megatron,
+        SystemKind::Pytorch,
+        SystemKind::DflopOptimizerOnly,
+    ]
+    .into_iter()
+    .map(|kind| Cell {
+        kind,
+        m: m.clone(),
+        dataset: "mixed".to_string(),
+        cfg: cfg.clone(),
+    })
+    .collect();
+    set_max_threads(1);
+    let serial = run_cells(&cells);
+    set_max_threads(8);
+    let parallel = run_cells(&cells);
+    set_max_threads(0);
+    assert_eq!(serial.len(), parallel.len());
+    for (cell, (a, b)) in cells.iter().zip(serial.iter().zip(&parallel)) {
+        assert_eq!(a.theta, b.theta, "{:?}", cell.kind);
+        assert_eq!(
+            a.per_gpu_throughput.to_bits(),
+            b.per_gpu_throughput.to_bits(),
+            "{:?}: {} vs {}",
+            cell.kind,
+            a.per_gpu_throughput,
+            b.per_gpu_throughput
+        );
+        assert_eq!(
+            a.mean_iteration_time.to_bits(),
+            b.mean_iteration_time.to_bits(),
+            "{:?}",
+            cell.kind
+        );
+        assert_eq!(a.mean_idle.to_bits(), b.mean_idle.to_bits(), "{:?}", cell.kind);
+        assert_eq!(a.lpt_fallbacks, b.lpt_fallbacks, "{:?}", cell.kind);
+    }
+}
+
+#[test]
+fn ilp_assignment_identical_across_thread_counts() {
+    let _g = width_guard();
+    // Small enough that the branch-and-bound always exhausts the space
+    // within the budget — the regime where the root-split merge promises
+    // bitwise agreement.
+    let mut rng = Rng::new(99);
+    let items: Vec<ItemCost> = (0..12)
+        .map(|_| ItemCost {
+            enc: rng.uniform(0.1, 3.0),
+            llm: rng.uniform(0.1, 3.0),
+        })
+        .collect();
+    set_max_threads(1);
+    let serial = ilp::solve(&items, 3, Duration::from_secs(10));
+    set_max_threads(8);
+    let parallel = ilp::solve(&items, 3, Duration::from_secs(10));
+    set_max_threads(0);
+    assert!(serial.optimal && parallel.optimal, "instance too hard for budget");
+    assert_eq!(serial.assignment.buckets, parallel.assignment.buckets);
+    assert_eq!(
+        serial.assignment.c_max().to_bits(),
+        parallel.assignment.c_max().to_bits()
+    );
+}
