@@ -11,11 +11,12 @@ use dflop::util::cli::{Args, Spec};
 fn main() -> dflop::util::error::Result<()> {
     let spec = Spec { valued: vec!["nodes", "gbs", "iters", "seed"], boolean: vec![] };
     let args = Args::parse(std::env::args().skip(1), &spec)?;
-    let mut o = FigOpts::default();
-    o.nodes = args.get_usize("nodes", 4)?;
-    o.gbs = args.get_usize("gbs", 128)?;
-    o.iters = args.get_usize("iters", 4)?;
-    o.seed = args.get_u64("seed", 42)?;
+    let o = FigOpts {
+        nodes: args.get_usize("nodes", 4)?,
+        gbs: args.get_usize("gbs", 128)?,
+        iters: args.get_usize("iters", 4)?,
+        seed: args.get_u64("seed", 42)?,
+    };
     print!("{}", fig09(&o));
     Ok(())
 }

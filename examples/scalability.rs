@@ -10,10 +10,12 @@ use dflop::util::cli::{Args, Spec};
 fn main() -> dflop::util::error::Result<()> {
     let spec = Spec { valued: vec!["gbs", "iters", "seed"], boolean: vec![] };
     let args = Args::parse(std::env::args().skip(1), &spec)?;
-    let mut o = FigOpts::default();
-    o.gbs = args.get_usize("gbs", 128)?;
-    o.iters = args.get_usize("iters", 3)?;
-    o.seed = args.get_u64("seed", 42)?;
+    let o = FigOpts {
+        gbs: args.get_usize("gbs", 128)?,
+        iters: args.get_usize("iters", 3)?,
+        seed: args.get_u64("seed", 42)?,
+        ..FigOpts::default()
+    };
     print!("{}", fig12(&o));
     Ok(())
 }

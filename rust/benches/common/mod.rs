@@ -5,6 +5,11 @@
 //! single measured repetition (and, where a target honours it, a reduced
 //! workload) — so CI can execute the full bench suite in seconds and fail
 //! loudly on gross regressions without paying for stable statistics.
+//!
+//! Setting `DFLOP_BENCH_JSON=<path>` additionally records every result in
+//! a machine-readable JSON document (see [`emit_json`]): the bench targets
+//! run sequentially under `cargo bench` and each merges its rows into the
+//! same file, which CI uploads as the `BENCH_PR2.json` artifact.
 use std::time::Instant;
 
 /// True when the CI smoke mode is requested via `DFLOP_BENCH_QUICK`.
@@ -45,4 +50,59 @@ pub fn bench<F: FnMut()>(name: &str, reps: usize, mut f: F) -> BenchResult {
         reps
     );
     r
+}
+
+/// Merge `results` into the JSON document named by `DFLOP_BENCH_JSON`
+/// (no-op when the variable is unset). The document carries the thread
+/// count and quick-mode flag alongside one row per (target, bench); rows
+/// for a re-run (target, bench) pair are replaced, so the file stays
+/// idempotent across repeated invocations.
+pub fn emit_json(target: &str, results: &[BenchResult]) {
+    use dflop::util::json::{emit, parse, Json};
+    use std::collections::BTreeMap;
+
+    let Ok(path) = std::env::var("DFLOP_BENCH_JSON") else { return };
+    if path.is_empty() {
+        return;
+    }
+    let mut root = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|text| parse(&text).ok())
+        .and_then(|v| match v {
+            Json::Obj(o) => Some(o),
+            _ => None,
+        })
+        .unwrap_or_default();
+    root.insert("schema".into(), Json::Str("dflop-bench-v1".into()));
+    root.insert(
+        "threads".into(),
+        Json::Num(dflop::util::parallel::max_threads() as f64),
+    );
+    root.insert("quick".into(), Json::Bool(quick()));
+    let mut rows = match root.remove("results") {
+        Some(Json::Arr(rows)) => rows,
+        _ => Vec::new(),
+    };
+    // Drop this target's previous rows wholesale: a target always reports
+    // its complete result set in one call, and keeping partially-matching
+    // leftovers would mix rows from different protocols under the one
+    // top-level threads/quick header.
+    rows.retain(|row| {
+        let Json::Obj(o) = row else { return false };
+        o.get("target").and_then(Json::as_str) != Some(target)
+    });
+    for r in results {
+        let mut o = BTreeMap::new();
+        o.insert("target".into(), Json::Str(target.into()));
+        o.insert("bench".into(), Json::Str(r.name.clone()));
+        o.insert("mean_s".into(), Json::Num(r.mean));
+        o.insert("min_s".into(), Json::Num(r.min));
+        o.insert("max_s".into(), Json::Num(r.max));
+        o.insert("reps".into(), Json::Num(r.reps as f64));
+        rows.push(Json::Obj(o));
+    }
+    root.insert("results".into(), Json::Arr(rows));
+    if let Err(e) = std::fs::write(&path, emit(&Json::Obj(root)) + "\n") {
+        eprintln!("warning: could not write {path}: {e}");
+    }
 }

@@ -22,9 +22,11 @@ fn main() {
             &["1", "2", "4", "7", "8", "9", "10", "11", "12", "13", "14", "15", "16"],
         )
     };
+    let mut results = Vec::new();
     for id in ids {
-        bench(&format!("figure {id}"), 1, || {
+        results.push(bench(&format!("figure {id}"), 1, || {
             std::hint::black_box(by_id(id, &o).expect("figure id").len());
-        });
+        }));
     }
+    common::emit_json("figures_bench", &results);
 }

@@ -18,6 +18,7 @@ fn main() {
     let mut ds = Dataset::mixed(42);
     let data = profile_data(&m, &mut ds, 256);
     println!("== optimizer_bench (Fig 16a) ==");
+    let mut results = Vec::new();
     for &(gpus, gbs) in &[(64usize, 512usize), (256, 1024), (1024, 2048)] {
         let inp = OptimizerInputs {
             m: &m,
@@ -29,9 +30,10 @@ fn main() {
             gbs,
             assume_balanced: true,
         };
-        bench(&format!("optimize gpus={gpus} gbs={gbs}"), 3, || {
+        results.push(bench(&format!("optimize gpus={gpus} gbs={gbs}"), 3, || {
             let r = optimize(&inp).expect("feasible");
             std::hint::black_box(r.theta);
-        });
+        }));
     }
+    common::emit_json("optimizer_bench", &results);
 }

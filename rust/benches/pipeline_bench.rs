@@ -1,17 +1,23 @@
 //! Bench: 1F1B pipeline engine + full iteration simulation (supports the
 //! end-to-end figures — one simulated iteration must stay in the ms range
 //! so the figure sweeps complete in seconds).
+//!
+//! The engine rows measure the event-driven core the hot paths actually
+//! run (reused `SimWorkspace`, no timeline) next to the retained polling
+//! oracle (`simulate_reference`) — the in-binary before/after pair for the
+//! PR-2 speedup claim (see `BENCH_PR2.json` / rust/DESIGN.md).
 mod common;
 use common::bench;
 use dflop::data::dataset::Dataset;
 use dflop::model::catalog::{llava_ov, llama3};
 use dflop::optimizer::plan::{ModPar, Theta};
 use dflop::perfmodel::{ClusterSpec, Truth};
-use dflop::pipeline::build::{iterate, SystemPlan};
-use dflop::pipeline::sim::{simulate, Route};
+use dflop::pipeline::build::{iterate_ws, SystemPlan};
+use dflop::pipeline::sim::{simulate_reference, Route, SimWorkspace};
 
 fn main() {
     println!("== pipeline_bench ==");
+    let mut results = Vec::new();
     // Raw engine: 256 buckets × 16 stages.
     let routes: Vec<Route> = (0..256)
         .map(|i| Route {
@@ -21,9 +27,24 @@ fn main() {
             comm: vec![0.0; 16],
         })
         .collect();
-    bench("1F1B engine 256 buckets x 16 stages", 10, || {
-        std::hint::black_box(simulate(16, &routes).makespan);
-    });
+    let mut ws = SimWorkspace::new();
+    results.push(bench("1F1B engine 256 buckets x 16 stages", 10, || {
+        ws.routes.clear();
+        for r in &routes {
+            ws.routes.push_route(r);
+        }
+        std::hint::black_box(ws.run(16, false));
+    }));
+    results.push(bench("1F1B engine (timeline recorded)", 10, || {
+        ws.routes.clear();
+        for r in &routes {
+            ws.routes.push_route(r);
+        }
+        std::hint::black_box(ws.run(16, true));
+    }));
+    results.push(bench("1F1B polling oracle (pre-PR2 baseline)", 10, || {
+        std::hint::black_box(simulate_reference(16, &routes).makespan);
+    }));
 
     // Full iteration with ground-truth durations.
     let m = llava_ov(llama3("8b"));
@@ -38,7 +59,8 @@ fn main() {
     let buckets: Vec<Vec<_>> = (0..theta.buckets())
         .map(|_| ds.shaped_batch(&m, 4))
         .collect();
-    bench("full iteration (32 GPUs, 128 items)", 10, || {
-        std::hint::black_box(iterate(&plan, &buckets).iteration_time);
-    });
+    results.push(bench("full iteration (32 GPUs, 128 items)", 10, || {
+        std::hint::black_box(iterate_ws(&plan, &buckets, &mut ws).iteration_time);
+    }));
+    common::emit_json("pipeline_bench", &results);
 }

@@ -14,6 +14,7 @@ fn main() {
     let m = llava_ov(llama3("8b"));
     let mut ds = Dataset::mixed(42);
     println!("== scheduler_bench (Fig 16b) ==");
+    let mut results = Vec::new();
     for &gbs in &[64usize, 256, 1024, 2048] {
         let shapes = ds.shaped_batch(&m, gbs);
         let items: Vec<ItemCost> = shapes
@@ -23,13 +24,18 @@ fn main() {
         let buckets = (gbs / 8).max(2);
         let lb = lpt::lower_bound(&items, buckets);
         let mut imb = 0.0;
-        bench(&format!("hybrid ILP/LPT gbs={gbs} m={buckets}"), 5, || {
+        results.push(bench(&format!("hybrid ILP/LPT gbs={gbs} m={buckets}"), 5, || {
             let r = ilp::solve(&items, buckets, Duration::from_millis(50));
             imb = (r.assignment.c_max() / lb - 1.0).max(0.0);
-        });
+        }));
         println!("    imbalance vs lower bound: {:.3}%", imb * 100.0);
-        bench(&format!("LPT only gbs={gbs} m={buckets}"), 5, || {
-            std::hint::black_box(lpt::lpt(&items, buckets).c_max());
-        });
+        // Reused-output LPT — the exact call shape of the optimizer's
+        // Eq-1 refinement inner loop.
+        let mut out = dflop::scheduler::lpt::Assignment::default();
+        results.push(bench(&format!("LPT only gbs={gbs} m={buckets}"), 5, || {
+            lpt::lpt_into(&items, buckets, &mut out);
+            std::hint::black_box(out.c_max());
+        }));
     }
+    common::emit_json("scheduler_bench", &results);
 }

@@ -1,0 +1,43 @@
+#!/usr/bin/env sh
+# PR-2 speedup measurement, per the protocol in rust/DESIGN.md:
+#
+#   DFLOP_THREADS=1 single-thread wall-clock of optimizer_bench and
+#   pipeline_bench, current tree vs the pre-PR binary, same machine.
+#
+# Usage:  rust/scripts/bench_pr2.sh [<baseline-ref>]
+#
+# <baseline-ref> defaults to HEAD~1 (the commit before the PR-2 squash).
+# The baseline is built in a temporary git worktree so the working tree is
+# never touched. Results land in:
+#
+#   BENCH_PR2.json           — current tree (machine-readable, merged rows)
+#   BENCH_PR2.baseline.json  — baseline ref (same schema)
+#
+# The current tree's pipeline_bench additionally carries the in-binary
+# pair "1F1B engine …" (event-driven core) vs "1F1B polling oracle
+# (pre-PR2 baseline)" — a cross-check of the same speedup that needs no
+# second build.
+set -eu
+
+ref="${1:-HEAD~1}"
+root="$(git rev-parse --show-toplevel)"
+cd "$root"
+
+echo "== current tree =="
+rm -f BENCH_PR2.json
+DFLOP_THREADS=1 DFLOP_BENCH_JSON="$root/BENCH_PR2.json" \
+    cargo bench --bench optimizer_bench --bench pipeline_bench
+
+echo "== baseline ($ref) =="
+tmp="$(mktemp -d)"
+trap 'git worktree remove --force "$tmp/baseline" 2>/dev/null || true; rm -rf "$tmp"' EXIT
+git worktree add --detach "$tmp/baseline" "$ref"
+rm -f BENCH_PR2.baseline.json
+# Older refs may predate DFLOP_BENCH_JSON support; fall back to the
+# printed table in that case (the env var is simply ignored there).
+(cd "$tmp/baseline" && DFLOP_THREADS=1 DFLOP_BENCH_JSON="$root/BENCH_PR2.baseline.json" \
+    cargo bench --bench optimizer_bench --bench pipeline_bench)
+
+echo
+echo "Wrote BENCH_PR2.json (current) and BENCH_PR2.baseline.json ($ref)."
+echo "Speedup = baseline mean_s / current mean_s per matching bench row."

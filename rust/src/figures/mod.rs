@@ -21,8 +21,8 @@ use crate::model::catalog::{llava_ov, llama3, paper_configs, qwen2_audio, qwen25
 use crate::optimizer::plan::{ModPar, Theta};
 use crate::optimizer::search::{optimize, OptimizerInputs};
 use crate::perfmodel::{ClusterSpec, Truth};
-use crate::pipeline::build::{iterate, SystemPlan};
-use crate::pipeline::sim::ideal_bubble_fraction;
+use crate::pipeline::build::{iterate_ws, SystemPlan};
+use crate::pipeline::sim::{ideal_bubble_fraction, SimWorkspace};
 use crate::profiling::backend::SimBackend;
 use crate::profiling::engine::{profile_data, ModelProfiler, ProfilerGrids};
 use crate::scheduler::ilp;
@@ -108,7 +108,8 @@ pub fn fig01(o: &FigOpts) -> String {
         source: 0,
     };
     let ideal_buckets: Vec<Vec<_>> = (0..6).map(|_| vec![mean_shape; 2]).collect();
-    let ideal = iterate(&plan, &ideal_buckets);
+    let mut ws = SimWorkspace::new();
+    let ideal = iterate_ws(&plan, &ideal_buckets, &mut ws);
     out.push_str("Fig 1 (top) — ideal 1F1B: identical microbatches\n");
     out.push_str(&timeline::render(&ideal.timeline, ideal.n_stages, 96));
     out.push_str(&format!(
@@ -119,7 +120,7 @@ pub fn fig01(o: &FigOpts) -> String {
 
     // Real: the same items in heterogeneous random-composition buckets.
     let real_buckets: Vec<Vec<_>> = items.chunks(2).map(|c| c.to_vec()).collect();
-    let real = iterate(&plan, &real_buckets);
+    let real = iterate_ws(&plan, &real_buckets, &mut ws);
     out.push_str("Fig 1 (bottom) — real 1F1B: mixed single-image/multi-image/video microbatches\n");
     out.push_str(&timeline::render(&real.timeline, real.n_stages, 96));
     out.push_str(&format!(

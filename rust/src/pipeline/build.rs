@@ -20,7 +20,7 @@ use crate::data::item::ItemShape;
 use crate::model::catalog::Mllm;
 use crate::optimizer::plan::Theta;
 use crate::perfmodel::Truth;
-use crate::pipeline::sim::{simulate, OpRecord, Route};
+use crate::pipeline::sim::{OpRecord, SimWorkspace};
 
 /// A system's execution plan for one iteration: the strategy plus the
 /// scheduled bucket contents.
@@ -107,7 +107,22 @@ fn communicator_time(plan: &SystemPlan, act_bytes: f64) -> f64 {
 ///
 /// `buckets[j]` holds the item shapes assigned to bucket j by the
 /// scheduler (DFLOP) or the random partitioner (baselines).
+///
+/// One-shot convenience over [`iterate_ws`]: allocates a fresh
+/// [`SimWorkspace`] per call. Per-iteration loops (the trainer, sweeps)
+/// should hold a workspace and call [`iterate_ws`] instead.
 pub fn iterate(plan: &SystemPlan, buckets: &[Vec<ItemShape>]) -> IterationStats {
+    iterate_ws(plan, buckets, &mut SimWorkspace::new())
+}
+
+/// [`iterate`] against a caller-owned simulation workspace: routes build
+/// into the workspace's arena and the 1F1B engine runs allocation-free in
+/// steady state (one workspace per worker — see [`SimWorkspace`]).
+pub fn iterate_ws(
+    plan: &SystemPlan,
+    buckets: &[Vec<ItemShape>],
+    ws: &mut SimWorkspace,
+) -> IterationStats {
     let th = plan.theta;
     let (e_pp, e_dp) = (th.enc.pp, th.enc.dp);
     let (l_pp, l_dp) = (th.llm.pp, th.llm.dp);
@@ -118,7 +133,7 @@ pub fn iterate(plan: &SystemPlan, buckets: &[Vec<ItemShape>]) -> IterationStats 
     let e_layers = plan.m.encoder.layers as f64 / e_pp as f64;
     let l_layers = plan.m.llm.layers as f64 / l_pp as f64;
 
-    let mut routes = Vec::with_capacity(buckets.len());
+    ws.routes.clear();
     let mut bucket_exec = Vec::with_capacity(buckets.len());
     let mut stage_flop = vec![0.0f64; n_stages];
     let mut total_flop = 0.0f64;
@@ -127,16 +142,14 @@ pub fn iterate(plan: &SystemPlan, buckets: &[Vec<ItemShape>]) -> IterationStats 
         let e = j % e_dp;
         let g = j % l_dp;
         let units: f64 = items.iter().map(|i| i.units as f64).sum();
-        let seqs: Vec<f64> = items
-            .iter()
-            .filter(|i| i.llm_seq > 0)
-            .map(|i| i.llm_seq as f64)
-            .collect();
-        let total_seq: f64 = seqs.iter().sum();
+        ws.seqs.clear();
+        ws.seqs
+            .extend(items.iter().filter(|i| i.llm_seq > 0).map(|i| i.llm_seq as f64));
+        let total_seq: f64 = ws.seqs.iter().sum();
 
         // Per-stage ground-truth durations (fwd = 1/3, bwd = 2/3 of total).
         let enc_t = plan.truth.encoder_stage_time(plan.m, units, e_layers, th.enc.tp);
-        let llm_t = plan.truth.llm_stage_time(plan.m, &seqs, l_layers, th.llm.tp);
+        let llm_t = plan.truth.llm_stage_time(plan.m, &ws.seqs, l_layers, th.llm.tp);
 
         // FLOP accounting for throughput/idle reporting.
         let enc_flop: f64 = items.iter().map(|i| i.encoder_flop(plan.m)).sum();
@@ -154,25 +167,25 @@ pub fn iterate(plan: &SystemPlan, buckets: &[Vec<ItemShape>]) -> IterationStats 
         let pp_hop_llm = c.p2p_time(llm_act_bytes, true);
         let comm_hop = communicator_time(plan, enc_act_bytes);
 
-        let mut stages = Vec::with_capacity(e_pp + l_pp);
-        let mut fwd = Vec::with_capacity(e_pp + l_pp);
-        let mut bwd = Vec::with_capacity(e_pp + l_pp);
-        let mut comm = Vec::with_capacity(e_pp + l_pp);
         for s in 0..e_pp {
-            stages.push(enc_stage(e, s));
-            fwd.push(enc_t / 3.0);
-            bwd.push(enc_t * 2.0 / 3.0);
-            comm.push(if s == 0 { 0.0 } else { pp_hop_enc });
+            ws.routes.push_leg(
+                enc_stage(e, s),
+                enc_t / 3.0,
+                enc_t * 2.0 / 3.0,
+                if s == 0 { 0.0 } else { pp_hop_enc },
+            );
             stage_flop[enc_stage(e, s)] += enc_flop / e_pp as f64;
         }
         for s in 0..l_pp {
-            stages.push(llm_stage(g, s));
-            fwd.push(llm_t / 3.0);
-            bwd.push(llm_t * 2.0 / 3.0);
-            comm.push(if s == 0 { comm_hop } else { pp_hop_llm });
+            ws.routes.push_leg(
+                llm_stage(g, s),
+                llm_t / 3.0,
+                llm_t * 2.0 / 3.0,
+                if s == 0 { comm_hop } else { pp_hop_llm },
+            );
             stage_flop[llm_stage(g, s)] += llm_flop / l_pp as f64;
         }
-        routes.push(Route { stages, fwd, bwd, comm });
+        ws.routes.end_route();
         bucket_exec.push(BucketExec {
             enc_time: enc_t * e_pp as f64,
             llm_time: llm_t * l_pp as f64,
@@ -182,7 +195,7 @@ pub fn iterate(plan: &SystemPlan, buckets: &[Vec<ItemShape>]) -> IterationStats 
         });
     }
 
-    let sim = simulate(n_stages, &routes);
+    let pipeline_makespan = ws.run(n_stages, true);
 
     // ---- data-parallel gradient synchronization (straggler-inclusive:
     // the all-reduce starts only after the slowest pipeline drains, which
@@ -197,16 +210,16 @@ pub fn iterate(plan: &SystemPlan, buckets: &[Vec<ItemShape>]) -> IterationStats 
         .max(plan.truth.dp_allreduce_time(llm_grad_bytes, l_dp));
 
     IterationStats {
-        iteration_time: sim.makespan + dp_sync,
-        pipeline_makespan: sim.makespan,
+        iteration_time: pipeline_makespan + dp_sync,
+        pipeline_makespan,
         dp_sync_time: dp_sync,
-        stage_busy: sim.stage_busy,
-        stage_idle: sim.stage_idle,
+        stage_busy: ws.stage_busy().to_vec(),
+        stage_idle: ws.stage_busy().iter().map(|&b| pipeline_makespan - b).collect(),
         stage_flop,
         n_stages,
         total_flop,
         buckets: bucket_exec,
-        timeline: sim.timeline,
+        timeline: ws.timeline().to_vec(),
     }
 }
 
@@ -320,6 +333,33 @@ mod tests {
         assert!(stats.iteration_time.is_finite());
         assert_eq!(stats.buckets.len(), 4);
         assert_eq!(stats.buckets[3].enc_flop, 0.0);
+    }
+
+    #[test]
+    fn iterate_ws_reuse_is_stateless() {
+        // Interleaving differently-shaped iterations through one workspace
+        // must reproduce the fresh-workspace results bit-for-bit.
+        let (m, truth) = fixture();
+        let big_plan = SystemPlan { m: &m, truth: &truth, theta: theta(2, 2, 3, 4) };
+        let small_plan = SystemPlan { m: &m, truth: &truth, theta: theta(1, 1, 2, 2) };
+        let big = make_buckets(&m, big_plan.theta.buckets(), 4);
+        let small = make_buckets(&m, small_plan.theta.buckets(), 2);
+        let mut ws = SimWorkspace::new();
+        let first = iterate_ws(&big_plan, &big, &mut ws);
+        let _ = iterate_ws(&small_plan, &small, &mut ws);
+        let again = iterate_ws(&big_plan, &big, &mut ws);
+        let fresh = iterate(&big_plan, &big);
+        for r in [&again, &fresh] {
+            assert_eq!(
+                first.iteration_time.to_bits(),
+                r.iteration_time.to_bits()
+            );
+            assert_eq!(first.stage_busy.len(), r.stage_busy.len());
+            for (a, b) in first.stage_busy.iter().zip(&r.stage_busy) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(first.timeline, r.timeline);
+        }
     }
 
     #[test]

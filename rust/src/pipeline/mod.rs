@@ -4,5 +4,8 @@
 pub mod build;
 pub mod sim;
 
-pub use build::{iterate, IterationStats, SystemPlan};
-pub use sim::{ideal_bubble_fraction, simulate, OpRecord, PipelineResult, Route};
+pub use build::{iterate, iterate_ws, IterationStats, SystemPlan};
+pub use sim::{
+    ideal_bubble_fraction, simulate, simulate_reference, OpRecord, PipelineResult, Route,
+    RouteSet, SimWorkspace,
+};

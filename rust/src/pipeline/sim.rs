@@ -15,6 +15,23 @@
 //!
 //! The engine reports per-stage busy/idle time (Fig 13), the full op
 //! timeline (Fig 1), and the iteration makespan.
+//!
+//! Two implementations share that contract:
+//!
+//! - the **event-driven core** ([`SimWorkspace::run`]): ready-queue
+//!   execution over the precomputed dependency structure, all state in a
+//!   reusable arena — zero heap allocation in steady state, `O(total ops)`
+//!   work. Every hot path (optimizer Eq-1 refinement, trainer iterations,
+//!   the evaluation grid) goes through this core.
+//! - the **polling oracle** ([`simulate_reference`]): the original
+//!   worklist engine, retained as the bit-exactness baseline. The oracle
+//!   property test asserts the two produce identical `makespan` /
+//!   `stage_busy` bits on randomized heterogeneous route sets.
+//!
+//! Both engines compute the same per-op arithmetic in the same per-stage
+//! order, so the results agree bit-for-bit (the op *timeline* may be
+//! emitted in a different global interleaving — per-op records are
+//! identical, execution order across stages is not observable).
 
 /// One bucket's path through the pipeline.
 #[derive(Clone, Debug)]
@@ -66,16 +83,479 @@ struct OpId {
     forward: bool,
 }
 
-/// Simulate the 1F1B execution of `routes` over `n_stages` physical stages.
+// ------------------------------------------------------------------
+// Route arena
+// ------------------------------------------------------------------
+
+/// Flat, arena-style route storage: the workspace equivalent of
+/// `&[Route]`. Legs live in four parallel vectors; `ends[r]` is the
+/// exclusive end of route `r`'s leg range. Building into a cleared
+/// `RouteSet` allocates nothing once the buffers have grown to the
+/// workload's steady-state size.
+#[derive(Clone, Debug, Default)]
+pub struct RouteSet {
+    stages: Vec<usize>,
+    fwd: Vec<f64>,
+    bwd: Vec<f64>,
+    comm: Vec<f64>,
+    ends: Vec<usize>,
+}
+
+impl RouteSet {
+    pub fn new() -> RouteSet {
+        RouteSet::default()
+    }
+
+    /// Drop all routes, keeping buffer capacity.
+    pub fn clear(&mut self) {
+        self.stages.clear();
+        self.fwd.clear();
+        self.bwd.clear();
+        self.comm.clear();
+        self.ends.clear();
+    }
+
+    /// Number of sealed routes.
+    pub fn len(&self) -> usize {
+        self.ends.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ends.is_empty()
+    }
+
+    /// Append one leg to the route under construction; seal it with
+    /// [`RouteSet::end_route`]. `comm` is the hop *into* this leg (0.0 for
+    /// a route's first leg, matching [`Route::comm`]).
+    #[inline]
+    pub fn push_leg(&mut self, stage: usize, fwd: f64, bwd: f64, comm: f64) {
+        self.stages.push(stage);
+        self.fwd.push(fwd);
+        self.bwd.push(bwd);
+        self.comm.push(comm);
+    }
+
+    /// Seal the route under construction (possibly empty).
+    #[inline]
+    pub fn end_route(&mut self) {
+        self.ends.push(self.stages.len());
+    }
+
+    /// Append a materialized [`Route`].
+    pub fn push_route(&mut self, r: &Route) {
+        for pos in 0..r.stages.len() {
+            self.push_leg(r.stages[pos], r.fwd[pos], r.bwd[pos], r.comm[pos]);
+        }
+        self.end_route();
+    }
+
+    /// Leg range `[lo, hi)` of route `r`.
+    #[inline]
+    fn bounds(&self, r: usize) -> (usize, usize) {
+        (if r == 0 { 0 } else { self.ends[r - 1] }, self.ends[r])
+    }
+
+    #[inline]
+    fn depth(&self, r: usize) -> usize {
+        let (lo, hi) = self.bounds(r);
+        hi - lo
+    }
+
+    fn max_depth(&self) -> usize {
+        (0..self.len()).map(|r| self.depth(r)).max().unwrap_or(0)
+    }
+}
+
+// ------------------------------------------------------------------
+// Event-driven core
+// ------------------------------------------------------------------
+
+/// The flat finish-table index of an op.
+#[inline]
+fn idx_of(op: OpId, stride: usize) -> usize {
+    (op.bucket * stride + op.pos) * 2 + op.forward as usize
+}
+
+/// The single dependency of `op`: `None` for a first-stage forward (ready
+/// at t = 0), otherwise the dep op's finish index plus the communication
+/// charged on the hop. Every op has at most one dependency, which is what
+/// makes event propagation O(1) per completed op.
+#[inline]
+fn dep_of(op: OpId, routes: &RouteSet, stride: usize) -> Option<(usize, f64)> {
+    let (lo, _) = routes.bounds(op.bucket);
+    if op.forward {
+        if op.pos == 0 {
+            None
+        } else {
+            Some((
+                idx_of(OpId { bucket: op.bucket, pos: op.pos - 1, forward: true }, stride),
+                routes.comm[lo + op.pos],
+            ))
+        }
+    } else if op.pos + 1 == routes.depth(op.bucket) {
+        // Last stage: backward follows own forward directly.
+        Some((idx_of(OpId { bucket: op.bucket, pos: op.pos, forward: true }, stride), 0.0))
+    } else {
+        Some((
+            idx_of(OpId { bucket: op.bucket, pos: op.pos + 1, forward: false }, stride),
+            routes.comm[lo + op.pos + 1],
+        ))
+    }
+}
+
+/// Reusable arena for the event-driven simulation core.
 ///
-/// Buckets routed through the same stage are ordered by bucket index
-/// (their arrival order from the scheduler). Panics if the op order
-/// deadlocks — which would indicate an invalid route set, e.g. two buckets
-/// traversing shared stages in opposite orders.
+/// Ownership rule: **one workspace per worker** — allocate once per thread
+/// of execution (a pool worker, a trainer loop, a bench harness) and pass
+/// by `&mut`. A workspace is plain mutable state; sharing one across
+/// concurrent tasks is a data race the borrow checker will reject anyway.
+/// After warm-up, a `run` call performs no heap allocation: buffers are
+/// cleared and refilled, never shrunk.
+///
+/// Call cycle: `ws.routes.clear()` → build legs (`push_leg`/`end_route` or
+/// `push_route`) → `ws.run(n_stages, record_timeline)` → read
+/// [`SimWorkspace::makespan`], [`SimWorkspace::stage_busy`],
+/// [`SimWorkspace::timeline`] (or clone out via [`SimWorkspace::to_result`]).
+#[derive(Clone, Debug, Default)]
+pub struct SimWorkspace {
+    /// Route arena consumed by the next [`SimWorkspace::run`] call.
+    pub routes: RouteSet,
+    /// Caller scratch for packed-bucket pricing inputs (e.g.
+    /// `Estimator::llm_bucket_dur`); nothing in the core reads it.
+    pub seqs: Vec<f64>,
+
+    // ---- static 1F1B order (rebuilt per run) ----
+    /// (bucket, pos) legs grouped by stage, bucket-major within a stage.
+    legs: Vec<(usize, usize)>,
+    legs_off: Vec<usize>,
+    cursor: Vec<usize>,
+    /// Sorted, deduped (stage, successor-stage) pairs: fan-out counting
+    /// without a per-stage `HashSet`.
+    succ_pairs: Vec<(usize, usize)>,
+    /// Per-stage 1F1B op order, flat; `order_off` delimits stages.
+    order: Vec<OpId>,
+    order_off: Vec<usize>,
+
+    // ---- execution state ----
+    /// Finish time per (bucket, pos, dir) flat index; NaN = not executed.
+    finish: Vec<f64>,
+    stage_ptr: Vec<usize>,
+    stage_free: Vec<f64>,
+    stage_busy: Vec<f64>,
+    /// Stages whose head op is known ready (LIFO; order is irrelevant to
+    /// the computed times — see the module docs).
+    ready: Vec<usize>,
+    in_ready: Vec<bool>,
+    timeline: Vec<OpRecord>,
+    makespan: f64,
+}
+
+impl SimWorkspace {
+    pub fn new() -> SimWorkspace {
+        SimWorkspace::default()
+    }
+
+    /// Makespan of the last [`SimWorkspace::run`].
+    pub fn makespan(&self) -> f64 {
+        self.makespan
+    }
+
+    /// Per-stage busy time of the last run.
+    pub fn stage_busy(&self) -> &[f64] {
+        &self.stage_busy
+    }
+
+    /// Op timeline of the last run (empty unless it was recorded).
+    pub fn timeline(&self) -> &[OpRecord] {
+        &self.timeline
+    }
+
+    /// Copy the last run's outputs into an owned [`PipelineResult`].
+    pub fn to_result(&self) -> PipelineResult {
+        let makespan = self.makespan;
+        PipelineResult {
+            makespan,
+            stage_busy: self.stage_busy.clone(),
+            stage_idle: self.stage_busy.iter().map(|&b| makespan - b).collect(),
+            timeline: self.timeline.clone(),
+        }
+    }
+
+    /// Simulate the 1F1B execution of `self.routes` over `n_stages`
+    /// physical stages and return the makespan.
+    ///
+    /// Buckets routed through the same stage are ordered by bucket index
+    /// (their arrival order from the scheduler). Panics if the op order
+    /// deadlocks — which would indicate an invalid route set, e.g. two
+    /// buckets traversing shared stages in opposite orders.
+    ///
+    /// `record_timeline = false` skips [`OpRecord`] accumulation — the
+    /// optimizer's refinement loop only needs the makespan, and the
+    /// timeline is the one per-op cost that cannot be amortized.
+    pub fn run(&mut self, n_stages: usize, record_timeline: bool) -> f64 {
+        let routes = &self.routes;
+        let n_routes = routes.len();
+
+        // ---- per-stage legs via counting sort (bucket-major, matching
+        // the oracle's `stage_buckets` construction order) ----
+        self.legs_off.clear();
+        self.legs_off.resize(n_stages + 1, 0);
+        for &s in &routes.stages {
+            assert!(s < n_stages, "route references unknown stage {s}");
+            self.legs_off[s + 1] += 1;
+        }
+        for s in 0..n_stages {
+            self.legs_off[s + 1] += self.legs_off[s];
+        }
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&self.legs_off[..n_stages]);
+        self.legs.clear();
+        self.legs.resize(routes.stages.len(), (0, 0));
+        for b in 0..n_routes {
+            let (lo, hi) = routes.bounds(b);
+            for (pos, leg) in (lo..hi).enumerate() {
+                let s = routes.stages[leg];
+                self.legs[self.cursor[s]] = (b, pos);
+                self.cursor[s] += 1;
+            }
+        }
+
+        // Fan-out per stage: when a stage feeds several distinct
+        // downstream stages (e.g. one encoder DP group serving multiple
+        // LLM pipelines), its warm-up must cover each of them — count
+        // distinct successors via sort + dedup on a reused pair buffer.
+        self.succ_pairs.clear();
+        for b in 0..n_routes {
+            let (lo, hi) = routes.bounds(b);
+            for leg in lo..hi.saturating_sub(1) {
+                self.succ_pairs.push((routes.stages[leg], routes.stages[leg + 1]));
+            }
+        }
+        self.succ_pairs.sort_unstable();
+        self.succ_pairs.dedup();
+
+        // ---- 1F1B op order per stage: warm-up = stage depth × fan-out
+        // forwards, then alternate B/F, then drain backwards ----
+        self.order.clear();
+        self.order_off.clear();
+        self.order_off.push(0);
+        let mut succ_at = 0usize;
+        for s in 0..n_stages {
+            // Consume this stage's run of the sorted successor pairs.
+            let mut fan_out = 0usize;
+            while succ_at < self.succ_pairs.len() && self.succ_pairs[succ_at].0 == s {
+                fan_out += 1;
+                succ_at += 1;
+            }
+            let legs = &self.legs[self.legs_off[s]..self.legs_off[s + 1]];
+            let n = legs.len();
+            if n == 0 {
+                self.order_off.push(self.order.len());
+                continue;
+            }
+            // The stage's pipeline depth (distance from the end) governs
+            // how many in-flight forwards 1F1B allows it; fan-out
+            // multiplies it.
+            let depth_here = legs
+                .iter()
+                .map(|&(b, pos)| routes.depth(b) - pos)
+                .max()
+                .expect("non-empty");
+            let warmup = (depth_here * fan_out.max(1)).min(n);
+            for &(b, pos) in legs.iter().take(warmup) {
+                self.order.push(OpId { bucket: b, pos, forward: true });
+            }
+            for k in 0..n - warmup {
+                let (bb, bp) = legs[k];
+                self.order.push(OpId { bucket: bb, pos: bp, forward: false });
+                let (fb, fp) = legs[k + warmup];
+                self.order.push(OpId { bucket: fb, pos: fp, forward: true });
+            }
+            for &(b, pos) in legs.iter().skip(n - warmup) {
+                self.order.push(OpId { bucket: b, pos, forward: false });
+            }
+            self.order_off.push(self.order.len());
+        }
+
+        // ---- execution state ----
+        let stride = routes.max_depth().max(1);
+        self.finish.clear();
+        self.finish.resize(n_routes * stride * 2, f64::NAN);
+        self.stage_ptr.clear();
+        self.stage_ptr.resize(n_stages, 0);
+        self.stage_free.clear();
+        self.stage_free.resize(n_stages, 0.0);
+        self.stage_busy.clear();
+        self.stage_busy.resize(n_stages, 0.0);
+        self.in_ready.clear();
+        self.in_ready.resize(n_stages, false);
+        self.ready.clear();
+        self.timeline.clear();
+
+        let order = &mut self.order;
+        let order_off = &self.order_off;
+        let finish = &mut self.finish;
+        let stage_ptr = &mut self.stage_ptr;
+        let stage_free = &mut self.stage_free;
+        let stage_busy = &mut self.stage_busy;
+        let ready = &mut self.ready;
+        let in_ready = &mut self.in_ready;
+        let timeline = &mut self.timeline;
+
+        let total_ops = order.len();
+        let mut done = 0usize;
+
+        // Seed: stages whose head op has no unmet dependency (at t = 0
+        // that is first-position forwards; the general check costs the
+        // same and tolerates pre-finished state).
+        for s in 0..n_stages {
+            let head = order_off[s];
+            if head < order_off[s + 1] {
+                let ok = match dep_of(order[head], routes, stride) {
+                    None => true,
+                    Some((i, _)) => !finish[i].is_nan(),
+                };
+                if ok {
+                    ready.push(s);
+                    in_ready[s] = true;
+                }
+            }
+        }
+
+        // ---- event-driven execution ----
+        // Pop a ready stage, run its head ops while their single
+        // dependency is met, and propagate each completion to the one op
+        // it unblocks. Every op is examined O(1) times; no polling sweeps.
+        while done < total_ops {
+            let Some(s) = ready.pop() else {
+                // Work-conserving fallback, identical to the oracle's
+                // stall recovery: the static 1F1B order stalled (possible
+                // under exotic DP-group topologies where the warm-up
+                // heuristic under-provisions). Hoist the earliest *ready*
+                // op (stage order, then position) to its stage's current
+                // position — dependencies are still honored, only the
+                // local 1F1B ordering is relaxed.
+                let mut recovered = false;
+                'outer: for s in 0..n_stages {
+                    let cur = order_off[s] + stage_ptr[s];
+                    for abs in cur + 1..order_off[s + 1] {
+                        let ok = match dep_of(order[abs], routes, stride) {
+                            None => true,
+                            Some((i, _)) => !finish[i].is_nan(),
+                        };
+                        if ok {
+                            order[cur..=abs].rotate_right(1);
+                            ready.push(s);
+                            in_ready[s] = true;
+                            recovered = true;
+                            break 'outer;
+                        }
+                    }
+                }
+                assert!(
+                    recovered,
+                    "1F1B schedule deadlocked with no ready op at {done}/{total_ops} \
+                     ({n_routes} routes) — dependency cycle in routes"
+                );
+                continue;
+            };
+            in_ready[s] = false;
+            let seg_hi = order_off[s + 1];
+            loop {
+                let cur = order_off[s] + stage_ptr[s];
+                if cur >= seg_hi {
+                    break;
+                }
+                let op = order[cur];
+                let dep_t = match dep_of(op, routes, stride) {
+                    None => 0.0,
+                    Some((i, c)) => {
+                        let fin = finish[i];
+                        if fin.is_nan() {
+                            break; // head not ready; a completion re-queues us
+                        }
+                        fin + c
+                    }
+                };
+                let (lo, _) = routes.bounds(op.bucket);
+                let dur =
+                    if op.forward { routes.fwd[lo + op.pos] } else { routes.bwd[lo + op.pos] };
+                let start = stage_free[s].max(dep_t);
+                let end = start + dur;
+                stage_free[s] = end;
+                stage_busy[s] += dur;
+                finish[idx_of(op, stride)] = end;
+                if record_timeline {
+                    timeline.push(OpRecord {
+                        bucket: op.bucket,
+                        stage: s,
+                        is_forward: op.forward,
+                        start,
+                        finish: end,
+                    });
+                }
+                stage_ptr[s] += 1;
+                done += 1;
+                // This completion readies exactly one dependent op; if it
+                // now heads a *different* stage, queue that stage (this
+                // stage's own head is re-checked by the loop).
+                let dependent = if op.forward {
+                    if op.pos + 1 < routes.depth(op.bucket) {
+                        Some(OpId { bucket: op.bucket, pos: op.pos + 1, forward: true })
+                    } else {
+                        Some(OpId { bucket: op.bucket, pos: op.pos, forward: false })
+                    }
+                } else if op.pos > 0 {
+                    Some(OpId { bucket: op.bucket, pos: op.pos - 1, forward: false })
+                } else {
+                    None
+                };
+                if let Some(dep_op) = dependent {
+                    let ds = routes.stages[lo + dep_op.pos];
+                    if ds != s && !in_ready[ds] {
+                        let head = order_off[ds] + stage_ptr[ds];
+                        if head < order_off[ds + 1] && order[head] == dep_op {
+                            ready.push(ds);
+                            in_ready[ds] = true;
+                        }
+                    }
+                }
+            }
+        }
+
+        self.makespan = stage_free.iter().cloned().fold(0.0, f64::max);
+        self.makespan
+    }
+}
+
+/// Simulate the 1F1B execution of `routes` over `n_stages` physical
+/// stages.
+///
+/// One-shot convenience wrapper over the event-driven core: allocates a
+/// fresh [`SimWorkspace`] per call. Hot loops should hold a workspace and
+/// call [`SimWorkspace::run`] instead.
 pub fn simulate(n_stages: usize, routes: &[Route]) -> PipelineResult {
+    let mut ws = SimWorkspace::new();
+    for r in routes {
+        ws.routes.push_route(r);
+    }
+    ws.run(n_stages, true);
+    ws.to_result()
+}
+
+// ------------------------------------------------------------------
+// Polling oracle
+// ------------------------------------------------------------------
+
+/// The original polling-worklist engine, retained as the bit-exactness
+/// oracle for the event-driven core (and as the before/after baseline in
+/// `pipeline_bench`). Repeatedly sweeps all stages executing every ready
+/// head op until no progress is made, then hoists a ready op forward
+/// (work-conserving fallback). Semantics are identical to
+/// [`SimWorkspace::run`]; cost is O(n_stages) per sweep plus per-call
+/// allocation of every intermediate structure.
+pub fn simulate_reference(n_stages: usize, routes: &[Route]) -> PipelineResult {
     // ---- build the static per-stage op order (1F1B) ----
-    // For each stage, gather the buckets that traverse it (with their route
-    // position), sorted by bucket index.
     let mut stage_buckets: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n_stages];
     for (b, r) in routes.iter().enumerate() {
         for (pos, &s) in r.stages.iter().enumerate() {
@@ -85,9 +565,6 @@ pub fn simulate(n_stages: usize, routes: &[Route]) -> PipelineResult {
     }
     let max_depth = routes.iter().map(Route::depth).max().unwrap_or(0);
 
-    // Fan-out per stage: when a stage feeds several distinct downstream
-    // stages (e.g. one encoder DP group serving multiple LLM pipelines),
-    // its warm-up must cover each of them — count distinct successors.
     let mut successors: Vec<std::collections::HashSet<usize>> =
         vec![std::collections::HashSet::new(); n_stages];
     for r in routes {
@@ -96,8 +573,6 @@ pub fn simulate(n_stages: usize, routes: &[Route]) -> PipelineResult {
         }
     }
 
-    // 1F1B op order per stage: warm-up = stage depth × fan-out forwards,
-    // then alternate B/F, then drain backwards.
     let mut stage_order: Vec<Vec<OpId>> = Vec::with_capacity(n_stages);
     for s in 0..n_stages {
         let buckets = &stage_buckets[s];
@@ -106,8 +581,6 @@ pub fn simulate(n_stages: usize, routes: &[Route]) -> PipelineResult {
             stage_order.push(order);
             continue;
         }
-        // The stage's pipeline depth (distance from the end) governs how
-        // many in-flight forwards 1F1B allows it; fan-out multiplies it.
         let depth_here = buckets
             .iter()
             .map(|&(b, pos)| routes[b].depth() - pos)
@@ -136,27 +609,8 @@ pub fn simulate(n_stages: usize, routes: &[Route]) -> PipelineResult {
     // NaN sentinel (a HashMap here dominated the optimizer's refinement
     // loop — see EXPERIMENTS.md §Perf).
     let stride = max_depth.max(1);
-    let idx_of = |op: &OpId| (op.bucket * stride + op.pos) * 2 + op.forward as usize;
-    let mut finish_v = vec![f64::NAN; routes.len() * stride * 2];
-    struct Finish<'a> {
-        v: &'a mut Vec<f64>,
-    }
-    let mut finish = Finish { v: &mut finish_v };
-    impl<'a> Finish<'a> {
-        #[inline]
-        fn get_at(&self, i: usize) -> Option<f64> {
-            let x = self.v[i];
-            if x.is_nan() {
-                None
-            } else {
-                Some(x)
-            }
-        }
-        #[inline]
-        fn set_at(&mut self, i: usize, t: f64) {
-            self.v[i] = t;
-        }
-    }
+    let idx = |op: &OpId| (op.bucket * stride + op.pos) * 2 + op.forward as usize;
+    let mut finish = vec![f64::NAN; routes.len() * stride * 2];
     let mut stage_ptr = vec![0usize; n_stages];
     let mut stage_free = vec![0.0f64; n_stages];
     let mut stage_busy = vec![0.0f64; n_stages];
@@ -176,29 +630,19 @@ pub fn simulate(n_stages: usize, routes: &[Route]) -> PipelineResult {
                     if op.pos == 0 {
                         Some(0.0)
                     } else {
-                        finish
-                            .get_at(idx_of(&OpId {
-                                bucket: op.bucket,
-                                pos: op.pos - 1,
-                                forward: true,
-                            }))
-                            .map(|f| f + route.comm[op.pos])
+                        let f = finish
+                            [idx(&OpId { bucket: op.bucket, pos: op.pos - 1, forward: true })];
+                        (!f.is_nan()).then(|| f + route.comm[op.pos])
                     }
                 } else if op.pos + 1 == route.depth() {
                     // Last stage: backward follows own forward directly.
-                    finish.get_at(idx_of(&OpId {
-                        bucket: op.bucket,
-                        pos: op.pos,
-                        forward: true,
-                    }))
+                    let f =
+                        finish[idx(&OpId { bucket: op.bucket, pos: op.pos, forward: true })];
+                    (!f.is_nan()).then_some(f)
                 } else {
-                    finish
-                        .get_at(idx_of(&OpId {
-                            bucket: op.bucket,
-                            pos: op.pos + 1,
-                            forward: false,
-                        }))
-                        .map(|f| f + route.comm[op.pos + 1])
+                    let f = finish
+                        [idx(&OpId { bucket: op.bucket, pos: op.pos + 1, forward: false })];
+                    (!f.is_nan()).then(|| f + route.comm[op.pos + 1])
                 };
                 let Some(dep_t) = dep else { break };
                 let dur = if op.forward { route.fwd[op.pos] } else { route.bwd[op.pos] };
@@ -206,7 +650,7 @@ pub fn simulate(n_stages: usize, routes: &[Route]) -> PipelineResult {
                 let end = start + dur;
                 stage_free[s] = end;
                 stage_busy[s] += dur;
-                finish.set_at(idx_of(&op), end);
+                finish[idx(&op)] = end;
                 timeline.push(OpRecord {
                     bucket: op.bucket,
                     stage: s,
@@ -220,45 +664,34 @@ pub fn simulate(n_stages: usize, routes: &[Route]) -> PipelineResult {
             }
         }
         if !progressed && done < total_ops {
-            // Work-conserving fallback: the static 1F1B order stalled
-            // (possible under exotic DP-group topologies where the
-            // warm-up heuristic under-provisions). Pull the earliest
-            // *ready* op forward in some stage's order — dependencies are
-            // still honored, only the local 1F1B ordering is relaxed.
+            // Work-conserving fallback (see SimWorkspace::run).
             let mut recovered = false;
             'outer: for s in 0..n_stages {
-                for idx in stage_ptr[s] + 1..stage_order[s].len() {
-                    let op = stage_order[s][idx];
+                for i in stage_ptr[s] + 1..stage_order[s].len() {
+                    let op = stage_order[s][i];
                     let route = &routes[op.bucket];
                     let ready = if op.forward {
                         op.pos == 0
-                            || finish
-                                .get_at(idx_of(&OpId {
-                                    bucket: op.bucket,
-                                    pos: op.pos - 1,
-                                    forward: true,
-                                }))
-                                .is_some()
-                    } else if op.pos + 1 == route.depth() {
-                        finish
-                            .get_at(idx_of(&OpId {
+                            || !finish[idx(&OpId {
                                 bucket: op.bucket,
-                                pos: op.pos,
+                                pos: op.pos - 1,
                                 forward: true,
-                            }))
-                            .is_some()
+                            })]
+                            .is_nan()
+                    } else if op.pos + 1 == route.depth() {
+                        !finish[idx(&OpId { bucket: op.bucket, pos: op.pos, forward: true })]
+                            .is_nan()
                     } else {
-                        finish
-                            .get_at(idx_of(&OpId {
-                                bucket: op.bucket,
-                                pos: op.pos + 1,
-                                forward: false,
-                            }))
-                            .is_some()
+                        !finish[idx(&OpId {
+                            bucket: op.bucket,
+                            pos: op.pos + 1,
+                            forward: false,
+                        })]
+                        .is_nan()
                     };
                     if ready {
                         // Hoist the ready op to the current position.
-                        let op = stage_order[s].remove(idx);
+                        let op = stage_order[s].remove(i);
                         stage_order[s].insert(stage_ptr[s], op);
                         recovered = true;
                         break 'outer;
@@ -288,6 +721,7 @@ pub fn ideal_bubble_fraction(p: usize, m: usize) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::forall;
 
     /// Uniform linear pipeline helper: `m` buckets through `p` stages.
     fn uniform(p: usize, m: usize, fwd: f64, bwd: f64) -> Vec<Route> {
@@ -431,5 +865,148 @@ mod tests {
     fn ideal_bubble_formula() {
         assert!((ideal_bubble_fraction(4, 12) - 3.0 / 15.0).abs() < 1e-12);
         assert_eq!(ideal_bubble_fraction(1, 8), 0.0);
+    }
+
+    #[test]
+    fn empty_route_set_yields_zero_makespan() {
+        let r = simulate(3, &[]);
+        assert_eq!(r.makespan, 0.0);
+        assert!(r.timeline.is_empty());
+        assert_eq!(r.stage_busy, vec![0.0; 3]);
+    }
+
+    /// Random heterogeneous route set: every route visits a strictly
+    /// ascending subset of stages (shared-order traversal, so the set is
+    /// always schedulable), with randomized durations and hops.
+    fn random_routes(g: &mut crate::util::prop::Gen, n_stages: usize) -> Vec<Route> {
+        let n_routes = g.size(16);
+        (0..n_routes)
+            .map(|_| {
+                let depth = g.size(n_stages);
+                let mut pool: Vec<usize> = (0..n_stages).collect();
+                g.rng.shuffle(&mut pool);
+                let mut stages: Vec<usize> = pool.into_iter().take(depth).collect();
+                stages.sort_unstable();
+                let fwd = (0..depth).map(|_| g.rng.uniform(0.1, 3.0)).collect();
+                let bwd = (0..depth).map(|_| g.rng.uniform(0.1, 5.0)).collect();
+                let comm: Vec<f64> = (0..depth)
+                    .map(|p| if p == 0 { 0.0 } else { g.rng.uniform(0.0, 0.5) })
+                    .collect();
+                Route { stages, fwd, bwd, comm }
+            })
+            .collect()
+    }
+
+    /// Sort key that fully discriminates a timeline's records (each
+    /// (bucket, stage, dir) triple occurs at most once per run here).
+    fn timeline_key(o: &OpRecord) -> (usize, usize, bool) {
+        (o.bucket, o.stage, o.is_forward)
+    }
+
+    #[test]
+    fn event_core_matches_polling_oracle_bitwise() {
+        // The tentpole contract: on randomized heterogeneous route sets
+        // the event-driven core reproduces the retained polling engine
+        // bit-for-bit — makespan, per-stage busy, and the (order-
+        // insensitive) set of op records. One workspace is reused across
+        // every case, so stale-state bugs fail the same property.
+        let mut ws = SimWorkspace::new();
+        forall("event core = polling oracle", 150, |g| {
+            let n_stages = g.size(8);
+            let routes = random_routes(g, n_stages);
+            let oracle = simulate_reference(n_stages, &routes);
+
+            ws.routes.clear();
+            for r in &routes {
+                ws.routes.push_route(r);
+            }
+            let makespan = ws.run(n_stages, true);
+
+            let mut ok = makespan.to_bits() == oracle.makespan.to_bits()
+                && ws.stage_busy().len() == oracle.stage_busy.len()
+                && ws
+                    .stage_busy()
+                    .iter()
+                    .zip(&oracle.stage_busy)
+                    .all(|(a, b)| a.to_bits() == b.to_bits())
+                && ws.timeline().len() == oracle.timeline.len();
+            if ok {
+                let mut a: Vec<OpRecord> = ws.timeline().to_vec();
+                let mut b = oracle.timeline.clone();
+                a.sort_by_key(timeline_key);
+                b.sort_by_key(timeline_key);
+                ok = a
+                    .iter()
+                    .zip(&b)
+                    .all(|(x, y)| {
+                        timeline_key(x) == timeline_key(y)
+                            && x.start.to_bits() == y.start.to_bits()
+                            && x.finish.to_bits() == y.finish.to_bits()
+                    });
+            }
+            (
+                format!(
+                    "n_stages={n_stages} n_routes={} makespan={makespan} oracle={}",
+                    routes.len(),
+                    oracle.makespan
+                ),
+                ok,
+            )
+        });
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh_workspace() {
+        // Stale-state guard: interleave differently-sized workloads
+        // through one workspace and check each against a fresh one.
+        let workloads: Vec<(usize, Vec<Route>)> = vec![
+            (16, uniform(16, 24, 1.0, 2.0)),
+            (2, uniform(2, 3, 0.5, 1.5)),
+            (16, uniform(16, 24, 1.0, 2.0)),
+            (4, {
+                let mut r = uniform(4, 8, 1.0, 2.0);
+                r[5].fwd[2] = 9.0;
+                r
+            }),
+            (3, vec![]),
+            (16, uniform(16, 24, 1.0, 2.0)),
+        ];
+        let mut reused = SimWorkspace::new();
+        for (n_stages, routes) in &workloads {
+            reused.routes.clear();
+            for r in routes {
+                reused.routes.push_route(r);
+            }
+            let makespan = reused.run(*n_stages, true);
+            let fresh = simulate(*n_stages, routes);
+            assert_eq!(makespan.to_bits(), fresh.makespan.to_bits());
+            assert_eq!(reused.stage_busy().len(), fresh.stage_busy.len());
+            for (a, b) in reused.stage_busy().iter().zip(&fresh.stage_busy) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(reused.timeline(), &fresh.timeline[..]);
+        }
+    }
+
+    #[test]
+    fn skipping_timeline_changes_nothing_else() {
+        let routes = uniform(4, 8, 1.0, 2.0);
+        let mut ws = SimWorkspace::new();
+        for r in &routes {
+            ws.routes.push_route(r);
+        }
+        let with = ws.run(4, true);
+        let n_records = ws.timeline().len();
+        let busy: Vec<u64> = ws.stage_busy().iter().map(|b| b.to_bits()).collect();
+        ws.routes.clear();
+        for r in &routes {
+            ws.routes.push_route(r);
+        }
+        let without = ws.run(4, false);
+        assert_eq!(with.to_bits(), without.to_bits());
+        assert!(n_records > 0);
+        assert!(ws.timeline().is_empty());
+        let busy2: Vec<u64> = ws.stage_busy().iter().map(|b| b.to_bits()).collect();
+        assert_eq!(busy, busy2);
     }
 }

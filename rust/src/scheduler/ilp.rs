@@ -227,12 +227,15 @@ pub fn solve(items: &[ItemCost], m: usize, budget: Duration) -> IlpResult {
 
     let global_lb = lower_bound(items, m);
     let deadline = start + budget;
-    let mut best_cmax = warm.c_max();
+    // The warm start's objective is read per prefix below; c_max() is an
+    // O(m) fold, so compute it once.
+    let warm_cmax = warm.c_max();
+    let mut best_cmax = warm_cmax;
     let mut best_assign = lpt_assign.clone();
     let mut nodes = 0u64;
     let mut timed_out = false;
     // LPT may already be optimal.
-    if warm.c_max() > global_lb + 1e-12 {
+    if warm_cmax > global_lb + 1e-12 {
         // Deadline-shared parallel root split: search each fixed prefix's
         // subtree independently (own incumbent, common LPT warm start),
         // then merge in a fixed order.
@@ -250,13 +253,13 @@ pub fn solve(items: &[ItemCost], m: usize, budget: Duration) -> IlpResult {
         prefixes.sort_by(|a, b| {
             entry_bound(a).partial_cmp(&entry_bound(b)).expect("NaN bound")
         });
-        prefixes.retain(|p| entry_bound(p) < warm.c_max() - 1e-12);
+        prefixes.retain(|p| entry_bound(p) < warm_cmax - 1e-12);
         let subtree = |pi: usize| -> (f64, Vec<usize>, u64, bool) {
             let p = &prefixes[pi];
             // Budget already spent: report the warm start without paying
             // for a CHECK_EVERY granule of doomed exploration.
             if Instant::now() >= deadline {
-                return (warm.c_max(), lpt_assign.clone(), 0, true);
+                return (warm_cmax, lpt_assign.clone(), 0, true);
             }
             let depth = p.assign.len();
             let mut cur_assign = vec![0usize; n];
@@ -273,7 +276,7 @@ pub fn solve(items: &[ItemCost], m: usize, budget: Duration) -> IlpResult {
                 order: &order,
                 m,
                 deadline,
-                best_cmax: warm.c_max(),
+                best_cmax: warm_cmax,
                 best_assign: lpt_assign.clone(),
                 cur_assign,
                 enc_loads: p.enc_loads.clone(),

@@ -16,7 +16,7 @@ pub struct ItemCost {
 }
 
 /// Result of a partitioning pass.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Assignment {
     /// `buckets[j]` = indices of the items placed in bucket j.
     pub buckets: Vec<Vec<usize>>,
@@ -44,6 +44,38 @@ impl Assignment {
             .map(|b| b.iter().map(|&i| items[i].llm).sum())
             .collect();
         Assignment { buckets, enc_loads, llm_loads }
+    }
+
+    /// Emission permutation: bucket indices ordered heaviest bottleneck
+    /// first (ties by index), written into `out` (cleared first). This is
+    /// the Online Scheduler's launch order — long microbatches early
+    /// shrink 1F1B drain bubbles — computed without cloning the
+    /// assignment; pair with [`Assignment::apply_order`] or feed the
+    /// permutation straight to a route builder.
+    pub fn heavy_order(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(0..self.buckets.len());
+        out.sort_by(|&x, &y| {
+            let kx = self.enc_loads[x].max(self.llm_loads[x]);
+            let ky = self.enc_loads[y].max(self.llm_loads[y]);
+            ky.partial_cmp(&kx).expect("NaN load").then(x.cmp(&y))
+        });
+    }
+
+    /// Reorder buckets and loads by `order` (a permutation of
+    /// `0..buckets.len()`). Buckets are *moved*, not cloned.
+    pub fn apply_order(&mut self, order: &[usize]) {
+        debug_assert_eq!(order.len(), self.buckets.len());
+        let mut old: Vec<Option<Vec<usize>>> =
+            std::mem::take(&mut self.buckets).into_iter().map(Some).collect();
+        self.buckets = order
+            .iter()
+            .map(|&j| old[j].take().expect("order is a permutation"))
+            .collect();
+        let enc = order.iter().map(|&j| self.enc_loads[j]).collect();
+        let llm = order.iter().map(|&j| self.llm_loads[j]).collect();
+        self.enc_loads = enc;
+        self.llm_loads = llm;
     }
 
     /// Check the partition property: every item in exactly one bucket.
@@ -76,6 +108,15 @@ pub fn lower_bound(items: &[ItemCost], m: usize) -> f64 {
 
 /// Greedy LPT partition of `items` into `m` buckets.
 pub fn lpt(items: &[ItemCost], m: usize) -> Assignment {
+    let mut out = Assignment::default();
+    lpt_into(items, m, &mut out);
+    out
+}
+
+/// [`lpt`] into a reusable `out`: bucket and load buffers are cleared and
+/// refilled, keeping their capacity — the optimizer's Eq-1 refinement
+/// calls this once per candidate and must not churn the allocator.
+pub fn lpt_into(items: &[ItemCost], m: usize, out: &mut Assignment) {
     assert!(m > 0, "lpt with zero buckets");
     let mut order: Vec<usize> = (0..items.len()).collect();
     // Descending by combined weight (ties broken by index for determinism).
@@ -85,9 +126,16 @@ pub fn lpt(items: &[ItemCost], m: usize) -> Assignment {
         wb.partial_cmp(&wa).expect("NaN duration").then(a.cmp(&b))
     });
 
-    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); m];
-    let mut enc_loads = vec![0.0f64; m];
-    let mut llm_loads = vec![0.0f64; m];
+    for b in out.buckets.iter_mut() {
+        b.clear();
+    }
+    out.buckets.resize_with(m, Vec::new);
+    out.enc_loads.clear();
+    out.enc_loads.resize(m, 0.0);
+    out.llm_loads.clear();
+    out.llm_loads.resize(m, 0.0);
+    let (buckets, enc_loads, llm_loads) =
+        (&mut out.buckets, &mut out.enc_loads, &mut out.llm_loads);
     for &i in &order {
         // Place where the resulting bottleneck grows least.
         let mut best_j = 0usize;
@@ -107,7 +155,6 @@ pub fn lpt(items: &[ItemCost], m: usize) -> Assignment {
         enc_loads[best_j] += items[i].enc;
         llm_loads[best_j] += items[i].llm;
     }
-    Assignment { buckets, enc_loads, llm_loads }
 }
 
 /// Random assignment — what the data-agnostic baselines do (§3.4: "existing
@@ -232,6 +279,41 @@ mod tests {
                 lb <= a.c_max() + 1e-9 && lb <= r.c_max() + 1e-9,
             )
         });
+    }
+
+    #[test]
+    fn lpt_into_reuse_matches_fresh() {
+        // A reused Assignment (including one left over from a *larger*
+        // instance) must reproduce the fresh result exactly.
+        let big = items_from(&[(3.0, 1.0), (2.0, 2.0), (1.0, 3.0), (4.0, 4.0), (0.5, 0.5)]);
+        let small = items_from(&[(1.0, 2.0), (2.0, 1.0)]);
+        let mut reused = Assignment::default();
+        lpt_into(&big, 4, &mut reused);
+        lpt_into(&small, 2, &mut reused);
+        let fresh = lpt(&small, 2);
+        assert_eq!(reused.buckets, fresh.buckets);
+        assert_eq!(reused.enc_loads, fresh.enc_loads);
+        assert_eq!(reused.llm_loads, fresh.llm_loads);
+    }
+
+    #[test]
+    fn heavy_order_then_apply_sorts_by_bottleneck() {
+        let items = items_from(&[(5.0, 0.0), (1.0, 1.0), (0.0, 3.0), (2.0, 2.0)]);
+        let mut a = Assignment::from_buckets(
+            vec![vec![1], vec![0], vec![2], vec![3]],
+            &items,
+        );
+        let mut order = Vec::new();
+        a.heavy_order(&mut order);
+        assert_eq!(order, vec![1, 2, 3, 0]);
+        a.apply_order(&order);
+        assert_eq!(a.buckets, vec![vec![0], vec![2], vec![3], vec![1]]);
+        assert!(a.is_partition(4));
+        for w in 0..3 {
+            let k0 = a.enc_loads[w].max(a.llm_loads[w]);
+            let k1 = a.enc_loads[w + 1].max(a.llm_loads[w + 1]);
+            assert!(k0 >= k1, "not heaviest-first at {w}: {k0} < {k1}");
+        }
     }
 
     #[test]

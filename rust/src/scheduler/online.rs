@@ -93,15 +93,9 @@ impl OnlineScheduler {
         // shrinks 1F1B drain bubbles under heterogeneous durations.
         {
             let a = &mut r.assignment;
-            let mut order: Vec<usize> = (0..a.buckets.len()).collect();
-            order.sort_by(|&x, &y| {
-                let kx = a.enc_loads[x].max(a.llm_loads[x]);
-                let ky = a.enc_loads[y].max(a.llm_loads[y]);
-                ky.partial_cmp(&kx).expect("NaN load").then(x.cmp(&y))
-            });
-            a.buckets = order.iter().map(|&j| a.buckets[j].clone()).collect();
-            a.enc_loads = order.iter().map(|&j| a.enc_loads[j]).collect();
-            a.llm_loads = order.iter().map(|&j| a.llm_loads[j]).collect();
+            let mut order = Vec::with_capacity(a.buckets.len());
+            a.heavy_order(&mut order);
+            a.apply_order(&order);
         }
         let solver = if r.optimal { Solver::Ilp } else { Solver::LptFallback };
         let lb = lower_bound(&items, m);

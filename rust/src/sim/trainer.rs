@@ -17,7 +17,8 @@ use crate::model::catalog::Mllm;
 use crate::optimizer::plan::Theta;
 use crate::optimizer::search::{optimize, OptimizerInputs};
 use crate::perfmodel::{ClusterSpec, Truth};
-use crate::pipeline::build::{iterate, IterationStats, SystemPlan};
+use crate::pipeline::build::{iterate_ws, IterationStats, SystemPlan};
+use crate::pipeline::sim::SimWorkspace;
 use crate::profiling::backend::{MeasureBackend, SimBackend};
 use crate::profiling::engine::{profile_data, ModelProfiler, ProfilerGrids};
 use crate::profiling::estimator::Estimator;
@@ -224,6 +225,9 @@ pub fn run_system(
     let mut rng = Rng::new(cfg.seed ^ 0xB0CC);
     let plan = SystemPlan { m, truth: &truth, theta };
 
+    // One simulation workspace per run (= per pool worker task): every
+    // iteration's route build + 1F1B execution reuses the same arena.
+    let mut sim_ws = SimWorkspace::new();
     let mut iterations = Vec::with_capacity(cfg.iters);
     let mut sched_elapsed = Vec::with_capacity(cfg.iters);
     let mut lpt_fallbacks = 0usize;
@@ -247,7 +251,7 @@ pub fn run_system(
             b
         };
 
-        let stats = iterate(&plan, &buckets);
+        let stats = iterate_ws(&plan, &buckets, &mut sim_ws);
 
         // ---- Adaptive Correction feedback (Eq 7) ----
         if uses_scheduler && scheduler.correction.is_active() {
