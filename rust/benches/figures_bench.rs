@@ -19,7 +19,7 @@ fn main() {
     } else {
         (
             FigOpts { iters: 3, ..FigOpts::default() },
-            &["1", "2", "4", "7", "8", "9", "10", "11", "12", "13", "14", "15", "16"],
+            &["1", "2", "4", "7", "8", "9", "10", "11", "12", "13", "14", "15", "16", "drift"],
         )
     };
     let mut results = Vec::new();

@@ -1,0 +1,72 @@
+//! Bench: the stream subsystem's steady-state and replan costs.
+//!
+//! The window ingest + drift statistic run on *every* training iteration,
+//! so they must be negligible next to a scheduling call (µs, not ms). The
+//! replan rows compare a cold `optimize` against the warm-started
+//! `optimize_warm` the controller actually issues — the warm start's
+//! incumbent-bound pruning is the reason a mid-run replan is affordable.
+mod common;
+use common::bench;
+use dflop::data::dataset::Dataset;
+use dflop::model::catalog::{llama3, llava_ov};
+use dflop::optimizer::search::{optimize, optimize_warm, OptimizerInputs};
+use dflop::perfmodel::{ClusterSpec, Truth};
+use dflop::profiling::backend::SimBackend;
+use dflop::profiling::engine::{profile_data, ModelProfiler, ProfilerGrids};
+use dflop::stream::drift::{DriftConfig, DriftDetector};
+use dflop::stream::replan::live_profile;
+use dflop::stream::window::ShapeWindow;
+
+fn main() {
+    println!("== stream_bench ==");
+    let mut results = Vec::new();
+    let m = llava_ov(llama3("8b"));
+
+    // Steady-state path: ingest + drift statistic per iteration.
+    let batch = Dataset::mixed(1).shaped_batch(&m, 512);
+    let ingests = if common::quick() { 16 } else { 128 };
+    let mut w = ShapeWindow::new(8);
+    results.push(bench(
+        &format!("window ingest {ingests} x 512-item batches"),
+        10,
+        || {
+            for _ in 0..ingests {
+                w.push(&batch);
+            }
+            std::hint::black_box(w.stats().items);
+        },
+    ));
+    let det = DriftDetector::from_shapes(DriftConfig::default(), &batch);
+    results.push(bench("drift statistic (sketch deciles + mix TV)", 10, || {
+        std::hint::black_box(det.statistic(w.stats()).score());
+    }));
+
+    // Replan path: live-profile refit, then cold vs warm optimizer runs.
+    let cluster = ClusterSpec::hgx_a100(1);
+    let mut backend = SimBackend::new(Truth::new(cluster));
+    let profile = ModelProfiler::new(&mut backend, ProfilerGrids::standard(8)).profile(&m);
+    let data = profile_data(&m, &mut Dataset::mixed(7), 256);
+    let inp = OptimizerInputs {
+        m: &m,
+        profile: &profile,
+        data: &data,
+        n_gpus: cluster.total_gpus(),
+        gpus_per_node: cluster.gpus_per_node,
+        mem_capacity: cluster.gpu.mem_bytes,
+        gbs: 64,
+        assume_balanced: true,
+    };
+    let star = optimize(&inp).expect("feasible").theta;
+    results.push(bench("live-profile refit (384 shapes)", 10, || {
+        let shapes = &batch[..384];
+        std::hint::black_box(live_profile(&m, shapes).mean_seq());
+    }));
+    results.push(bench("cold optimize (8 GPUs, gbs 64)", 5, || {
+        std::hint::black_box(optimize(&inp).expect("feasible").theta);
+    }));
+    results.push(bench("warm replan from incumbent theta*", 5, || {
+        std::hint::black_box(optimize_warm(&inp, Some(star)).expect("feasible").theta);
+    }));
+
+    common::emit_json("stream_bench", &results);
+}

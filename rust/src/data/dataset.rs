@@ -6,23 +6,63 @@
 //! the same sources.
 
 use crate::data::item::{shape_for, ItemShape, RawItem};
-use crate::data::sources::{audio_sources, table2_sources, Source};
+use crate::data::sources::{
+    audio_sources, bursty_video_schedule, curriculum_schedule, modality_dropout_schedule,
+    table2_sources, MixSchedule, Source,
+};
 use crate::model::catalog::Mllm;
 use crate::util::rng::Rng;
 
 /// A weighted mixture of sources with a deterministic sampling stream.
+///
+/// With a [`MixSchedule`] attached the mixture is *non-stationary*: the
+/// effective weights are the Table-2 base weights scaled by the
+/// schedule's multipliers for the current global-batch index, refreshed
+/// after every [`Dataset::batch`] / [`Dataset::shaped_batch`] call.
 #[derive(Clone, Debug)]
 pub struct Dataset {
     pub name: String,
     pub sources: Vec<Source>,
     weights: Vec<f64>,
+    base_weights: Vec<f64>,
+    schedule: Option<MixSchedule>,
+    /// Global-batch index the current weights correspond to.
+    iteration: usize,
     rng: Rng,
 }
 
 impl Dataset {
     pub fn new(name: &str, sources: Vec<Source>, seed: u64) -> Dataset {
-        let weights = sources.iter().map(|s| s.samples as f64).collect();
-        Dataset { name: name.to_string(), sources, weights, rng: Rng::new(seed) }
+        let weights: Vec<f64> = sources.iter().map(|s| s.samples as f64).collect();
+        Dataset {
+            name: name.to_string(),
+            sources,
+            base_weights: weights.clone(),
+            weights,
+            schedule: None,
+            iteration: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// A mixture whose weights follow `schedule` over batch indices.
+    pub fn scheduled(
+        name: &str,
+        sources: Vec<Source>,
+        seed: u64,
+        schedule: MixSchedule,
+    ) -> Dataset {
+        for (_, m) in &schedule.segments {
+            assert_eq!(
+                m.len(),
+                sources.len(),
+                "schedule arity must match source count"
+            );
+        }
+        let mut d = Dataset::new(name, sources, seed);
+        d.schedule = Some(schedule);
+        d.refresh_weights();
+        d
     }
 
     /// The paper's mixed dataset (Table 2: all five sources).
@@ -47,6 +87,31 @@ impl Dataset {
         Dataset::new("audio", audio_sources(), seed)
     }
 
+    /// Non-stationary scenario: curriculum text→video ramp.
+    pub fn curriculum(seed: u64) -> Dataset {
+        Dataset::scheduled("curriculum", table2_sources(), seed, curriculum_schedule())
+    }
+
+    /// Non-stationary scenario: recurring video bursts.
+    pub fn bursty_video(seed: u64) -> Dataset {
+        Dataset::scheduled(
+            "bursty-video",
+            table2_sources(),
+            seed,
+            bursty_video_schedule(),
+        )
+    }
+
+    /// Non-stationary scenario: the video source exhausts mid-run.
+    pub fn modality_dropout(seed: u64) -> Dataset {
+        Dataset::scheduled(
+            "modality-dropout",
+            table2_sources(),
+            seed,
+            modality_dropout_schedule(),
+        )
+    }
+
     /// Look up a scenario by CLI key.
     pub fn by_key(key: &str, seed: u64) -> Option<Dataset> {
         match key {
@@ -54,6 +119,9 @@ impl Dataset {
             "multi-image" | "multiple-image" => Some(Dataset::multi_image(seed)),
             "video" => Some(Dataset::video(seed)),
             "audio" => Some(Dataset::audio(seed)),
+            "curriculum" => Some(Dataset::curriculum(seed)),
+            "bursty-video" => Some(Dataset::bursty_video(seed)),
+            "modality-dropout" => Some(Dataset::modality_dropout(seed)),
             _ => None,
         }
     }
@@ -69,14 +137,38 @@ impl Dataset {
         self.sources[idx].sample(&mut self.rng, idx as u8)
     }
 
-    /// Sample a global batch of `n` raw items.
+    /// Sample a global batch of `n` raw items (advances the schedule to
+    /// the next batch index afterwards).
     pub fn batch(&mut self, n: usize) -> Vec<RawItem> {
-        (0..n).map(|_| self.sample()).collect()
+        let out = (0..n).map(|_| self.sample()).collect();
+        self.end_batch();
+        out
     }
 
     /// Sample a global batch already preprocessed into shapes for `m`.
     pub fn shaped_batch(&mut self, m: &Mllm, n: usize) -> Vec<ItemShape> {
-        (0..n).map(|_| shape_for(m, &self.sample())).collect()
+        let out = (0..n).map(|_| shape_for(m, &self.sample())).collect();
+        self.end_batch();
+        out
+    }
+
+    /// The global-batch index the *next* batch will be drawn at.
+    pub fn iteration(&self) -> usize {
+        self.iteration
+    }
+
+    fn end_batch(&mut self) {
+        self.iteration += 1;
+        self.refresh_weights();
+    }
+
+    fn refresh_weights(&mut self) {
+        if let Some(sched) = &self.schedule {
+            let mult = sched.multipliers(self.iteration);
+            for (i, w) in self.weights.iter_mut().enumerate() {
+                *w = self.base_weights[i] * mult[i];
+            }
+        }
     }
 }
 
@@ -127,10 +219,56 @@ mod tests {
 
     #[test]
     fn by_key_covers_scenarios() {
-        for key in ["mixed", "multi-image", "video", "audio"] {
+        for key in [
+            "mixed",
+            "multi-image",
+            "video",
+            "audio",
+            "curriculum",
+            "bursty-video",
+            "modality-dropout",
+        ] {
             assert!(Dataset::by_key(key, 1).is_some(), "{key}");
         }
         assert!(Dataset::by_key("bogus", 1).is_none());
+    }
+
+    #[test]
+    fn scheduled_mixture_shifts_over_iterations() {
+        // The curriculum ramp: video share grows from a few percent to a
+        // clear majority as batches advance through the schedule.
+        let mut d = Dataset::curriculum(3);
+        let video_share = |batch: &[RawItem]| {
+            batch.iter().filter(|i| i.source == 4).count() as f64 / batch.len() as f64
+        };
+        let early = video_share(&d.batch(2000));
+        assert_eq!(d.iteration(), 1);
+        for _ in 1..12 {
+            d.batch(64);
+        }
+        let late = video_share(&d.batch(2000)); // iteration 12, final phase
+        assert!(early < 0.08, "early video share {early}");
+        assert!(late > 0.5, "late video share {late}");
+
+        // Dropout: the video source disappears entirely after its cut.
+        let mut d = Dataset::modality_dropout(3);
+        for _ in 0..11 {
+            d.batch(16);
+        }
+        assert_eq!(video_share(&d.batch(2000)), 0.0);
+    }
+
+    #[test]
+    fn unscheduled_mixture_is_stationary() {
+        // Batch-boundary advancement must not change a plain mixture's
+        // stream: two datasets drawing the same total in different batch
+        // splits see identical items.
+        let mut a = Dataset::mixed(17);
+        let mut b = Dataset::mixed(17);
+        let one: Vec<RawItem> = a.batch(64);
+        let mut two = b.batch(32);
+        two.extend(b.batch(32));
+        assert_eq!(one, two);
     }
 
     #[test]

@@ -181,6 +181,87 @@ pub fn table2_sources() -> Vec<Source> {
     ]
 }
 
+/// Piecewise-constant schedule of per-source weight multipliers over
+/// training iterations — the non-stationary scenarios the `stream`
+/// subsystem reacts to. Real multimodal curricula are non-stationary
+/// (phase-scheduled mixtures, bursty web scrapes, sources exhausting
+/// early); a schedule models that by scaling each source's Table-2
+/// mixture weight as a function of the global-batch index.
+#[derive(Clone, Debug)]
+pub struct MixSchedule {
+    /// `(start_iteration, per-source weight multipliers)`, sorted by
+    /// strictly increasing start. The first segment also covers any
+    /// iterations before its own start.
+    pub segments: Vec<(usize, Vec<f64>)>,
+}
+
+impl MixSchedule {
+    pub fn new(segments: Vec<(usize, Vec<f64>)>) -> MixSchedule {
+        assert!(!segments.is_empty(), "empty schedule");
+        assert!(
+            segments.windows(2).all(|w| w[0].0 < w[1].0),
+            "schedule segments must have strictly increasing starts"
+        );
+        assert!(
+            segments
+                .iter()
+                .all(|(_, m)| m.iter().all(|&x| x >= 0.0) && m.iter().sum::<f64>() > 0.0),
+            "multipliers must be non-negative with positive total"
+        );
+        MixSchedule { segments }
+    }
+
+    /// Multipliers in effect at `iteration` (the last segment at or
+    /// before it).
+    pub fn multipliers(&self, iteration: usize) -> &[f64] {
+        let mut cur = &self.segments[0].1;
+        for (start, m) in &self.segments {
+            if *start <= iteration {
+                cur = m;
+            } else {
+                break;
+            }
+        }
+        cur
+    }
+}
+
+/// Curriculum text→video ramp over the five Table-2 sources
+/// `[Wild, AI2D, Info, M4, Video]`: an image-heavy warm-up phase, a short
+/// ramp, then a video-dominated steady state — the canonical
+/// phase-scheduled curriculum that silently invalidates a frozen θ*.
+pub fn curriculum_schedule() -> MixSchedule {
+    MixSchedule::new(vec![
+        (0, vec![1.5, 2.0, 1.5, 1.0, 0.05]),
+        (7, vec![1.0, 1.0, 1.0, 1.0, 0.6]),
+        (9, vec![0.5, 0.4, 0.5, 0.8, 2.0]),
+        (11, vec![0.25, 0.2, 0.25, 0.5, 4.0]),
+    ])
+}
+
+/// Recurring video bursts over a mixed baseline (a web-scrape pipeline
+/// delivering video dumps in batches).
+pub fn bursty_video_schedule() -> MixSchedule {
+    let base = vec![1.0, 1.0, 1.0, 1.0, 1.0];
+    let burst = vec![0.15, 0.15, 0.15, 0.3, 6.0];
+    MixSchedule::new(vec![
+        (0, base.clone()),
+        (8, burst.clone()),
+        (12, base.clone()),
+        (20, burst),
+        (24, base),
+    ])
+}
+
+/// Modality dropout: the video source exhausts mid-run and its weight
+/// collapses to zero, leaving an image-only remainder.
+pub fn modality_dropout_schedule() -> MixSchedule {
+    MixSchedule::new(vec![
+        (0, vec![1.0, 1.0, 1.0, 1.0, 1.0]),
+        (10, vec![1.5, 1.5, 1.5, 1.5, 0.0]),
+    ])
+}
+
 /// Fig 9's audio workload (Qwen2-Audio): speech clips.
 pub fn audio_sources() -> Vec<Source> {
     vec![Source {
@@ -200,6 +281,46 @@ pub fn audio_sources() -> Vec<Source> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn schedule_selects_segment_by_iteration() {
+        let s = MixSchedule::new(vec![
+            (0, vec![1.0, 1.0]),
+            (5, vec![2.0, 0.5]),
+            (9, vec![0.0, 4.0]),
+        ]);
+        assert_eq!(s.multipliers(0), &[1.0, 1.0]);
+        assert_eq!(s.multipliers(4), &[1.0, 1.0]);
+        assert_eq!(s.multipliers(5), &[2.0, 0.5]);
+        assert_eq!(s.multipliers(8), &[2.0, 0.5]);
+        assert_eq!(s.multipliers(9), &[0.0, 4.0]);
+        assert_eq!(s.multipliers(1000), &[0.0, 4.0]);
+    }
+
+    #[test]
+    fn scenario_schedules_match_table2_arity() {
+        let n = table2_sources().len();
+        for sched in [
+            curriculum_schedule(),
+            bursty_video_schedule(),
+            modality_dropout_schedule(),
+        ] {
+            for (_, m) in &sched.segments {
+                assert_eq!(m.len(), n);
+            }
+        }
+        // The curriculum really ramps: video multiplier grows
+        // monotonically across segments while image ones shrink.
+        let c = curriculum_schedule();
+        let video: Vec<f64> = c.segments.iter().map(|(_, m)| m[4]).collect();
+        assert!(video.windows(2).all(|w| w[0] < w[1]), "{video:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn schedule_rejects_unsorted_segments() {
+        MixSchedule::new(vec![(3, vec![1.0]), (3, vec![1.0])]);
+    }
 
     #[test]
     fn table2_composition_matches_paper() {

@@ -36,5 +36,6 @@ pub mod profiling;
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;
+pub mod stream;
 pub mod model;
 pub mod util;

@@ -2,9 +2,9 @@
 //! optimizer/scheduler inspection, and real-artifact profiling.
 //!
 //! ```text
-//! dflop figures --fig <1|2|4|7|8|9|10|11|12|13|14|15|16|all> [--nodes N] [--gbs N] [--iters N] [--seed S] [--threads N]
+//! dflop figures --fig <1|2|4|7|8|9|10|11|12|13|14|15|16|17|drift|all> [--nodes N] [--gbs N] [--iters N] [--seed S] [--threads N]
 //! dflop table   --n <2|4>
-//! dflop run     --system <dflop|megatron|pytorch|opt-only|sched-only> --model <key> --dataset <key>
+//! dflop run     --system <dflop|adaptive|megatron|pytorch|opt-only|sched-only> --model <key> --dataset <key>
 //! dflop optimize --model <key> --nodes N --gbs N
 //! dflop profile-real [--artifacts DIR]      # PJRT timing (needs `xla` feature)
 //! dflop models                              # list catalog keys
@@ -78,6 +78,7 @@ fn real_main() -> Result<()> {
             let o = opts_from(&args)?;
             let kind = match args.get_or("system", "dflop").as_str() {
                 "dflop" => SystemKind::Dflop,
+                "adaptive" => SystemKind::DflopAdaptive,
                 "megatron" => SystemKind::Megatron,
                 "pytorch" => SystemKind::Pytorch,
                 "opt-only" => SystemKind::DflopOptimizerOnly,
@@ -99,6 +100,19 @@ fn real_main() -> Result<()> {
             println!("profiling     : {:.1} min", r.profiling_seconds / 60.0);
             println!("optimizer     : {:?}", r.optimizer_elapsed);
             println!("LPT fallbacks : {}/{}", r.lpt_fallbacks, r.sched_elapsed.len());
+            if kind == SystemKind::DflopAdaptive {
+                println!("replans       : {}", r.replans);
+                for e in &r.replan_events {
+                    println!(
+                        "  iter {:>3}: score {:.3} {} {} -> {}",
+                        e.iteration,
+                        e.stat.score(),
+                        if e.swapped { "swap" } else { "keep" },
+                        e.old,
+                        e.new
+                    );
+                }
+            }
         }
         "optimize" => {
             use dflop::data::dataset::Dataset;

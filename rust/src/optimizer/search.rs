@@ -250,6 +250,29 @@ fn expected_makespan(
 
 /// Run Algorithm 1 and return θ*.
 pub fn optimize(inp: &OptimizerInputs) -> Option<OptimizerResult> {
+    optimize_warm(inp, None)
+}
+
+/// Algorithm 1 **warm-started from an incumbent θ***.
+///
+/// The `stream::replan` controller re-optimizes against a refitted live
+/// distribution while training runs; a cold search would rescan the whole
+/// strategy space every time. The incumbent (when still GPU- and
+/// memory-feasible under the live mean shapes) is re-scored with the live
+/// distribution and becomes (1) the first entry of the refinement top-K —
+/// so the swap decision always compares the candidate plans against the
+/// current one under the *same* data — and (2) a pruning bound with a
+/// slack margin: GPU splits whose lower bound cannot come within
+/// `WARM_SLACK` of the incumbent's mean score are dropped before the
+/// top-K fills, typically collapsing the scan to the incumbent's
+/// neighbourhood while keeping plausible Eq-1 winners (mean score is
+/// only the refinement's filter) in play. Cold calls (`incumbent = None`)
+/// follow the exact original scan. Either way the result is
+/// deterministic and thread-count-independent (`tests/determinism.rs`).
+pub fn optimize_warm(
+    inp: &OptimizerInputs,
+    incumbent: Option<Theta>,
+) -> Option<OptimizerResult> {
     let start = std::time::Instant::now();
     let est = Estimator::new(inp.m, &inp.profile.throughput);
 
@@ -309,9 +332,40 @@ pub fn optimize(inp: &OptimizerInputs) -> Option<OptimizerResult> {
             top.insert(pos, (t, theta));
         }
     };
+    // Warm start: seed the top-K with the incumbent re-scored under the
+    // live mean shapes. Its mean score also prunes splits before the
+    // top-K fills — with a slack margin, because the scan's mean score is
+    // only a *filter* for the Eq-1 refinement: a split whose lower bound
+    // is modestly above the incumbent's mean score can still hold the
+    // Eq-1 winner (the two metrics disagree exactly when the distribution
+    // is skewed, i.e. post-drift), so only splits that cannot come within
+    // WARM_SLACK of the incumbent are dropped.
+    const WARM_SLACK: f64 = 1.5;
+    let mut warm_bound = f64::INFINITY;
+    let mut warm_seed: Option<Theta> = None;
+    if let Some(t) = incumbent {
+        if t.gpus() == inp.n_gpus && t.n_mb >= 1 {
+            let mb_units = mean_units * inp.gbs as f64 / (t.n_mb as f64 * t.enc.dp as f64);
+            let mb_seq = mean_seq * inp.gbs as f64 / (t.n_mb as f64 * t.llm.dp as f64);
+            if memory_feasible(inp, t.enc, t.llm, mb_units, mb_seq) {
+                let (e_dur, l_dur) = mean_stage_durations(inp, &est, t.enc, t.llm, t.n_mb);
+                let score = makespan(t.n_mb, t.enc.pp, t.llm.pp, e_dur, l_dur);
+                warm_bound = score * WARM_SLACK;
+                warm_seed = Some(t);
+                push_top(&mut top, score, t);
+            }
+        }
+    }
     for &(split_lb, e_gpus) in &splits {
-        // Prune whole splits once the bound cannot enter a full top-K.
-        if top.len() == REFINE_K && split_lb >= top.last().expect("top full").0 {
+        // Prune whole splits once the bound cannot enter a full top-K —
+        // or, warm-started, cannot come within the slack margin of the
+        // incumbent's mean score.
+        let prune_at = if top.len() == REFINE_K {
+            top.last().expect("top full").0
+        } else {
+            warm_bound
+        };
+        if split_lb >= prune_at {
             break;
         }
         let l_gpus = inp.n_gpus - e_gpus;
@@ -365,6 +419,12 @@ pub fn optimize(inp: &OptimizerInputs) -> Option<OptimizerResult> {
             scanned += pair_scanned;
             mem_rejected += pair_rejected;
             for (t, theta) in found {
+                // The scan re-encounters the warm-seeded incumbent at its
+                // own (pair, n_mb) grid point; skip the twin so it cannot
+                // waste one of the REFINE_K Eq-1 slots.
+                if warm_seed == Some(theta) {
+                    continue;
+                }
                 push_top(&mut top, t, theta);
             }
         }
@@ -577,6 +637,70 @@ mod tests {
             assume_balanced: true,
         };
         assert!(optimize(&inp).is_none());
+    }
+
+    #[test]
+    fn warm_start_never_worse_and_scans_no_more() {
+        let m = llava_ov(llama3("8b"));
+        let (profile, data, cluster) = setup(&m, 2, 64);
+        let inp = OptimizerInputs {
+            m: &m,
+            profile: &profile,
+            data: &data,
+            n_gpus: cluster.total_gpus(),
+            gpus_per_node: cluster.gpus_per_node,
+            mem_capacity: cluster.gpu.mem_bytes,
+            gbs: 64,
+            assume_balanced: true,
+        };
+        let cold = optimize(&inp).expect("feasible");
+        let warm = optimize_warm(&inp, Some(cold.theta)).expect("feasible");
+        // The incumbent is in the warm top-K, so the winner's Eq-1 score
+        // can only match or beat it.
+        assert!(
+            warm.expected_makespan <= cold.expected_makespan * (1.0 + 1e-12),
+            "warm {} worse than cold {}",
+            warm.expected_makespan,
+            cold.expected_makespan
+        );
+        // Warm pruning can only shrink the scan (+1 for the seed itself).
+        assert!(
+            warm.candidates_scanned <= cold.candidates_scanned + 1,
+            "warm scanned {} vs cold {}",
+            warm.candidates_scanned,
+            cold.candidates_scanned
+        );
+    }
+
+    #[test]
+    fn warm_start_ignores_mismatched_incumbent() {
+        // An incumbent sized for a different cluster cannot seed the
+        // search: the warm call must reproduce the cold result exactly.
+        let m = llava_ov(llama3("8b"));
+        let (profile, data, cluster) = setup(&m, 1, 32);
+        let inp = OptimizerInputs {
+            m: &m,
+            profile: &profile,
+            data: &data,
+            n_gpus: cluster.total_gpus(),
+            gpus_per_node: cluster.gpus_per_node,
+            mem_capacity: cluster.gpu.mem_bytes,
+            gbs: 32,
+            assume_balanced: true,
+        };
+        let bogus = Theta {
+            enc: ModPar { tp: 1, pp: 1, dp: 1 },
+            llm: ModPar { tp: 1, pp: 1, dp: 1 },
+            n_mb: 1,
+        };
+        let cold = optimize(&inp).expect("feasible");
+        let warm = optimize_warm(&inp, Some(bogus)).expect("feasible");
+        assert_eq!(cold.theta, warm.theta);
+        assert_eq!(
+            cold.expected_makespan.to_bits(),
+            warm.expected_makespan.to_bits()
+        );
+        assert_eq!(cold.candidates_scanned, warm.candidates_scanned);
     }
 
     #[test]

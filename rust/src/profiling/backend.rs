@@ -47,6 +47,28 @@ pub trait MeasureBackend {
 
     /// Cumulative wall-clock consumed by measurements so far (seconds).
     fn measured_seconds(&self) -> f64;
+
+    /// Fork an independent measurement stream for one slice of the
+    /// profiling grid (same measured system, zero accumulated
+    /// wall-clock). The Model Profiler uses one fork per TP degree to
+    /// sweep the shape × TP grid on the worker pool; backends that cannot
+    /// split (e.g. a stateful hardware session holding real devices)
+    /// keep the default `None` and get the serial sweep.
+    fn fork(&mut self) -> Option<Self>
+    where
+        Self: Sized,
+    {
+        None
+    }
+
+    /// Fold a fork's accumulated measurement wall-clock back into this
+    /// backend. Called in grid order after a parallel sweep, so the
+    /// total stays deterministic at any thread count.
+    fn join(&mut self, _child: Self)
+    where
+        Self: Sized,
+    {
+    }
 }
 
 /// Measures the analytic cluster ground truth, charging simulated
@@ -134,6 +156,14 @@ impl MeasureBackend for SimBackend {
     fn measured_seconds(&self) -> f64 {
         self.elapsed
     }
+
+    fn fork(&mut self) -> Option<Self> {
+        Some(SimBackend::new(self.truth.clone()))
+    }
+
+    fn join(&mut self, child: Self) {
+        self.elapsed += child.elapsed;
+    }
 }
 
 #[cfg(test)]
@@ -141,6 +171,26 @@ mod tests {
     use super::*;
     use crate::model::catalog::{llava_ov, llama3};
     use crate::perfmodel::ClusterSpec;
+
+    #[test]
+    fn fork_measures_independently_then_joins() {
+        let truth = Truth::smooth(ClusterSpec::hgx_a100(1));
+        let m = llava_ov(llama3("8b"));
+        let mut b = SimBackend::new(truth);
+        let mut child = b.fork().expect("sim backend splits");
+        assert_eq!(child.measured_seconds(), 0.0);
+        let thr_child = child.encoder_throughput(&m, 8.0, 2);
+        let spent = child.measured_seconds();
+        assert!(spent > 0.0);
+        assert_eq!(b.measured_seconds(), 0.0, "parent unaffected by fork");
+        // Fork measures the same system …
+        let thr_parent = b.encoder_throughput(&m, 8.0, 2);
+        assert_eq!(thr_child.to_bits(), thr_parent.to_bits());
+        // … and joining folds its wall-clock back in.
+        let before = b.measured_seconds();
+        b.join(child);
+        assert_eq!(b.measured_seconds(), before + spent);
+    }
 
     #[test]
     fn sim_backend_round_trips_truth() {

@@ -7,14 +7,21 @@
 //! training dataset and builds the empirical input-shape distribution.
 //!
 //! Both are *offline* components; their wall-clock is tracked and reported
-//! as the one-time overhead of Table 4.
+//! as the one-time overhead of Table 4. The Model Profiler's shape × TP
+//! grid is swept per-TP-column on the `util::parallel` pool when the
+//! backend can fork independent measurement streams (fits stay
+//! bit-identical at any thread count); the *online* continuation of this
+//! engine — windowed live statistics, drift detection, replanning — lives
+//! in the `stream` subsystem.
 
 use crate::data::dataset::Dataset;
 use crate::data::item::ItemShape;
 use crate::model::catalog::Mllm;
 use crate::profiling::backend::MeasureBackend;
 use crate::profiling::interp::{Interp1D, Linear2, PerTp};
+use crate::util::parallel::par_map;
 use crate::util::stats::{Histogram, Summary};
+use std::sync::Mutex;
 
 /// Fitted throughput models (per-GPU achieved FLOP/s).
 #[derive(Clone, Debug)]
@@ -34,7 +41,18 @@ pub struct ThroughputModel {
 
 impl ThroughputModel {
     fn lookup_ovh(v: &[(usize, f64)], tp: usize) -> f64 {
-        v.iter().find(|(t, _)| *t == tp).map(|(_, o)| *o).unwrap_or(0.0)
+        if let Some(&(_, o)) = v.iter().find(|(t, _)| *t == tp) {
+            return o;
+        }
+        // An unprofiled TP degree used to silently price as zero overhead,
+        // systematically underestimating unprofiled plans. Fall back to
+        // the nearest profiled degree instead (ties toward the smaller
+        // one — overheads grow with TP, so the conservative neighbour).
+        debug_assert!(!v.is_empty(), "empty per-stage overhead table");
+        v.iter()
+            .min_by_key(|(t, _)| (t.abs_diff(tp), *t))
+            .map(|&(_, o)| o)
+            .unwrap_or(0.0)
     }
 
     /// Per-stage fixed overhead (seconds, fwd+bwd) for the encoder / LLM.
@@ -142,83 +160,163 @@ pub struct ModelProfiler<'a, B: MeasureBackend> {
     pub grids: ProfilerGrids,
 }
 
+/// Everything the profiler measures and fits for one TP degree. TP
+/// columns are mutually independent (each probes only its own degree),
+/// which is what makes the grid embarrassingly parallel.
+struct TpColumn {
+    e_curve: Interp1D,
+    lin_curve: Interp1D,
+    attn_curve: Interp1D,
+    enc_ovh: f64,
+    llm_ovh: f64,
+    e_state: Linear2,
+    l_state: Linear2,
+    e_act_coeff: f64,
+    l_act_coeff: f64,
+}
+
+/// Measure one TP degree's full column: throughput grids, the affine
+/// overhead probes, and the memory probes — the exact probe set and
+/// arithmetic of the original serial sweep, so fits are bit-identical
+/// regardless of how columns are distributed over workers.
+fn measure_tp<B: MeasureBackend>(
+    backend: &mut B,
+    m: &Mllm,
+    grids: &ProfilerGrids,
+    tp: usize,
+) -> TpColumn {
+    // ---- throughput grids ----
+    let e_ys: Vec<f64> = grids
+        .units
+        .iter()
+        .map(|&u| backend.encoder_throughput(m, u, tp))
+        .collect();
+    let lin_ys: Vec<f64> = grids
+        .llm_tokens
+        .iter()
+        .map(|&s| backend.llm_linear_throughput(m, s, tp))
+        .collect();
+    let attn_ys: Vec<f64> = grids
+        .llm_tokens
+        .iter()
+        .map(|&s| backend.llm_attn_throughput(m, s, tp))
+        .collect();
+
+    // ---- per-stage fixed overhead: affine fit over layer count ----
+    // time(l) = c·l + b  ⇒  b = 2·t(l0) − t(2·l0).
+    let (l0, units_ref, seq_ref) = (4.0, 8.0, 2048.0);
+    let te1 = backend.encoder_time_at(m, units_ref, l0, tp);
+    let te2 = backend.encoder_time_at(m, units_ref, 2.0 * l0, tp);
+    let tl1 = backend.llm_time_at(m, seq_ref, l0, tp);
+    let tl2 = backend.llm_time_at(m, seq_ref, 2.0 * l0, tp);
+
+    // ---- memory: two small layer counts, linear in layers ----
+    let (m0, m1) = (2.0, 4.0);
+    let es0 = backend.encoder_state_bytes(m, m0, tp);
+    let es1 = backend.encoder_state_bytes(m, m1, tp);
+    let ls0 = backend.llm_state_bytes(m, m0, tp);
+    let ls1 = backend.llm_state_bytes(m, m1, tp);
+    // Activations are linear in (layers × shape): fit the coefficient
+    // from one probe, sanity-checked by a second.
+    let probe_units = 8.0;
+    let ea = backend.encoder_act_bytes(m, m1, tp, probe_units);
+    let probe_seq = 4096.0;
+    let la = backend.llm_act_bytes(m, m1, tp, probe_seq);
+
+    TpColumn {
+        e_curve: Interp1D::new(grids.units.clone(), e_ys),
+        lin_curve: Interp1D::new(grids.llm_tokens.clone(), lin_ys),
+        attn_curve: Interp1D::new(grids.llm_tokens.clone(), attn_ys),
+        enc_ovh: (2.0 * te1 - te2).max(0.0),
+        llm_ovh: (2.0 * tl1 - tl2).max(0.0),
+        e_state: Linear2::fit(m0, es0, m1, es1),
+        l_state: Linear2::fit(m0, ls0, m1, ls1),
+        e_act_coeff: ea / (m1 * probe_units),
+        l_act_coeff: la / (m1 * probe_seq),
+    }
+}
+
 impl<'a, B: MeasureBackend> ModelProfiler<'a, B> {
     pub fn new(backend: &'a mut B, grids: ProfilerGrids) -> Self {
         ModelProfiler { backend, grids }
     }
 
-    /// Run the full grid and fit all models.
-    pub fn profile(&mut self, m: &Mllm) -> ModelProfile {
+    /// Run the full shape × TP grid and fit all models.
+    ///
+    /// When the backend can fork independent measurement streams
+    /// ([`MeasureBackend::fork`]), the per-TP columns are measured
+    /// concurrently on the `util::parallel` pool — the grid is the
+    /// dominant cost of every `run_system` cell's offline phase. Fit
+    /// assembly happens in grid (TP) order and fork wall-clocks are
+    /// joined in the same order, so the profile is bit-identical at any
+    /// `--threads` setting; non-forkable backends get the serial sweep.
+    pub fn profile(&mut self, m: &Mllm) -> ModelProfile
+    where
+        B: Send,
+    {
         let start = self.backend.measured_seconds();
+        let tps = self.grids.tps.clone();
 
-        // ---- throughput grids ----
-        let mut e_curves = Vec::new();
-        let mut lin_curves = Vec::new();
-        let mut attn_curves = Vec::new();
-        for &tp in &self.grids.tps {
-            let e_ys: Vec<f64> = self
-                .grids
-                .units
-                .iter()
-                .map(|&u| self.backend.encoder_throughput(m, u, tp))
-                .collect();
-            e_curves.push((tp, Interp1D::new(self.grids.units.clone(), e_ys)));
-
-            let lin_ys: Vec<f64> = self
-                .grids
-                .llm_tokens
-                .iter()
-                .map(|&s| self.backend.llm_linear_throughput(m, s, tp))
-                .collect();
-            lin_curves.push((tp, Interp1D::new(self.grids.llm_tokens.clone(), lin_ys)));
-
-            let attn_ys: Vec<f64> = self
-                .grids
-                .llm_tokens
-                .iter()
-                .map(|&s| self.backend.llm_attn_throughput(m, s, tp))
-                .collect();
-            attn_curves.push((tp, Interp1D::new(self.grids.llm_tokens.clone(), attn_ys)));
+        // One fork per TP column, created serially up front; any refusal
+        // falls back to the serial sweep (partial forks carry no
+        // wall-clock, so dropping them loses nothing).
+        let mut forks: Vec<B> = Vec::with_capacity(tps.len());
+        let mut splittable = true;
+        for _ in &tps {
+            match self.backend.fork() {
+                Some(b) => forks.push(b),
+                None => {
+                    splittable = false;
+                    break;
+                }
+            }
         }
 
-        // ---- per-stage fixed overhead: affine fit over layer count ----
-        let mut enc_ovh = Vec::new();
-        let mut llm_ovh = Vec::new();
-        for &tp in &self.grids.tps {
-            // time(l) = c·l + b  ⇒  b = 2·t(l0) − t(2·l0).
-            let (l0, units_ref, seq_ref) = (4.0, 8.0, 2048.0);
-            let te1 = self.backend.encoder_time_at(m, units_ref, l0, tp);
-            let te2 = self.backend.encoder_time_at(m, units_ref, 2.0 * l0, tp);
-            enc_ovh.push((tp, (2.0 * te1 - te2).max(0.0)));
-            let tl1 = self.backend.llm_time_at(m, seq_ref, l0, tp);
-            let tl2 = self.backend.llm_time_at(m, seq_ref, 2.0 * l0, tp);
-            llm_ovh.push((tp, (2.0 * tl1 - tl2).max(0.0)));
-        }
+        let columns: Vec<TpColumn> = if splittable {
+            let slots: Vec<Mutex<Option<B>>> =
+                forks.into_iter().map(|b| Mutex::new(Some(b))).collect();
+            let grids = &self.grids;
+            let measured: Vec<(TpColumn, B)> = par_map(tps.len(), |i| {
+                let mut b = slots[i]
+                    .lock()
+                    .expect("fork slot lock")
+                    .take()
+                    .expect("each slot is taken exactly once");
+                let col = measure_tp(&mut b, m, grids, tps[i]);
+                (col, b)
+            });
+            let mut cols = Vec::with_capacity(tps.len());
+            for (col, b) in measured {
+                self.backend.join(b);
+                cols.push(col);
+            }
+            cols
+        } else {
+            tps.iter()
+                .map(|&tp| measure_tp(&mut *self.backend, m, &self.grids, tp))
+                .collect()
+        };
 
-        // ---- memory: two small layer counts per TP, linear in layers ----
-        let (l0, l1) = (2.0, 4.0);
-        let mut e_state = Vec::new();
-        let mut l_state = Vec::new();
-        let mut e_act_coeff = Vec::new();
-        let mut l_act_coeff = Vec::new();
-        for &tp in &self.grids.tps {
-            let es0 = self.backend.encoder_state_bytes(m, l0, tp);
-            let es1 = self.backend.encoder_state_bytes(m, l1, tp);
-            e_state.push((tp, Linear2::fit(l0, es0, l1, es1)));
-
-            let ls0 = self.backend.llm_state_bytes(m, l0, tp);
-            let ls1 = self.backend.llm_state_bytes(m, l1, tp);
-            l_state.push((tp, Linear2::fit(l0, ls0, l1, ls1)));
-
-            // Activations are linear in (layers × shape): fit the
-            // coefficient from one probe, sanity-checked by a second.
-            let probe_units = 8.0;
-            let ea = self.backend.encoder_act_bytes(m, l1, tp, probe_units);
-            e_act_coeff.push((tp, ea / (l1 * probe_units)));
-
-            let probe_seq = 4096.0;
-            let la = self.backend.llm_act_bytes(m, l1, tp, probe_seq);
-            l_act_coeff.push((tp, la / (l1 * probe_seq)));
+        // ---- assemble fits in TP-grid order ----
+        let mut e_curves = Vec::with_capacity(tps.len());
+        let mut lin_curves = Vec::with_capacity(tps.len());
+        let mut attn_curves = Vec::with_capacity(tps.len());
+        let mut enc_ovh = Vec::with_capacity(tps.len());
+        let mut llm_ovh = Vec::with_capacity(tps.len());
+        let mut e_state = Vec::with_capacity(tps.len());
+        let mut l_state = Vec::with_capacity(tps.len());
+        let mut e_act_coeff = Vec::with_capacity(tps.len());
+        let mut l_act_coeff = Vec::with_capacity(tps.len());
+        for (&tp, col) in tps.iter().zip(columns) {
+            e_curves.push((tp, col.e_curve));
+            lin_curves.push((tp, col.lin_curve));
+            attn_curves.push((tp, col.attn_curve));
+            enc_ovh.push((tp, col.enc_ovh));
+            llm_ovh.push((tp, col.llm_ovh));
+            e_state.push((tp, col.e_state));
+            l_state.push((tp, col.l_state));
+            e_act_coeff.push((tp, col.e_act_coeff));
+            l_act_coeff.push((tp, col.l_act_coeff));
         }
 
         ModelProfile {
@@ -253,6 +351,32 @@ pub struct DataProfile {
 }
 
 impl DataProfile {
+    /// Assemble a profile from already-collected shape samples — shared
+    /// by the offline Data Profiler ([`profile_data`]) and the stream
+    /// subsystem's live refit (`stream::replan::live_profile`), so the
+    /// offline reference and the online recharacterization can never
+    /// diverge structurally.
+    pub fn from_samples(
+        dataset_name: &str,
+        m: &Mllm,
+        samples: Vec<ItemShape>,
+        profiling_seconds: f64,
+    ) -> DataProfile {
+        assert!(!samples.is_empty(), "DataProfile::from_samples on empty sample set");
+        let units: Vec<f64> = samples.iter().map(|s| s.units as f64).collect();
+        let seqs: Vec<f64> = samples.iter().map(|s| s.llm_seq as f64).collect();
+        DataProfile {
+            dataset_name: dataset_name.to_string(),
+            model_name: m.name.to_string() + "/" + m.llm.name,
+            units_hist: Histogram::of(&units, 32),
+            seq_hist: Histogram::of(&seqs, 32),
+            units_summary: Summary::of(&units),
+            seq_summary: Summary::of(&seqs),
+            samples,
+            profiling_seconds,
+        }
+    }
+
     pub fn mean_units(&self) -> f64 {
         self.units_summary.mean
     }
@@ -267,23 +391,13 @@ impl DataProfile {
 pub fn profile_data(m: &Mllm, dataset: &mut Dataset, n_samples: usize) -> DataProfile {
     let t0 = std::time::Instant::now();
     let samples = dataset.shaped_batch(m, n_samples);
-    let units: Vec<f64> = samples.iter().map(|s| s.units as f64).collect();
-    let seqs: Vec<f64> = samples.iter().map(|s| s.llm_seq as f64).collect();
     // Charge a simulated per-item preprocessing cost (tokenization + image
     // shape math) so the reported Data Profiler overhead is in the paper's
     // band (~1.5 min for a full corpus sample) rather than the synthetic
     // generator's microseconds.
     let simulated = n_samples as f64 * 0.018;
-    DataProfile {
-        dataset_name: dataset.name.clone(),
-        model_name: m.name.to_string() + "/" + m.llm.name,
-        units_hist: Histogram::of(&units, 32),
-        seq_hist: Histogram::of(&seqs, 32),
-        units_summary: Summary::of(&units),
-        seq_summary: Summary::of(&seqs),
-        samples,
-        profiling_seconds: simulated + t0.elapsed().as_secs_f64(),
-    }
+    let name = dataset.name.clone();
+    DataProfile::from_samples(&name, m, samples, simulated + t0.elapsed().as_secs_f64())
 }
 
 /// Re-profiling conditions (§3.2.3): the Model Profiler is keyed by the
@@ -325,6 +439,121 @@ mod tests {
         let mut profiler =
             ModelProfiler::new(&mut backend, ProfilerGrids::standard(8));
         (profiler.profile(&m), m, truth)
+    }
+
+    #[test]
+    fn overhead_lookup_falls_back_to_nearest_profiled_tp() {
+        let (p, _, _) = profile_smooth();
+        // The standard grid profiles TP ∈ {1, 2, 4, 8}. Unprofiled
+        // degrees must price as the nearest profiled one (ties toward
+        // the smaller), never as zero.
+        assert_eq!(
+            p.throughput.enc_overhead(3).to_bits(),
+            p.throughput.enc_overhead(2).to_bits()
+        );
+        assert_eq!(
+            p.throughput.llm_overhead(6).to_bits(),
+            p.throughput.llm_overhead(4).to_bits(),
+            "tie |6-4| = |6-8| must resolve to the smaller degree"
+        );
+        assert_eq!(
+            p.throughput.enc_overhead(16).to_bits(),
+            p.throughput.enc_overhead(8).to_bits()
+        );
+        assert!(p.throughput.llm_overhead(6) > 0.0, "fallback must not be zero");
+    }
+
+    /// Wrapper that refuses to fork: forces the profiler's serial sweep.
+    struct NoFork(SimBackend);
+
+    impl MeasureBackend for NoFork {
+        fn encoder_throughput(&mut self, m: &Mllm, units: f64, tp: usize) -> f64 {
+            self.0.encoder_throughput(m, units, tp)
+        }
+        fn llm_linear_throughput(&mut self, m: &Mllm, total: f64, tp: usize) -> f64 {
+            self.0.llm_linear_throughput(m, total, tp)
+        }
+        fn llm_attn_throughput(&mut self, m: &Mllm, seq: f64, tp: usize) -> f64 {
+            self.0.llm_attn_throughput(m, seq, tp)
+        }
+        fn encoder_state_bytes(&mut self, m: &Mllm, layers: f64, tp: usize) -> f64 {
+            self.0.encoder_state_bytes(m, layers, tp)
+        }
+        fn llm_state_bytes(&mut self, m: &Mllm, layers: f64, tp: usize) -> f64 {
+            self.0.llm_state_bytes(m, layers, tp)
+        }
+        fn encoder_act_bytes(&mut self, m: &Mllm, layers: f64, tp: usize, units: f64) -> f64 {
+            self.0.encoder_act_bytes(m, layers, tp, units)
+        }
+        fn llm_act_bytes(&mut self, m: &Mllm, layers: f64, tp: usize, seq: f64) -> f64 {
+            self.0.llm_act_bytes(m, layers, tp, seq)
+        }
+        fn encoder_time_at(&mut self, m: &Mllm, units: f64, layers: f64, tp: usize) -> f64 {
+            self.0.encoder_time_at(m, units, layers, tp)
+        }
+        fn llm_time_at(&mut self, m: &Mllm, total: f64, layers: f64, tp: usize) -> f64 {
+            self.0.llm_time_at(m, total, layers, tp)
+        }
+        fn measured_seconds(&self) -> f64 {
+            self.0.measured_seconds()
+        }
+    }
+
+    #[test]
+    fn parallel_grid_fits_bit_match_serial_sweep() {
+        // The forked (pool) sweep and the forced-serial sweep must
+        // produce identical fits everywhere the models are evaluated.
+        let truth = Truth::new(ClusterSpec::hgx_a100(1));
+        let m = llava_ov(llama3("8b"));
+        let mut forked_backend = SimBackend::new(truth.clone());
+        let forked =
+            ModelProfiler::new(&mut forked_backend, ProfilerGrids::standard(8)).profile(&m);
+        let mut serial_backend = NoFork(SimBackend::new(truth));
+        let serial =
+            ModelProfiler::new(&mut serial_backend, ProfilerGrids::standard(8)).profile(&m);
+        for &tp in &[1usize, 2, 4, 8] {
+            for &u in &[1.0, 3.0, 8.0, 77.0, 128.0] {
+                assert_eq!(
+                    forked.throughput.e_thr.eval(u, tp).to_bits(),
+                    serial.throughput.e_thr.eval(u, tp).to_bits(),
+                    "e_thr({u}, {tp})"
+                );
+            }
+            for &s in &[128.0, 700.0, 4096.0, 20_000.0] {
+                assert_eq!(
+                    forked.throughput.l_lin_thr.eval(s, tp).to_bits(),
+                    serial.throughput.l_lin_thr.eval(s, tp).to_bits()
+                );
+                assert_eq!(
+                    forked.throughput.l_attn_thr.eval(s, tp).to_bits(),
+                    serial.throughput.l_attn_thr.eval(s, tp).to_bits()
+                );
+            }
+            assert_eq!(
+                forked.throughput.enc_overhead(tp).to_bits(),
+                serial.throughput.enc_overhead(tp).to_bits()
+            );
+            assert_eq!(
+                forked.throughput.llm_overhead(tp).to_bits(),
+                serial.throughput.llm_overhead(tp).to_bits()
+            );
+            assert_eq!(
+                forked.memory.l_state_bytes(16.0, tp).to_bits(),
+                serial.memory.l_state_bytes(16.0, tp).to_bits()
+            );
+            assert_eq!(
+                forked.memory.e_act_bytes(4.0, tp, 8.0).to_bits(),
+                serial.memory.e_act_bytes(4.0, tp, 8.0).to_bits()
+            );
+        }
+        // Same probe set ⇒ same total measurement wall-clock (joined in
+        // grid order, so parallelism cannot change the sum's terms).
+        assert!(
+            (forked.profiling_seconds / serial.profiling_seconds - 1.0).abs() < 1e-9,
+            "wall-clock accounting diverged: {} vs {}",
+            forked.profiling_seconds,
+            serial.profiling_seconds
+        );
     }
 
     #[test]

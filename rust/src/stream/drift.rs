@@ -1,0 +1,287 @@
+//! Deterministic drift detection against the profile-time reference.
+//!
+//! The Data Profiler's sampled distribution is the contract θ* was
+//! optimized against; this module watches the live [`ShapeStats`] window
+//! and decides when that contract is broken. Three complementary
+//! statistics are computed, all pure functions of integer aggregates:
+//!
+//! - **Quantile distance** — mean relative displacement of the LLM
+//!   sequence-length deciles between the live window and the reference
+//!   (the per-item *LLM work shape* moving);
+//! - **Units distance** — the same over encoder unit deciles, against an
+//!   absolute floor so small-integer decile flips read as noise (the
+//!   *encoder work shape* moving, which sizes θ*'s GPU split);
+//! - **Mixture total variation** — `½ · Σ_s |p_live(s) − p_ref(s)|` over
+//!   source item shares (the *modality mix* moving, e.g. a curriculum
+//!   text→video ramp), which reacts even when per-source shapes are
+//!   stable.
+//!
+//! The decision uses the max of the two with **hysteresis** so sampling
+//! noise cannot thrash the replanner: the score must sit at or above
+//! `enter` for `confirm` consecutive windows to fire; between `exit` and
+//! `enter` the confirmation count holds; at or below `exit` it resets.
+//! After a replan the caller rebases the reference onto the live window
+//! ([`DriftDetector::rebase`]), so subsequent drift is measured against
+//! the distribution the *new* plan was fitted to.
+
+use crate::data::item::ItemShape;
+use crate::stream::window::ShapeStats;
+
+/// Detector thresholds. Defaults are sized for windows of ≥150 items:
+/// stationary Table-2 mixtures score ≲0.1 on both statistics, while the
+/// scenario shifts in `data::sources` score 0.4–0.8.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftConfig {
+    /// Fire threshold (score ≥ enter for `confirm` windows ⇒ drift).
+    pub enter: f64,
+    /// Re-arm threshold (score ≤ exit resets the confirmation count).
+    pub exit: f64,
+    /// Consecutive over-threshold windows required before firing.
+    pub confirm: usize,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig { enter: 0.25, exit: 0.10, confirm: 2 }
+    }
+}
+
+/// The drift statistics for one window evaluation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftStat {
+    /// Mean relative decile displacement of LLM sequence lengths.
+    pub quantile_dist: f64,
+    /// Mean relative decile displacement of encoder unit counts. Unit
+    /// deciles are small integers, so the relative error is taken against
+    /// a floor of [`UNITS_FLOOR`] — otherwise a one-unit flip of a
+    /// low decile (2 → 3) would read as a 50% shift and sampling noise
+    /// could thrash the detector.
+    pub units_dist: f64,
+    /// Total-variation distance between source mixture shares.
+    pub mix_tv: f64,
+}
+
+/// Denominator floor for the encoder-units decile distance.
+pub const UNITS_FLOOR: f64 = 8.0;
+
+impl DriftStat {
+    /// The scalar the hysteresis thresholds apply to.
+    pub fn score(&self) -> f64 {
+        self.quantile_dist.max(self.units_dist).max(self.mix_tv)
+    }
+}
+
+/// One observation's outcome.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Score below the hysteresis band (or inside it with no history).
+    Stable,
+    /// Score at/above `enter` but not yet confirmed.
+    Watch,
+    /// Drift confirmed — the caller should replan and
+    /// [`DriftDetector::rebase`].
+    Drift,
+}
+
+/// Stateful detector comparing live windows against a reference
+/// distribution.
+#[derive(Clone, Debug)]
+pub struct DriftDetector {
+    pub cfg: DriftConfig,
+    reference: ShapeStats,
+    watch: usize,
+    /// Statistics of the most recent observation (diagnostics).
+    pub last: Option<DriftStat>,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: DriftConfig, reference: ShapeStats) -> DriftDetector {
+        DriftDetector { cfg, reference, watch: 0, last: None }
+    }
+
+    /// Build the reference from profile-time samples.
+    pub fn from_shapes(cfg: DriftConfig, shapes: &[ItemShape]) -> DriftDetector {
+        DriftDetector::new(cfg, ShapeStats::of_batch(shapes))
+    }
+
+    pub fn reference(&self) -> &ShapeStats {
+        &self.reference
+    }
+
+    /// Compute the statistics for a live aggregate (stateless).
+    pub fn statistic(&self, live: &ShapeStats) -> DriftStat {
+        let mut seq_acc = 0.0;
+        let mut units_acc = 0.0;
+        for k in 1..=9 {
+            let q = k as f64 / 10.0;
+            let r = self.reference.seq_quantile(q);
+            let l = live.seq_quantile(q);
+            seq_acc += (l - r).abs() / r.max(1.0);
+            let ru = self.reference.units_quantile(q);
+            let lu = live.units_quantile(q);
+            units_acc += (lu - ru).abs() / ru.max(UNITS_FLOOR);
+        }
+        let ref_shares = self.reference.source_shares();
+        let live_shares = live.source_shares();
+        let tv: f64 = live_shares
+            .iter()
+            .zip(&ref_shares)
+            .map(|(l, r)| (l - r).abs())
+            .sum();
+        DriftStat {
+            quantile_dist: seq_acc / 9.0,
+            units_dist: units_acc / 9.0,
+            mix_tv: 0.5 * tv,
+        }
+    }
+
+    /// Evaluate one full window and advance the hysteresis state machine.
+    pub fn observe(&mut self, live: &ShapeStats) -> Decision {
+        let stat = self.statistic(live);
+        self.last = Some(stat);
+        let score = stat.score();
+        if score >= self.cfg.enter {
+            self.watch += 1;
+            if self.watch >= self.cfg.confirm {
+                self.watch = 0;
+                return Decision::Drift;
+            }
+            return Decision::Watch;
+        }
+        if score <= self.cfg.exit {
+            self.watch = 0;
+        }
+        // Inside the hysteresis band the confirmation count holds.
+        Decision::Stable
+    }
+
+    /// Adopt a new reference (after a replan) and reset confirmation.
+    pub fn rebase(&mut self, reference: ShapeStats) {
+        self.reference = reference;
+        self.watch = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::model::catalog::{llama3, llava_ov};
+    use crate::stream::window::ShapeWindow;
+
+    fn uniform_shapes(seq: u32, n: usize, source: u8) -> Vec<ItemShape> {
+        vec![ItemShape { units: 2, llm_seq: seq, source }; n]
+    }
+
+    #[test]
+    fn identical_distribution_scores_zero() {
+        let shapes = uniform_shapes(1000, 200, 0);
+        let det = DriftDetector::from_shapes(DriftConfig::default(), &shapes);
+        let s = det.statistic(&ShapeStats::of_batch(&shapes));
+        assert_eq!(s.quantile_dist, 0.0);
+        assert_eq!(s.units_dist, 0.0);
+        assert_eq!(s.mix_tv, 0.0);
+    }
+
+    #[test]
+    fn encoder_units_drift_is_detected() {
+        // LLM sequence lengths and source mix stay stable while per-item
+        // encoder units grow (e.g. higher-resolution tiling): only the
+        // units axis can see it.
+        let shapes_with_units = |units: u32| -> Vec<ItemShape> {
+            (0..300u32)
+                .map(|i| ItemShape { units, llm_seq: 3000 + (i % 7), source: 0 })
+                .collect()
+        };
+        let mut det =
+            DriftDetector::from_shapes(DriftConfig::default(), &shapes_with_units(4));
+        let live = ShapeStats::of_batch(&shapes_with_units(24));
+        let s = det.statistic(&live);
+        assert_eq!(s.quantile_dist, 0.0);
+        assert_eq!(s.mix_tv, 0.0);
+        assert!(s.units_dist > 1.0, "units drift invisible: {s:?}");
+        assert_eq!(det.observe(&live), Decision::Watch);
+        assert_eq!(det.observe(&live), Decision::Drift);
+    }
+
+    #[test]
+    fn stationary_mixture_never_fires() {
+        // The no-thrash guarantee at the detector level: a stationary
+        // Table-2 mixture must not fire over a long run.
+        let m = llava_ov(llama3("8b"));
+        let mut profile_ds = Dataset::mixed(0xDA7A);
+        let det_ref = profile_ds.shaped_batch(&m, 512);
+        let mut det = DriftDetector::from_shapes(DriftConfig::default(), &det_ref);
+        let mut ds = Dataset::mixed(7);
+        let mut w = ShapeWindow::new(8);
+        for _ in 0..30 {
+            w.push(&ds.shaped_batch(&m, 64));
+            if w.is_full() {
+                assert_ne!(det.observe(w.stats()), Decision::Drift);
+            }
+        }
+    }
+
+    #[test]
+    fn sustained_shift_fires_after_confirmation() {
+        let reference = uniform_shapes(1000, 300, 0);
+        let cfg = DriftConfig { enter: 0.2, exit: 0.08, confirm: 2 };
+        let mut det = DriftDetector::from_shapes(cfg, &reference);
+        // ~60% longer sequences: quantile distance well past `enter`.
+        let live = ShapeStats::of_batch(&uniform_shapes(1600, 300, 0));
+        assert_eq!(det.observe(&live), Decision::Watch);
+        assert_eq!(det.observe(&live), Decision::Drift);
+        // After firing the count reset; it takes `confirm` windows again.
+        assert_eq!(det.observe(&live), Decision::Watch);
+    }
+
+    #[test]
+    fn mixture_shift_fires_even_with_stable_shapes() {
+        // Same per-item shapes, different source labels: only mix_tv sees
+        // it.
+        let reference = uniform_shapes(1000, 300, 0);
+        let mut det = DriftDetector::from_shapes(DriftConfig::default(), &reference);
+        let live = ShapeStats::of_batch(&uniform_shapes(1000, 300, 3));
+        let s = det.statistic(&live);
+        assert_eq!(s.quantile_dist, 0.0);
+        assert!((s.mix_tv - 1.0).abs() < 1e-12);
+        assert_eq!(det.observe(&live), Decision::Watch);
+    }
+
+    #[test]
+    fn hysteresis_band_holds_then_exit_resets() {
+        let reference = uniform_shapes(1000, 400, 0);
+        let cfg = DriftConfig { enter: 0.30, exit: 0.05, confirm: 3 };
+        let mut det = DriftDetector::from_shapes(cfg, &reference);
+        let high = ShapeStats::of_batch(&uniform_shapes(1700, 400, 0));
+        // 20% of the mass displaced one octave up: only the top decile
+        // moves, so the mean decile displacement lands inside the
+        // (exit, enter) hysteresis band.
+        let mut mid_shapes = uniform_shapes(1000, 320, 0);
+        mid_shapes.extend(uniform_shapes(1600, 80, 0));
+        let mid = ShapeStats::of_batch(&mid_shapes);
+        let calm = ShapeStats::of_batch(&uniform_shapes(1000, 400, 0));
+        assert_eq!(det.observe(&high), Decision::Watch);
+        // Inside the band: Stable, but the confirmation count holds …
+        assert_eq!(det.observe(&mid), Decision::Stable);
+        assert_eq!(det.observe(&high), Decision::Watch);
+        // … so one more over-threshold window completes confirm = 3.
+        assert_eq!(det.observe(&high), Decision::Drift);
+        // At/below exit the count resets.
+        assert_eq!(det.observe(&high), Decision::Watch);
+        assert_eq!(det.observe(&calm), Decision::Stable);
+        assert_eq!(det.observe(&high), Decision::Watch);
+        assert_eq!(det.observe(&high), Decision::Watch);
+        assert_eq!(det.observe(&high), Decision::Drift);
+    }
+
+    #[test]
+    fn rebase_adopts_new_reference() {
+        let reference = uniform_shapes(1000, 300, 0);
+        let mut det = DriftDetector::from_shapes(DriftConfig::default(), &reference);
+        let live = ShapeStats::of_batch(&uniform_shapes(1700, 300, 2));
+        assert!(det.statistic(&live).score() > det.cfg.enter);
+        det.rebase(live.clone());
+        assert_eq!(det.statistic(&live).score(), 0.0);
+    }
+}

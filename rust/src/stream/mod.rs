@@ -1,0 +1,37 @@
+//! Online drift detection and adaptive replanning — continuous profiling
+//! made real.
+//!
+//! The offline layers (`profiling` → `optimizer`) fit θ* to a *snapshot*
+//! of the data distribution; the per-iteration layer (`scheduler`)
+//! balances within the plan but cannot change it. This subsystem is the
+//! layer between them, operating over *time*:
+//!
+//! - [`window`] — sliding-window shape statistics over the incoming
+//!   global batches: exact integer aggregates plus mergeable log-binned
+//!   quantile sketches, O(1) amortized per item.
+//! - [`drift`] — a deterministic detector comparing the live window
+//!   against the profile-time reference (LLM-sequence and encoder-unit
+//!   decile distances + mixture total variation) with hysteresis so
+//!   noise cannot thrash the plan.
+//! - [`reservoir`] — the last-N item shapes, the concrete samples a
+//!   refit needs.
+//! - [`replan`] — the controller: on confirmed drift, refit Eq 1's `D`
+//!   from the reservoir, warm-restart `optimizer::search` from the
+//!   incumbent θ* on the worker pool, and swap the plan between
+//!   iterations.
+//!
+//! `sim::trainer` wires this into full runs as
+//! `SystemKind::DflopAdaptive`; the non-stationary scenarios it reacts
+//! to live in `data::sources` (curriculum ramp, video bursts, modality
+//! dropout). Everything here is bit-deterministic across `--threads`
+//! settings — see `rust/DESIGN.md` ("Stream subsystem").
+
+pub mod drift;
+pub mod replan;
+pub mod reservoir;
+pub mod window;
+
+pub use drift::{Decision, DriftConfig, DriftDetector, DriftStat};
+pub use replan::{live_profile, ReplanConfig, ReplanContext, ReplanEvent, Replanner};
+pub use reservoir::ShapeReservoir;
+pub use window::{ShapeStats, ShapeWindow};

@@ -1,0 +1,315 @@
+//! Adaptive replanning: confirmed drift → refit the shape distribution →
+//! warm-started optimizer run → plan swap between iterations.
+//!
+//! The [`Replanner`] glues the stream layer together: it feeds every
+//! global batch into the sliding [`ShapeWindow`] and the
+//! [`ShapeReservoir`], asks the [`DriftDetector`] whether the live
+//! distribution still matches the one θ* was optimized for, and on
+//! confirmed drift rebuilds Eq 1's `D` from the reservoir and re-invokes
+//! `optimizer::search` **warm-started from the incumbent θ***
+//! ([`optimize_warm`]) — the incumbent seeds the candidate top-K and its
+//! mean-approximation score (with a slack margin) prunes GPU splits that
+//! cannot come near it, so a replan is much cheaper than a cold search.
+//! The optimizer
+//! itself fans its scan and Eq-1 refinement over the `util::parallel`
+//! pool, and the new plan is swapped in at the next iteration boundary.
+//!
+//! Thrash control is layered: the detector's hysteresis (enter/exit
+//! thresholds + confirmation count), a post-replan cooldown, and a
+//! reference rebase onto the window that triggered the replan — so the
+//! next drift is measured against the distribution the *new* plan was
+//! fitted to. On stationary data no replan ever fires (enforced by the
+//! trainer's no-thrash test).
+
+use crate::data::item::ItemShape;
+use crate::model::catalog::Mllm;
+use crate::optimizer::plan::Theta;
+use crate::optimizer::search::{optimize_warm, OptimizerInputs};
+use crate::profiling::engine::{DataProfile, ModelProfile};
+use crate::stream::drift::{Decision, DriftConfig, DriftDetector, DriftStat};
+use crate::stream::reservoir::ShapeReservoir;
+use crate::stream::window::ShapeWindow;
+use std::time::{Duration, Instant};
+
+/// Controller tuning. Defaults detect the `data::sources` scenario shifts
+/// within a few iterations at GBS ≥ 32 while never firing on stationary
+/// Table-2 mixtures.
+#[derive(Clone, Debug)]
+pub struct ReplanConfig {
+    /// Sliding-window width in global batches.
+    pub window_batches: usize,
+    /// Shapes retained for refitting the live distribution.
+    pub reservoir: usize,
+    /// Iterations after a replan before drift is evaluated again.
+    pub cooldown: usize,
+    /// Detector thresholds (hysteresis + confirmation).
+    pub drift: DriftConfig,
+}
+
+impl Default for ReplanConfig {
+    fn default() -> Self {
+        ReplanConfig {
+            window_batches: 8,
+            reservoir: 384,
+            cooldown: 8,
+            drift: DriftConfig::default(),
+        }
+    }
+}
+
+/// One confirmed-drift replan (swapped or not).
+#[derive(Clone, Debug)]
+pub struct ReplanEvent {
+    /// Iteration whose batch confirmed the drift.
+    pub iteration: usize,
+    /// Detector statistics at the trigger.
+    pub stat: DriftStat,
+    pub old: Theta,
+    pub new: Theta,
+    /// Whether the optimizer actually changed the plan.
+    pub swapped: bool,
+    /// Eq-1 expected makespan of `new` under the refitted distribution.
+    pub expected_makespan: f64,
+    /// Wall-clock of the warm-started optimizer run.
+    pub elapsed: Duration,
+}
+
+/// The optimizer-facing context a replan needs (everything in
+/// `OptimizerInputs` except the data profile, which the replanner refits
+/// itself).
+pub struct ReplanContext<'a> {
+    pub m: &'a Mllm,
+    pub profile: &'a ModelProfile,
+    pub n_gpus: usize,
+    pub gpus_per_node: usize,
+    pub mem_capacity: f64,
+    pub gbs: usize,
+}
+
+impl<'a> ReplanContext<'a> {
+    /// Assemble the optimizer inputs for a (re)plan against `data` — the
+    /// single place the context-to-inputs mapping lives (used by the
+    /// replan path and by every test that seeds an initial θ*).
+    pub fn inputs<'b>(&'b self, data: &'b DataProfile) -> OptimizerInputs<'b> {
+        OptimizerInputs {
+            m: self.m,
+            profile: self.profile,
+            data,
+            n_gpus: self.n_gpus,
+            gpus_per_node: self.gpus_per_node,
+            mem_capacity: self.mem_capacity,
+            gbs: self.gbs,
+            // Replans only run for the full system (scheduler active).
+            assume_balanced: true,
+        }
+    }
+}
+
+/// The drift-aware plan controller.
+#[derive(Clone, Debug)]
+pub struct Replanner {
+    pub cfg: ReplanConfig,
+    window: ShapeWindow,
+    reservoir: ShapeReservoir,
+    detector: DriftDetector,
+    /// The live plan (starts at the offline θ*).
+    pub theta: Theta,
+    /// Every confirmed drift, in iteration order.
+    pub events: Vec<ReplanEvent>,
+    cooldown: usize,
+    iteration: usize,
+}
+
+impl Replanner {
+    /// `reference` is the offline Data Profiler output θ* was fitted to.
+    pub fn new(reference: &DataProfile, theta: Theta, cfg: ReplanConfig) -> Replanner {
+        let detector = DriftDetector::from_shapes(cfg.drift, &reference.samples);
+        Replanner {
+            window: ShapeWindow::new(cfg.window_batches),
+            reservoir: ShapeReservoir::new(cfg.reservoir),
+            detector,
+            theta,
+            events: Vec::new(),
+            cooldown: 0,
+            iteration: 0,
+            cfg,
+        }
+    }
+
+    /// Feed one iteration's global batch — call *before* scheduling it.
+    /// Returns the new plan when a confirmed drift swapped it; the caller
+    /// applies it to this batch and everything after (the batch has not
+    /// been scheduled yet, so the swap lands on the iteration boundary
+    /// just crossed — exactly what `sim::trainer` does).
+    pub fn observe_batch(
+        &mut self,
+        ctx: &ReplanContext,
+        shapes: &[ItemShape],
+    ) -> Option<Theta> {
+        let iteration = self.iteration;
+        self.iteration += 1;
+        self.window.push(shapes);
+        self.reservoir.extend(shapes);
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return None;
+        }
+        if !self.window.is_full() {
+            return None;
+        }
+        match self.detector.observe(self.window.stats()) {
+            Decision::Drift => self.replan(ctx, iteration),
+            Decision::Watch | Decision::Stable => None,
+        }
+    }
+
+    /// Confirmed drift: refit `D` from the reservoir and warm-restart the
+    /// optimizer from the incumbent.
+    fn replan(&mut self, ctx: &ReplanContext, iteration: usize) -> Option<Theta> {
+        let t0 = Instant::now();
+        let live = live_profile(ctx.m, self.reservoir.shapes());
+        let inp = ctx.inputs(&live);
+        let stat = self.detector.last.expect("observe ran before replan");
+        let (new, expected, swapped) = match optimize_warm(&inp, Some(self.theta)) {
+            Some(r) => (r.theta, r.expected_makespan, r.theta != self.theta),
+            // No feasible plan under the live distribution (should not
+            // happen when the incumbent itself is feasible): keep θ.
+            None => (self.theta, f64::NAN, false),
+        };
+        self.events.push(ReplanEvent {
+            iteration,
+            stat,
+            old: self.theta,
+            new,
+            swapped,
+            expected_makespan: expected,
+            elapsed: t0.elapsed(),
+        });
+        self.theta = new;
+        // Rebase: the new plan was fitted to (approximately) the current
+        // window; measure future drift against it, and hold off while the
+        // window refills with post-swap batches.
+        self.detector.rebase(self.window.stats().clone());
+        self.cooldown = self.cfg.cooldown;
+        swapped.then_some(new)
+    }
+
+    /// Confirmed drifts that actually changed the plan.
+    pub fn swaps(&self) -> usize {
+        self.events.iter().filter(|e| e.swapped).count()
+    }
+
+    /// Detector statistics of the latest evaluated window.
+    pub fn last_stat(&self) -> Option<DriftStat> {
+        self.detector.last
+    }
+
+    pub fn window(&self) -> &ShapeWindow {
+        &self.window
+    }
+}
+
+/// Refit a [`DataProfile`] from live samples (the online analogue of
+/// `profiling::engine::profile_data`, sharing its assembly via
+/// [`DataProfile::from_samples`]; the sampling pass is the training
+/// stream itself, so no profiling wall-clock is charged).
+pub fn live_profile(m: &Mllm, shapes: &[ItemShape]) -> DataProfile {
+    assert!(!shapes.is_empty(), "live_profile on empty reservoir");
+    DataProfile::from_samples("live-window", m, shapes.to_vec(), 0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::model::catalog::{llama3, llava_ov};
+    use crate::perfmodel::{ClusterSpec, Truth};
+    use crate::profiling::backend::SimBackend;
+    use crate::profiling::engine::{profile_data, ModelProfiler, ProfilerGrids};
+
+    fn fixture() -> (Mllm, ModelProfile, ClusterSpec) {
+        let m = llava_ov(llama3("8b"));
+        let cluster = ClusterSpec::hgx_a100(1);
+        let mut backend = SimBackend::new(Truth::new(cluster));
+        let profile =
+            ModelProfiler::new(&mut backend, ProfilerGrids::standard(8)).profile(&m);
+        (m, profile, cluster)
+    }
+
+    fn ctx<'a>(
+        m: &'a Mllm,
+        profile: &'a ModelProfile,
+        cluster: &ClusterSpec,
+        gbs: usize,
+    ) -> ReplanContext<'a> {
+        ReplanContext {
+            m,
+            profile,
+            n_gpus: cluster.total_gpus(),
+            gpus_per_node: cluster.gpus_per_node,
+            mem_capacity: cluster.gpu.mem_bytes,
+            gbs,
+        }
+    }
+
+    #[test]
+    fn stationary_stream_never_replans() {
+        let (m, profile, cluster) = fixture();
+        let mut profile_ds = Dataset::mixed(0xDA7A);
+        let data = profile_data(&m, &mut profile_ds, 256);
+        let rctx = ctx(&m, &profile, &cluster, 32);
+        let theta = crate::optimizer::search::optimize(&rctx.inputs(&data))
+            .expect("feasible")
+            .theta;
+        let mut rp = Replanner::new(&data, theta, ReplanConfig::default());
+        let mut ds = Dataset::mixed(9);
+        for _ in 0..20 {
+            let batch = ds.shaped_batch(&m, 32);
+            assert!(rp.observe_batch(&rctx, &batch).is_none());
+        }
+        assert!(rp.events.is_empty(), "stationary data fired {:?}", rp.events);
+        assert_eq!(rp.theta, theta);
+    }
+
+    #[test]
+    fn distribution_switch_triggers_replan_and_rebase() {
+        // Profile on the narrow multi-image scenario, then switch the
+        // stream to video: the detector must confirm drift, the replanner
+        // must produce a (feasible) plan for the new distribution, and
+        // after the rebase + cooldown the now-stationary video stream must
+        // not fire again.
+        let (m, profile, cluster) = fixture();
+        let data = profile_data(&m, &mut Dataset::multi_image(0xDA7A), 256);
+        let rctx = ctx(&m, &profile, &cluster, 64);
+        let theta = crate::optimizer::search::optimize(&rctx.inputs(&data))
+            .expect("feasible")
+            .theta;
+        let cfg = ReplanConfig {
+            window_batches: 4,
+            cooldown: 4,
+            ..ReplanConfig::default()
+        };
+        let mut rp = Replanner::new(&data, theta, cfg);
+        let mut ds = Dataset::video(11);
+        for _ in 0..16 {
+            let batch = ds.shaped_batch(&m, 64);
+            rp.observe_batch(&rctx, &batch);
+        }
+        assert_eq!(rp.events.len(), 1, "expected exactly one drift: {:?}", rp.events);
+        let e = &rp.events[0];
+        assert!(e.stat.score() >= rp.cfg.drift.enter);
+        assert!(e.expected_makespan > 0.0);
+        assert_eq!(rp.theta.gpus(), cluster.total_gpus());
+    }
+
+    #[test]
+    fn live_profile_summarizes_reservoir() {
+        let m = llava_ov(llama3("8b"));
+        let shapes = Dataset::video(3).shaped_batch(&m, 200);
+        let p = live_profile(&m, &shapes);
+        assert_eq!(p.samples.len(), 200);
+        assert_eq!(p.dataset_name, "live-window");
+        assert!(p.mean_seq() > 500.0);
+        assert_eq!(p.profiling_seconds, 0.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! Ring reservoir of the most recent item shapes.
+//!
+//! The drift detector works on sketches, but refitting the `Estimator`'s
+//! shape distribution (Eq 1's `D`) needs concrete samples. This reservoir
+//! keeps the last `capacity` shapes of the batch stream in a fixed ring —
+//! deterministic, allocation-free after warm-up, and exactly the
+//! "recent distribution" a replan should optimize for (a classical
+//! random-replacement reservoir would keep a uniform sample of *all*
+//! history, which is precisely wrong under drift).
+
+use crate::data::item::ItemShape;
+
+#[derive(Clone, Debug)]
+pub struct ShapeReservoir {
+    capacity: usize,
+    buf: Vec<ItemShape>,
+    /// Next slot to overwrite once full.
+    next: usize,
+}
+
+impl ShapeReservoir {
+    pub fn new(capacity: usize) -> ShapeReservoir {
+        assert!(capacity >= 1, "reservoir capacity must be >= 1");
+        ShapeReservoir { capacity, buf: Vec::with_capacity(capacity), next: 0 }
+    }
+
+    pub fn push(&mut self, s: &ItemShape) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(*s);
+        } else {
+            self.buf[self.next] = *s;
+            self.next = (self.next + 1) % self.capacity;
+        }
+    }
+
+    pub fn extend(&mut self, shapes: &[ItemShape]) {
+        for s in shapes {
+            self.push(s);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// The retained shapes in ring-storage order (deterministic for a
+    /// given stream; the Eq-1 refinement is order-sensitive only in its
+    /// floating-point summation, so a stable order keeps replans
+    /// bit-reproducible).
+    pub fn shapes(&self) -> &[ItemShape] {
+        &self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape(seq: u32) -> ItemShape {
+        ItemShape { units: 1, llm_seq: seq, source: 0 }
+    }
+
+    #[test]
+    fn fills_then_overwrites_oldest() {
+        let mut r = ShapeReservoir::new(3);
+        for i in 1..=3 {
+            r.push(&shape(i));
+        }
+        assert_eq!(r.len(), 3);
+        r.push(&shape(4)); // overwrites slot 0 (the oldest)
+        let seqs: Vec<u32> = r.shapes().iter().map(|s| s.llm_seq).collect();
+        assert_eq!(seqs, vec![4, 2, 3]);
+        r.push(&shape(5));
+        let seqs: Vec<u32> = r.shapes().iter().map(|s| s.llm_seq).collect();
+        assert_eq!(seqs, vec![4, 5, 3]);
+    }
+
+    #[test]
+    fn retains_exactly_the_last_capacity_items() {
+        let mut r = ShapeReservoir::new(8);
+        let batch: Vec<ItemShape> = (1..=20).map(shape).collect();
+        r.extend(&batch);
+        assert_eq!(r.len(), 8);
+        let mut seqs: Vec<u32> = r.shapes().iter().map(|s| s.llm_seq).collect();
+        seqs.sort_unstable();
+        assert_eq!(seqs, (13..=20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn deterministic_for_a_given_stream() {
+        let batch: Vec<ItemShape> = (1..=50).map(shape).collect();
+        let mut a = ShapeReservoir::new(16);
+        let mut b = ShapeReservoir::new(16);
+        a.extend(&batch);
+        b.extend(&batch);
+        assert_eq!(a.shapes(), b.shapes());
+    }
+}

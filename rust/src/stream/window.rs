@@ -1,0 +1,413 @@
+//! Sliding-window shape statistics over the incoming batch stream.
+//!
+//! The profiling engine characterizes the dataset *once*, offline; this
+//! module keeps the same characterization **live**: every global batch is
+//! summarized into exact integer aggregates (item/token sums per source
+//! plus mergeable log-binned quantile sketches for the encoder-unit and
+//! LLM-sequence axes), and a [`ShapeWindow`] maintains the aggregate over
+//! the last `W` batches by merging the new batch and un-merging the
+//! evicted one.
+//!
+//! Everything stored is an integer, so merge followed by unmerge is
+//! *exact* — the running window aggregate is bit-identical to a
+//! from-scratch recompute over the retained batches after any
+//! push/evict sequence (a property test below enforces this). Derived
+//! f64 statistics (means, quantiles, mixture shares) are pure functions
+//! of those integers, which is what makes the whole drift path
+//! deterministic across thread counts.
+
+use crate::data::item::ItemShape;
+use std::collections::VecDeque;
+
+/// Sketch resolution: two sub-bins per power of two of the value range
+/// (`u32` values ⇒ 32 octaves ⇒ 64 bins). Each bin spans a 1.5×/1.33×
+/// geometric slice — quantile estimates are within a few percent, ample
+/// for drift detection.
+pub const SKETCH_BINS: usize = 64;
+
+/// Fixed per-source slot count (Table 2 has five sources; headroom for
+/// synthetic scenario mixes).
+pub const MAX_SOURCES: usize = 16;
+
+/// Log-spaced bin index of a positive value: `2·⌊log2 v⌋` plus one if `v`
+/// is past the octave's geometric midpoint (`1.5·2^l`). Pure integer math
+/// — no floating point on the ingest path.
+#[inline]
+pub fn bin_of(v: u32) -> usize {
+    debug_assert!(v >= 1, "bin_of(0)");
+    let l = 31 - v.leading_zeros() as usize;
+    let sub = if l == 0 {
+        0
+    } else {
+        usize::from((v as u64) >= (3u64 << (l - 1)))
+    };
+    2 * l + sub
+}
+
+/// `[lo, hi)` value range covered by bin `idx` (for quantile readout).
+#[inline]
+fn bin_edges(idx: usize) -> (f64, f64) {
+    let base = (1u64 << (idx / 2)) as f64;
+    if idx % 2 == 0 {
+        (base, base * 1.5)
+    } else {
+        (base * 1.5, base * 2.0)
+    }
+}
+
+/// Linear-interpolated quantile estimate from sketch counts.
+fn sketch_quantile(counts: &[u64], total: u64, q: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&q), "quantile out of range: {q}");
+    if total == 0 {
+        return 0.0;
+    }
+    let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut acc = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        if acc + c >= target {
+            let (lo, hi) = bin_edges(i);
+            let frac = (target - acc) as f64 / c as f64;
+            return lo + (hi - lo) * frac;
+        }
+        acc += c;
+    }
+    // Unreachable when `total` matches the counts; safe fallback.
+    bin_edges(counts.len() - 1).1
+}
+
+/// Exact integer shape aggregates of one batch (or a merged window of
+/// batches): per-modality/source item and token summaries plus the two
+/// mergeable quantile sketches.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShapeStats {
+    /// Items summarized.
+    pub items: u64,
+    /// Items with at least one encoder unit (the units sketch's total).
+    pub unit_items: u64,
+    /// Items with a non-empty LLM sequence (the seq sketch's total).
+    pub seq_items: u64,
+    /// Total encoder units (tiles / frames / audio-seconds).
+    pub units_sum: u64,
+    /// Total packed LLM tokens.
+    pub seq_sum: u64,
+    /// Item counts per Table-2 source slot.
+    pub source_items: Vec<u64>,
+    /// LLM token sums per source slot (token-weighted mixture view).
+    pub source_tokens: Vec<u64>,
+    /// Log-binned sketch of per-item LLM sequence lengths.
+    pub seq_sketch: Vec<u64>,
+    /// Log-binned sketch of per-item encoder unit counts.
+    pub units_sketch: Vec<u64>,
+}
+
+impl Default for ShapeStats {
+    fn default() -> Self {
+        ShapeStats {
+            items: 0,
+            unit_items: 0,
+            seq_items: 0,
+            units_sum: 0,
+            seq_sum: 0,
+            source_items: vec![0; MAX_SOURCES],
+            source_tokens: vec![0; MAX_SOURCES],
+            seq_sketch: vec![0; SKETCH_BINS],
+            units_sketch: vec![0; SKETCH_BINS],
+        }
+    }
+}
+
+impl ShapeStats {
+    /// Summarize one batch from scratch.
+    pub fn of_batch(shapes: &[ItemShape]) -> ShapeStats {
+        let mut s = ShapeStats::default();
+        for shape in shapes {
+            s.add_item(shape);
+        }
+        s
+    }
+
+    /// Fold one item into the aggregate.
+    pub fn add_item(&mut self, s: &ItemShape) {
+        self.items += 1;
+        self.units_sum += s.units as u64;
+        self.seq_sum += s.llm_seq as u64;
+        let src = (s.source as usize).min(MAX_SOURCES - 1);
+        self.source_items[src] += 1;
+        self.source_tokens[src] += s.llm_seq as u64;
+        if s.llm_seq >= 1 {
+            self.seq_items += 1;
+            self.seq_sketch[bin_of(s.llm_seq)] += 1;
+        }
+        if s.units >= 1 {
+            self.unit_items += 1;
+            self.units_sketch[bin_of(s.units)] += 1;
+        }
+    }
+
+    /// Add another aggregate (sketches are mergeable by construction).
+    pub fn merge(&mut self, other: &ShapeStats) {
+        self.items += other.items;
+        self.unit_items += other.unit_items;
+        self.seq_items += other.seq_items;
+        self.units_sum += other.units_sum;
+        self.seq_sum += other.seq_sum;
+        for (a, b) in self.source_items.iter_mut().zip(&other.source_items) {
+            *a += b;
+        }
+        for (a, b) in self.source_tokens.iter_mut().zip(&other.source_tokens) {
+            *a += b;
+        }
+        for (a, b) in self.seq_sketch.iter_mut().zip(&other.seq_sketch) {
+            *a += b;
+        }
+        for (a, b) in self.units_sketch.iter_mut().zip(&other.units_sketch) {
+            *a += b;
+        }
+    }
+
+    /// Exact inverse of [`ShapeStats::merge`] — integer subtraction, so an
+    /// evicted batch leaves no residue.
+    pub fn unmerge(&mut self, other: &ShapeStats) {
+        self.items -= other.items;
+        self.unit_items -= other.unit_items;
+        self.seq_items -= other.seq_items;
+        self.units_sum -= other.units_sum;
+        self.seq_sum -= other.seq_sum;
+        for (a, b) in self.source_items.iter_mut().zip(&other.source_items) {
+            *a -= b;
+        }
+        for (a, b) in self.source_tokens.iter_mut().zip(&other.source_tokens) {
+            *a -= b;
+        }
+        for (a, b) in self.seq_sketch.iter_mut().zip(&other.seq_sketch) {
+            *a -= b;
+        }
+        for (a, b) in self.units_sketch.iter_mut().zip(&other.units_sketch) {
+            *a -= b;
+        }
+    }
+
+    pub fn mean_units(&self) -> f64 {
+        if self.items == 0 {
+            0.0
+        } else {
+            self.units_sum as f64 / self.items as f64
+        }
+    }
+
+    pub fn mean_seq(&self) -> f64 {
+        if self.items == 0 {
+            0.0
+        } else {
+            self.seq_sum as f64 / self.items as f64
+        }
+    }
+
+    /// Estimated `q`-quantile of per-item LLM sequence lengths.
+    pub fn seq_quantile(&self, q: f64) -> f64 {
+        sketch_quantile(&self.seq_sketch, self.seq_items, q)
+    }
+
+    /// Estimated `q`-quantile of per-item encoder unit counts.
+    pub fn units_quantile(&self, q: f64) -> f64 {
+        sketch_quantile(&self.units_sketch, self.unit_items, q)
+    }
+
+    /// Item-count share per source slot (zeros when empty).
+    pub fn source_shares(&self) -> Vec<f64> {
+        if self.items == 0 {
+            return vec![0.0; MAX_SOURCES];
+        }
+        self.source_items
+            .iter()
+            .map(|&c| c as f64 / self.items as f64)
+            .collect()
+    }
+}
+
+/// Sliding window of per-batch [`ShapeStats`] with an exactly-maintained
+/// running aggregate: push is O(batch + bins), eviction is O(bins) — O(1)
+/// amortized per item, no per-item allocation beyond the batch summary.
+#[derive(Clone, Debug)]
+pub struct ShapeWindow {
+    capacity: usize,
+    batches: VecDeque<ShapeStats>,
+    agg: ShapeStats,
+}
+
+impl ShapeWindow {
+    /// Window over the last `capacity` global batches.
+    pub fn new(capacity: usize) -> ShapeWindow {
+        assert!(capacity >= 1, "window capacity must be >= 1");
+        ShapeWindow {
+            capacity,
+            batches: VecDeque::with_capacity(capacity + 1),
+            agg: ShapeStats::default(),
+        }
+    }
+
+    /// Ingest one global batch, evicting the oldest batch once full.
+    pub fn push(&mut self, shapes: &[ItemShape]) {
+        let s = ShapeStats::of_batch(shapes);
+        self.agg.merge(&s);
+        self.batches.push_back(s);
+        if self.batches.len() > self.capacity {
+            let old = self.batches.pop_front().expect("window non-empty");
+            self.agg.unmerge(&old);
+        }
+    }
+
+    /// True once the window holds `capacity` batches.
+    pub fn is_full(&self) -> bool {
+        self.batches.len() == self.capacity
+    }
+
+    /// Batches currently held.
+    pub fn batches(&self) -> usize {
+        self.batches.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// The running window aggregate.
+    pub fn stats(&self) -> &ShapeStats {
+        &self.agg
+    }
+
+    /// From-scratch merge of the retained batches — the oracle the
+    /// incremental aggregate is property-tested against.
+    pub fn recompute(&self) -> ShapeStats {
+        let mut s = ShapeStats::default();
+        for b in &self.batches {
+            s.merge(b);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn item(g: &mut crate::util::prop::Gen) -> ItemShape {
+        ItemShape {
+            units: g.rng.below(65) as u32,
+            llm_seq: 1 + g.rng.below(40_000) as u32,
+            source: g.rng.below(6) as u8,
+        }
+    }
+
+    #[test]
+    fn bin_of_is_monotone_and_in_range() {
+        let mut prev = 0usize;
+        for v in 1u32..5000 {
+            let b = bin_of(v);
+            assert!(b >= prev, "bin went backwards at {v}");
+            assert!(b < SKETCH_BINS);
+            prev = b;
+        }
+        assert_eq!(bin_of(1), 0);
+        assert_eq!(bin_of(u32::MAX), SKETCH_BINS - 1);
+        // Values land inside their bin's edges.
+        for v in [1u32, 2, 3, 7, 729, 4096, 50_000] {
+            let (lo, hi) = bin_edges(bin_of(v));
+            assert!(lo <= v as f64 && (v as f64) < hi, "{v} outside [{lo},{hi})");
+        }
+    }
+
+    #[test]
+    fn sketch_quantiles_track_exact_quantiles() {
+        forall("sketch quantile accuracy", 50, |g| {
+            let n = 200 + g.rng.index(800);
+            let vals: Vec<u32> =
+                (0..n).map(|_| 1 + g.rng.lognormal(7.0, 0.8).round() as u32).collect();
+            let shapes: Vec<ItemShape> = vals
+                .iter()
+                .map(|&v| ItemShape { units: 1, llm_seq: v, source: 0 })
+                .collect();
+            let s = ShapeStats::of_batch(&shapes);
+            let mut sorted: Vec<f64> = vals.iter().map(|&v| v as f64).collect();
+            sorted.sort_by(|a, b| a.partial_cmp(b).expect("no NaN"));
+            let mut ok = true;
+            for q in [0.25, 0.5, 0.9] {
+                let exact = crate::util::stats::quantile_sorted(&sorted, q);
+                let est = s.seq_quantile(q);
+                // One geometric bin (≤1.5×) of resolution either way.
+                if est > exact * 1.6 || est < exact / 1.6 {
+                    ok = false;
+                }
+            }
+            (format!("n={n}"), ok)
+        });
+    }
+
+    #[test]
+    fn window_aggregate_bit_matches_recompute() {
+        // The satellite property: after arbitrary push/evict sequences the
+        // running aggregate equals both the from-scratch merge of retained
+        // batch summaries and a direct re-summarization of the retained
+        // raw shapes — exactly, field for field (all-integer state).
+        forall("window merge/evict exact", 80, |g| {
+            let cap = g.size(6);
+            let mut w = ShapeWindow::new(cap);
+            let mut kept: std::collections::VecDeque<Vec<ItemShape>> =
+                std::collections::VecDeque::new();
+            let pushes = g.size(14);
+            for _ in 0..pushes {
+                let n = g.size(48);
+                let batch: Vec<ItemShape> = (0..n).map(|_| item(g)).collect();
+                w.push(&batch);
+                kept.push_back(batch);
+                if kept.len() > cap {
+                    kept.pop_front();
+                }
+            }
+            let mut fresh = ShapeStats::default();
+            for b in &kept {
+                for s in b {
+                    fresh.add_item(s);
+                }
+            }
+            let ok = *w.stats() == fresh && w.recompute() == fresh;
+            (format!("cap={cap} pushes={pushes}"), ok)
+        });
+    }
+
+    #[test]
+    fn window_evicts_oldest_batches() {
+        let mut w = ShapeWindow::new(2);
+        let old = vec![ItemShape { units: 1, llm_seq: 100, source: 0 }; 10];
+        let new = vec![ItemShape { units: 1, llm_seq: 100, source: 1 }; 10];
+        w.push(&old);
+        assert!(!w.is_full());
+        w.push(&new);
+        assert!(w.is_full());
+        w.push(&new);
+        // The source-0 batch fell out of the window.
+        assert_eq!(w.stats().source_items[0], 0);
+        assert_eq!(w.stats().source_items[1], 20);
+        assert_eq!(w.stats().items, 20);
+    }
+
+    #[test]
+    fn derived_statistics_are_sane() {
+        let shapes: Vec<ItemShape> = (1..=100)
+            .map(|i| ItemShape { units: i % 7, llm_seq: 100 * i, source: (i % 3) as u8 })
+            .collect();
+        let s = ShapeStats::of_batch(&shapes);
+        assert_eq!(s.items, 100);
+        assert!((s.mean_seq() - 5050.0).abs() < 1e-9);
+        let shares = s.source_shares();
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // Median of 100·{1..100} ≈ 5050 within sketch resolution.
+        let med = s.seq_quantile(0.5);
+        assert!((3_500.0..7_500.0).contains(&med), "median {med}");
+        assert!(s.seq_quantile(0.9) > med);
+    }
+}

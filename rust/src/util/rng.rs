@@ -136,7 +136,9 @@ impl Rng {
         (mu + sigma * self.normal()).exp()
     }
 
-    /// Sample an index from unnormalized non-negative weights.
+    /// Sample an index from unnormalized non-negative weights. Indices
+    /// with zero weight are never returned (scheduled mixtures rely on
+    /// this to drop a source completely).
     pub fn categorical(&mut self, weights: &[f64]) -> usize {
         let total: f64 = weights.iter().sum();
         assert!(total > 0.0, "categorical: zero total weight");
@@ -147,7 +149,13 @@ impl Rng {
                 return i;
             }
         }
-        weights.len() - 1
+        // Floating-point rounding can let x survive the subtraction loop;
+        // fall back to the last *positively weighted* index so a
+        // zero-weight tail entry can never be emitted.
+        weights
+            .iter()
+            .rposition(|&w| w > 0.0)
+            .expect("total > 0 implies a positive weight")
     }
 
     /// Fisher–Yates shuffle.
@@ -229,6 +237,18 @@ mod tests {
         }
         let frac = ones as f64 / 40_000.0;
         assert!((frac - 0.75).abs() < 0.02, "frac {frac}");
+    }
+
+    #[test]
+    fn categorical_never_returns_zero_weight_entries() {
+        // Zero-weight slots — including a zero tail, which the fallback
+        // branch must skip — are never sampled.
+        let mut r = Rng::new(31);
+        let w = [2.0, 0.0, 1.0, 0.0];
+        for _ in 0..20_000 {
+            let i = r.categorical(&w);
+            assert!(i == 0 || i == 2, "sampled zero-weight index {i}");
+        }
     }
 
     #[test]

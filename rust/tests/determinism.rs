@@ -11,6 +11,7 @@
 
 use dflop::data::dataset::Dataset;
 use dflop::model::catalog::{llama3, llava_ov};
+use dflop::optimizer::plan::Theta;
 use dflop::optimizer::search::{optimize, OptimizerInputs};
 use dflop::perfmodel::{ClusterSpec, Truth};
 use dflop::profiling::backend::SimBackend;
@@ -19,6 +20,7 @@ use dflop::pipeline::{simulate, simulate_reference, Route, SimWorkspace};
 use dflop::scheduler::ilp;
 use dflop::scheduler::lpt::ItemCost;
 use dflop::sim::{run_cells, Cell, RunConfig, SystemKind};
+use dflop::stream::replan::{ReplanConfig, ReplanContext, Replanner};
 use dflop::util::parallel::set_max_threads;
 use dflop::util::rng::Rng;
 use std::sync::Mutex;
@@ -170,6 +172,78 @@ fn sim_workspace_reuse_identical_to_fresh_runs() {
         assert_eq!(ws.timeline(), &fresh.timeline[..]);
         assert_eq!(ws.timeline().len(), oracle.timeline.len());
     }
+}
+
+#[test]
+fn drift_replans_identical_across_thread_counts() {
+    let _g = width_guard();
+    // The stream pipeline end to end: curriculum batches → window/sketch
+    // aggregation → drift confirmation → warm-started optimizer replan
+    // (the part that fans out over the pool). Every event — trigger
+    // iteration, drift statistics, replacement θ, Eq-1 score bits — must
+    // be identical at --threads 1 and 8. The Online Scheduler's ILP is
+    // deliberately not in this loop (its deadline incumbents are
+    // wall-clock-dependent, as documented); the replan path itself is
+    // budget-free.
+    let m = llava_ov(llama3("8b"));
+    let cluster = ClusterSpec::hgx_a100(1);
+    let mut backend = SimBackend::new(Truth::new(cluster));
+    let profile = ModelProfiler::new(&mut backend, ProfilerGrids::standard(8)).profile(&m);
+    let data = profile_data(&m, &mut Dataset::curriculum(7 ^ 0xDA7A), 256);
+    let rctx = ReplanContext {
+        m: &m,
+        profile: &profile,
+        n_gpus: cluster.total_gpus(),
+        gpus_per_node: cluster.gpus_per_node,
+        mem_capacity: cluster.gpu.mem_bytes,
+        gbs: 48,
+    };
+    let inp = rctx.inputs(&data);
+    type Fired = Vec<(usize, Theta, Theta, bool, u64, u64, u64)>;
+    let run = |theta0: Theta| -> (Theta, Fired) {
+        let mut cfg = ReplanConfig {
+            window_batches: 4,
+            cooldown: 4,
+            ..ReplanConfig::default()
+        };
+        cfg.drift.confirm = 1;
+        let mut rp = Replanner::new(&data, theta0, cfg);
+        let mut ds = Dataset::curriculum(7);
+        for _ in 0..16 {
+            let batch = ds.shaped_batch(&m, 48);
+            rp.observe_batch(&rctx, &batch);
+        }
+        let events = rp
+            .events
+            .iter()
+            .map(|e| {
+                (
+                    e.iteration,
+                    e.old,
+                    e.new,
+                    e.swapped,
+                    e.expected_makespan.to_bits(),
+                    e.stat.quantile_dist.to_bits(),
+                    e.stat.mix_tv.to_bits(),
+                )
+            })
+            .collect();
+        (rp.theta, events)
+    };
+    set_max_threads(1);
+    let theta0_serial = optimize(&inp).expect("feasible").theta;
+    let serial = run(theta0_serial);
+    set_max_threads(8);
+    let theta0_parallel = optimize(&inp).expect("feasible").theta;
+    let parallel = run(theta0_parallel);
+    set_max_threads(0);
+    assert_eq!(theta0_serial, theta0_parallel);
+    assert!(
+        !serial.1.is_empty(),
+        "curriculum ramp must confirm at least one drift"
+    );
+    assert_eq!(serial.1, parallel.1, "replan event streams drifted");
+    assert_eq!(serial.0, parallel.0, "final plans drifted");
 }
 
 #[test]
