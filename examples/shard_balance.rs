@@ -1,0 +1,124 @@
+//! Scenario: sharded data-parallel training — the `shard` subsystem end to
+//! end. Runs the per-shard heterogeneity scenarios (graded skew, one
+//! laggard, a mid-run hot shard), the all-shards curriculum ramp (one
+//! *global* replan for the whole DP group), and the homogeneous control,
+//! each under static sharding and under cross-shard rebalancing, and
+//! emits the comparison both as a table and as a machine-readable JSON
+//! artifact (CI uploads it as `SHARD_BALANCE`).
+//!
+//!   cargo run --release --offline --example shard_balance -- \
+//!       [--nodes 1] [--gbs 64] [--iters 16] [--seed 42] [--dp-shards 4] \
+//!       [--out SHARD_BALANCE.json]
+
+use dflop::figures::{shard_grid_with, FigOpts, SHARD_MIN_ITERS};
+use dflop::sim::RunResult;
+use dflop::util::cli::{Args, Spec};
+use dflop::util::json::{emit, Json};
+use dflop::util::table::{f, speedup, Table};
+use std::collections::BTreeMap;
+
+fn main() -> dflop::util::error::Result<()> {
+    let spec = Spec {
+        valued: vec!["nodes", "gbs", "iters", "seed", "dp-shards", "out", "threads"],
+        boolean: vec![],
+    };
+    let args = Args::parse(std::env::args().skip(1), &spec)?;
+    dflop::util::parallel::set_max_threads(args.get_usize("threads", 0)?);
+    let o = FigOpts {
+        nodes: args.get_usize("nodes", 1)?,
+        gbs: args.get_usize("gbs", 64)?,
+        iters: args.get_usize("iters", 16)?,
+        seed: args.get_u64("seed", 42)?,
+    };
+    let dp_shards = args.get_usize("dp-shards", 4)?;
+    let out_path = args.get_or("out", "SHARD_BALANCE.json");
+
+    let rows = shard_grid_with(&o, dp_shards);
+
+    let mut t = Table::new(
+        "shard balance — static sharding vs shard::balance (LLaVA-OV / Llama-3 8B)",
+        &[
+            "scenario",
+            "static step (s)",
+            "DFLOP step (s)",
+            "gain",
+            "gap static (s)",
+            "gap DFLOP (s)",
+            "migrations",
+            "replans",
+        ],
+    );
+    let mut json_rows = Vec::new();
+    for (key, stat, rebal) in &rows {
+        t.row(vec![
+            key.to_string(),
+            f(stat.mean_iteration_time, 3),
+            f(rebal.mean_iteration_time, 3),
+            speedup(stat.mean_iteration_time / rebal.mean_iteration_time),
+            f(stat.mean_straggler_gap(), 3),
+            f(rebal.mean_straggler_gap(), 3),
+            format!("{}", rebal.migrations),
+            format!("{}", rebal.replans),
+        ]);
+        json_rows.push(row_json(key, stat, rebal));
+    }
+    t.print();
+
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), Json::Str("dflop-shard-balance-v1".into()));
+    doc.insert("model".to_string(), Json::Str("llava-ov/llama3-8b".into()));
+    doc.insert("nodes_per_replica".to_string(), Json::Num(o.nodes as f64));
+    doc.insert("dp_shards".to_string(), Json::Num(dp_shards as f64));
+    doc.insert("gbs".to_string(), Json::Num(o.gbs as f64));
+    doc.insert(
+        "iters".to_string(),
+        Json::Num(o.iters.max(SHARD_MIN_ITERS) as f64),
+    );
+    doc.insert("seed".to_string(), Json::Num(o.seed as f64));
+    doc.insert("rows".to_string(), Json::Arr(json_rows));
+    std::fs::write(&out_path, emit(&Json::Obj(doc)) + "\n")?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
+fn row_json(scenario: &str, stat: &RunResult, rebal: &RunResult) -> Json {
+    let events: Vec<Json> = rebal
+        .replan_events
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("iteration", Json::Num(e.iteration as f64)),
+                ("score", Json::Num(e.stat.score())),
+                ("swapped", Json::Bool(e.swapped)),
+                ("old_theta", Json::str(format!("{}", e.old))),
+                ("new_theta", Json::str(format!("{}", e.new))),
+            ])
+        })
+        .collect();
+    let gaps: Vec<Json> = rebal
+        .straggler_gaps
+        .iter()
+        .map(|&g| Json::Num(g))
+        .collect();
+    Json::obj(vec![
+        ("scenario", Json::str(scenario)),
+        ("static_step_s", Json::Num(stat.mean_iteration_time)),
+        ("rebalanced_step_s", Json::Num(rebal.mean_iteration_time)),
+        (
+            "gain",
+            Json::Num(stat.mean_iteration_time / rebal.mean_iteration_time),
+        ),
+        ("static_gap_s", Json::Num(stat.mean_straggler_gap())),
+        ("rebalanced_gap_s", Json::Num(rebal.mean_straggler_gap())),
+        ("static_tflops_per_gpu", Json::Num(stat.per_gpu_throughput / 1e12)),
+        (
+            "rebalanced_tflops_per_gpu",
+            Json::Num(rebal.per_gpu_throughput / 1e12),
+        ),
+        ("migrations", Json::Num(rebal.migrations as f64)),
+        ("replans", Json::Num(rebal.replans as f64)),
+        ("theta", Json::str(format!("{}", rebal.theta))),
+        ("rebalanced_gaps_s", Json::Arr(gaps)),
+        ("events", Json::Arr(events)),
+    ])
+}

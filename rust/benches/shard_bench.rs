@@ -1,0 +1,105 @@
+//! Bench: the shard subsystem's per-step costs.
+//!
+//! The merge + skew gate run on *every* training step and must be
+//! negligible next to a pipeline sim (µs); the bounded-migration
+//! rebalance runs only while the gate reads skewed but still sits on the
+//! step's critical path; the full sharded step (4 replicas fanned over
+//! the pool) is the end-to-end unit the trainer repeats.
+mod common;
+use common::bench;
+use dflop::data::item::ItemShape;
+use dflop::model::catalog::{llama3, llava_ov};
+use dflop::perfmodel::{ClusterSpec, Truth};
+use dflop::profiling::backend::SimBackend;
+use dflop::profiling::engine::{ModelProfiler, ProfilerGrids};
+use dflop::profiling::estimator::Estimator;
+use dflop::scheduler::lpt::ItemCost;
+use dflop::shard::agg::{merge_shard_stats, ShardWindows};
+use dflop::shard::balance::{rebalance, BalanceConfig};
+use dflop::shard::partition::ShardedDataset;
+use dflop::shard::sync::{cross_shard_allreduce, lpt_shard_buckets, simulate_shards, step_barrier};
+use dflop::stream::window::ShapeStats;
+
+fn main() {
+    println!("== shard_bench ==");
+    let mut results = Vec::new();
+    let m = llava_ov(llama3("8b"));
+    let shards = if common::quick() { 4 } else { 8 };
+
+    // Per-step aggregation path: per-shard summaries → global merge →
+    // skew gate.
+    let mut sd = ShardedDataset::by_key("skewed-shard", shards, 7).expect("scenario");
+    let counts = ShardedDataset::split_counts(512, shards);
+    let batches = sd.shard_batches(&m, &counts);
+    let per_stats: Vec<ShapeStats> =
+        batches.iter().map(|b| ShapeStats::of_batch(b)).collect();
+    results.push(bench(
+        &format!("merge {shards} shard summaries (512 items total)"),
+        50,
+        || {
+            std::hint::black_box(merge_shard_stats(&per_stats).items);
+        },
+    ));
+    let mut sw = ShardWindows::new(shards, 6);
+    for _ in 0..6 {
+        sw.push(per_stats.clone());
+    }
+    results.push(bench("skew gate (per-shard drift stats vs pooled window)", 50, || {
+        std::hint::black_box(sw.max_skew().expect("full").1.score());
+    }));
+
+    // Rebalance: 512 items, all homes deterministic, graded cost skew.
+    let pooled: Vec<ItemShape> = batches.iter().flatten().copied().collect();
+    let home: Vec<usize> = batches
+        .iter()
+        .enumerate()
+        .flat_map(|(r, b)| std::iter::repeat(r).take(b.len()))
+        .collect();
+    let items: Vec<ItemCost> = pooled
+        .iter()
+        .map(|s| ItemCost {
+            enc: s.units as f64 * 1e-3,
+            llm: s.llm_seq as f64 * 1e-6,
+        })
+        .collect();
+    results.push(bench(
+        &format!("rebalance 512 items across {shards} shards"),
+        20,
+        || {
+            let r = rebalance(&items, &home, shards, &BalanceConfig::default());
+            std::hint::black_box(r.migrations);
+        },
+    ));
+
+    // Full sharded step: per-replica LPT + 1F1B fan-out + barrier.
+    let cluster = ClusterSpec::hgx_a100(1);
+    let truth = Truth::new(cluster);
+    let mut backend = SimBackend::new(truth.clone());
+    let profile = ModelProfiler::new(&mut backend, ProfilerGrids::standard(8)).profile(&m);
+    let est = Estimator::new(&m, &profile.throughput);
+    let theta = dflop::optimizer::plan::Theta {
+        enc: dflop::optimizer::plan::ModPar { tp: 1, pp: 1, dp: 1 },
+        llm: dflop::optimizer::plan::ModPar { tp: 1, pp: 7, dp: 1 },
+        n_mb: 8,
+    };
+    let step_counts = ShardedDataset::split_counts(128, shards);
+    let step_batches = sd.shard_batches(&m, &step_counts);
+    results.push(bench(
+        &format!("sharded step: {shards} replicas, 128 items (LPT + sim + barrier)"),
+        10,
+        || {
+            let buckets: Vec<Vec<Vec<ItemShape>>> = step_batches
+                .iter()
+                .map(|b| lpt_shard_buckets(&est, theta, b))
+                .collect();
+            let per = simulate_shards(&m, &truth, theta, &buckets);
+            let barrier = step_barrier(
+                per.iter().map(|s| s.iteration_time).collect(),
+                cross_shard_allreduce(&m, &truth, theta, shards),
+            );
+            std::hint::black_box(barrier.step_time);
+        },
+    ));
+
+    common::emit_json("shard_bench", &results);
+}

@@ -86,7 +86,11 @@ fn homogeneous_candidates(
             for pp in 2..=rest.min(max_pp) {
                 if rest % pp == 0 {
                     let dp = rest / pp;
-                    if gbs % dp == 0 || dp <= gbs {
+                    // dp | GBS, strictly: a non-dividing dp gives fractional
+                    // items per microbatch, which no homogeneous runtime
+                    // accepts. (An earlier `|| dp <= gbs` escape made this
+                    // constraint vacuous.)
+                    if gbs % dp == 0 {
                         out.push((tp, pp, dp));
                     }
                 }
@@ -242,6 +246,25 @@ mod tests {
         let c = megatron_tune(&m, &truth, 256, 15.0, 3000.0).expect("config");
         let slice = c.theta.llm.tp * (c.theta.llm.pp + 1);
         assert!(slice >= 16, "72B needs a large model-parallel slice: {:?}", c.theta);
+    }
+
+    #[test]
+    fn candidates_require_dp_to_divide_gbs() {
+        // Regression: `gbs % dp == 0 || dp <= gbs` admitted every dp ≤ gbs,
+        // i.e. candidates with fractional items per microbatch. One
+        // 8-GPU node, gbs = 30: dp ∈ {1, 2} only.
+        let cluster = ClusterSpec::hgx_a100(1);
+        let cands = homogeneous_candidates(&cluster, 8, 30);
+        assert!(!cands.is_empty());
+        for &(tp, pp, dp) in &cands {
+            assert_eq!(30 % dp, 0, "dp={dp} does not divide gbs (tp={tp}, pp={pp})");
+        }
+        // The old escape admitted (tp=1, pp=2, dp=4): 30/4 items per group.
+        assert!(cands.iter().all(|&(_, _, dp)| dp != 4));
+        // Divisible batch sizes keep their full candidate set.
+        assert!(homogeneous_candidates(&cluster, 8, 32)
+            .iter()
+            .any(|&(_, _, dp)| dp == 4));
     }
 
     #[test]

@@ -126,6 +126,31 @@ impl Dataset {
         }
     }
 
+    /// Scale the mixture's per-source *base* weights by `mults` — the
+    /// per-shard reweighting `shard::partition` applies. Composes with an
+    /// attached [`MixSchedule`], whose multipliers keep applying on top of
+    /// the scaled base.
+    pub fn reweight(&mut self, mults: &[f64]) {
+        assert_eq!(
+            mults.len(),
+            self.base_weights.len(),
+            "reweight arity must match source count"
+        );
+        assert!(
+            mults.iter().all(|&x| x >= 0.0),
+            "weight multipliers must be non-negative"
+        );
+        for (w, m) in self.base_weights.iter_mut().zip(mults) {
+            *w *= m;
+        }
+        assert!(
+            self.base_weights.iter().sum::<f64>() > 0.0,
+            "reweight zeroed the whole mixture"
+        );
+        self.weights.copy_from_slice(&self.base_weights);
+        self.refresh_weights();
+    }
+
     /// Total corpus size implied by the mixture (Table 2's sample counts).
     pub fn corpus_size(&self) -> u64 {
         self.sources.iter().map(|s| s.samples).sum()
@@ -274,5 +299,32 @@ mod tests {
     #[test]
     fn corpus_size_matches_paper_total() {
         assert_eq!(Dataset::mixed(1).corpus_size(), 185_000);
+    }
+
+    #[test]
+    fn reweight_shifts_mixture_and_composes_with_schedule() {
+        // Zeroing everything but the video source leaves a video-only
+        // stream.
+        let mut d = Dataset::mixed(5);
+        d.reweight(&[0.0, 0.0, 0.0, 0.0, 1.0]);
+        assert!(d.batch(500).iter().all(|i| i.source == 4));
+
+        // A reweighted *scheduled* mixture still follows its schedule: the
+        // modality-dropout cut at batch 10 kills video even after a
+        // video-boosting reweight.
+        let mut d = Dataset::modality_dropout(5);
+        d.reweight(&[1.0, 1.0, 1.0, 1.0, 3.0]);
+        let early = d.batch(500);
+        assert!(early.iter().filter(|i| i.source == 4).count() > 200);
+        for _ in 1..10 {
+            d.batch(16);
+        }
+        assert!(d.batch(500).iter().all(|i| i.source != 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn reweight_rejects_wrong_arity() {
+        Dataset::mixed(1).reweight(&[1.0, 1.0]);
     }
 }

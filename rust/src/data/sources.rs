@@ -262,6 +262,95 @@ pub fn modality_dropout_schedule() -> MixSchedule {
     ])
 }
 
+/// Per-shard mixture description for the sharded data-parallel layer
+/// (`shard::partition`): every DP rank draws from its own reweighted
+/// Table-2 mixture, optionally with its own [`MixSchedule`]. This is the
+/// *cross-replica* analogue of the per-batch heterogeneity above — when
+/// shards differ, the allreduce barrier runs at the pace of the slowest
+/// replica, which is the skew `shard::balance` exists to remove.
+#[derive(Clone, Debug)]
+pub struct ShardScenario {
+    pub name: &'static str,
+    /// `mults[r]` = shard r's per-source weight multipliers over the
+    /// Table-2 base weights (all rows have Table-2 arity).
+    pub mults: Vec<Vec<f64>>,
+    /// Optional per-shard schedule on top of the static multipliers
+    /// (the hot-shard burst).
+    pub schedules: Vec<Option<MixSchedule>>,
+}
+
+/// Graded skew: shard 0 is video-dominated (expensive long-sequence
+/// items), the last shard is short-image-dominated, with a linear tilt in
+/// between — a stationary heterogeneity that makes static sharding pay a
+/// persistent straggler gap every step.
+pub fn skewed_shard_scenario(shards: usize) -> ShardScenario {
+    assert!(shards >= 1, "scenario needs at least one shard");
+    let mults = (0..shards)
+        .map(|r| {
+            // t = 0 at the video-heavy end, 1 at the image-heavy end.
+            let t = if shards > 1 { r as f64 / (shards - 1) as f64 } else { 0.5 };
+            vec![
+                0.3 + 1.7 * t, // LLaVA-Wild
+                0.3 + 1.7 * t, // AI2D
+                0.3 + 1.2 * t, // Infographic VQA
+                0.5 + 0.5 * t, // M4-Instruct
+                4.0 - 3.95 * t, // LLaVA-Video
+            ]
+        })
+        .collect();
+    ShardScenario {
+        name: "skewed-shard",
+        mults,
+        schedules: vec![None; shards],
+    }
+}
+
+/// One persistent laggard: shard 0 draws almost exclusively video while
+/// every other shard sees a slightly video-light mixture — the single
+/// slow replica that gates the whole step under static sharding.
+pub fn laggard_shard_scenario(shards: usize) -> ShardScenario {
+    assert!(shards >= 1, "scenario needs at least one shard");
+    let mut mults = vec![vec![1.2, 1.2, 1.2, 1.2, 0.3]; shards];
+    mults[0] = vec![0.1, 0.1, 0.1, 0.2, 6.0];
+    ShardScenario {
+        name: "laggard-shard",
+        mults,
+        schedules: vec![None; shards],
+    }
+}
+
+/// One shard turns hot mid-run: all shards start on the plain Table-2
+/// mixture, then shard 0's web-scrape pipeline hands it a persistent
+/// video dump from batch 8 on. The pooled distribution barely moves (the
+/// shift is diluted by 1/shards), so the *global* drift aggregation stays
+/// quiet while the skew gate + rebalancer absorb the hot shard.
+pub fn hot_shard_scenario(shards: usize) -> ShardScenario {
+    assert!(shards >= 1, "scenario needs at least one shard");
+    let base = vec![1.0; 5];
+    let mut schedules: Vec<Option<MixSchedule>> = vec![None; shards];
+    schedules[0] = Some(MixSchedule::new(vec![
+        (0, base.clone()),
+        (8, vec![0.15, 0.15, 0.15, 0.3, 6.0]),
+    ]));
+    ShardScenario {
+        name: "hot-shard",
+        mults: vec![base; shards],
+        schedules,
+    }
+}
+
+/// The control: statistically identical shards (independent streams of
+/// the same Table-2 mixture). The sharded system must stay completely
+/// quiet here — zero migrations, zero replans.
+pub fn homogeneous_shard_scenario(shards: usize) -> ShardScenario {
+    assert!(shards >= 1, "scenario needs at least one shard");
+    ShardScenario {
+        name: "homogeneous-shard",
+        mults: vec![vec![1.0; 5]; shards],
+        schedules: vec![None; shards],
+    }
+}
+
 /// Fig 9's audio workload (Qwen2-Audio): speech clips.
 pub fn audio_sources() -> Vec<Source> {
     vec![Source {
@@ -320,6 +409,44 @@ mod tests {
     #[should_panic(expected = "strictly increasing")]
     fn schedule_rejects_unsorted_segments() {
         MixSchedule::new(vec![(3, vec![1.0]), (3, vec![1.0])]);
+    }
+
+    #[test]
+    fn shard_scenarios_have_table2_arity_and_expected_shape() {
+        let n = table2_sources().len();
+        for shards in [1usize, 2, 4, 8] {
+            for sc in [
+                skewed_shard_scenario(shards),
+                laggard_shard_scenario(shards),
+                hot_shard_scenario(shards),
+                homogeneous_shard_scenario(shards),
+            ] {
+                assert_eq!(sc.mults.len(), shards, "{}", sc.name);
+                assert_eq!(sc.schedules.len(), shards, "{}", sc.name);
+                for m in &sc.mults {
+                    assert_eq!(m.len(), n, "{}", sc.name);
+                    assert!(m.iter().all(|&x| x >= 0.0) && m.iter().sum::<f64>() > 0.0);
+                }
+            }
+        }
+        // The graded tilt really tilts: video weight strictly decreases
+        // across shards while the image weights grow.
+        let sc = skewed_shard_scenario(4);
+        let video: Vec<f64> = sc.mults.iter().map(|m| m[4]).collect();
+        assert!(video.windows(2).all(|w| w[0] > w[1]), "{video:?}");
+        let wild: Vec<f64> = sc.mults.iter().map(|m| m[0]).collect();
+        assert!(wild.windows(2).all(|w| w[0] < w[1]), "{wild:?}");
+        // Laggard: exactly one heavy shard.
+        let sc = laggard_shard_scenario(4);
+        assert!(sc.mults[0][4] > 4.0);
+        assert!(sc.mults[1..].iter().all(|m| m[4] < 1.0));
+        // Hot shard: only shard 0 is scheduled, and its burst raises the
+        // video multiplier.
+        let sc = hot_shard_scenario(4);
+        assert!(sc.schedules[0].is_some());
+        assert!(sc.schedules[1..].iter().all(Option::is_none));
+        let sched = sc.schedules[0].as_ref().expect("hot schedule");
+        assert!(sched.multipliers(100)[4] > sched.multipliers(0)[4]);
     }
 
     #[test]

@@ -29,6 +29,7 @@ use crate::profiling::backend::SimBackend;
 use crate::profiling::engine::{profile_data, ModelProfiler, ProfilerGrids};
 use crate::scheduler::ilp;
 use crate::scheduler::lpt::{self, ItemCost};
+use crate::shard::ShardConfig;
 use crate::sim::{run_cells, Cell, RunConfig, RunResult, SystemKind};
 use crate::util::stats::{BoxPlot, Histogram, Summary};
 use crate::util::table::{bytes, f, secs, speedup, Table};
@@ -772,6 +773,99 @@ pub fn fig_drift(o: &FigOpts) -> String {
     t.render() + &notes
 }
 
+/// Minimum iterations for a shard-grid run: the skew gate needs every
+/// per-shard window (`ShardConfig::default().window_batches` batches) full
+/// before rebalancing can activate, and the hot-shard burst lands at batch
+/// 8 — shorter runs would end before the shard layer does anything.
+/// Shared with the `shard_balance` example.
+pub const SHARD_MIN_ITERS: usize = 14;
+
+/// The (scenario × {static, rebalanced}) evaluation grid behind the shard
+/// figure and the `shard_balance` example: the stationary skew scenarios,
+/// the mid-run hot shard, the all-shards curriculum ramp (one *global*
+/// replan, not one per shard), and the stationary homogeneous control.
+/// Returns `(scenario, static, rebalanced)` rows in scenario order.
+pub fn shard_grid_with(o: &FigOpts, dp_shards: usize) -> Vec<(&'static str, RunResult, RunResult)> {
+    let m = llava_ov(llama3("8b"));
+    let iters = o.iters.max(SHARD_MIN_ITERS);
+    let scenarios: [&'static str; 5] =
+        ["skewed-shard", "laggard-shard", "hot-shard", "curriculum", "mixed"];
+    let mut cells = Vec::new();
+    for key in scenarios {
+        for rebalance in [false, true] {
+            let mut cfg = RunConfig::new(o.nodes, o.gbs, iters, o.seed);
+            cfg.shard = Some(ShardConfig {
+                dp_shards,
+                rebalance,
+                ..ShardConfig::default()
+            });
+            cells.push(Cell {
+                kind: SystemKind::DflopSharded,
+                m: m.clone(),
+                dataset: key.to_string(),
+                cfg,
+            });
+        }
+    }
+    let mut results = run_cells(&cells).into_iter();
+    scenarios
+        .into_iter()
+        .map(|key| {
+            let stat = results.next().expect("grid row");
+            let rebal = results.next().expect("grid row");
+            (key, stat, rebal)
+        })
+        .collect()
+}
+
+/// [`shard_grid_with`] at the default shard count.
+pub fn shard_grid(o: &FigOpts) -> Vec<(&'static str, RunResult, RunResult)> {
+    shard_grid_with(o, ShardConfig::default().dp_shards)
+}
+
+pub fn fig_shard(o: &FigOpts) -> String {
+    let mut t = Table::new(
+        "Fig 18 — static sharding vs cross-shard rebalancing (shard subsystem, LLaVA-OV / Llama-3 8B, 4 DP shards)",
+        &[
+            "scenario",
+            "static step (s)",
+            "DFLOP step (s)",
+            "gain",
+            "gap static (s)",
+            "gap DFLOP (s)",
+            "migrations",
+            "replans",
+        ],
+    );
+    let rows = shard_grid(o);
+    let mut notes = String::new();
+    for (key, stat, rebal) in &rows {
+        t.row(vec![
+            key.to_string(),
+            f(stat.mean_iteration_time, 3),
+            f(rebal.mean_iteration_time, 3),
+            speedup(stat.mean_iteration_time / rebal.mean_iteration_time),
+            f(stat.mean_straggler_gap(), 3),
+            f(rebal.mean_straggler_gap(), 3),
+            format!("{}", rebal.migrations),
+            format!("{}", rebal.replans),
+        ]);
+        if *key == "mixed" {
+            notes.push_str(&format!(
+                "quiet check (homogeneous shards): {} migrations, {} replans\n",
+                rebal.migrations, rebal.replans,
+            ));
+        }
+        if *key == "curriculum" {
+            notes.push_str(&format!(
+                "global-replan check (all shards ramp): {} replan(s) for the whole DP group\n",
+                rebal.replans,
+            ));
+        }
+    }
+    t.render() + &notes
+}
+
 // ------------------------------------------------------------------
 // Tables 2 and 4
 // ------------------------------------------------------------------
@@ -853,6 +947,7 @@ pub fn all(o: &FigOpts) -> String {
     out.push_str(&fig15(o));
     out.push_str(&fig16(o));
     out.push_str(&fig_drift(o));
+    out.push_str(&fig_shard(o));
     out.push_str(&table2(o));
     out.push_str(&table4(o));
     out
@@ -875,6 +970,7 @@ pub fn by_id(id: &str, o: &FigOpts) -> Option<String> {
         "15" => fig15(o),
         "16" => fig16(o),
         "17" | "drift" => fig_drift(o),
+        "18" | "shard" => fig_shard(o),
         "all" => all(o),
         _ => return None,
     })

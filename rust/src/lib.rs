@@ -35,6 +35,7 @@ pub mod optimizer;
 pub mod profiling;
 pub mod runtime;
 pub mod scheduler;
+pub mod shard;
 pub mod sim;
 pub mod stream;
 pub mod model;

@@ -2,9 +2,10 @@
 //! optimizer/scheduler inspection, and real-artifact profiling.
 //!
 //! ```text
-//! dflop figures --fig <1|2|4|7|8|9|10|11|12|13|14|15|16|17|drift|all> [--nodes N] [--gbs N] [--iters N] [--seed S] [--threads N]
+//! dflop figures --fig <1|2|4|7|8|9|10|11|12|13|14|15|16|17|drift|18|shard|all> [--nodes N] [--gbs N] [--iters N] [--seed S] [--threads N]
 //! dflop table   --n <2|4>
-//! dflop run     --system <dflop|adaptive|megatron|pytorch|opt-only|sched-only> --model <key> --dataset <key>
+//! dflop run     --system <dflop|adaptive|sharded|megatron|pytorch|opt-only|sched-only> --model <key> --dataset <key>
+//!               [--dp-shards N] [--shard-skew <skewed|hot|laggard|homogeneous>] [--static-sharding]   # --system sharded
 //! dflop optimize --model <key> --nodes N --gbs N
 //! dflop profile-real [--artifacts DIR]      # PJRT timing (needs `xla` feature)
 //! dflop models                              # list catalog keys
@@ -49,9 +50,9 @@ fn real_main() -> Result<()> {
     let spec = Spec {
         valued: vec![
             "fig", "n", "nodes", "gbs", "iters", "seed", "system", "model", "dataset",
-            "artifacts", "threads",
+            "artifacts", "threads", "dp-shards", "shard-skew",
         ],
-        boolean: vec!["help"],
+        boolean: vec!["help", "static-sharding"],
     };
     let args = Args::parse(std::env::args().skip(1), &spec)?;
     // Pool width for every parallel section below (0 = auto-detect).
@@ -79,6 +80,7 @@ fn real_main() -> Result<()> {
             let kind = match args.get_or("system", "dflop").as_str() {
                 "dflop" => SystemKind::Dflop,
                 "adaptive" => SystemKind::DflopAdaptive,
+                "sharded" => SystemKind::DflopSharded,
                 "megatron" => SystemKind::Megatron,
                 "pytorch" => SystemKind::Pytorch,
                 "opt-only" => SystemKind::DflopOptimizerOnly,
@@ -88,8 +90,31 @@ fn real_main() -> Result<()> {
             let model_key = args.get_or("model", "llava-ov-llama3-8b");
             let m = catalog::by_key(&model_key)
                 .ok_or_else(|| err!("unknown model '{model_key}' (try `dflop models`)"))?;
-            let dataset = args.get_or("dataset", "mixed");
-            let r = run_system(kind, &m, &dataset, &RunConfig::new(o.nodes, o.gbs, o.iters, o.seed));
+            let mut dataset = args.get_or("dataset", "mixed");
+            let mut cfg = RunConfig::new(o.nodes, o.gbs, o.iters, o.seed);
+            if kind == SystemKind::DflopSharded {
+                // --dp-shards N replicas of the --nodes cluster; --shard-skew
+                // picks a `data::sources` shard scenario (homogeneous keeps
+                // --dataset, giving identically-distributed shards of it).
+                let d = dflop::shard::ShardConfig::default();
+                cfg.shard = Some(dflop::shard::ShardConfig {
+                    dp_shards: args.get_usize("dp-shards", d.dp_shards)?,
+                    // --static-sharding runs the baseline every shard
+                    // comparison is against (rebalancing off).
+                    rebalance: !args.has("static-sharding"),
+                    ..d
+                });
+                match args.get_or("shard-skew", "homogeneous").as_str() {
+                    "homogeneous" | "none" => {}
+                    "skewed" => dataset = "skewed-shard".into(),
+                    "hot" => dataset = "hot-shard".into(),
+                    "laggard" => dataset = "laggard-shard".into(),
+                    other => bail!(
+                        "unknown --shard-skew '{other}' (skewed|hot|laggard|homogeneous)"
+                    ),
+                }
+            }
+            let r = run_system(kind, &m, &dataset, &cfg);
             println!("system        : {}", kind.label());
             println!("model         : {model_key}");
             println!("dataset       : {dataset}");
@@ -100,7 +125,18 @@ fn real_main() -> Result<()> {
             println!("profiling     : {:.1} min", r.profiling_seconds / 60.0);
             println!("optimizer     : {:?}", r.optimizer_elapsed);
             println!("LPT fallbacks : {}/{}", r.lpt_fallbacks, r.sched_elapsed.len());
-            if kind == SystemKind::DflopAdaptive {
+            if kind == SystemKind::DflopSharded {
+                let sc = cfg.shard.as_ref().expect("shard config set above");
+                println!("dp shards     : {}", sc.dp_shards);
+                println!(
+                    "rebalancing   : {}",
+                    if sc.rebalance { "on" } else { "off (static baseline)" }
+                );
+                println!("total GPUs    : {}", r.n_gpus);
+                println!("migrations    : {}", r.migrations);
+                println!("straggler gap : {:.3} s (mean over iterations)", r.mean_straggler_gap());
+            }
+            if matches!(kind, SystemKind::DflopAdaptive | SystemKind::DflopSharded) {
                 println!("replans       : {}", r.replans);
                 for e in &r.replan_events {
                     println!(
@@ -198,6 +234,12 @@ fn real_main() -> Result<()> {
         _ => {
             println!("usage: dflop <figures|table|run|optimize|profile-real|models> [options]");
             println!("common options: --threads N (evaluation thread pool; default all cores)");
+            println!(
+                "run --system sharded: --dp-shards N (DP replicas, default 4), \
+                 --shard-skew <skewed|hot|laggard|homogeneous> (per-shard data skew \
+                 scenario; homogeneous keeps --dataset), --static-sharding \
+                 (disable cross-shard rebalancing: the baseline)"
+            );
             println!("see rust/src/main.rs header or DESIGN.md for details");
         }
     }

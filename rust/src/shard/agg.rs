@@ -1,0 +1,247 @@
+//! Cross-shard aggregation of shape statistics.
+//!
+//! Every shard summarizes its per-iteration batch into an exact integer
+//! [`ShapeStats`]; merging those summaries is plain `u64` addition, so the
+//! global aggregate is **bit-identical to a pooled recompute** over the
+//! concatenated shapes — in any merge order, on any thread count. That
+//! invariant (property-tested below) is what lets the sharded trainer run
+//! *one* global drift detector over the merged window instead of one per
+//! shard: `stream::replan` sees exactly the statistics it would have seen
+//! on the pooled stream, so a distribution shift fires exactly one global
+//! replan rather than S replica-local ones.
+//!
+//! The same per-shard summaries feed the rebalancer's *skew gate*: each
+//! shard's window aggregate is scored against the pooled window with the
+//! drift statistic (`stream::drift::stat_between`). Statistically
+//! identical shards score near zero — so the homogeneous control performs
+//! zero migrations — while the `data::sources` shard scenarios score far
+//! above the gate.
+
+use crate::stream::drift::{stat_between, DriftStat};
+use crate::stream::window::{ShapeStats, ShapeWindow};
+
+/// Merge per-shard batch summaries into the global batch summary. Exact:
+/// all fields are integers, so the result equals
+/// `ShapeStats::of_batch(pooled shapes)` bit for bit, independent of
+/// shard order.
+pub fn merge_shard_stats(stats: &[ShapeStats]) -> ShapeStats {
+    let mut out = ShapeStats::default();
+    for s in stats {
+        out.merge(s);
+    }
+    out
+}
+
+/// Per-shard sliding windows plus the pooled view — the state behind the
+/// rebalancer's skew gate.
+#[derive(Clone, Debug)]
+pub struct ShardWindows {
+    windows: Vec<ShapeWindow>,
+}
+
+impl ShardWindows {
+    pub fn new(shards: usize, capacity: usize) -> ShardWindows {
+        assert!(shards >= 1, "at least one shard");
+        ShardWindows {
+            windows: (0..shards).map(|_| ShapeWindow::new(capacity)).collect(),
+        }
+    }
+
+    /// Push one iteration's per-shard batch summaries (`per_shard[r]` is
+    /// shard r's batch).
+    pub fn push(&mut self, per_shard: Vec<ShapeStats>) {
+        assert_eq!(per_shard.len(), self.windows.len(), "one summary per shard");
+        for (w, s) in self.windows.iter_mut().zip(per_shard) {
+            w.push_stats(s);
+        }
+    }
+
+    /// True once every shard's window is full (the gate only evaluates
+    /// then — early, short windows would make the skew score pure noise).
+    pub fn is_full(&self) -> bool {
+        self.windows.iter().all(ShapeWindow::is_full)
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.windows.len()
+    }
+
+    /// Shard r's window aggregate.
+    pub fn shard(&self, r: usize) -> &ShapeStats {
+        self.windows[r].stats()
+    }
+
+    /// The pooled window aggregate (merge of the per-shard aggregates —
+    /// bit-identical to a window over the concatenated batches).
+    pub fn merged(&self) -> ShapeStats {
+        let mut out = ShapeStats::default();
+        for w in &self.windows {
+            out.merge(w.stats());
+        }
+        out
+    }
+
+    /// The skew gate: the worst per-shard drift statistic against the
+    /// pooled window, with its shard index (ties keep the lowest index).
+    /// `None` until every window is full.
+    pub fn max_skew(&self) -> Option<(usize, DriftStat)> {
+        if !self.is_full() {
+            return None;
+        }
+        let pooled = self.merged();
+        let mut best: Option<(usize, DriftStat)> = None;
+        for (r, w) in self.windows.iter().enumerate() {
+            let stat = stat_between(&pooled, w.stats());
+            let better = match &best {
+                None => true,
+                Some((_, b)) => stat.score() > b.score(),
+            };
+            if better {
+                best = Some((r, stat));
+            }
+        }
+        best
+    }
+
+    /// True when the worst shard's skew score reaches `enter`.
+    pub fn skewed(&self, enter: f64) -> bool {
+        self.max_skew().is_some_and(|(_, stat)| stat.score() >= enter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::item::ItemShape;
+    use crate::util::prop::forall;
+
+    fn item(g: &mut crate::util::prop::Gen) -> ItemShape {
+        ItemShape {
+            units: g.rng.below(65) as u32,
+            llm_seq: 1 + g.rng.below(40_000) as u32,
+            source: g.rng.below(6) as u8,
+        }
+    }
+
+    #[test]
+    fn merge_is_commutative_and_associative() {
+        // The algebraic half of the shard::agg invariant: ⊕ is a
+        // commutative monoid on ShapeStats (u64 addition field-wise), so
+        // any merge tree over per-shard summaries yields the same bits.
+        forall("ShapeStats merge comm/assoc", 100, |g| {
+            let batch = |g: &mut crate::util::prop::Gen| {
+                let n = g.size(40);
+                let shapes: Vec<ItemShape> = (0..n).map(|_| item(g)).collect();
+                ShapeStats::of_batch(&shapes)
+            };
+            let (a, b, c) = (batch(g), batch(g), batch(g));
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            let comm = ab == ba;
+            let mut ab_c = ab.clone();
+            ab_c.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+            let assoc = ab_c == a_bc;
+            // Identity: merging the default leaves the aggregate alone.
+            let mut a_id = a.clone();
+            a_id.merge(&ShapeStats::default());
+            (format!("items {}/{}/{}", a.items, b.items, c.items), comm && assoc && a_id == a)
+        });
+    }
+
+    #[test]
+    fn k_shard_windows_bit_match_pooled_recompute() {
+        // The invariant the sharded trainer relies on: merging K per-shard
+        // windows equals (field for field) a from-scratch summarization of
+        // the pooled retained shapes — after arbitrary push/evict
+        // sequences, and regardless of the order the shard aggregates are
+        // merged in.
+        forall("K-shard merge == pooled recompute", 60, |g| {
+            let shards = g.size(6);
+            let cap = g.size(5);
+            let mut sw = ShardWindows::new(shards, cap);
+            // Retained raw shapes per shard, mirroring the windows.
+            let mut kept: Vec<std::collections::VecDeque<Vec<ItemShape>>> =
+                vec![std::collections::VecDeque::new(); shards];
+            let iters = g.size(9);
+            for _ in 0..iters {
+                let mut per_shard = Vec::with_capacity(shards);
+                for k in kept.iter_mut() {
+                    let n = g.size(24);
+                    let batch: Vec<ItemShape> = (0..n).map(|_| item(g)).collect();
+                    per_shard.push(ShapeStats::of_batch(&batch));
+                    k.push_back(batch);
+                    if k.len() > cap {
+                        k.pop_front();
+                    }
+                }
+                sw.push(per_shard);
+            }
+            let mut pooled = ShapeStats::default();
+            for k in &kept {
+                for batch in k {
+                    for s in batch {
+                        pooled.add_item(s);
+                    }
+                }
+            }
+            let forward = sw.merged();
+            // Reverse-order merge of the same aggregates.
+            let mut reverse = ShapeStats::default();
+            for r in (0..shards).rev() {
+                reverse.merge(sw.shard(r));
+            }
+            let ok = forward == pooled && reverse == pooled;
+            (format!("shards={shards} cap={cap} iters={iters}"), ok)
+        });
+    }
+
+    #[test]
+    fn skew_gate_separates_homogeneous_from_skewed() {
+        use crate::model::catalog::{llama3, llava_ov};
+        use crate::shard::partition::ShardedDataset;
+        let m = llava_ov(llama3("8b"));
+        let run = |key: &str| -> f64 {
+            let mut sd = ShardedDataset::by_key(key, 4, 11).expect("scenario");
+            let mut sw = ShardWindows::new(4, 6);
+            let counts = ShardedDataset::split_counts(64, 4);
+            let mut worst: f64 = 0.0;
+            for _ in 0..10 {
+                let batches = sd.shard_batches(&m, &counts);
+                sw.push(batches.iter().map(|b| ShapeStats::of_batch(b)).collect());
+                if let Some((_, stat)) = sw.max_skew() {
+                    worst = worst.max(stat.score());
+                }
+            }
+            worst
+        };
+        // The gate's separation property at the default threshold
+        // (`ShardConfig::default().skew_enter` = 0.35): sampling noise
+        // between statistically identical shards stays below it, the
+        // graded scenario tilt lands far above it.
+        let homog = run("mixed");
+        let skew = run("skewed-shard");
+        assert!(homog < 0.35, "homogeneous shards read as skewed: {homog}");
+        assert!(skew >= 0.35, "skewed shards read as homogeneous: {skew}");
+    }
+
+    #[test]
+    fn max_skew_waits_for_full_windows() {
+        let mut sw = ShardWindows::new(2, 3);
+        let shapes = vec![ItemShape { units: 2, llm_seq: 500, source: 0 }; 8];
+        for _ in 0..2 {
+            sw.push(vec![ShapeStats::of_batch(&shapes); 2]);
+            assert!(sw.max_skew().is_none());
+            assert!(!sw.skewed(0.0));
+        }
+        sw.push(vec![ShapeStats::of_batch(&shapes); 2]);
+        let (r, stat) = sw.max_skew().expect("full");
+        assert_eq!(r, 0, "tie must keep the lowest shard index");
+        assert_eq!(stat.score(), 0.0);
+    }
+}

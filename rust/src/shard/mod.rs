@@ -1,0 +1,78 @@
+//! Sharded data-parallel execution: per-shard data heterogeneity,
+//! cross-shard rebalancing, and global drift aggregation.
+//!
+//! DFLOP's scheduler balances microbatches *within* one pipeline replica,
+//! but the paper's computation-skew problem recurs across the
+//! data-parallel dimension: when DP shards draw from heterogeneous data
+//! distributions (graded source skew, one persistent laggard, a shard
+//! turning hot mid-run), the gradient allreduce barrier runs at the pace
+//! of the slowest replica. This subsystem closes that gap:
+//!
+//! - [`partition`] — deterministic per-shard dataset synthesis: every DP
+//!   rank owns its own reweighted Table-2 mixture (optionally with its
+//!   own `MixSchedule`), built from the shard scenarios in
+//!   `data::sources`.
+//! - [`sync`] — the step barrier model: each replica's iteration time
+//!   comes from its own 1F1B pipeline sim (fanned over the
+//!   `util::parallel` pool, results in shard order), the step time is the
+//!   max over replicas plus the cross-shard allreduce from `perfmodel`,
+//!   and the max−min straggler gap is reported per iteration.
+//! - [`balance`] — cross-shard rebalancing: the Eq-6 bi-metric bottleneck
+//!   objective lifted one level (shards are the buckets), walked from the
+//!   static home assignment by a bounded-migration greedy with
+//!   deterministic tie-breaks, gated by a distributional skew statistic
+//!   so statistically identical shards see zero migrations.
+//! - [`agg`] — per-shard `ShapeStats` merged into one global window,
+//!   bit-identical to a pooled recompute (all-integer merge), so
+//!   `stream::drift`/`stream::replan` fire one *global* replan instead of
+//!   per-shard thrash.
+//!
+//! `sim::trainer` wires this together as `SystemKind::DflopSharded`
+//! (`dflop run --system sharded`); the whole path is budget-free (per-shard
+//! LPT, no ILP deadline), so every reported statistic is bit-identical
+//! across `--threads` settings and shard evaluation orders
+//! (`tests/determinism.rs`).
+
+pub mod agg;
+pub mod balance;
+pub mod partition;
+pub mod sync;
+
+pub use agg::{merge_shard_stats, ShardWindows};
+pub use balance::{rebalance, BalanceConfig, Rebalance};
+pub use partition::ShardedDataset;
+pub use sync::{
+    cross_shard_allreduce, lpt_shard_buckets, simulate_shards, step_barrier, BarrierStats,
+};
+
+/// Configuration of a sharded run (carried on `sim::RunConfig`).
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// Data-parallel shard (replica) count.
+    pub dp_shards: usize,
+    /// Cross-shard rebalancing on (the DFLOP sharded system) or off (the
+    /// static-sharding baseline every comparison is against).
+    pub rebalance: bool,
+    /// Migration budget + stop threshold of the balancer.
+    pub balance: BalanceConfig,
+    /// Per-shard gate window width in global batches (the skew gate only
+    /// evaluates once every shard's window is full).
+    pub window_batches: usize,
+    /// Skew score (max per-shard drift statistic vs the pooled window) at
+    /// or above which rebalancing activates. Sized like
+    /// `stream::drift`'s thresholds: statistically identical shards score
+    /// well below it, the `data::sources` shard scenarios well above.
+    pub skew_enter: f64,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            dp_shards: 4,
+            rebalance: true,
+            balance: BalanceConfig::default(),
+            window_batches: 6,
+            skew_enter: 0.35,
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Deterministic per-shard dataset synthesis.
+//!
+//! A [`ShardedDataset`] gives every DP rank its own [`Dataset`]: an
+//! independently-seeded stream of the rank's own reweighted Table-2
+//! mixture, optionally with its own `MixSchedule` (the shard scenarios in
+//! `data::sources`). Shard streams are fully independent — each shard owns
+//! its RNG, seeded as a pure function of `(base seed, shard index)` — so
+//! batches are reproducible regardless of the order shards are drawn or
+//! simulated in.
+
+use crate::data::dataset::Dataset;
+use crate::data::item::ItemShape;
+use crate::data::sources::{
+    homogeneous_shard_scenario, hot_shard_scenario, laggard_shard_scenario,
+    skewed_shard_scenario, table2_sources, ShardScenario,
+};
+use crate::model::catalog::Mllm;
+use crate::profiling::engine::DataProfile;
+
+/// Per-shard stream seed: decorrelate the shards without losing
+/// reproducibility (same mixing constant as `util::rng`'s splitmix).
+fn shard_seed(seed: u64, shard: usize) -> u64 {
+    seed ^ (shard as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// One dataset per DP rank.
+#[derive(Clone, Debug)]
+pub struct ShardedDataset {
+    pub scenario: String,
+    pub shards: Vec<Dataset>,
+}
+
+impl ShardedDataset {
+    /// Materialize a scenario into per-shard datasets.
+    pub fn from_scenario(sc: &ShardScenario, seed: u64) -> ShardedDataset {
+        let shards = sc
+            .mults
+            .iter()
+            .zip(&sc.schedules)
+            .enumerate()
+            .map(|(r, (mults, schedule))| {
+                let name = format!("{}#{r}", sc.name);
+                let s = shard_seed(seed, r);
+                let mut d = match schedule {
+                    Some(sched) => {
+                        Dataset::scheduled(&name, table2_sources(), s, sched.clone())
+                    }
+                    None => Dataset::new(&name, table2_sources(), s),
+                };
+                d.reweight(mults);
+                d
+            })
+            .collect();
+        ShardedDataset { scenario: sc.name.to_string(), shards }
+    }
+
+    /// Look up a shard scenario by CLI key. The dedicated scenarios come
+    /// from `data::sources`; any plain dataset key falls back to
+    /// homogeneous shards of that dataset (independent streams, identical
+    /// distribution) — the no-skew control.
+    pub fn by_key(key: &str, shards: usize, seed: u64) -> Option<ShardedDataset> {
+        let sc = match key {
+            "skewed-shard" => Some(skewed_shard_scenario(shards)),
+            "laggard-shard" => Some(laggard_shard_scenario(shards)),
+            "hot-shard" => Some(hot_shard_scenario(shards)),
+            "homogeneous-shard" => Some(homogeneous_shard_scenario(shards)),
+            _ => None,
+        };
+        if let Some(sc) = sc {
+            return Some(ShardedDataset::from_scenario(&sc, seed));
+        }
+        // Fallback: homogeneous shards of a plain dataset key.
+        let per_shard: Option<Vec<Dataset>> = (0..shards)
+            .map(|r| Dataset::by_key(key, shard_seed(seed, r)))
+            .collect();
+        per_shard.map(|shards| ShardedDataset { scenario: key.to_string(), shards })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Split a global batch as evenly as possible over `shards` ranks
+    /// (the first `gbs mod shards` ranks take one extra item).
+    pub fn split_counts(gbs: usize, shards: usize) -> Vec<usize> {
+        assert!(shards >= 1, "split over zero shards");
+        let base = gbs / shards;
+        let rem = gbs % shards;
+        (0..shards).map(|r| base + usize::from(r < rem)).collect()
+    }
+
+    /// Draw one global batch: `counts[r]` shaped items from shard r's own
+    /// stream, in shard order.
+    pub fn shard_batches(&mut self, m: &Mllm, counts: &[usize]) -> Vec<Vec<ItemShape>> {
+        assert_eq!(counts.len(), self.shards.len(), "one count per shard");
+        self.shards
+            .iter_mut()
+            .zip(counts)
+            .map(|(d, &n)| d.shaped_batch(m, n))
+            .collect()
+    }
+
+    /// The Data Profiler over a sharded corpus: sample every shard
+    /// proportionally (split as [`ShardedDataset::split_counts`]), pool
+    /// the shapes in shard order, and charge the same simulated per-item
+    /// preprocessing cost as `profiling::engine::profile_data` — θ* for a
+    /// sharded run is fitted to the *pooled* distribution, which is what
+    /// the rebalancer steers every replica towards.
+    pub fn profile_pooled(&mut self, m: &Mllm, n_samples: usize) -> DataProfile {
+        let t0 = std::time::Instant::now();
+        let counts = Self::split_counts(n_samples, self.n_shards());
+        let mut pooled = Vec::with_capacity(n_samples);
+        for batch in self.shard_batches(m, &counts) {
+            pooled.extend(batch);
+        }
+        let simulated = n_samples as f64 * 0.018;
+        let name = self.scenario.clone();
+        DataProfile::from_samples(
+            &name,
+            m,
+            pooled,
+            simulated + t0.elapsed().as_secs_f64(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::catalog::{llama3, llava_ov};
+
+    #[test]
+    fn split_counts_partition_the_batch() {
+        assert_eq!(ShardedDataset::split_counts(64, 4), vec![16, 16, 16, 16]);
+        assert_eq!(ShardedDataset::split_counts(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(ShardedDataset::split_counts(3, 4), vec![1, 1, 1, 0]);
+        for (gbs, s) in [(64, 4), (10, 4), (7, 3), (1, 1)] {
+            assert_eq!(
+                ShardedDataset::split_counts(gbs, s).iter().sum::<usize>(),
+                gbs
+            );
+        }
+    }
+
+    #[test]
+    fn by_key_covers_scenarios_and_plain_datasets() {
+        for key in [
+            "skewed-shard",
+            "laggard-shard",
+            "hot-shard",
+            "homogeneous-shard",
+            "mixed",
+            "curriculum",
+        ] {
+            let sd = ShardedDataset::by_key(key, 4, 1).unwrap_or_else(|| panic!("{key}"));
+            assert_eq!(sd.n_shards(), 4);
+        }
+        assert!(ShardedDataset::by_key("bogus", 4, 1).is_none());
+    }
+
+    #[test]
+    fn shard_streams_are_deterministic_and_decorrelated() {
+        let m = llava_ov(llama3("8b"));
+        let counts = ShardedDataset::split_counts(64, 4);
+        let mut a = ShardedDataset::by_key("skewed-shard", 4, 9).expect("scenario");
+        let mut b = ShardedDataset::by_key("skewed-shard", 4, 9).expect("scenario");
+        let ba = a.shard_batches(&m, &counts);
+        let bb = b.shard_batches(&m, &counts);
+        assert_eq!(ba, bb, "same seed must reproduce the same shard batches");
+        // Homogeneous shards draw from the same distribution but distinct
+        // streams: identical per-shard seeds would make the replicas'
+        // batches (and therefore their loads) identical, hiding all
+        // sampling noise.
+        let mut h = ShardedDataset::by_key("mixed", 2, 9).expect("fallback");
+        let hb = h.shard_batches(&m, &[32, 32]);
+        assert_ne!(hb[0], hb[1]);
+    }
+
+    #[test]
+    fn skewed_scenario_shards_really_differ() {
+        let m = llava_ov(llama3("8b"));
+        let mut sd = ShardedDataset::by_key("skewed-shard", 4, 7).expect("scenario");
+        let batches = sd.shard_batches(&m, &[400, 400, 400, 400]);
+        let video_share = |b: &[ItemShape]| {
+            b.iter().filter(|s| s.source == 4).count() as f64 / b.len() as f64
+        };
+        assert!(video_share(&batches[0]) > 0.6, "{}", video_share(&batches[0]));
+        assert!(video_share(&batches[3]) < 0.05, "{}", video_share(&batches[3]));
+        // The heavy shard's mean LLM sequence dwarfs the light shard's.
+        let mean_seq = |b: &[ItemShape]| {
+            b.iter().map(|s| s.llm_seq as f64).sum::<f64>() / b.len() as f64
+        };
+        assert!(
+            mean_seq(&batches[0]) > 1.3 * mean_seq(&batches[3]),
+            "video-heavy {} vs image-heavy {}",
+            mean_seq(&batches[0]),
+            mean_seq(&batches[3])
+        );
+    }
+
+    #[test]
+    fn pooled_profile_summarizes_all_shards() {
+        let m = llava_ov(llama3("8b"));
+        let mut sd = ShardedDataset::by_key("laggard-shard", 4, 3).expect("scenario");
+        let p = sd.profile_pooled(&m, 200);
+        assert_eq!(p.samples.len(), 200);
+        assert_eq!(p.dataset_name, "laggard-shard");
+        assert!(p.profiling_seconds >= 200.0 * 0.018);
+        // The pool contains both the laggard's video and the others' mix.
+        assert!(p.samples.iter().any(|s| s.source == 4));
+        assert!(p.samples.iter().any(|s| s.source != 4));
+    }
+}

@@ -1,0 +1,216 @@
+//! The cross-shard step barrier.
+//!
+//! Each DP shard is one full pipeline replica of the active θ. A training
+//! step executes every replica's 1F1B iteration independently, then
+//! synchronizes gradients across replicas — so the *step* time is the
+//! slowest replica's iteration time plus the cross-shard allreduce, and
+//! the max−min spread of replica times is the straggler gap the
+//! rebalancer exists to shrink.
+//!
+//! Replica simulations are independent, so they fan out over the
+//! `util::parallel` pool with results assembled in shard order
+//! (`sim::run_cells`-style): the output is bit-identical to a serial loop
+//! at any `--threads` setting. Each pool worker reuses its own
+//! thread-local [`SimWorkspace`] (the one-arena-per-worker rule).
+
+use crate::data::item::ItemShape;
+use crate::model::catalog::Mllm;
+use crate::optimizer::plan::Theta;
+use crate::perfmodel::Truth;
+use crate::pipeline::build::{iterate_ws, IterationStats, SystemPlan};
+use crate::pipeline::sim::SimWorkspace;
+use crate::profiling::estimator::Estimator;
+use crate::scheduler::lpt::{lpt, ItemCost};
+use crate::util::parallel::par_map;
+use std::cell::RefCell;
+
+/// One step's barrier accounting.
+#[derive(Clone, Debug)]
+pub struct BarrierStats {
+    /// Per-replica iteration time (pipeline makespan + the replica's own
+    /// intra-replica DP sync), in shard order.
+    pub per_replica: Vec<f64>,
+    /// Cross-shard gradient allreduce cost.
+    pub allreduce: f64,
+    /// The step: `max(per_replica) + allreduce`.
+    pub step_time: f64,
+    /// `max(per_replica) − min(per_replica)` — idle time the fastest
+    /// replica burns waiting at the barrier.
+    pub straggler_gap: f64,
+}
+
+/// Assemble the barrier from per-replica iteration times.
+pub fn step_barrier(per_replica: Vec<f64>, allreduce: f64) -> BarrierStats {
+    assert!(!per_replica.is_empty(), "barrier over zero replicas");
+    let max = per_replica.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let min = per_replica.iter().cloned().fold(f64::INFINITY, f64::min);
+    BarrierStats {
+        step_time: max + allreduce,
+        straggler_gap: max - min,
+        per_replica,
+        allreduce,
+    }
+}
+
+/// Cross-shard gradient allreduce time under the two-level DP model: the
+/// intra-replica reduction (θ's own `dp` groups) is already charged inside
+/// the replica's iteration (`pipeline::build`); the second level reduces
+/// the same per-GPU gradient slices across the `shards` replica groups.
+/// Replicas span nodes by construction, so the inter-node ring applies.
+pub fn cross_shard_allreduce(m: &Mllm, truth: &Truth, theta: Theta, shards: usize) -> f64 {
+    if shards <= 1 {
+        return 0.0;
+    }
+    let enc_grad = m.encoder.total_params(m.enc_mlp_matrices) * 2.0
+        / (theta.enc.tp * theta.enc.pp) as f64;
+    let llm_grad = m.llm.total_params(m.llm_mlp_matrices) * 2.0
+        / (theta.llm.tp * theta.llm.pp) as f64;
+    truth
+        .dp_allreduce_time(enc_grad, shards)
+        .max(truth.dp_allreduce_time(llm_grad, shards))
+}
+
+/// Partition one replica's items into its `m = N_mb · L_dp` microbatch
+/// buckets with the bi-metric LPT, heaviest bucket launched first —
+/// the Online Scheduler's emission order, without the ILP pass. The
+/// sharded path is deliberately budget-free: a deadline ILP returns
+/// wall-clock-dependent incumbents, and the sharded telemetry (straggler
+/// gaps, migrations) promises bit-identical results across `--threads`
+/// settings (`tests/determinism.rs`).
+pub fn lpt_shard_buckets(
+    est: &Estimator,
+    theta: Theta,
+    shapes: &[ItemShape],
+) -> Vec<Vec<ItemShape>> {
+    let items: Vec<ItemCost> = shapes
+        .iter()
+        .map(|s| ItemCost {
+            enc: est.enc_item_dur(s, theta.enc.tp) / theta.enc.pp as f64,
+            llm: est.llm_item_dur(s, theta.llm.tp) / theta.llm.pp as f64,
+        })
+        .collect();
+    let m = theta.buckets().min(shapes.len().max(1));
+    let mut a = lpt(&items, m);
+    let mut order = Vec::new();
+    a.heavy_order(&mut order);
+    a.apply_order(&order);
+    a.buckets
+        .iter()
+        .map(|b| b.iter().map(|&i| shapes[i]).collect())
+        .collect()
+}
+
+thread_local! {
+    /// One simulation arena per pool worker for the replica fan-out.
+    static SHARD_WS: RefCell<SimWorkspace> = RefCell::new(SimWorkspace::new());
+}
+
+/// Simulate every replica's iteration (`shard_buckets[r]` = shard r's
+/// scheduled buckets) on the worker pool; results come back in shard
+/// order, bit-identical to a serial loop.
+pub fn simulate_shards(
+    m: &Mllm,
+    truth: &Truth,
+    theta: Theta,
+    shard_buckets: &[Vec<Vec<ItemShape>>],
+) -> Vec<IterationStats> {
+    par_map(shard_buckets.len(), |r| {
+        SHARD_WS.with(|ws| {
+            let plan = SystemPlan { m, truth, theta };
+            iterate_ws(&plan, &shard_buckets[r], &mut ws.borrow_mut())
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::model::catalog::{llama3, llava_ov};
+    use crate::optimizer::plan::ModPar;
+    use crate::perfmodel::ClusterSpec;
+    use crate::profiling::backend::SimBackend;
+    use crate::profiling::engine::{ModelProfiler, ProfilerGrids};
+
+    fn theta() -> Theta {
+        Theta {
+            enc: ModPar { tp: 1, pp: 1, dp: 1 },
+            llm: ModPar { tp: 1, pp: 3, dp: 1 },
+            n_mb: 4,
+        }
+    }
+
+    #[test]
+    fn barrier_is_max_plus_allreduce() {
+        let b = step_barrier(vec![2.0, 5.0, 3.0], 0.25);
+        assert_eq!(b.step_time, 5.25);
+        assert_eq!(b.straggler_gap, 3.0);
+        assert_eq!(b.per_replica.len(), 3);
+        let single = step_barrier(vec![4.0], 0.0);
+        assert_eq!(single.step_time, 4.0);
+        assert_eq!(single.straggler_gap, 0.0);
+    }
+
+    #[test]
+    fn cross_shard_allreduce_grows_with_shards_and_vanishes_alone() {
+        let m = llava_ov(llama3("8b"));
+        let truth = Truth::smooth(ClusterSpec::hgx_a100(1));
+        assert_eq!(cross_shard_allreduce(&m, &truth, theta(), 1), 0.0);
+        let t2 = cross_shard_allreduce(&m, &truth, theta(), 2);
+        let t8 = cross_shard_allreduce(&m, &truth, theta(), 8);
+        assert!(t2 > 0.0);
+        assert!(t8 > t2, "ring cost must grow with participants");
+    }
+
+    #[test]
+    fn shard_fanout_matches_serial_loop_bitwise() {
+        let m = llava_ov(llama3("8b"));
+        let truth = Truth::smooth(ClusterSpec::hgx_a100(1));
+        let mut backend = SimBackend::new(truth.clone());
+        let profile =
+            ModelProfiler::new(&mut backend, ProfilerGrids::coarse(8)).profile(&m);
+        let est = Estimator::new(&m, &profile.throughput);
+        let th = theta();
+        let mut ds = Dataset::mixed(21);
+        let shard_buckets: Vec<Vec<Vec<ItemShape>>> = (0..4)
+            .map(|_| {
+                let shapes = ds.shaped_batch(&m, 12);
+                lpt_shard_buckets(&est, th, &shapes)
+            })
+            .collect();
+        let fanned = simulate_shards(&m, &truth, th, &shard_buckets);
+        let mut ws = SimWorkspace::new();
+        for (r, stats) in fanned.iter().enumerate() {
+            let plan = SystemPlan { m: &m, truth: &truth, theta: th };
+            let serial = iterate_ws(&plan, &shard_buckets[r], &mut ws);
+            assert_eq!(
+                stats.iteration_time.to_bits(),
+                serial.iteration_time.to_bits(),
+                "replica {r}"
+            );
+            assert_eq!(stats.total_flop.to_bits(), serial.total_flop.to_bits());
+        }
+    }
+
+    #[test]
+    fn lpt_shard_buckets_partition_and_balance() {
+        let m = llava_ov(llama3("8b"));
+        let truth = Truth::smooth(ClusterSpec::hgx_a100(1));
+        let mut backend = SimBackend::new(truth);
+        let profile =
+            ModelProfiler::new(&mut backend, ProfilerGrids::coarse(8)).profile(&m);
+        let est = Estimator::new(&m, &profile.throughput);
+        let th = theta();
+        let shapes = Dataset::mixed(33).shaped_batch(&m, 17);
+        let buckets = lpt_shard_buckets(&est, th, &shapes);
+        assert_eq!(buckets.len(), th.buckets());
+        assert_eq!(buckets.iter().map(Vec::len).sum::<usize>(), 17);
+        // Tiny replica batches clamp the bucket count.
+        let two = lpt_shard_buckets(&est, th, &shapes[..2]);
+        assert_eq!(two.len(), 2);
+        // Empty replica (everything migrated away) stays simulable.
+        let empty = lpt_shard_buckets(&est, th, &[]);
+        assert_eq!(empty.len(), 1);
+        assert!(empty[0].is_empty());
+    }
+}

@@ -23,8 +23,17 @@ use crate::profiling::backend::{MeasureBackend, SimBackend};
 use crate::profiling::engine::{profile_data, ModelProfiler, ProfilerGrids};
 use crate::profiling::estimator::Estimator;
 use crate::scheduler::correction::{Correction, CorrectionConfig};
+use crate::scheduler::lpt::ItemCost;
 use crate::scheduler::online::{OnlineScheduler, SchedulerConfig, Solver};
+use crate::shard::agg::{merge_shard_stats, ShardWindows};
+use crate::shard::balance::rebalance;
+use crate::shard::partition::ShardedDataset;
+use crate::shard::sync::{
+    cross_shard_allreduce, lpt_shard_buckets, simulate_shards, step_barrier, BarrierStats,
+};
+use crate::shard::ShardConfig;
 use crate::stream::replan::{ReplanConfig, ReplanContext, ReplanEvent, Replanner};
+use crate::stream::window::ShapeStats;
 use crate::util::rng::Rng;
 use std::time::Duration;
 
@@ -37,6 +46,12 @@ pub enum SystemKind {
     /// Full DFLOP plus the `stream` subsystem: drift detection over the
     /// live batch stream and warm-started replanning on confirmed drift.
     DflopAdaptive,
+    /// Full DFLOP plus the `shard` subsystem: per-shard data streams,
+    /// cross-shard rebalancing behind a distributional skew gate, the
+    /// step barrier with straggler-gap telemetry, and *global* (merged)
+    /// drift replanning. `RunConfig::shard` configures the shard layer;
+    /// `rebalance: false` is the static-sharding baseline.
+    DflopSharded,
     /// Ablation: data-aware optimizer, random microbatching.
     DflopOptimizerOnly,
     /// Ablation: baseline (Megatron) strategy, online scheduler.
@@ -52,6 +67,7 @@ impl SystemKind {
         match self {
             SystemKind::Dflop => "DFLOP",
             SystemKind::DflopAdaptive => "DFLOP (adaptive)",
+            SystemKind::DflopSharded => "DFLOP (sharded)",
             SystemKind::DflopOptimizerOnly => "DFLOP (optimizer only)",
             SystemKind::DflopSchedulerOnly => "DFLOP (scheduler only)",
             SystemKind::Megatron => "Megatron-LM",
@@ -75,9 +91,13 @@ pub struct RunConfig {
     pub disable_correction: bool,
     /// Anomaly injection for Fig 15: (shape-bucket, throughput factor).
     pub injected: Vec<(u64, f64)>,
-    /// Stream-subsystem tuning for [`SystemKind::DflopAdaptive`] runs
-    /// (`None` = [`ReplanConfig::default`]); ignored by other systems.
+    /// Stream-subsystem tuning for [`SystemKind::DflopAdaptive`] and
+    /// [`SystemKind::DflopSharded`] runs (`None` =
+    /// [`ReplanConfig::default`]); ignored by other systems.
     pub replan: Option<ReplanConfig>,
+    /// Shard-layer tuning for [`SystemKind::DflopSharded`] runs (`None` =
+    /// [`ShardConfig::default`]); ignored by other systems.
+    pub shard: Option<ShardConfig>,
 }
 
 impl RunConfig {
@@ -92,6 +112,7 @@ impl RunConfig {
             disable_correction: false,
             injected: Vec::new(),
             replan: None,
+            shard: None,
         }
     }
 }
@@ -125,6 +146,12 @@ pub struct RunResult {
     pub replans: usize,
     /// Every confirmed drift, in iteration order (adaptive runs).
     pub replan_events: Vec<ReplanEvent>,
+    /// Per-iteration cross-shard straggler gap — the slowest replica's
+    /// lead over the fastest (sharded runs; empty elsewhere).
+    pub straggler_gaps: Vec<f64>,
+    /// Total items migrated across shards over the run (sharded runs;
+    /// 0 elsewhere — and 0 on homogeneous shards is the quiet guarantee).
+    pub migrations: usize,
     /// Full per-iteration stats for figure-specific postprocessing.
     pub iterations: Vec<IterationStats>,
 }
@@ -133,6 +160,15 @@ impl RunResult {
     /// Speedup of `self` over `other` in per-GPU throughput.
     pub fn speedup_over(&self, other: &RunResult) -> f64 {
         self.per_gpu_throughput / other.per_gpu_throughput
+    }
+
+    /// Mean per-iteration straggler gap (0 for non-sharded runs).
+    pub fn mean_straggler_gap(&self) -> f64 {
+        if self.straggler_gaps.is_empty() {
+            0.0
+        } else {
+            self.straggler_gaps.iter().sum::<f64>() / self.straggler_gaps.len() as f64
+        }
     }
 }
 
@@ -176,6 +212,9 @@ pub fn run_system(
     dataset_key: &str,
     cfg: &RunConfig,
 ) -> RunResult {
+    if kind == SystemKind::DflopSharded {
+        return run_sharded(m, dataset_key, cfg);
+    }
     let cluster = ClusterSpec::hgx_a100(cfg.nodes);
     let mut truth = Truth::new(cluster);
     truth.injected = cfg.injected.clone();
@@ -383,6 +422,227 @@ pub fn run_system(
         optimizer_elapsed,
         replans,
         replan_events,
+        straggler_gaps: Vec::new(),
+        migrations: 0,
+        iterations,
+    }
+}
+
+/// Combine one step's per-replica iteration stats into a cluster-level
+/// view: stage arrays concatenate in shard order, idle is charged against
+/// the slowest replica's pipeline (straggler wait shows up as idle on the
+/// fast replicas), and the iteration time is the barrier's step time.
+/// Per-op timelines are dropped — an S-replica timeline has no single
+/// 1F1B rendering.
+fn merge_shard_iterations(per: Vec<IterationStats>, barrier: &BarrierStats) -> IterationStats {
+    let pipeline_max = per.iter().map(|s| s.pipeline_makespan).fold(0.0, f64::max);
+    let n_stages = per.iter().map(|s| s.n_stages).sum();
+    let mut stage_busy = Vec::with_capacity(n_stages);
+    let mut stage_flop = Vec::with_capacity(n_stages);
+    let mut buckets = Vec::new();
+    let mut total_flop = 0.0;
+    for s in per {
+        stage_busy.extend(s.stage_busy);
+        stage_flop.extend(s.stage_flop);
+        buckets.extend(s.buckets);
+        total_flop += s.total_flop;
+    }
+    let stage_idle = stage_busy.iter().map(|&b| pipeline_max - b).collect();
+    IterationStats {
+        iteration_time: barrier.step_time,
+        pipeline_makespan: pipeline_max,
+        dp_sync_time: barrier.step_time - pipeline_max,
+        stage_busy,
+        stage_idle,
+        stage_flop,
+        n_stages,
+        total_flop,
+        buckets,
+        timeline: Vec::new(),
+    }
+}
+
+/// [`run_system`] for [`SystemKind::DflopSharded`]: S data-parallel
+/// replicas of the per-replica plan θ*, each drawing from its own shard
+/// dataset (`shard::partition`), synchronized by the step barrier
+/// (`shard::sync`). Per iteration:
+///
+/// 1. per-shard batches are summarized and merged (`shard::agg`) — one
+///    *global* drift detector watches the pooled window and, on confirmed
+///    drift, one warm-started replan swaps θ for every replica at the
+///    iteration boundary;
+/// 2. the skew gate scores each shard's window against the pooled window;
+///    at or above `skew_enter` (and with `rebalance` on) the bounded
+///    migration walk (`shard::balance`) redistributes the global batch on
+///    predicted per-item cost;
+/// 3. every replica LPT-partitions its items and runs its own 1F1B sim,
+///    fanned over the worker pool in shard order; the step time is the
+///    slowest replica plus the cross-shard allreduce.
+///
+/// The whole path is budget-free (no ILP deadline), so every statistic is
+/// bit-identical across `--threads` settings.
+fn run_sharded(m: &Mllm, scenario: &str, cfg: &RunConfig) -> RunResult {
+    let sc = cfg.shard.clone().unwrap_or_default();
+    let shards = sc.dp_shards;
+    assert!(shards >= 1, "sharded run needs at least one shard");
+    assert!(
+        cfg.gbs >= shards,
+        "per-shard batch must be non-empty: gbs {} < {} shards",
+        cfg.gbs,
+        shards
+    );
+    // `cfg.nodes` sizes one replica; the deployment is `shards` replicas.
+    let cluster = ClusterSpec::hgx_a100(cfg.nodes);
+    let mut truth = Truth::new(cluster);
+    // Fig-15-style anomaly injection applies to every replica (they share
+    // the ground-truth cluster model).
+    truth.injected = cfg.injected.clone();
+
+    // ---- offline phase: model profile + pooled data profile + θ* ----
+    let mut backend = SimBackend::new(truth.clone());
+    let profile = ModelProfiler::new(&mut backend, ProfilerGrids::standard(cluster.gpus_per_node))
+        .profile(m);
+    let mut profile_sd = ShardedDataset::by_key(scenario, shards, cfg.seed ^ 0xDA7A)
+        .unwrap_or_else(|| panic!("unknown shard scenario '{scenario}'"));
+    let data = profile_sd.profile_pooled(m, cfg.profile_samples);
+    let profiling_seconds = backend.measured_seconds().max(data.profiling_seconds);
+
+    // θ* sizes one replica: per-replica GBS (ceil so memory is checked
+    // against the largest shard after remainder distribution). As
+    // everywhere else, Eq 4–5 prices activations at the *mean* shape — a
+    // skewed shard's heavy batches exceed that mean under static sharding
+    // already, and the rebalance walk only tightens this envelope: it
+    // never raises any replica's predicted load above the static
+    // bottleneck (accepted moves keep every touched shard strictly below
+    // the current maximum), and per-bucket memory scales with
+    // load / bucket count, not raw item count.
+    let rctx = ReplanContext {
+        m,
+        profile: &profile,
+        n_gpus: cluster.total_gpus(),
+        gpus_per_node: cluster.gpus_per_node,
+        mem_capacity: cluster.gpu.mem_bytes,
+        gbs: cfg.gbs.div_ceil(shards),
+    };
+    let r0 = optimize(&rctx.inputs(&data)).expect("no feasible sharded configuration");
+    let (mut theta, optimizer_elapsed) = (r0.theta, r0.elapsed);
+
+    // ---- online phase ----
+    let est = Estimator::new(m, &profile.throughput);
+    let mut sd = ShardedDataset::by_key(scenario, shards, cfg.seed).expect("scenario");
+    let counts = ShardedDataset::split_counts(cfg.gbs, shards);
+    let mut replanner =
+        Replanner::new(&data, theta, cfg.replan.clone().unwrap_or_default());
+    let mut gate = ShardWindows::new(shards, sc.window_batches);
+
+    let mut iterations = Vec::with_capacity(cfg.iters);
+    let mut sched_elapsed = Vec::with_capacity(cfg.iters);
+    let mut straggler_gaps = Vec::with_capacity(cfg.iters);
+    let mut migrations = 0usize;
+    let mut stage_thr_samples = Vec::new();
+    let mut bucket_enc_times = Vec::new();
+    let mut bucket_llm_times = Vec::new();
+
+    for _ in 0..cfg.iters {
+        let shard_batches = sd.shard_batches(m, &counts);
+
+        // Global drift: merge the per-shard summaries (bit-identical to a
+        // pooled recompute) and let ONE detector/replanner see the step.
+        let per_stats: Vec<ShapeStats> =
+            shard_batches.iter().map(|b| ShapeStats::of_batch(b)).collect();
+        let merged = merge_shard_stats(&per_stats);
+        let pooled: Vec<ItemShape> =
+            shard_batches.iter().flat_map(|b| b.iter().copied()).collect();
+        if let Some(new_theta) = replanner.observe_stats(&rctx, merged, &pooled) {
+            theta = new_theta;
+        }
+        gate.push(per_stats);
+
+        let t0 = std::time::Instant::now();
+        // Skew gate + bounded migration on predicted per-item cost at θ.
+        let home: Vec<usize> = shard_batches
+            .iter()
+            .enumerate()
+            .flat_map(|(r, b)| std::iter::repeat(r).take(b.len()))
+            .collect();
+        let groups: Vec<Vec<usize>> = if sc.rebalance && gate.skewed(sc.skew_enter) {
+            let items: Vec<ItemCost> = pooled
+                .iter()
+                .map(|s| ItemCost {
+                    enc: est.enc_item_dur(s, theta.enc.tp) / theta.enc.pp as f64,
+                    llm: est.llm_item_dur(s, theta.llm.tp) / theta.llm.pp as f64,
+                })
+                .collect();
+            let rb = rebalance(&items, &home, shards, &sc.balance);
+            migrations += rb.migrations;
+            rb.groups(shards)
+        } else {
+            // Static sharding: every item executes where it was drawn.
+            let mut g: Vec<Vec<usize>> = vec![Vec::new(); shards];
+            for (i, &r) in home.iter().enumerate() {
+                g[r].push(i);
+            }
+            g
+        };
+
+        // Per-replica LPT microbatching, then the replica fan-out.
+        let shard_buckets: Vec<Vec<Vec<ItemShape>>> = groups
+            .iter()
+            .map(|g| {
+                let shapes: Vec<ItemShape> = g.iter().map(|&i| pooled[i]).collect();
+                lpt_shard_buckets(&est, theta, &shapes)
+            })
+            .collect();
+        sched_elapsed.push(t0.elapsed());
+
+        let per_replica = simulate_shards(m, &truth, theta, &shard_buckets);
+        let barrier = step_barrier(
+            per_replica.iter().map(|s| s.iteration_time).collect(),
+            cross_shard_allreduce(m, &truth, theta, shards),
+        );
+        straggler_gaps.push(barrier.straggler_gap);
+        let stats = merge_shard_iterations(per_replica, &barrier);
+
+        stage_thr_samples.extend(stats.stage_throughputs());
+        for b in &stats.buckets {
+            if b.enc_time > 0.0 {
+                bucket_enc_times.push(b.enc_time);
+            }
+            if b.llm_time > 0.0 {
+                bucket_llm_times.push(b.llm_time);
+            }
+        }
+        iterations.push(stats);
+    }
+
+    let n = iterations.len().max(1) as f64;
+    let mean_iter = iterations.iter().map(|s| s.iteration_time).sum::<f64>() / n;
+    let mean_idle = iterations.iter().map(|s| s.total_idle()).sum::<f64>() / n;
+    let mean_thr = iterations
+        .iter()
+        .map(|s| s.cluster_throughput())
+        .sum::<f64>()
+        / n;
+    let n_gpus = cluster.total_gpus() * shards;
+
+    RunResult {
+        system: SystemKind::DflopSharded,
+        theta,
+        n_gpus,
+        per_gpu_throughput: mean_thr / n_gpus as f64,
+        mean_iteration_time: mean_iter,
+        mean_idle,
+        stage_throughput_samples: stage_thr_samples,
+        bucket_enc_times,
+        bucket_llm_times,
+        sched_elapsed,
+        lpt_fallbacks: 0,
+        profiling_seconds,
+        optimizer_elapsed,
+        replans: replanner.swaps(),
+        replan_events: replanner.events,
+        straggler_gaps,
+        migrations,
         iterations,
     }
 }
@@ -479,6 +739,85 @@ mod tests {
             adaptive.replan_events
         );
         assert_eq!(adaptive.theta, frozen.theta);
+    }
+
+    fn sharded_cfg(rebalance: bool) -> RunConfig {
+        let mut cfg = RunConfig::new(1, 64, 14, 42);
+        cfg.profile_samples = 256;
+        cfg.shard = Some(ShardConfig { rebalance, ..ShardConfig::default() });
+        cfg
+    }
+
+    #[test]
+    fn sharded_rebalance_beats_static_on_skewed_shards() {
+        // The acceptance scenario: a graded video→image tilt across four
+        // DP shards. Static sharding pays the video-heavy replica's
+        // makespan at every barrier; the rebalancer must migrate work,
+        // cut the simulated step time, and shrink the straggler gap.
+        let m = llava_ov(llama3("8b"));
+        let stat = run_system(SystemKind::DflopSharded, &m, "skewed-shard", &sharded_cfg(false));
+        let rebal = run_system(SystemKind::DflopSharded, &m, "skewed-shard", &sharded_cfg(true));
+        assert_eq!(stat.migrations, 0, "static baseline must not migrate");
+        assert!(rebal.migrations > 0, "skew never activated the balancer");
+        assert!(
+            rebal.mean_iteration_time < stat.mean_iteration_time,
+            "rebalanced step {:.3}s not below static {:.3}s",
+            rebal.mean_iteration_time,
+            stat.mean_iteration_time
+        );
+        assert!(
+            rebal.mean_straggler_gap() < stat.mean_straggler_gap(),
+            "straggler gap not reduced: {:.3}s vs {:.3}s",
+            rebal.mean_straggler_gap(),
+            stat.mean_straggler_gap()
+        );
+        assert!(rebal.speedup_over(&stat) > 1.0);
+        // Telemetry shape: one gap per iteration, all finite.
+        assert_eq!(rebal.straggler_gaps.len(), 14);
+        assert!(rebal.straggler_gaps.iter().all(|g| g.is_finite() && *g >= 0.0));
+    }
+
+    #[test]
+    fn sharded_homogeneous_shards_are_quiet() {
+        // The quiet guarantee: statistically identical shards must see
+        // zero migrations and zero global replans, making the full system
+        // bit-identical to the static baseline.
+        let m = llava_ov(llama3("8b"));
+        let stat = run_system(SystemKind::DflopSharded, &m, "mixed", &sharded_cfg(false));
+        let rebal = run_system(SystemKind::DflopSharded, &m, "mixed", &sharded_cfg(true));
+        assert_eq!(rebal.migrations, 0, "homogeneous shards migrated");
+        assert_eq!(rebal.replans, 0, "homogeneous shards replanned");
+        assert!(rebal.replan_events.is_empty());
+        assert_eq!(
+            rebal.per_gpu_throughput.to_bits(),
+            stat.per_gpu_throughput.to_bits(),
+            "quiet sharded run must equal static sharding exactly"
+        );
+        assert_eq!(rebal.theta, stat.theta);
+    }
+
+    #[test]
+    fn sharded_accounting_is_complete() {
+        let m = llava_ov(llama3("8b"));
+        let mut cfg = RunConfig::new(1, 32, 3, 42);
+        cfg.profile_samples = 256;
+        cfg.shard = Some(ShardConfig { dp_shards: 4, ..ShardConfig::default() });
+        let r = run_system(SystemKind::DflopSharded, &m, "laggard-shard", &cfg);
+        assert_eq!(r.n_gpus, 8 * 4, "4 replicas of one 8-GPU node");
+        assert_eq!(r.iterations.len(), 3);
+        assert_eq!(r.straggler_gaps.len(), 3);
+        // The laggard makes the gap strictly positive from the start.
+        assert!(r.straggler_gaps.iter().all(|&g| g > 0.0));
+        assert!(r.per_gpu_throughput > 0.0);
+        assert!(r.per_gpu_throughput < 312e12, "exceeds peak");
+        // Stage accounting concatenates all replicas.
+        let stages_per_replica = r.theta.enc.gpus() / r.theta.enc.tp
+            + r.theta.llm.gpus() / r.theta.llm.tp;
+        assert_eq!(r.iterations[0].n_stages, 4 * stages_per_replica);
+        // FLOP conservation across the merged view.
+        let s = &r.iterations[0];
+        let sum: f64 = s.stage_flop.iter().sum();
+        assert!((sum / s.total_flop - 1.0).abs() < 1e-9);
     }
 
     #[test]

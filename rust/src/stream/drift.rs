@@ -110,29 +110,7 @@ impl DriftDetector {
 
     /// Compute the statistics for a live aggregate (stateless).
     pub fn statistic(&self, live: &ShapeStats) -> DriftStat {
-        let mut seq_acc = 0.0;
-        let mut units_acc = 0.0;
-        for k in 1..=9 {
-            let q = k as f64 / 10.0;
-            let r = self.reference.seq_quantile(q);
-            let l = live.seq_quantile(q);
-            seq_acc += (l - r).abs() / r.max(1.0);
-            let ru = self.reference.units_quantile(q);
-            let lu = live.units_quantile(q);
-            units_acc += (lu - ru).abs() / ru.max(UNITS_FLOOR);
-        }
-        let ref_shares = self.reference.source_shares();
-        let live_shares = live.source_shares();
-        let tv: f64 = live_shares
-            .iter()
-            .zip(&ref_shares)
-            .map(|(l, r)| (l - r).abs())
-            .sum();
-        DriftStat {
-            quantile_dist: seq_acc / 9.0,
-            units_dist: units_acc / 9.0,
-            mix_tv: 0.5 * tv,
-        }
+        stat_between(&self.reference, live)
     }
 
     /// Evaluate one full window and advance the hysteresis state machine.
@@ -159,6 +137,37 @@ impl DriftDetector {
     pub fn rebase(&mut self, reference: ShapeStats) {
         self.reference = reference;
         self.watch = 0;
+    }
+}
+
+/// The drift statistics between two arbitrary aggregates — the stateless
+/// core [`DriftDetector::statistic`] is built on. The shard layer reuses
+/// it as a *skew* statistic, scoring each shard's window against the
+/// pooled cross-shard window to decide whether the replicas are
+/// distributionally heterogeneous (`shard::agg::ShardWindows::max_skew`).
+pub fn stat_between(reference: &ShapeStats, live: &ShapeStats) -> DriftStat {
+    let mut seq_acc = 0.0;
+    let mut units_acc = 0.0;
+    for k in 1..=9 {
+        let q = k as f64 / 10.0;
+        let r = reference.seq_quantile(q);
+        let l = live.seq_quantile(q);
+        seq_acc += (l - r).abs() / r.max(1.0);
+        let ru = reference.units_quantile(q);
+        let lu = live.units_quantile(q);
+        units_acc += (lu - ru).abs() / ru.max(UNITS_FLOOR);
+    }
+    let ref_shares = reference.source_shares();
+    let live_shares = live.source_shares();
+    let tv: f64 = live_shares
+        .iter()
+        .zip(&ref_shares)
+        .map(|(l, r)| (l - r).abs())
+        .sum();
+    DriftStat {
+        quantile_dist: seq_acc / 9.0,
+        units_dist: units_acc / 9.0,
+        mix_tv: 0.5 * tv,
     }
 }
 

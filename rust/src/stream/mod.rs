@@ -31,7 +31,7 @@ pub mod replan;
 pub mod reservoir;
 pub mod window;
 
-pub use drift::{Decision, DriftConfig, DriftDetector, DriftStat};
+pub use drift::{stat_between, Decision, DriftConfig, DriftDetector, DriftStat};
 pub use replan::{live_profile, ReplanConfig, ReplanContext, ReplanEvent, Replanner};
 pub use reservoir::ShapeReservoir;
 pub use window::{ShapeStats, ShapeWindow};

@@ -28,7 +28,7 @@ use crate::optimizer::search::{optimize_warm, OptimizerInputs};
 use crate::profiling::engine::{DataProfile, ModelProfile};
 use crate::stream::drift::{Decision, DriftConfig, DriftDetector, DriftStat};
 use crate::stream::reservoir::ShapeReservoir;
-use crate::stream::window::ShapeWindow;
+use crate::stream::window::{ShapeStats, ShapeWindow};
 use std::time::{Duration, Instant};
 
 /// Controller tuning. Defaults detect the `data::sources` scenario shifts
@@ -146,9 +146,25 @@ impl Replanner {
         ctx: &ReplanContext,
         shapes: &[ItemShape],
     ) -> Option<Theta> {
+        self.observe_stats(ctx, ShapeStats::of_batch(shapes), shapes)
+    }
+
+    /// [`Replanner::observe_batch`] for callers that aggregate the batch
+    /// summary themselves: the shard layer merges per-shard
+    /// [`ShapeStats`] into one global summary (`shard::agg`) and feeds it
+    /// here with the pooled shapes, so drift is detected — and a replan
+    /// fired — exactly *once* for the whole DP group instead of once per
+    /// shard. `stats` must summarize exactly `shapes` (the integer merge
+    /// guarantees the two views are bit-identical).
+    pub fn observe_stats(
+        &mut self,
+        ctx: &ReplanContext,
+        stats: ShapeStats,
+        shapes: &[ItemShape],
+    ) -> Option<Theta> {
         let iteration = self.iteration;
         self.iteration += 1;
-        self.window.push(shapes);
+        self.window.push_stats(stats);
         self.reservoir.extend(shapes);
         if self.cooldown > 0 {
             self.cooldown -= 1;

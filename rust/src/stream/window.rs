@@ -251,7 +251,15 @@ impl ShapeWindow {
 
     /// Ingest one global batch, evicting the oldest batch once full.
     pub fn push(&mut self, shapes: &[ItemShape]) {
-        let s = ShapeStats::of_batch(shapes);
+        self.push_stats(ShapeStats::of_batch(shapes));
+    }
+
+    /// Ingest an already-summarized batch — the entry the shard layer
+    /// uses after merging per-shard [`ShapeStats`] into one global batch
+    /// summary (`shard::agg`). Because everything is integer, a merged
+    /// summary pushed here is bit-identical to pushing the pooled shapes
+    /// through [`ShapeWindow::push`].
+    pub fn push_stats(&mut self, s: ShapeStats) {
         self.agg.merge(&s);
         self.batches.push_back(s);
         if self.batches.len() > self.capacity {

@@ -19,7 +19,8 @@ use dflop::profiling::engine::{profile_data, ModelProfiler, ProfilerGrids};
 use dflop::pipeline::{simulate, simulate_reference, Route, SimWorkspace};
 use dflop::scheduler::ilp;
 use dflop::scheduler::lpt::ItemCost;
-use dflop::sim::{run_cells, Cell, RunConfig, SystemKind};
+use dflop::shard::ShardConfig;
+use dflop::sim::{run_cells, run_system, Cell, RunConfig, SystemKind};
 use dflop::stream::replan::{ReplanConfig, ReplanContext, Replanner};
 use dflop::util::parallel::set_max_threads;
 use dflop::util::rng::Rng;
@@ -244,6 +245,64 @@ fn drift_replans_identical_across_thread_counts() {
     );
     assert_eq!(serial.1, parallel.1, "replan event streams drifted");
     assert_eq!(serial.0, parallel.0, "final plans drifted");
+}
+
+#[test]
+fn sharded_run_identical_across_thread_counts() {
+    let _g = width_guard();
+    // The shard subsystem end to end on the skewed scenario: per-shard
+    // batch synthesis → global stats merge → skew gate → bounded
+    // migration → per-replica LPT + pipeline sims fanned over the pool →
+    // step barrier. The path is budget-free by construction (per-shard
+    // LPT, no ILP deadline), so *every* statistic — rebalance decisions
+    // (migration count), replan events, straggler gaps, throughput — must
+    // be bit-identical at --threads 1 and 8. The fan-out also hands the
+    // replicas to different workers in different interleavings at the two
+    // widths, so agreement here is simultaneously the
+    // shard-evaluation-order invariance check (the merge itself is
+    // order-invariant by the integer-monoid property test in
+    // `shard::agg`).
+    let m = llava_ov(llama3("8b"));
+    let mut cfg = RunConfig::new(1, 48, 12, 42);
+    cfg.profile_samples = 256;
+    cfg.shard = Some(ShardConfig {
+        dp_shards: 4,
+        window_batches: 4,
+        ..ShardConfig::default()
+    });
+    set_max_threads(1);
+    let serial = run_system(SystemKind::DflopSharded, &m, "skewed-shard", &cfg);
+    set_max_threads(8);
+    let parallel = run_system(SystemKind::DflopSharded, &m, "skewed-shard", &cfg);
+    set_max_threads(0);
+    assert_eq!(serial.theta, parallel.theta);
+    assert!(serial.migrations > 0, "skew must exercise the rebalance path");
+    assert_eq!(serial.migrations, parallel.migrations, "rebalance decisions drifted");
+    assert_eq!(serial.straggler_gaps.len(), parallel.straggler_gaps.len());
+    for (i, (a, b)) in serial
+        .straggler_gaps
+        .iter()
+        .zip(&parallel.straggler_gaps)
+        .enumerate()
+    {
+        assert_eq!(a.to_bits(), b.to_bits(), "straggler gap drifted at iter {i}");
+    }
+    assert_eq!(
+        serial.per_gpu_throughput.to_bits(),
+        parallel.per_gpu_throughput.to_bits()
+    );
+    assert_eq!(
+        serial.mean_iteration_time.to_bits(),
+        parallel.mean_iteration_time.to_bits()
+    );
+    assert_eq!(serial.replans, parallel.replans);
+    let events = |r: &dflop::sim::RunResult| -> Vec<(usize, Theta, Theta, bool, u64)> {
+        r.replan_events
+            .iter()
+            .map(|e| (e.iteration, e.old, e.new, e.swapped, e.expected_makespan.to_bits()))
+            .collect()
+    };
+    assert_eq!(events(&serial), events(&parallel), "replan event streams drifted");
 }
 
 #[test]
