@@ -9,8 +9,8 @@
 //! Setting `DFLOP_BENCH_JSON=<path>` additionally records every result in
 //! a machine-readable JSON document (see [`emit_json`]): the bench targets
 //! run sequentially under `cargo bench` and each merges its rows into the
-//! same file, which CI uploads as an artifact (`BENCH_PR4.json` since the
-//! shard subsystem landed; the PR-2/PR-3 protocol files read identically).
+//! same file, which CI uploads as an artifact (`BENCH_PR5.json` since the
+//! execution engine landed; the PR-2..4 protocol files read identically).
 use std::time::Instant;
 
 /// True when the CI smoke mode is requested via `DFLOP_BENCH_QUICK`.

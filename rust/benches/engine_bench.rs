@@ -1,0 +1,165 @@
+//! Bench: engine-loop overhead vs the old inlined training loops.
+//!
+//! The PR-5 engine routes every iteration through two trait objects
+//! (`PlanPolicy`, `ExecModel`) and the `Telemetry` collector instead of a
+//! hand-rolled loop body. That seam must cost nothing measurable next to
+//! the work it dispatches (scheduling + 1F1B sims), so each pair below
+//! runs the *same* per-iteration arithmetic once through the engine types
+//! and once hand-inlined the way `sim::trainer` used to write it. Both
+//! sides share the offline artifacts; the deltas are dynamic dispatch,
+//! the `Draw`/`Scheduled` wrappers, and telemetry recording.
+
+mod common;
+use common::bench;
+use dflop::baselines::homogeneous::random_buckets;
+use dflop::data::dataset::Dataset;
+use dflop::data::item::ItemShape;
+use dflop::engine::exec::{ExecModel, ShardedExec, SingleReplicaExec};
+use dflop::engine::policy::{PlanPolicy, StaticPolicy};
+use dflop::engine::telemetry::Telemetry;
+use dflop::engine::{DataFeed, Draw};
+use dflop::model::catalog::{llama3, llava_ov};
+use dflop::perfmodel::{ClusterSpec, Truth};
+use dflop::pipeline::build::{iterate_ws, SystemPlan};
+use dflop::pipeline::sim::SimWorkspace;
+use dflop::profiling::backend::SimBackend;
+use dflop::profiling::engine::{ModelProfiler, ProfilerGrids};
+use dflop::profiling::estimator::Estimator;
+use dflop::shard::partition::ShardedDataset;
+use dflop::shard::sync::{cross_shard_allreduce, lpt_shard_buckets, simulate_shards, step_barrier};
+use dflop::shard::ShardConfig;
+use dflop::sim::{RunConfig, SystemKind};
+use dflop::util::rng::Rng;
+
+fn main() {
+    println!("== engine_bench ==");
+    let mut results = Vec::new();
+    let m = llava_ov(llama3("8b"));
+    let cluster = ClusterSpec::hgx_a100(1);
+    let truth = Truth::new(cluster);
+    let mut backend = SimBackend::new(truth.clone());
+    let profile = ModelProfiler::new(&mut backend, ProfilerGrids::standard(8)).profile(&m);
+    let est = Estimator::new(&m, &profile.throughput);
+    let theta = dflop::optimizer::plan::Theta {
+        enc: dflop::optimizer::plan::ModPar { tp: 1, pp: 1, dp: 1 },
+        llm: dflop::optimizer::plan::ModPar { tp: 1, pp: 7, dp: 1 },
+        n_mb: 8,
+    };
+    let iters = if common::quick() { 8 } else { 32 };
+    let gbs = 64;
+    let cfg = RunConfig::new(1, gbs, iters, 42);
+
+    // ---- single replica: engine seam vs inlined loop ----
+    // Megatron-style (random partitioner) keeps both sides budget-free so
+    // the comparison measures the seam, not ILP wall-clock noise.
+    results.push(bench(
+        &format!("engine loop: {iters} single-replica iterations (gbs {gbs})"),
+        10,
+        || {
+            let mut feed =
+                DataFeed::single(Dataset::by_key("mixed", cfg.seed).expect("key"), gbs);
+            let mut policy = StaticPolicy;
+            let mut exec =
+                SingleReplicaExec::new(SystemKind::Megatron, &m, &truth, &est, theta, &cfg);
+            let mut tel = Telemetry::new(iters);
+            for _ in 0..iters {
+                let draw = feed.draw(&m);
+                if let Some(plan) = policy.observe(&draw) {
+                    exec.apply_plan(&plan);
+                }
+                let sched = exec.schedule(&draw, &mut tel);
+                let stats = exec.execute(&sched, &mut tel);
+                exec.correct(&sched, &stats);
+                tel.record_iteration(stats);
+            }
+            std::hint::black_box(tel.iterations.len());
+        },
+    ));
+    results.push(bench(
+        &format!("inlined loop: {iters} single-replica iterations (gbs {gbs})"),
+        10,
+        || {
+            let mut ds = Dataset::by_key("mixed", cfg.seed).expect("key");
+            let mut rng = Rng::new(cfg.seed ^ 0xB0CC);
+            let mut ws = SimWorkspace::new();
+            let mut iterations = Vec::with_capacity(iters);
+            let mut stage_thr = Vec::new();
+            for _ in 0..iters {
+                let shapes = ds.shaped_batch(&m, gbs);
+                let buckets = random_buckets(&shapes, theta.buckets(), &mut rng);
+                let plan = SystemPlan { m: &m, truth: &truth, theta };
+                let stats = iterate_ws(&plan, &buckets, &mut ws);
+                stage_thr.extend(stats.stage_throughputs());
+                iterations.push(stats);
+            }
+            std::hint::black_box(iterations.len());
+        },
+    ));
+
+    // ---- sharded step: engine seam vs inlined fan-out ----
+    let shards = 4;
+    // Rebalancing off so both sides run the identical static step — the
+    // migration walk would only run on the engine side and mask the seam
+    // cost being measured.
+    let sc = ShardConfig {
+        dp_shards: shards,
+        window_batches: 4,
+        rebalance: false,
+        ..ShardConfig::default()
+    };
+    let counts = ShardedDataset::split_counts(gbs, shards);
+    let steps = if common::quick() { 4 } else { 12 };
+    results.push(bench(
+        &format!("engine loop: {steps} sharded steps ({shards} replicas, gbs {gbs})"),
+        10,
+        || {
+            let mut feed = DataFeed::sharded(
+                ShardedDataset::by_key("skewed-shard", shards, cfg.seed).expect("key"),
+                counts.clone(),
+            );
+            let mut exec = ShardedExec::new(&m, &truth, &est, theta, &sc);
+            let mut tel = Telemetry::new(steps);
+            for _ in 0..steps {
+                let draw = feed.draw(&m);
+                let sched = exec.schedule(&draw, &mut tel);
+                let stats = exec.execute(&sched, &mut tel);
+                tel.record_iteration(stats);
+            }
+            std::hint::black_box(tel.migrations);
+        },
+    ));
+    results.push(bench(
+        &format!("inlined loop: {steps} sharded steps ({shards} replicas, gbs {gbs})"),
+        10,
+        || {
+            let mut sd =
+                ShardedDataset::by_key("skewed-shard", shards, cfg.seed).expect("key");
+            let mut gate = dflop::shard::agg::ShardWindows::new(shards, sc.window_batches);
+            let mut iterations = Vec::with_capacity(steps);
+            let mut gaps = Vec::with_capacity(steps);
+            for _ in 0..steps {
+                let batches = sd.shard_batches(&m, &counts);
+                gate.push(
+                    batches
+                        .iter()
+                        .map(|b| dflop::stream::window::ShapeStats::of_batch(b))
+                        .collect(),
+                );
+                let buckets: Vec<Vec<Vec<ItemShape>>> = batches
+                    .iter()
+                    .map(|b| lpt_shard_buckets(&est, theta, b))
+                    .collect();
+                let per = simulate_shards(&m, &truth, theta, &buckets);
+                let barrier = step_barrier(
+                    per.iter().map(|s| s.iteration_time).collect(),
+                    cross_shard_allreduce(&m, &truth, theta, shards),
+                );
+                gaps.push(barrier.straggler_gap);
+                iterations.push(per);
+            }
+            std::hint::black_box(gaps.len());
+        },
+    ));
+
+    common::emit_json("engine_bench", &results);
+}

@@ -1,0 +1,439 @@
+//! Execution models behind the engine seam: how one scheduled iteration
+//! actually runs.
+//!
+//! Two models cover every `SystemKind`:
+//!
+//! - [`SingleReplicaExec`] — one pipeline replica per run: the Online
+//!   Microbatch Scheduler (or the baselines' random partitioner) buckets
+//!   the batch, one reusable [`SimWorkspace`] executes the 1F1B
+//!   iteration, and Adaptive Correction feedback (Eq 7) closes the loop.
+//! - [`ShardedExec`] — S data-parallel replicas behind the step barrier:
+//!   the `shard::agg` skew gate and `shard::balance` migration walk
+//!   redistribute the global batch, every replica LPT-buckets and
+//!   simulates its share on the worker pool, and the barrier charges the
+//!   cross-shard allreduce. With per-replica plans present
+//!   (`engine::hetero`) each replica runs its own θ_r; the allreduce is
+//!   the slowest replica group's ring.
+//!
+//! Both bodies are verbatim transplants of the loops that used to live in
+//! `sim::trainer::{run_system, run_sharded}` — the parity suite
+//! (`tests/engine_parity.rs`) holds them bit-identical to the originals.
+
+use crate::baselines::homogeneous::random_buckets;
+use crate::data::item::ItemShape;
+use crate::engine::policy::PlanSet;
+use crate::engine::telemetry::Telemetry;
+use crate::engine::Draw;
+use crate::model::catalog::Mllm;
+use crate::perfmodel::Truth;
+use crate::pipeline::build::{iterate_ws, IterationStats, SystemPlan};
+use crate::pipeline::sim::SimWorkspace;
+use crate::profiling::estimator::Estimator;
+use crate::scheduler::correction::{Correction, CorrectionConfig};
+use crate::scheduler::lpt::ItemCost;
+use crate::scheduler::online::{OnlineScheduler, SchedulerConfig, Solver};
+use crate::shard::agg::ShardWindows;
+use crate::shard::balance::rebalance;
+use crate::shard::sync::{
+    cross_shard_allreduce, lpt_shard_buckets, simulate_shards, simulate_shards_hetero,
+    step_barrier, BarrierStats,
+};
+use crate::shard::ShardConfig;
+use crate::sim::trainer::{RunConfig, SystemKind};
+use crate::util::rng::Rng;
+
+/// One iteration's scheduled work: per-replica microbatch buckets
+/// (single-replica models carry exactly one replica entry).
+#[derive(Clone, Debug)]
+pub struct Scheduled {
+    pub replicas: Vec<Vec<Vec<ItemShape>>>,
+}
+
+/// How a system turns a draw into an executed iteration.
+pub trait ExecModel {
+    /// Swap in a policy decision at the iteration boundary.
+    fn apply_plan(&mut self, plan: &PlanSet);
+
+    /// The live plan (its global θ is what `RunResult::theta` reports).
+    fn plan(&self) -> &PlanSet;
+
+    /// Partition the draw into microbatch buckets (scheduling wall-clock
+    /// and solver fallbacks / migrations land in `tel`).
+    fn schedule(&mut self, draw: &Draw, tel: &mut Telemetry) -> Scheduled;
+
+    /// Execute the scheduled iteration (straggler gaps land in `tel`).
+    fn execute(&mut self, sched: &Scheduled, tel: &mut Telemetry) -> IterationStats;
+
+    /// Feed execution measurements back into the plan's estimators
+    /// (Adaptive Correction); default no-op for models without it.
+    fn correct(&mut self, _sched: &Scheduled, _stats: &IterationStats) {}
+}
+
+/// Materialize bucket index groups into item-shape buckets.
+fn materialize(shapes: &[ItemShape], groups: &[Vec<usize>]) -> Vec<Vec<ItemShape>> {
+    groups
+        .iter()
+        .map(|g| g.iter().map(|&i| shapes[i]).collect())
+        .collect()
+}
+
+/// One pipeline replica: scheduler (ILP/LPT or random) + 1F1B workspace +
+/// Adaptive Correction.
+pub struct SingleReplicaExec<'a> {
+    m: &'a Mllm,
+    truth: &'a Truth,
+    est: &'a Estimator<'a>,
+    plan: PlanSet,
+    scheduler: OnlineScheduler,
+    rng: Rng,
+    uses_scheduler: bool,
+    /// One simulation workspace per run (= per pool worker task): every
+    /// iteration's route build + 1F1B execution reuses the same arena.
+    ws: SimWorkspace,
+}
+
+impl<'a> SingleReplicaExec<'a> {
+    pub fn new(
+        kind: SystemKind,
+        m: &'a Mllm,
+        truth: &'a Truth,
+        est: &'a Estimator<'a>,
+        theta: crate::optimizer::plan::Theta,
+        cfg: &RunConfig,
+    ) -> SingleReplicaExec<'a> {
+        let uses_scheduler = matches!(
+            kind,
+            SystemKind::Dflop | SystemKind::DflopAdaptive | SystemKind::DflopSchedulerOnly
+        );
+        let mut correction_cfg = CorrectionConfig::default();
+        if cfg.disable_correction {
+            // A zero-benefit window of one iteration deactivates immediately.
+            correction_cfg.window = 1;
+            correction_cfg.cost_fraction = f64::INFINITY;
+        }
+        SingleReplicaExec {
+            m,
+            truth,
+            est,
+            plan: PlanSet::global(theta),
+            scheduler: OnlineScheduler::new(
+                theta,
+                SchedulerConfig { ilp_budget: cfg.ilp_budget },
+                Correction::new(correction_cfg),
+            ),
+            rng: Rng::new(cfg.seed ^ 0xB0CC),
+            uses_scheduler,
+            ws: SimWorkspace::new(),
+        }
+    }
+}
+
+impl ExecModel for SingleReplicaExec<'_> {
+    fn apply_plan(&mut self, plan: &PlanSet) {
+        self.plan = PlanSet::global(plan.global);
+        self.scheduler.theta = plan.global;
+        // Drift-aware Adaptive Correction: Eq-7 penalties were measured
+        // against the old θ's predictions — stale ratios would bias the
+        // first post-swap schedules, so they reset with the plan.
+        self.scheduler.correction.reset_penalties();
+    }
+
+    fn plan(&self) -> &PlanSet {
+        &self.plan
+    }
+
+    fn schedule(&mut self, draw: &Draw, tel: &mut Telemetry) -> Scheduled {
+        let Draw::Single(shapes) = draw else {
+            unreachable!("single-replica exec fed a sharded draw")
+        };
+        let buckets = if self.uses_scheduler {
+            let sched = self.scheduler.schedule(self.est, shapes);
+            tel.sched_elapsed.push(sched.elapsed);
+            if sched.solver == Solver::LptFallback {
+                tel.lpt_fallbacks += 1;
+            }
+            materialize(shapes, &sched.assignment.buckets)
+        } else {
+            let t0 = std::time::Instant::now();
+            let b = random_buckets(shapes, self.plan.global.buckets(), &mut self.rng);
+            tel.sched_elapsed.push(t0.elapsed());
+            b
+        };
+        Scheduled { replicas: vec![buckets] }
+    }
+
+    fn execute(&mut self, sched: &Scheduled, _tel: &mut Telemetry) -> IterationStats {
+        let plan = SystemPlan { m: self.m, truth: self.truth, theta: self.plan.global };
+        iterate_ws(&plan, &sched.replicas[0], &mut self.ws)
+    }
+
+    /// Adaptive Correction feedback (Eq 7).
+    fn correct(&mut self, sched: &Scheduled, stats: &IterationStats) {
+        if !(self.uses_scheduler && self.scheduler.correction.is_active()) {
+            return;
+        }
+        let theta = self.plan.global;
+        let buckets = &sched.replicas[0];
+        let mut observations = Vec::new();
+        let mut mispredicted = 0.0;
+        let l_layers = self.m.llm.layers as f64;
+        for bucket in buckets {
+            let total: f64 = bucket.iter().map(|i| i.llm_seq as f64).sum();
+            if total <= 0.0 {
+                continue;
+            }
+            for item in bucket {
+                let seq = item.llm_seq as f64;
+                if seq <= 0.0 {
+                    continue;
+                }
+                // Observed per-item time: the coordinator times the
+                // per-instance attention kernels and apportions the
+                // packed linear time by token share.
+                let lin = self.truth.llm_linear_time(self.m, total, l_layers, theta.llm.tp);
+                let lin_share = lin * seq / total;
+                let attn = self.truth.llm_attn_time(self.m, seq, l_layers, theta.llm.tp);
+                let actual = lin_share + attn;
+                let pred = self.est.llm_item_dur(item, theta.llm.tp);
+                let flop = item.llm_flop(self.m);
+                observations.push((
+                    Truth::llm_bucket(seq),
+                    flop / actual,
+                    flop / pred,
+                ));
+                mispredicted += (actual - pred).abs() / theta.llm.pp as f64;
+            }
+        }
+        let benefit = mispredicted
+            / (stats.buckets.len().max(1) as f64)
+            / stats.pipeline_makespan.max(1e-12);
+        self.scheduler.feedback(&observations, benefit);
+    }
+}
+
+/// Combine one step's per-replica iteration stats into a cluster-level
+/// view: stage arrays concatenate in shard order, idle is charged against
+/// the slowest replica's pipeline (straggler wait shows up as idle on the
+/// fast replicas), and the iteration time is the barrier's step time.
+/// Per-op timelines are dropped — an S-replica timeline has no single
+/// 1F1B rendering.
+fn merge_shard_iterations(per: Vec<IterationStats>, barrier: &BarrierStats) -> IterationStats {
+    let pipeline_max = per.iter().map(|s| s.pipeline_makespan).fold(0.0, f64::max);
+    let n_stages = per.iter().map(|s| s.n_stages).sum();
+    let mut stage_busy = Vec::with_capacity(n_stages);
+    let mut stage_flop = Vec::with_capacity(n_stages);
+    let mut buckets = Vec::new();
+    let mut total_flop = 0.0;
+    for s in per {
+        stage_busy.extend(s.stage_busy);
+        stage_flop.extend(s.stage_flop);
+        buckets.extend(s.buckets);
+        total_flop += s.total_flop;
+    }
+    let stage_idle = stage_busy.iter().map(|&b| pipeline_max - b).collect();
+    IterationStats {
+        iteration_time: barrier.step_time,
+        pipeline_makespan: pipeline_max,
+        dp_sync_time: barrier.step_time - pipeline_max,
+        stage_busy,
+        stage_idle,
+        stage_flop,
+        n_stages,
+        total_flop,
+        buckets,
+        timeline: Vec::new(),
+    }
+}
+
+/// S data-parallel replicas behind the step barrier, with the skew-gated
+/// bounded-migration rebalance and (optionally) per-replica plans.
+pub struct ShardedExec<'a> {
+    m: &'a Mllm,
+    truth: &'a Truth,
+    est: &'a Estimator<'a>,
+    plan: PlanSet,
+    /// The rebalance skew gate's per-shard windows.
+    gate: ShardWindows,
+    sc: ShardConfig,
+}
+
+impl<'a> ShardedExec<'a> {
+    pub fn new(
+        m: &'a Mllm,
+        truth: &'a Truth,
+        est: &'a Estimator<'a>,
+        theta: crate::optimizer::plan::Theta,
+        sc: &ShardConfig,
+    ) -> ShardedExec<'a> {
+        ShardedExec {
+            m,
+            truth,
+            est,
+            plan: PlanSet::global(theta),
+            gate: ShardWindows::new(sc.dp_shards, sc.window_batches),
+            sc: sc.clone(),
+        }
+    }
+}
+
+impl ExecModel for ShardedExec<'_> {
+    fn apply_plan(&mut self, plan: &PlanSet) {
+        self.plan = plan.clone();
+    }
+
+    fn plan(&self) -> &PlanSet {
+        &self.plan
+    }
+
+    fn schedule(&mut self, draw: &Draw, tel: &mut Telemetry) -> Scheduled {
+        let Draw::Sharded { batches, stats, pooled } = draw else {
+            unreachable!("sharded exec fed a single-replica draw")
+        };
+        self.gate.push(stats.clone());
+        let t0 = std::time::Instant::now();
+        let theta = self.plan.global;
+        let shards = self.sc.dp_shards;
+        // Skew gate + bounded migration on predicted per-item cost at the
+        // global θ — the reference frame every replica shares, so the
+        // migration decision is identical whether per-replica plans are
+        // active or not.
+        let home: Vec<usize> = batches
+            .iter()
+            .enumerate()
+            .flat_map(|(r, b)| std::iter::repeat(r).take(b.len()))
+            .collect();
+        let skewed = self.sc.rebalance && self.gate.skewed(self.sc.skew_enter);
+        let groups: Vec<Vec<usize>> = if skewed {
+            let items: Vec<ItemCost> = pooled
+                .iter()
+                .map(|s| ItemCost {
+                    enc: self.est.enc_item_dur(s, theta.enc.tp) / theta.enc.pp as f64,
+                    llm: self.est.llm_item_dur(s, theta.llm.tp) / theta.llm.pp as f64,
+                })
+                .collect();
+            let rb = rebalance(&items, &home, shards, &self.sc.balance);
+            tel.migrations += rb.migrations;
+            rb.groups(shards)
+        } else {
+            // Static sharding: every item executes where it was drawn.
+            let mut g: Vec<Vec<usize>> = vec![Vec::new(); shards];
+            for (i, &r) in home.iter().enumerate() {
+                g[r].push(i);
+            }
+            g
+        };
+
+        // Per-replica LPT microbatching at each replica's own plan.
+        let replicas: Vec<Vec<Vec<ItemShape>>> = groups
+            .iter()
+            .enumerate()
+            .map(|(r, g)| {
+                let shapes: Vec<ItemShape> = g.iter().map(|&i| pooled[i]).collect();
+                lpt_shard_buckets(self.est, self.plan.replica_theta(r), &shapes)
+            })
+            .collect();
+        tel.sched_elapsed.push(t0.elapsed());
+        Scheduled { replicas }
+    }
+
+    fn execute(&mut self, sched: &Scheduled, tel: &mut Telemetry) -> IterationStats {
+        let shards = sched.replicas.len();
+        let (per_replica, allreduce) = match &self.plan.per_replica {
+            Some(thetas) => (
+                simulate_shards_hetero(self.m, self.truth, thetas, &sched.replicas),
+                // The ring runs at the pace of the slowest replica
+                // group's gradient slices.
+                thetas
+                    .iter()
+                    .map(|&t| cross_shard_allreduce(self.m, self.truth, t, shards))
+                    .fold(0.0, f64::max),
+            ),
+            None => (
+                simulate_shards(self.m, self.truth, self.plan.global, &sched.replicas),
+                cross_shard_allreduce(self.m, self.truth, self.plan.global, shards),
+            ),
+        };
+        let barrier = step_barrier(
+            per_replica.iter().map(|s| s.iteration_time).collect(),
+            allreduce,
+        );
+        tel.straggler_gaps.push(barrier.straggler_gap);
+        merge_shard_iterations(per_replica, &barrier)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::model::catalog::{llama3, llava_ov};
+    use crate::optimizer::plan::{ModPar, Theta};
+    use crate::perfmodel::ClusterSpec;
+    use crate::profiling::backend::SimBackend;
+    use crate::profiling::engine::{ModelProfiler, ProfilerGrids};
+
+    fn theta() -> Theta {
+        Theta {
+            enc: ModPar { tp: 1, pp: 1, dp: 1 },
+            llm: ModPar { tp: 1, pp: 3, dp: 1 },
+            n_mb: 4,
+        }
+    }
+
+    #[test]
+    fn apply_plan_resets_correction_penalties() {
+        // The drift-aware Adaptive Correction satellite at the unit
+        // level: learned per-bucket penalties must not survive a plan
+        // swap, while the cost-benefit state (activation) does.
+        let m = llava_ov(llama3("8b"));
+        let truth = Truth::smooth(ClusterSpec::hgx_a100(1));
+        let mut backend = SimBackend::new(truth.clone());
+        let profile =
+            ModelProfiler::new(&mut backend, ProfilerGrids::coarse(8)).profile(&m);
+        let est = Estimator::new(&m, &profile.throughput);
+        let cfg = RunConfig::new(1, 8, 1, 7);
+        let mut exec =
+            SingleReplicaExec::new(SystemKind::Dflop, &m, &truth, &est, theta(), &cfg);
+        exec.scheduler.correction.observe(5, 0.5, 1.0);
+        exec.scheduler.correction.observe(5, 0.5, 1.0);
+        assert_eq!(exec.scheduler.correction.corrected_buckets(), 1);
+        let mut new = theta();
+        new.n_mb = 8;
+        exec.apply_plan(&PlanSet::global(new));
+        assert_eq!(
+            exec.scheduler.correction.corrected_buckets(),
+            0,
+            "stale Eq-7 penalties survived the plan swap"
+        );
+        assert!(exec.scheduler.correction.is_active());
+        assert_eq!(exec.plan().global, new);
+        assert_eq!(exec.scheduler.theta, new);
+    }
+
+    #[test]
+    fn single_exec_schedules_and_executes_a_batch() {
+        let m = llava_ov(llama3("8b"));
+        let truth = Truth::smooth(ClusterSpec::hgx_a100(1));
+        let mut backend = SimBackend::new(truth.clone());
+        let profile =
+            ModelProfiler::new(&mut backend, ProfilerGrids::coarse(8)).profile(&m);
+        let est = Estimator::new(&m, &profile.throughput);
+        let cfg = RunConfig::new(1, 16, 1, 7);
+        let mut exec =
+            SingleReplicaExec::new(SystemKind::Megatron, &m, &truth, &est, theta(), &cfg);
+        let mut tel = Telemetry::new(1);
+        let draw = Draw::Single(Dataset::mixed(7).shaped_batch(&m, 16));
+        let sched = exec.schedule(&draw, &mut tel);
+        assert_eq!(sched.replicas.len(), 1);
+        assert_eq!(sched.replicas[0].len(), theta().buckets());
+        assert_eq!(
+            sched.replicas[0].iter().map(Vec::len).sum::<usize>(),
+            16,
+            "random partitioner must place every item"
+        );
+        let stats = exec.execute(&sched, &mut tel);
+        assert!(stats.iteration_time > 0.0);
+        assert_eq!(tel.sched_elapsed.len(), 1);
+        assert_eq!(tel.lpt_fallbacks, 0);
+    }
+}

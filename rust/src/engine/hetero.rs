@@ -1,0 +1,234 @@
+//! Heterogeneous per-replica plans: fit one θ_s per DP shard, then assign.
+//!
+//! The sharded trainer fits a single θ* to the **pooled** distribution,
+//! which is exactly wrong when shards draw from genuinely different data
+//! (the `skewed-shard` scenario's video-heavy rank runs an image-tuned
+//! encoder/LLM split at every barrier). This module is the ROADMAP's
+//! "heterogeneous per-replica θ" item:
+//!
+//! 1. **Fit** ([`fit_per_shard`]): for each shard, refit Eq 1's `D` from
+//!    the shard's own recent shapes (`stream::replan::live_profile`) and
+//!    re-run the optimizer **warm-started from the global θ***
+//!    (`optimize_warm`) — the incumbent is seeded into the refinement
+//!    top-K, so the per-shard verdict already compares θ_s against the
+//!    global plan under the *shard's* distribution. A shard whose data
+//!    matches the pool keeps the global plan.
+//! 2. **Assign** ([`assign_plans`]): any fitted plan can serve any
+//!    replica. Each shard keeps its own optimizer verdict as the
+//!    incumbent and only adopts another shard's fitted plan when the
+//!    Phase-2-style proxy score ([`plan_score`]) — the `shard::balance`
+//!    bi-metric load model (`ItemCost` pricing, LPT bottleneck) times the
+//!    1F1B pipeline occupancy `(m + p − 1)` — is strictly better; ties
+//!    keep the shard's own plan. The whole step is a pure function of the
+//!    reservoirs, so assignments are deterministic across thread counts.
+//!
+//! Memory feasibility of every fitted θ_s is enforced by the optimizer at
+//! the per-replica batch size; adopting a neighbour's plan keeps that
+//! envelope because shards of one scenario share the per-replica GBS.
+//!
+//! The policy seam (`engine::policy::PerShardPolicy`) gates all of this
+//! behind the `shard::agg` skew statistic: statistically identical shards
+//! never trigger a fit, keeping the homogeneous control bit-identical to
+//! the single-global-θ path with zero extra replans.
+
+use crate::data::item::ItemShape;
+use crate::model::catalog::Mllm;
+use crate::optimizer::plan::Theta;
+use crate::optimizer::search::optimize_warm;
+use crate::profiling::estimator::Estimator;
+use crate::scheduler::lpt::{lpt, ItemCost};
+use crate::stream::replan::{live_profile, ReplanContext};
+use crate::stream::reservoir::ShapeReservoir;
+
+/// The widest per-GPU gradient slice θ ships through the cross-shard
+/// ring (`shard::sync::grad_slices`, the allreduce's own byte term). The
+/// allreduce runs at the pace of the widest slice among the replicas, so
+/// a fitted plan is only eligible when its slice is no wider than the
+/// global plan's — otherwise a per-shard pipeline win could be paid back
+/// with interest at the gradient barrier every replica shares.
+pub fn grad_slice_bytes(m: &Mllm, theta: Theta) -> f64 {
+    let (enc, llm) = crate::shard::sync::grad_slices(m, theta);
+    enc.max(llm)
+}
+
+/// Fit one θ_s per shard from the shard's reservoir, warm-started from
+/// `global`. Shards with an empty reservoir, where the optimizer finds
+/// nothing feasible under the live distribution, or whose fitted plan
+/// would widen the cross-shard gradient slice (see [`grad_slice_bytes`])
+/// keep the global plan.
+pub fn fit_per_shard(
+    rctx: &ReplanContext,
+    global: Theta,
+    reservoirs: &[ShapeReservoir],
+) -> Vec<Theta> {
+    let slice_cap = grad_slice_bytes(rctx.m, global);
+    reservoirs
+        .iter()
+        .map(|res| {
+            if res.is_empty() {
+                return global;
+            }
+            let live = live_profile(rctx.m, res.shapes());
+            match optimize_warm(&rctx.inputs(&live), Some(global)) {
+                Some(r) if grad_slice_bytes(rctx.m, r.theta) <= slice_cap => r.theta,
+                _ => global,
+            }
+        })
+        .collect()
+}
+
+/// Phase-2-style makespan proxy of running `shapes` under `theta`: the
+/// bi-metric LPT bottleneck over θ's microbatch buckets (the same
+/// `ItemCost` pricing `shard::balance` and `shard::sync` use) scaled by
+/// the 1F1B pipeline occupancy `(m + p − 1)`. Only used to *rank* plans
+/// over the same shapes — the absolute value is not a time estimate.
+pub fn plan_score(est: &Estimator, theta: Theta, shapes: &[ItemShape]) -> f64 {
+    if shapes.is_empty() {
+        return 0.0;
+    }
+    let items: Vec<ItemCost> = shapes
+        .iter()
+        .map(|s| ItemCost {
+            enc: est.enc_item_dur(s, theta.enc.tp) / theta.enc.pp as f64,
+            llm: est.llm_item_dur(s, theta.llm.tp) / theta.llm.pp as f64,
+        })
+        .collect();
+    let m = theta.buckets().min(items.len());
+    let a = lpt(&items, m);
+    (m + theta.pipeline_depth() - 1) as f64 * a.c_max()
+}
+
+/// The deterministic assignment step: shard r's candidate list is its own
+/// fitted plan first, then every *distinct* other fitted plan in shard
+/// order; the proxy score picks the winner and ties keep the earliest
+/// candidate (i.e. the shard's own optimizer verdict).
+pub fn assign_plans(
+    est: &Estimator,
+    fitted: &[Theta],
+    reservoirs: &[ShapeReservoir],
+) -> Vec<Theta> {
+    assert_eq!(fitted.len(), reservoirs.len(), "one fitted plan per shard");
+    (0..fitted.len())
+        .map(|r| {
+            let shapes = reservoirs[r].shapes();
+            let mut cands: Vec<Theta> = vec![fitted[r]];
+            for &t in fitted {
+                if !cands.contains(&t) {
+                    cands.push(t);
+                }
+            }
+            let mut best = (plan_score(est, cands[0], shapes), 0usize);
+            for (ci, &t) in cands.iter().enumerate().skip(1) {
+                let s = plan_score(est, t, shapes);
+                if s < best.0 {
+                    best = (s, ci);
+                }
+            }
+            cands[best.1]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::model::catalog::{llama3, llava_ov};
+    use crate::optimizer::plan::ModPar;
+    use crate::perfmodel::{ClusterSpec, Truth};
+    use crate::profiling::backend::SimBackend;
+    use crate::profiling::engine::{ModelProfiler, ProfilerGrids};
+
+    fn theta(l_pp: usize, n_mb: usize) -> Theta {
+        Theta {
+            enc: ModPar { tp: 1, pp: 1, dp: 1 },
+            llm: ModPar { tp: 1, pp: l_pp, dp: 1 },
+            n_mb,
+        }
+    }
+
+    fn fixture() -> (crate::model::catalog::Mllm, crate::profiling::engine::ModelProfile)
+    {
+        let m = llava_ov(llama3("8b"));
+        let mut backend = SimBackend::new(Truth::smooth(ClusterSpec::hgx_a100(1)));
+        let p = ModelProfiler::new(&mut backend, ProfilerGrids::coarse(8)).profile(&m);
+        (m, p)
+    }
+
+    #[test]
+    fn grad_slice_guard_rejects_narrower_model_parallelism() {
+        // A plan with less model parallelism ships wider gradient slices
+        // through the cross-shard ring: the guard must read it as wider
+        // than the global plan, never narrower.
+        let m = llava_ov(llama3("8b"));
+        let wide = Theta {
+            enc: ModPar { tp: 1, pp: 1, dp: 1 },
+            llm: ModPar { tp: 2, pp: 3, dp: 1 },
+            n_mb: 4,
+        };
+        let narrow = Theta {
+            enc: ModPar { tp: 1, pp: 1, dp: 1 },
+            llm: ModPar { tp: 1, pp: 1, dp: 7 },
+            n_mb: 4,
+        };
+        assert!(grad_slice_bytes(&m, narrow) > grad_slice_bytes(&m, wide));
+        // Same model-parallel widths ⇒ identical slices, dp laid aside.
+        let mut redp = wide;
+        redp.llm.dp = 2;
+        assert_eq!(
+            grad_slice_bytes(&m, redp).to_bits(),
+            grad_slice_bytes(&m, wide).to_bits()
+        );
+    }
+
+    #[test]
+    fn plan_score_is_deterministic_and_positive() {
+        let (m, p) = fixture();
+        let est = Estimator::new(&m, &p.throughput);
+        let shapes = Dataset::mixed(11).shaped_batch(&m, 24);
+        let a = plan_score(&est, theta(3, 4), &shapes);
+        let b = plan_score(&est, theta(3, 4), &shapes);
+        assert!(a > 0.0);
+        assert_eq!(a.to_bits(), b.to_bits());
+        assert_eq!(plan_score(&est, theta(3, 4), &[]), 0.0);
+    }
+
+    #[test]
+    fn identical_fits_assign_identically() {
+        let (m, p) = fixture();
+        let est = Estimator::new(&m, &p.throughput);
+        let mut res = Vec::new();
+        let mut ds = Dataset::mixed(7);
+        for _ in 0..3 {
+            let mut r = ShapeReservoir::new(64);
+            r.extend(&ds.shaped_batch(&m, 32));
+            res.push(r);
+        }
+        let g = theta(3, 4);
+        let assigned = assign_plans(&est, &[g, g, g], &res);
+        assert_eq!(assigned, vec![g, g, g]);
+    }
+
+    #[test]
+    fn assignment_keeps_own_fit_on_ties() {
+        // Two shards with identical reservoirs but distinct fitted plans
+        // whose proxy scores differ: both shards must converge on the
+        // strictly-better plan, and exact ties keep the shard's own fit.
+        let (m, p) = fixture();
+        let est = Estimator::new(&m, &p.throughput);
+        let mut ds = Dataset::mixed(9);
+        let batch = ds.shaped_batch(&m, 48);
+        let mut r0 = ShapeReservoir::new(64);
+        r0.extend(&batch);
+        let mut r1 = ShapeReservoir::new(64);
+        r1.extend(&batch);
+        let a = theta(3, 4);
+        let b = theta(3, 12);
+        let sa = plan_score(&est, a, r0.shapes());
+        let sb = plan_score(&est, b, r0.shapes());
+        assert_ne!(sa.to_bits(), sb.to_bits(), "degenerate fixture");
+        let better = if sa < sb { a } else { b };
+        let assigned = assign_plans(&est, &[a, b], &[r0, r1]);
+        assert_eq!(assigned, vec![better, better]);
+    }
+}

@@ -1,0 +1,330 @@
+//! The unified policy-driven execution engine.
+//!
+//! Every `SystemKind` used to run through one of two parallel monoliths in
+//! `sim::trainer` (`run_system` / `run_sharded`), each hand-rolling the
+//! offline profile→optimize phase, the online iteration loop, replanner
+//! wiring, and telemetry. This module is the seam that replaces them: one
+//! [`run`] entry whose loop owns dataset draws, drift checks, scheduling,
+//! correction, and telemetry, with two trait objects supplying the
+//! system-specific behaviour —
+//!
+//! - [`policy::PlanPolicy`] decides *which plan executes next*: the frozen
+//!   offline θ* ([`policy::StaticPolicy`]), the drift-adaptive global θ
+//!   ([`policy::AdaptivePolicy`], single-batch or merged-shard-summary
+//!   fed), or heterogeneous per-replica plans
+//!   ([`policy::PerShardPolicy`] + [`hetero`]).
+//! - [`exec::ExecModel`] turns a draw into an executed iteration: one
+//!   1F1B replica with the Online Scheduler and Adaptive Correction
+//!   ([`exec::SingleReplicaExec`]), or S replicas behind the step barrier
+//!   with the skew-gated migration walk ([`exec::ShardedExec`]).
+//!
+//! [`telemetry::Telemetry`] collects what both loops used to bundle ad
+//! hoc, and assembles the one canonical `RunResult`.
+//!
+//! **Determinism contract.** The engine adds no arithmetic of its own:
+//! drawing, observing, scheduling, executing, and recording happen in
+//! exactly the order the old loops used, so every statistic is
+//! bit-identical to the pre-engine code — modulo the one deliberate
+//! behaviour change this PR ships, the Eq-7 correction-penalty reset at
+//! a plan swap, which can move adaptive-run numbers after a confirmed
+//! drift. `tests/engine_parity.rs` pins the refactor per `SystemKind` at
+//! `--threads 1` and `8` with that reset mirrored into its reference
+//! transcriptions, and the PR-1..4 thread-count invariants carry over
+//! unchanged.
+//!
+//! Dataset keys are validated *before* any profiling or pool work, so an
+//! unknown key is a `util::error::Result` error at the API boundary — not
+//! a panic inside a worker thread.
+
+pub mod exec;
+pub mod hetero;
+pub mod policy;
+pub mod telemetry;
+
+use crate::baselines::homogeneous::{megatron_tune, pytorch_tune, PYTORCH_SOFTWARE_FACTOR};
+use crate::data::dataset::Dataset;
+use crate::data::item::ItemShape;
+use crate::model::catalog::Mllm;
+use crate::optimizer::plan::Theta;
+use crate::optimizer::search::{optimize, OptimizerInputs};
+use crate::perfmodel::{ClusterSpec, Truth};
+use crate::profiling::backend::{MeasureBackend, SimBackend};
+use crate::profiling::engine::{
+    profile_data, DataProfile, ModelProfile, ModelProfiler, ProfilerGrids,
+};
+use crate::profiling::estimator::Estimator;
+use crate::shard::partition::ShardedDataset;
+use crate::shard::ShardConfig;
+use crate::sim::trainer::{RunConfig, RunResult, SystemKind};
+use crate::stream::replan::ReplanContext;
+use crate::stream::window::ShapeStats;
+use crate::util::error::Result;
+use exec::{ExecModel, ShardedExec, SingleReplicaExec};
+use policy::{AdaptivePolicy, PerShardPolicy, PlanPolicy, StaticPolicy};
+use std::time::Duration;
+use telemetry::Telemetry;
+
+/// One iteration's input, drawn ahead of plan observation and scheduling.
+#[derive(Clone, Debug)]
+pub enum Draw {
+    /// One global batch (single-replica systems).
+    Single(Vec<ItemShape>),
+    /// Per-shard batches plus their exact integer summaries and the
+    /// pooled concatenation (shard order) — computed once so the policy
+    /// (global drift merge) and executor (skew gate, rebalance pricing)
+    /// see the same values.
+    Sharded {
+        batches: Vec<Vec<ItemShape>>,
+        stats: Vec<ShapeStats>,
+        pooled: Vec<ItemShape>,
+    },
+}
+
+/// The engine's dataset seam: one stream per run, drawn in iteration
+/// order.
+pub enum DataFeed {
+    Single { ds: Dataset, gbs: usize },
+    Sharded { sd: ShardedDataset, counts: Vec<usize> },
+}
+
+impl DataFeed {
+    pub fn single(ds: Dataset, gbs: usize) -> DataFeed {
+        DataFeed::Single { ds, gbs }
+    }
+
+    pub fn sharded(sd: ShardedDataset, counts: Vec<usize>) -> DataFeed {
+        DataFeed::Sharded { sd, counts }
+    }
+
+    /// Draw the next iteration's input.
+    pub fn draw(&mut self, m: &Mllm) -> Draw {
+        match self {
+            DataFeed::Single { ds, gbs } => Draw::Single(ds.shaped_batch(m, *gbs)),
+            DataFeed::Sharded { sd, counts } => {
+                let batches = sd.shard_batches(m, counts);
+                let stats = batches.iter().map(|b| ShapeStats::of_batch(b)).collect();
+                let pooled = batches.iter().flat_map(|b| b.iter().copied()).collect();
+                Draw::Sharded { batches, stats, pooled }
+            }
+        }
+    }
+}
+
+/// Validate a run's inputs before any profiling or pool work: dataset /
+/// shard-scenario keys and the shard-count arithmetic. `run_cells` calls
+/// this up front for every cell so an unknown key can never poison a
+/// worker thread.
+pub fn validate(kind: SystemKind, dataset_key: &str, cfg: &RunConfig) -> Result<()> {
+    if kind == SystemKind::DflopSharded {
+        let sc = cfg.shard.clone().unwrap_or_default();
+        if sc.dp_shards < 1 {
+            crate::bail!("sharded run needs at least one shard");
+        }
+        if cfg.gbs < sc.dp_shards {
+            crate::bail!(
+                "per-shard batch must be non-empty: gbs {} < {} shards",
+                cfg.gbs,
+                sc.dp_shards
+            );
+        }
+        if ShardedDataset::by_key(dataset_key, sc.dp_shards, 0).is_none() {
+            crate::bail!(
+                "unknown shard scenario '{dataset_key}' (try skewed-shard|laggard-shard|\
+                 hot-shard|homogeneous-shard or any plain dataset key)"
+            );
+        }
+    } else if Dataset::by_key(dataset_key, 0).is_none() {
+        crate::bail!(
+            "unknown dataset '{dataset_key}' (try mixed|multi-image|video|audio|\
+             curriculum|bursty-video|modality-dropout)"
+        );
+    }
+    Ok(())
+}
+
+/// Everything a run's offline phase produces: the ground-truth cluster,
+/// the Model/Data Profiler outputs, and the offline plan θ*.
+pub struct Offline {
+    pub cluster: ClusterSpec,
+    pub truth: Truth,
+    pub profile: ModelProfile,
+    pub data: DataProfile,
+    /// Offline overheads (Table 4): model+data profiling wall-clock.
+    pub profiling_seconds: f64,
+    pub theta: Theta,
+    pub optimizer_elapsed: Duration,
+}
+
+/// The shared offline phase: profile the model against the ground truth,
+/// profile the data (pooled across shards for sharded runs), and select
+/// the system's offline plan. Assumes `validate` has passed.
+fn offline(kind: SystemKind, m: &Mllm, dataset_key: &str, cfg: &RunConfig) -> Offline {
+    let cluster = ClusterSpec::hgx_a100(cfg.nodes);
+    let mut truth = Truth::new(cluster);
+    truth.injected = cfg.injected.clone();
+    if kind == SystemKind::Pytorch {
+        truth.software_factor = PYTORCH_SOFTWARE_FACTOR;
+    }
+
+    let mut backend = SimBackend::new(truth.clone());
+    let profile = ModelProfiler::new(&mut backend, ProfilerGrids::standard(cluster.gpus_per_node))
+        .profile(m);
+    let data = if kind == SystemKind::DflopSharded {
+        let shards = cfg.shard.clone().unwrap_or_default().dp_shards;
+        let mut profile_sd = ShardedDataset::by_key(dataset_key, shards, cfg.seed ^ 0xDA7A)
+            .expect("validated shard scenario");
+        profile_sd.profile_pooled(m, cfg.profile_samples)
+    } else {
+        let mut profile_ds =
+            Dataset::by_key(dataset_key, cfg.seed ^ 0xDA7A).expect("validated dataset");
+        profile_data(m, &mut profile_ds, cfg.profile_samples)
+    };
+    let profiling_seconds = backend.measured_seconds().max(data.profiling_seconds);
+
+    let (theta, optimizer_elapsed) = match kind {
+        SystemKind::Dflop | SystemKind::DflopAdaptive | SystemKind::DflopOptimizerOnly => {
+            let inp = OptimizerInputs {
+                m,
+                profile: &profile,
+                data: &data,
+                n_gpus: cluster.total_gpus(),
+                gpus_per_node: cluster.gpus_per_node,
+                mem_capacity: cluster.gpu.mem_bytes,
+                gbs: cfg.gbs,
+                assume_balanced: kind != SystemKind::DflopOptimizerOnly,
+            };
+            let r = optimize(&inp).expect("no feasible DFLOP configuration");
+            (r.theta, r.elapsed)
+        }
+        SystemKind::DflopSharded => {
+            // θ* sizes one replica: per-replica GBS (ceil so memory is
+            // checked against the largest shard after remainder
+            // distribution), fitted to the *pooled* distribution the
+            // rebalancer steers every replica towards.
+            let shards = cfg.shard.clone().unwrap_or_default().dp_shards;
+            let rctx = ReplanContext {
+                m,
+                profile: &profile,
+                n_gpus: cluster.total_gpus(),
+                gpus_per_node: cluster.gpus_per_node,
+                mem_capacity: cluster.gpu.mem_bytes,
+                gbs: cfg.gbs.div_ceil(shards),
+            };
+            let r = optimize(&rctx.inputs(&data)).expect("no feasible sharded configuration");
+            (r.theta, r.elapsed)
+        }
+        SystemKind::DflopSchedulerOnly | SystemKind::Megatron => {
+            let c = megatron_tune(m, &truth, cfg.gbs, data.mean_units(), data.mean_seq())
+                .expect("no feasible Megatron configuration");
+            (c.theta, Duration::ZERO)
+        }
+        SystemKind::Pytorch => {
+            let c = pytorch_tune(m, &truth, cfg.gbs, data.mean_units(), data.mean_seq())
+                .expect("no feasible PyTorch configuration");
+            (c.theta, Duration::ZERO)
+        }
+    };
+
+    Offline {
+        cluster,
+        truth,
+        profile,
+        data,
+        profiling_seconds,
+        theta,
+        optimizer_elapsed,
+    }
+}
+
+/// Run one system on one workload through the engine: validate → offline
+/// phase → the shared iteration loop → `RunResult` assembly.
+///
+/// This is the single entry every `SystemKind` executes through —
+/// `sim::run_system` / `sim::run_cells`, the figure grids, the CLI `run`
+/// command, and the examples are all thin callers.
+pub fn run(kind: SystemKind, m: &Mllm, dataset_key: &str, cfg: &RunConfig) -> Result<RunResult> {
+    validate(kind, dataset_key, cfg)?;
+    let off = offline(kind, m, dataset_key, cfg);
+    let est = Estimator::new(m, &off.profile.throughput);
+
+    let sharded = kind == SystemKind::DflopSharded;
+    let sc: ShardConfig = cfg.shard.clone().unwrap_or_default();
+    let shards = sc.dp_shards;
+    // The optimizer-facing context of every (re)plan: per-replica GBS for
+    // sharded runs, the full global batch otherwise.
+    let rctx = ReplanContext {
+        m,
+        profile: &off.profile,
+        n_gpus: off.cluster.total_gpus(),
+        gpus_per_node: off.cluster.gpus_per_node,
+        mem_capacity: off.cluster.gpu.mem_bytes,
+        gbs: if sharded { cfg.gbs.div_ceil(shards) } else { cfg.gbs },
+    };
+
+    let mut feed = if sharded {
+        DataFeed::sharded(
+            ShardedDataset::by_key(dataset_key, shards, cfg.seed).expect("validated scenario"),
+            ShardedDataset::split_counts(cfg.gbs, shards),
+        )
+    } else {
+        DataFeed::single(
+            Dataset::by_key(dataset_key, cfg.seed).expect("validated dataset"),
+            cfg.gbs,
+        )
+    };
+
+    // Plan policy: who decides which θ executes next.
+    let replan_cfg = cfg.replan.clone().unwrap_or_default();
+    let mut policy: Box<dyn PlanPolicy + '_> = match kind {
+        SystemKind::DflopAdaptive => {
+            Box::new(AdaptivePolicy::new(&off.data, off.theta, replan_cfg, rctx))
+        }
+        SystemKind::DflopSharded if sc.hetero => Box::new(PerShardPolicy::new(
+            &off.data,
+            off.theta,
+            replan_cfg,
+            rctx,
+            &est,
+            &sc,
+        )),
+        SystemKind::DflopSharded => {
+            Box::new(AdaptivePolicy::new(&off.data, off.theta, replan_cfg, rctx))
+        }
+        _ => Box::new(StaticPolicy),
+    };
+
+    // Execution model: how a scheduled iteration actually runs.
+    let mut exec: Box<dyn ExecModel + '_> = if sharded {
+        Box::new(ShardedExec::new(m, &off.truth, &est, off.theta, &sc))
+    } else {
+        Box::new(SingleReplicaExec::new(kind, m, &off.truth, &est, off.theta, cfg))
+    };
+
+    // ---- the one shared iteration loop ----
+    let mut tel = Telemetry::new(cfg.iters);
+    for _ in 0..cfg.iters {
+        let draw = feed.draw(m);
+        // Drift check before scheduling: the batch's shapes are known to
+        // the CPU-side scheduler ahead of execution, and a confirmed
+        // drift swaps the plan at this iteration boundary.
+        if let Some(plan) = policy.observe(&draw) {
+            exec.apply_plan(&plan);
+        }
+        let sched = exec.schedule(&draw, &mut tel);
+        let stats = exec.execute(&sched, &mut tel);
+        exec.correct(&sched, &stats);
+        tel.record_iteration(stats);
+    }
+
+    let n_gpus = off.cluster.total_gpus() * if sharded { shards } else { 1 };
+    let final_plan = exec.plan().clone();
+    Ok(tel.finish(
+        kind,
+        final_plan.global,
+        n_gpus,
+        off.profiling_seconds,
+        off.optimizer_elapsed,
+        policy.take_events(),
+        final_plan.per_replica.unwrap_or_default(),
+    ))
+}

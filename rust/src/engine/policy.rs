@@ -1,0 +1,345 @@
+//! Plan selection behind one seam: who decides which θ executes next?
+//!
+//! Every system the trainer simulates answers that question differently —
+//! a frozen offline θ* (baselines, ablations, plain DFLOP), a global
+//! drift-adaptive θ (`stream::replan`, fed either a single batch or the
+//! merged per-shard summaries), or the heterogeneous per-replica plans of
+//! the sharded hetero mode — but the engine loop only ever asks one
+//! question per iteration: *given this draw, did the plan change at this
+//! boundary?* [`PlanPolicy`] is that question; the executors
+//! (`engine::exec`) consume whatever [`PlanSet`] comes back.
+//!
+//! Policies observe the draw **before** it is scheduled, so a swap lands
+//! on the iteration boundary just crossed — the contract `stream::replan`
+//! documents and `sim::trainer` always implemented inline.
+
+use crate::engine::hetero::{assign_plans, fit_per_shard};
+use crate::engine::Draw;
+use crate::optimizer::plan::Theta;
+use crate::profiling::engine::DataProfile;
+use crate::profiling::estimator::Estimator;
+use crate::shard::agg::{merge_shard_stats, ShardWindows};
+use crate::shard::ShardConfig;
+use crate::stream::replan::{ReplanConfig, ReplanContext, ReplanEvent, Replanner};
+use crate::stream::reservoir::ShapeReservoir;
+
+/// The plan a policy hands the executor for one iteration.
+#[derive(Clone, Debug)]
+pub struct PlanSet {
+    /// The global θ — scheduling reference frame, allreduce sizing, and
+    /// what `RunResult::theta` reports.
+    pub global: Theta,
+    /// Per-replica overrides (heterogeneous sharded runs); `None` means
+    /// every replica runs `global`.
+    pub per_replica: Option<Vec<Theta>>,
+}
+
+impl PlanSet {
+    pub fn global(theta: Theta) -> PlanSet {
+        PlanSet { global: theta, per_replica: None }
+    }
+
+    /// Shard r's effective θ.
+    pub fn replica_theta(&self, r: usize) -> Theta {
+        match &self.per_replica {
+            Some(ts) => ts[r],
+            None => self.global,
+        }
+    }
+}
+
+/// One iteration's plan decision, observed ahead of scheduling.
+pub trait PlanPolicy {
+    /// Feed the iteration's draw; `Some` when the plan changed at this
+    /// boundary (the executor applies it to this draw and everything
+    /// after).
+    fn observe(&mut self, draw: &Draw) -> Option<PlanSet>;
+
+    /// Drain the confirmed-drift event log (call once, at run end).
+    fn take_events(&mut self) -> Vec<ReplanEvent> {
+        Vec::new()
+    }
+}
+
+/// The offline θ* frozen for the whole run (baselines, ablations, plain
+/// DFLOP, and the static-plan arm of every comparison).
+pub struct StaticPolicy;
+
+impl PlanPolicy for StaticPolicy {
+    fn observe(&mut self, _draw: &Draw) -> Option<PlanSet> {
+        None
+    }
+}
+
+/// One global drift-adaptive plan (`stream::replan`): single-replica runs
+/// feed it whole batches, sharded runs feed it the merged per-shard
+/// summaries — so a DP group fires exactly one global replan, never S.
+pub struct AdaptivePolicy<'a> {
+    rp: Replanner,
+    rctx: ReplanContext<'a>,
+}
+
+impl<'a> AdaptivePolicy<'a> {
+    /// `reference` is the offline Data Profiler output θ* was fitted to.
+    pub fn new(
+        reference: &DataProfile,
+        theta: Theta,
+        cfg: ReplanConfig,
+        rctx: ReplanContext<'a>,
+    ) -> AdaptivePolicy<'a> {
+        AdaptivePolicy { rp: Replanner::new(reference, theta, cfg), rctx }
+    }
+}
+
+impl PlanPolicy for AdaptivePolicy<'_> {
+    fn observe(&mut self, draw: &Draw) -> Option<PlanSet> {
+        let new = match draw {
+            Draw::Single(shapes) => self.rp.observe_batch(&self.rctx, shapes),
+            Draw::Sharded { stats, pooled, .. } => {
+                self.rp.observe_stats(&self.rctx, merge_shard_stats(stats), pooled)
+            }
+        };
+        new.map(PlanSet::global)
+    }
+
+    fn take_events(&mut self) -> Vec<ReplanEvent> {
+        std::mem::take(&mut self.rp.events)
+    }
+}
+
+/// Heterogeneous per-replica plans on top of the global controller
+/// (`engine::hetero`): the global `stream::replan` drift loop is retained
+/// unchanged, and per-shard θ_s are fitted from each shard's own recent
+/// shapes once the `shard::agg` skew gate confirms the shards really
+/// differ — so homogeneous shards never fit (zero extra replans, and the
+/// run stays bit-identical to the global plan).
+pub struct PerShardPolicy<'a> {
+    global: Replanner,
+    rctx: ReplanContext<'a>,
+    est: &'a Estimator<'a>,
+    /// The policy's own skew view — deliberately a second copy of the
+    /// executor's rebalance gate rather than a reference across the
+    /// seam: both are built from the same `ShardConfig` and fed the same
+    /// draws, so they agree by construction, and the duplicate merge
+    /// cost is a few hundred integer adds per iteration.
+    windows: ShardWindows,
+    /// Per-shard recent shapes, the refit corpus for θ_s.
+    reservoirs: Vec<ShapeReservoir>,
+    skew_enter: f64,
+    /// Assigned per-replica plans; `None` while (or whenever) every shard
+    /// is best served by the global θ.
+    fitted: Option<Vec<Theta>>,
+    /// Iterations before the next fit attempt after one that normalized
+    /// back to the global plan: the reservoirs need a window's worth of
+    /// fresh shapes before a retry can conclude differently, and skew
+    /// stays confirmed continuously, so an unthrottled retry would run
+    /// S warm optimizer searches every iteration.
+    fit_cooldown: usize,
+    /// The retry distance (= the skew window width).
+    fit_retry: usize,
+}
+
+impl<'a> PerShardPolicy<'a> {
+    pub fn new(
+        reference: &DataProfile,
+        theta: Theta,
+        replan_cfg: ReplanConfig,
+        rctx: ReplanContext<'a>,
+        est: &'a Estimator<'a>,
+        sc: &ShardConfig,
+    ) -> PerShardPolicy<'a> {
+        let reservoirs = (0..sc.dp_shards)
+            .map(|_| ShapeReservoir::new(replan_cfg.reservoir))
+            .collect();
+        PerShardPolicy {
+            global: Replanner::new(reference, theta, replan_cfg),
+            rctx,
+            est,
+            windows: ShardWindows::new(sc.dp_shards, sc.window_batches),
+            reservoirs,
+            skew_enter: sc.skew_enter,
+            fitted: None,
+            fit_cooldown: 0,
+            fit_retry: sc.window_batches.max(1),
+        }
+    }
+
+    /// Fit one θ_s per shard warm-started from `global`, run the
+    /// assignment step, and normalize an all-global outcome back to
+    /// `None` (so the executor keeps the exact global code path).
+    fn refit(&mut self, global: Theta) {
+        let fitted = fit_per_shard(&self.rctx, global, &self.reservoirs);
+        let assigned = assign_plans(self.est, &fitted, &self.reservoirs);
+        self.fitted = if assigned.iter().all(|t| *t == global) {
+            None
+        } else {
+            Some(assigned)
+        };
+    }
+}
+
+impl PlanPolicy for PerShardPolicy<'_> {
+    fn observe(&mut self, draw: &Draw) -> Option<PlanSet> {
+        let Draw::Sharded { batches, stats, pooled } = draw else {
+            unreachable!("per-shard policy fed a single-replica draw")
+        };
+        let swap = self.global.observe_stats(&self.rctx, merge_shard_stats(stats), pooled);
+        self.windows.push(stats.clone());
+        for (res, b) in self.reservoirs.iter_mut().zip(batches) {
+            res.extend(b);
+        }
+        if let Some(g) = swap {
+            // The pooled distribution moved: the global plan swapped, and
+            // any per-shard plans were fitted against stale shards —
+            // refit them against the new incumbent. With no fits yet,
+            // re-arm the skew trigger immediately.
+            if self.fitted.is_some() {
+                self.refit(g);
+            } else {
+                self.fit_cooldown = 0;
+            }
+            return Some(PlanSet { global: g, per_replica: self.fitted.clone() });
+        }
+        match &self.fitted {
+            Some(_) => {
+                // Transient skew can converge back without moving the
+                // *pooled* distribution (per-shard divergence cancels in
+                // the merge, and the global detector was rebased), so
+                // fitted plans need their own exit: once the worst
+                // shard's score falls below half the entry threshold the
+                // plans are tuned to data the shards no longer draw —
+                // revert to the global plan. The half-threshold
+                // hysteresis plus the retry cooldown keeps a score
+                // hovering at the gate from flapping plans every window.
+                if self.windows.is_full() && !self.windows.skewed(self.skew_enter * 0.5) {
+                    self.fitted = None;
+                    self.fit_cooldown = self.fit_retry;
+                    return Some(PlanSet::global(self.global.theta));
+                }
+            }
+            None => {
+                if self.fit_cooldown > 0 {
+                    self.fit_cooldown -= 1;
+                } else if self.windows.is_full() && self.windows.skewed(self.skew_enter) {
+                    let g = self.global.theta;
+                    self.refit(g);
+                    match &self.fitted {
+                        Some(f) => {
+                            return Some(PlanSet { global: g, per_replica: Some(f.clone()) })
+                        }
+                        // Every shard still reads best-served by the
+                        // global plan (e.g. the reservoirs are dominated
+                        // by early, near-pooled shapes): retry after the
+                        // window turns over rather than latching off —
+                        // shards that keep diverging under a stationary
+                        // pooled mixture would otherwise never get their
+                        // plans.
+                        None => self.fit_cooldown = self.fit_retry,
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    fn take_events(&mut self) -> Vec<ReplanEvent> {
+        std::mem::take(&mut self.global.events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::model::catalog::{llama3, llava_ov};
+    use crate::optimizer::plan::ModPar;
+    use crate::perfmodel::{ClusterSpec, Truth};
+    use crate::profiling::backend::SimBackend;
+    use crate::profiling::engine::{profile_data, ModelProfiler, ProfilerGrids};
+    use crate::stream::window::ShapeStats;
+
+    fn theta() -> Theta {
+        Theta {
+            enc: ModPar { tp: 1, pp: 1, dp: 1 },
+            llm: ModPar { tp: 1, pp: 3, dp: 1 },
+            n_mb: 4,
+        }
+    }
+
+    #[test]
+    fn static_policy_never_swaps() {
+        let m = llava_ov(llama3("8b"));
+        let mut ds = Dataset::mixed(3);
+        let mut p = StaticPolicy;
+        for _ in 0..4 {
+            let draw = Draw::Single(ds.shaped_batch(&m, 8));
+            assert!(p.observe(&draw).is_none());
+        }
+        assert!(p.take_events().is_empty());
+    }
+
+    #[test]
+    fn converged_shards_revert_fitted_plans_to_global() {
+        // The hetero exit path: plans fitted during a transient skew must
+        // not latch on after the shards converge back to the pooled mix.
+        // The fitted state is seeded directly so the test is independent
+        // of optimizer behaviour and runs no search at all.
+        let m = llava_ov(llama3("8b"));
+        let cluster = ClusterSpec::hgx_a100(1);
+        let mut backend = SimBackend::new(Truth::new(cluster));
+        let profile =
+            ModelProfiler::new(&mut backend, ProfilerGrids::coarse(8)).profile(&m);
+        let est = Estimator::new(&m, &profile.throughput);
+        let data = profile_data(&m, &mut Dataset::mixed(0xDA7A), 256);
+        let rctx = ReplanContext {
+            m: &m,
+            profile: &profile,
+            n_gpus: cluster.total_gpus(),
+            gpus_per_node: cluster.gpus_per_node,
+            mem_capacity: cluster.gpu.mem_bytes,
+            gbs: 16,
+        };
+        let g = theta();
+        let sc = ShardConfig { dp_shards: 2, window_batches: 3, ..ShardConfig::default() };
+        let mut p =
+            PerShardPolicy::new(&data, g, ReplanConfig::default(), rctx, &est, &sc);
+        let mut alt = g;
+        alt.n_mb = 8;
+        p.fitted = Some(vec![alt, alt]);
+
+        // Statistically identical shards at 192-item windows: the skew
+        // score sits far below half the entry threshold once the windows
+        // fill, so the policy must hand back the global plan
+        // (per_replica = None) exactly once and then stay quiet.
+        let mut a = Dataset::mixed(3);
+        let mut b = Dataset::mixed(4);
+        let mut reverts = 0;
+        for _ in 0..6 {
+            let batches = vec![a.shaped_batch(&m, 64), b.shaped_batch(&m, 64)];
+            let stats = batches.iter().map(|x| ShapeStats::of_batch(x)).collect();
+            let pooled = batches.iter().flat_map(|x| x.iter().copied()).collect();
+            let draw = Draw::Sharded { batches, stats, pooled };
+            if let Some(plan) = p.observe(&draw) {
+                assert!(plan.per_replica.is_none(), "revert must drop to the global θ");
+                assert_eq!(plan.global, g);
+                reverts += 1;
+            }
+        }
+        assert_eq!(reverts, 1, "converged shards kept (or re-dropped) stale plans");
+        assert!(p.fitted.is_none());
+        assert!(p.take_events().is_empty(), "revert is not a replan");
+    }
+
+    #[test]
+    fn plan_set_replica_theta_falls_back_to_global() {
+        let g = theta();
+        let set = PlanSet::global(g);
+        assert_eq!(set.replica_theta(0), g);
+        assert_eq!(set.replica_theta(3), g);
+        let mut other = g;
+        other.n_mb = 8;
+        let het = PlanSet { global: g, per_replica: Some(vec![g, other]) };
+        assert_eq!(het.replica_theta(0), g);
+        assert_eq!(het.replica_theta(1), other);
+    }
+}

@@ -1,0 +1,186 @@
+//! The unified per-run telemetry collector.
+//!
+//! Both pre-engine training loops carried the same ad-hoc bundle of
+//! `Vec`s (iteration stats, scheduling wall-clocks, straggler gaps, the
+//! Fig-4/Fig-14 sample pools) and assembled a [`RunResult`] from them with
+//! duplicated mean arithmetic. [`Telemetry`] owns that state once: the
+//! engine loop records into it and [`Telemetry::finish`] performs the one
+//! canonical `RunResult` assembly. The arithmetic is a verbatim transplant
+//! of the old loops' epilogue, so results are bit-identical
+//! (`tests/engine_parity.rs`).
+
+use crate::optimizer::plan::Theta;
+use crate::pipeline::build::IterationStats;
+use crate::sim::trainer::{RunResult, SystemKind};
+use crate::stream::replan::ReplanEvent;
+use std::time::Duration;
+
+/// Everything one run accumulates across iterations.
+#[derive(Debug, Default)]
+pub struct Telemetry {
+    /// Full per-iteration stats for figure-specific postprocessing.
+    pub iterations: Vec<IterationStats>,
+    /// Scheduling wall-clock per iteration (real, Fig 16b).
+    pub sched_elapsed: Vec<Duration>,
+    /// ILP-deadline fallbacks (single-replica scheduled systems).
+    pub lpt_fallbacks: usize,
+    /// Per-iteration cross-shard straggler gap (sharded systems).
+    pub straggler_gaps: Vec<f64>,
+    /// Items migrated across shards over the run (sharded systems).
+    pub migrations: usize,
+    /// Per-stage throughput samples pooled over iterations (Fig 14).
+    pub stage_throughput_samples: Vec<f64>,
+    /// Per-bucket module times pooled over iterations (Fig 4).
+    pub bucket_enc_times: Vec<f64>,
+    pub bucket_llm_times: Vec<f64>,
+}
+
+impl Telemetry {
+    pub fn new(iters: usize) -> Telemetry {
+        Telemetry {
+            iterations: Vec::with_capacity(iters),
+            sched_elapsed: Vec::with_capacity(iters),
+            straggler_gaps: Vec::with_capacity(iters),
+            ..Telemetry::default()
+        }
+    }
+
+    /// Fold one executed iteration into the pooled distributions and
+    /// retain its full stats.
+    pub fn record_iteration(&mut self, stats: IterationStats) {
+        self.stage_throughput_samples.extend(stats.stage_throughputs());
+        for b in &stats.buckets {
+            if b.enc_time > 0.0 {
+                self.bucket_enc_times.push(b.enc_time);
+            }
+            if b.llm_time > 0.0 {
+                self.bucket_llm_times.push(b.llm_time);
+            }
+        }
+        self.iterations.push(stats);
+    }
+
+    /// Assemble the [`RunResult`] — the single copy of the mean arithmetic
+    /// that used to live at the tail of both training loops.
+    #[allow(clippy::too_many_arguments)] // the offline-phase scalars are a run's identity
+    pub fn finish(
+        self,
+        system: SystemKind,
+        theta: Theta,
+        n_gpus: usize,
+        profiling_seconds: f64,
+        optimizer_elapsed: Duration,
+        replan_events: Vec<ReplanEvent>,
+        hetero_thetas: Vec<Theta>,
+    ) -> RunResult {
+        let n = self.iterations.len().max(1) as f64;
+        let mean_iter = self.iterations.iter().map(|s| s.iteration_time).sum::<f64>() / n;
+        let mean_idle = self.iterations.iter().map(|s| s.total_idle()).sum::<f64>() / n;
+        let mean_thr = self
+            .iterations
+            .iter()
+            .map(|s| s.cluster_throughput())
+            .sum::<f64>()
+            / n;
+        let replans = replan_events.iter().filter(|e| e.swapped).count();
+        RunResult {
+            system,
+            theta,
+            n_gpus,
+            per_gpu_throughput: mean_thr / n_gpus as f64,
+            mean_iteration_time: mean_iter,
+            mean_idle,
+            stage_throughput_samples: self.stage_throughput_samples,
+            bucket_enc_times: self.bucket_enc_times,
+            bucket_llm_times: self.bucket_llm_times,
+            sched_elapsed: self.sched_elapsed,
+            lpt_fallbacks: self.lpt_fallbacks,
+            profiling_seconds,
+            optimizer_elapsed,
+            replans,
+            replan_events,
+            straggler_gaps: self.straggler_gaps,
+            migrations: self.migrations,
+            hetero_thetas,
+            iterations: self.iterations,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::plan::ModPar;
+    use crate::pipeline::build::BucketExec;
+
+    fn theta() -> Theta {
+        Theta {
+            enc: ModPar { tp: 1, pp: 1, dp: 1 },
+            llm: ModPar { tp: 1, pp: 1, dp: 1 },
+            n_mb: 1,
+        }
+    }
+
+    fn stats(iteration_time: f64) -> IterationStats {
+        IterationStats {
+            iteration_time,
+            pipeline_makespan: iteration_time,
+            dp_sync_time: 0.0,
+            stage_busy: vec![iteration_time / 2.0],
+            stage_idle: vec![iteration_time / 2.0],
+            stage_flop: vec![4.0e12],
+            n_stages: 1,
+            total_flop: 4.0e12,
+            buckets: vec![BucketExec {
+                enc_time: 0.0,
+                llm_time: iteration_time,
+                enc_flop: 0.0,
+                llm_flop: 4.0e12,
+                llm_shape_bucket: 0,
+            }],
+            timeline: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn finish_reproduces_the_loop_epilogue_arithmetic() {
+        let mut t = Telemetry::new(2);
+        t.record_iteration(stats(2.0));
+        t.record_iteration(stats(4.0));
+        let r = t.finish(
+            SystemKind::Megatron,
+            theta(),
+            8,
+            10.0,
+            Duration::ZERO,
+            Vec::new(),
+            Vec::new(),
+        );
+        assert_eq!(r.mean_iteration_time, 3.0);
+        assert_eq!(r.mean_idle, 1.5);
+        // Mean cluster throughput over iterations, divided by GPUs.
+        let thr = (4.0e12 / 2.0 + 4.0e12 / 4.0) / 2.0 / 8.0;
+        assert_eq!(r.per_gpu_throughput.to_bits(), thr.to_bits());
+        assert_eq!(r.iterations.len(), 2);
+        assert_eq!(r.replans, 0);
+        // Zero-time encoder buckets are filtered, LLM buckets kept.
+        assert!(r.bucket_enc_times.is_empty());
+        assert_eq!(r.bucket_llm_times, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn empty_run_does_not_divide_by_zero() {
+        let t = Telemetry::new(0);
+        let r = t.finish(
+            SystemKind::Pytorch,
+            theta(),
+            8,
+            1.0,
+            Duration::ZERO,
+            Vec::new(),
+            Vec::new(),
+        );
+        assert_eq!(r.mean_iteration_time, 0.0);
+        assert_eq!(r.per_gpu_throughput, 0.0);
+    }
+}

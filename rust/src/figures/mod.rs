@@ -69,7 +69,9 @@ fn cross_specs<'d>(
 }
 
 /// Evaluate (system, model, dataset) cells at this figure's options on the
-/// worker pool; results come back in spec order.
+/// worker pool; results come back in spec order. Figures only use built-in
+/// dataset keys, so the up-front key validation in [`run_cells`] cannot
+/// fail here.
 fn run_grid(specs: Vec<(SystemKind, Mllm, &str)>, o: &FigOpts) -> Vec<RunResult> {
     let cells: Vec<Cell> = specs
         .into_iter()
@@ -80,7 +82,7 @@ fn run_grid(specs: Vec<(SystemKind, Mllm, &str)>, o: &FigOpts) -> Vec<RunResult>
             cfg: RunConfig::new(o.nodes, o.gbs, o.iters, o.seed),
         })
         .collect();
-    run_cells(&cells)
+    run_cells(&cells).expect("built-in dataset keys")
 }
 
 // ------------------------------------------------------------------
@@ -427,7 +429,7 @@ pub fn fig12(o: &FigOpts) -> String {
             });
         }
     }
-    let results = run_cells(&cells);
+    let results = run_cells(&cells).expect("built-in dataset keys");
     for (i, &nodes) in node_counts.iter().enumerate() {
         let (d, mg, pt) = (&results[3 * i], &results[3 * i + 1], &results[3 * i + 2]);
         let total = |r: &RunResult| r.per_gpu_throughput * r.n_gpus as f64 / 1e15;
@@ -589,7 +591,7 @@ pub fn fig15(o: &FigOpts) -> String {
             }
         }
     }
-    let results = run_cells(&cells);
+    let results = run_cells(&cells).expect("built-in dataset keys");
     for (ri, &(label, _)) in rates.iter().enumerate() {
         let mut row = vec![label.to_string()];
         for li in 0..latencies.len() {
@@ -715,7 +717,7 @@ pub fn drift_grid(o: &FigOpts) -> Vec<(&'static str, RunResult, RunResult)> {
             });
         }
     }
-    let mut results = run_cells(&cells).into_iter();
+    let mut results = run_cells(&cells).expect("built-in dataset keys").into_iter();
     scenarios
         .into_iter()
         .map(|key| {
@@ -807,7 +809,7 @@ pub fn shard_grid_with(o: &FigOpts, dp_shards: usize) -> Vec<(&'static str, RunR
             });
         }
     }
-    let mut results = run_cells(&cells).into_iter();
+    let mut results = run_cells(&cells).expect("built-in dataset keys").into_iter();
     scenarios
         .into_iter()
         .map(|key| {
@@ -867,6 +869,109 @@ pub fn fig_shard(o: &FigOpts) -> String {
 }
 
 // ------------------------------------------------------------------
+// Fig 19 (extension) — heterogeneous per-replica plans vs one global θ*
+// ------------------------------------------------------------------
+
+/// Minimum iterations for a hetero-grid run: the per-shard skew windows
+/// (`window_batches` = 4 here) must fill before a fit can trigger, and
+/// the comparison needs a stretch of post-fit iterations. Shared with the
+/// `hetero_plan` example.
+pub const HETERO_MIN_ITERS: usize = 12;
+
+/// The (scenario × {global θ*, per-replica θ}) evaluation grid behind the
+/// hetero figure and the `hetero_plan` example: the stationary skew
+/// scenarios plus the homogeneous control, all under *static* sharding so
+/// the two arms execute identical item placements and only the plans
+/// differ. InternVL's 6B encoder makes the encoder/LLM split strongly
+/// distribution-dependent — the regime where one pooled plan hurts most.
+/// Returns `(scenario, global, hetero)` rows in scenario order.
+pub fn hetero_grid_with(
+    o: &FigOpts,
+    dp_shards: usize,
+) -> Vec<(&'static str, RunResult, RunResult)> {
+    let m = internvl_25(qwen25("7b"));
+    let iters = o.iters.max(HETERO_MIN_ITERS);
+    let scenarios: [&'static str; 3] = ["skewed-shard", "laggard-shard", "mixed"];
+    let mut cells = Vec::new();
+    for key in scenarios {
+        for hetero in [false, true] {
+            let mut cfg = RunConfig::new(o.nodes, o.gbs, iters, o.seed);
+            cfg.shard = Some(ShardConfig {
+                dp_shards,
+                rebalance: false,
+                hetero,
+                window_batches: 4,
+                ..ShardConfig::default()
+            });
+            cells.push(Cell {
+                kind: SystemKind::DflopSharded,
+                m: m.clone(),
+                dataset: key.to_string(),
+                cfg,
+            });
+        }
+    }
+    let mut results = run_cells(&cells).expect("built-in dataset keys").into_iter();
+    scenarios
+        .into_iter()
+        .map(|key| {
+            let global = results.next().expect("grid row");
+            let hetero = results.next().expect("grid row");
+            (key, global, hetero)
+        })
+        .collect()
+}
+
+/// [`hetero_grid_with`] at the default shard count.
+pub fn hetero_grid(o: &FigOpts) -> Vec<(&'static str, RunResult, RunResult)> {
+    hetero_grid_with(o, ShardConfig::default().dp_shards)
+}
+
+pub fn fig_hetero(o: &FigOpts) -> String {
+    let mut t = Table::new(
+        "Fig 19 — one global θ* vs heterogeneous per-replica plans (static shards, InternVL 2.5 / Qwen-2.5 7B)",
+        &[
+            "scenario",
+            "global step (s)",
+            "hetero step (s)",
+            "gain",
+            "gap global (s)",
+            "gap hetero (s)",
+            "distinct plans",
+            "replans",
+        ],
+    );
+    let rows = hetero_grid(o);
+    let mut notes = String::new();
+    for (key, global, hetero) in &rows {
+        let mut distinct: Vec<Theta> = Vec::new();
+        for th in &hetero.hetero_thetas {
+            if !distinct.contains(th) {
+                distinct.push(*th);
+            }
+        }
+        t.row(vec![
+            key.to_string(),
+            f(global.mean_iteration_time, 3),
+            f(hetero.mean_iteration_time, 3),
+            speedup(global.mean_iteration_time / hetero.mean_iteration_time),
+            f(global.mean_straggler_gap(), 3),
+            f(hetero.mean_straggler_gap(), 3),
+            format!("{}", distinct.len().max(1)),
+            format!("{}", hetero.replans),
+        ]);
+        if *key == "mixed" {
+            notes.push_str(&format!(
+                "quiet check (homogeneous shards): {} fitted plans, {} replans\n",
+                hetero.hetero_thetas.len(),
+                hetero.replans,
+            ));
+        }
+    }
+    t.render() + &notes
+}
+
+// ------------------------------------------------------------------
 // Tables 2 and 4
 // ------------------------------------------------------------------
 
@@ -897,7 +1002,7 @@ pub fn table4(o: &FigOpts) -> String {
             cfg: RunConfig::new(8, o.gbs, o.iters, o.seed),
         })
         .collect();
-    let results = run_cells(&cells);
+    let results = run_cells(&cells).expect("built-in dataset keys");
     for (cfg, d) in configs.iter().zip(&results) {
         let steps = 185_000.0 / o.gbs as f64;
         let train_h = steps * d.mean_iteration_time / 3600.0;
@@ -948,6 +1053,7 @@ pub fn all(o: &FigOpts) -> String {
     out.push_str(&fig16(o));
     out.push_str(&fig_drift(o));
     out.push_str(&fig_shard(o));
+    out.push_str(&fig_hetero(o));
     out.push_str(&table2(o));
     out.push_str(&table4(o));
     out
@@ -971,6 +1077,7 @@ pub fn by_id(id: &str, o: &FigOpts) -> Option<String> {
         "16" => fig16(o),
         "17" | "drift" => fig_drift(o),
         "18" | "shard" => fig_shard(o),
+        "19" | "hetero" => fig_hetero(o),
         "all" => all(o),
         _ => return None,
     })

@@ -28,6 +28,7 @@ compile_error!(
 pub mod baselines;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod figures;
 pub mod perfmodel;
 pub mod pipeline;

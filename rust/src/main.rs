@@ -2,10 +2,10 @@
 //! optimizer/scheduler inspection, and real-artifact profiling.
 //!
 //! ```text
-//! dflop figures --fig <1|2|4|7|8|9|10|11|12|13|14|15|16|17|drift|18|shard|all> [--nodes N] [--gbs N] [--iters N] [--seed S] [--threads N]
+//! dflop figures --fig <1|2|4|7|8|9|10|11|12|13|14|15|16|17|drift|18|shard|19|hetero|all> [--nodes N] [--gbs N] [--iters N] [--seed S] [--threads N]
 //! dflop table   --n <2|4>
 //! dflop run     --system <dflop|adaptive|sharded|megatron|pytorch|opt-only|sched-only> --model <key> --dataset <key>
-//!               [--dp-shards N] [--shard-skew <skewed|hot|laggard|homogeneous>] [--static-sharding]   # --system sharded
+//!               [--dp-shards N] [--shard-skew <skewed|hot|laggard|homogeneous>] [--static-sharding] [--hetero-plans]   # --system sharded
 //! dflop optimize --model <key> --nodes N --gbs N
 //! dflop profile-real [--artifacts DIR]      # PJRT timing (needs `xla` feature)
 //! dflop models                              # list catalog keys
@@ -21,7 +21,7 @@ use dflop::bail;
 use dflop::err;
 use dflop::figures::{by_id, table2, table4, FigOpts};
 use dflop::model::catalog;
-use dflop::sim::{run_system, RunConfig, SystemKind};
+use dflop::sim::{RunConfig, SystemKind};
 use dflop::util::cli::{Args, Spec};
 use dflop::util::error::Result;
 use std::process::ExitCode;
@@ -52,7 +52,7 @@ fn real_main() -> Result<()> {
             "fig", "n", "nodes", "gbs", "iters", "seed", "system", "model", "dataset",
             "artifacts", "threads", "dp-shards", "shard-skew",
         ],
-        boolean: vec!["help", "static-sharding"],
+        boolean: vec!["help", "static-sharding", "hetero-plans"],
     };
     let args = Args::parse(std::env::args().skip(1), &spec)?;
     // Pool width for every parallel section below (0 = auto-detect).
@@ -102,6 +102,9 @@ fn real_main() -> Result<()> {
                     // --static-sharding runs the baseline every shard
                     // comparison is against (rebalancing off).
                     rebalance: !args.has("static-sharding"),
+                    // --hetero-plans fits one θ per shard behind the skew
+                    // gate (engine::hetero).
+                    hetero: args.has("hetero-plans"),
                     ..d
                 });
                 match args.get_or("shard-skew", "homogeneous").as_str() {
@@ -114,7 +117,9 @@ fn real_main() -> Result<()> {
                     ),
                 }
             }
-            let r = run_system(kind, &m, &dataset, &cfg);
+            // The engine entry returns a Result, so a bad key is a clean
+            // CLI error instead of a panic inside a worker thread.
+            let r = dflop::engine::run(kind, &m, &dataset, &cfg)?;
             println!("system        : {}", kind.label());
             println!("model         : {model_key}");
             println!("dataset       : {dataset}");
@@ -135,6 +140,12 @@ fn real_main() -> Result<()> {
                 println!("total GPUs    : {}", r.n_gpus);
                 println!("migrations    : {}", r.migrations);
                 println!("straggler gap : {:.3} s (mean over iterations)", r.mean_straggler_gap());
+                if !r.hetero_thetas.is_empty() {
+                    println!("per-replica θ :");
+                    for (i, t) in r.hetero_thetas.iter().enumerate() {
+                        println!("  shard {i}: {t}");
+                    }
+                }
             }
             if matches!(kind, SystemKind::DflopAdaptive | SystemKind::DflopSharded) {
                 println!("replans       : {}", r.replans);
@@ -238,7 +249,8 @@ fn real_main() -> Result<()> {
                 "run --system sharded: --dp-shards N (DP replicas, default 4), \
                  --shard-skew <skewed|hot|laggard|homogeneous> (per-shard data skew \
                  scenario; homogeneous keeps --dataset), --static-sharding \
-                 (disable cross-shard rebalancing: the baseline)"
+                 (disable cross-shard rebalancing: the baseline), --hetero-plans \
+                 (fit per-replica plans behind the skew gate)"
             );
             println!("see rust/src/main.rs header or DESIGN.md for details");
         }

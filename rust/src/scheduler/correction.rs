@@ -125,6 +125,17 @@ impl Correction {
         }
     }
 
+    /// Drop every per-bucket penalty. Called on a plan swap
+    /// (`engine::exec`): the Eq-7 ratios were measured against the *old*
+    /// θ's predictions (its TP/PP shape the estimator priced), so carrying
+    /// them across a replan would bias the first post-swap schedules. The
+    /// cost-benefit state (activation, iteration count, the current
+    /// benefit window) survives — deactivation reflects the monitoring
+    /// cost, which a plan swap does not change.
+    pub fn reset_penalties(&mut self) {
+        self.penalties.clear();
+    }
+
     /// Number of shape buckets with a trusted penalty (diagnostics).
     pub fn corrected_buckets(&self) -> usize {
         self.penalties
@@ -194,6 +205,35 @@ mod tests {
         let adj = c.adjust(9, 7.0);
         assert!((adj - 10.0).abs() < 0.1, "adjusted {adj}");
         assert_eq!(c.corrected_buckets(), 1);
+    }
+
+    #[test]
+    fn reset_penalties_clears_ratios_but_keeps_cost_benefit_state() {
+        let cfg = CorrectionConfig { cost_fraction: 0.04, window: 5, min_observations: 2 };
+        let mut c = Correction::new(cfg);
+        c.observe(7, 0.5, 1.0);
+        c.observe(7, 0.5, 1.0);
+        assert!(c.adjust(7, 10.0) > 10.0);
+        for _ in 0..3 {
+            c.end_iteration(0.10);
+        }
+        c.reset_penalties();
+        // Penalties are gone…
+        assert_eq!(c.corrected_buckets(), 0);
+        assert_eq!(c.adjust(7, 10.0), 10.0);
+        // …but the cost-benefit loop is untouched: still active, same
+        // iteration count, and the partially-filled benefit window keeps
+        // accumulating (two more rich iterations close the window of 5
+        // without deactivating).
+        assert!(c.is_active());
+        assert_eq!(c.iterations, 3);
+        c.end_iteration(0.10);
+        c.end_iteration(0.10);
+        assert!(c.is_active());
+        // New observations after the reset are trusted again.
+        c.observe(7, 0.5, 1.0);
+        c.observe(7, 0.5, 1.0);
+        assert!(c.adjust(7, 10.0) > 10.0);
     }
 
     #[test]

@@ -42,7 +42,8 @@ pub use agg::{merge_shard_stats, ShardWindows};
 pub use balance::{rebalance, BalanceConfig, Rebalance};
 pub use partition::ShardedDataset;
 pub use sync::{
-    cross_shard_allreduce, lpt_shard_buckets, simulate_shards, step_barrier, BarrierStats,
+    cross_shard_allreduce, lpt_shard_buckets, simulate_shards, simulate_shards_hetero,
+    step_barrier, BarrierStats,
 };
 
 /// Configuration of a sharded run (carried on `sim::RunConfig`).
@@ -63,6 +64,18 @@ pub struct ShardConfig {
     /// `stream::drift`'s thresholds: statistically identical shards score
     /// well below it, the `data::sources` shard scenarios well above.
     pub skew_enter: f64,
+    /// Heterogeneous per-replica plans (`engine::hetero`): once the skew
+    /// gate confirms the shards genuinely differ, fit one θ_s per shard
+    /// from its own recent shapes (global replan controller retained) and
+    /// assign each replica the best-scoring fitted plan. Off by default;
+    /// on homogeneous shards the gate never opens, so enabling this is
+    /// bit-identical to the single global θ. Plans are fitted to the
+    /// *drawn* (home) distributions; composed with `rebalance`, the
+    /// migration walk moves at most `balance.migration_budget` of the
+    /// batch, so the home mix still dominates what each replica executes
+    /// — the controlled plan comparisons (tests, `--fig hetero`, the
+    /// `hetero_plan` example) pin `rebalance: false`.
+    pub hetero: bool,
 }
 
 impl Default for ShardConfig {
@@ -73,6 +86,7 @@ impl Default for ShardConfig {
             balance: BalanceConfig::default(),
             window_batches: 6,
             skew_enter: 0.35,
+            hetero: false,
         }
     }
 }

@@ -52,6 +52,19 @@ pub fn step_barrier(per_replica: Vec<f64>, allreduce: f64) -> BarrierStats {
     }
 }
 
+/// Per-GPU gradient slice each module ships through the cross-shard ring
+/// under θ: `(encoder bytes, llm bytes)`. The single source of the byte
+/// term shared by [`cross_shard_allreduce`] and the hetero plan guard
+/// (`engine::hetero::grad_slice_bytes`) — the guard is only sound while
+/// it prices exactly what the allreduce charges.
+pub fn grad_slices(m: &Mllm, theta: Theta) -> (f64, f64) {
+    let enc = m.encoder.total_params(m.enc_mlp_matrices) * 2.0
+        / (theta.enc.tp * theta.enc.pp) as f64;
+    let llm = m.llm.total_params(m.llm_mlp_matrices) * 2.0
+        / (theta.llm.tp * theta.llm.pp) as f64;
+    (enc, llm)
+}
+
 /// Cross-shard gradient allreduce time under the two-level DP model: the
 /// intra-replica reduction (θ's own `dp` groups) is already charged inside
 /// the replica's iteration (`pipeline::build`); the second level reduces
@@ -61,10 +74,7 @@ pub fn cross_shard_allreduce(m: &Mllm, truth: &Truth, theta: Theta, shards: usiz
     if shards <= 1 {
         return 0.0;
     }
-    let enc_grad = m.encoder.total_params(m.enc_mlp_matrices) * 2.0
-        / (theta.enc.tp * theta.enc.pp) as f64;
-    let llm_grad = m.llm.total_params(m.llm_mlp_matrices) * 2.0
-        / (theta.llm.tp * theta.llm.pp) as f64;
+    let (enc_grad, llm_grad) = grad_slices(m, theta);
     truth
         .dp_allreduce_time(enc_grad, shards)
         .max(truth.dp_allreduce_time(llm_grad, shards))
@@ -117,6 +127,25 @@ pub fn simulate_shards(
     par_map(shard_buckets.len(), |r| {
         SHARD_WS.with(|ws| {
             let plan = SystemPlan { m, truth, theta };
+            iterate_ws(&plan, &shard_buckets[r], &mut ws.borrow_mut())
+        })
+    })
+}
+
+/// [`simulate_shards`] with one plan per replica — the heterogeneous
+/// per-replica-θ path (`engine::hetero`): `thetas[r]` drives shard r's
+/// pipeline. With every entry equal this computes exactly what
+/// [`simulate_shards`] computes, bit for bit.
+pub fn simulate_shards_hetero(
+    m: &Mllm,
+    truth: &Truth,
+    thetas: &[Theta],
+    shard_buckets: &[Vec<Vec<ItemShape>>],
+) -> Vec<IterationStats> {
+    assert_eq!(thetas.len(), shard_buckets.len(), "one plan per replica");
+    par_map(shard_buckets.len(), |r| {
+        SHARD_WS.with(|ws| {
+            let plan = SystemPlan { m, truth, theta: thetas[r] };
             iterate_ws(&plan, &shard_buckets[r], &mut ws.borrow_mut())
         })
     })
@@ -190,6 +219,33 @@ mod tests {
             );
             assert_eq!(stats.total_flop.to_bits(), serial.total_flop.to_bits());
         }
+    }
+
+    #[test]
+    fn hetero_fanout_with_equal_plans_matches_homogeneous() {
+        let m = llava_ov(llama3("8b"));
+        let truth = Truth::smooth(ClusterSpec::hgx_a100(1));
+        let mut backend = SimBackend::new(truth.clone());
+        let profile =
+            ModelProfiler::new(&mut backend, ProfilerGrids::coarse(8)).profile(&m);
+        let est = Estimator::new(&m, &profile.throughput);
+        let th = theta();
+        let mut ds = Dataset::mixed(5);
+        let shard_buckets: Vec<Vec<Vec<ItemShape>>> = (0..3)
+            .map(|_| lpt_shard_buckets(&est, th, &ds.shaped_batch(&m, 10)))
+            .collect();
+        let homo = simulate_shards(&m, &truth, th, &shard_buckets);
+        let het = simulate_shards_hetero(&m, &truth, &[th; 3], &shard_buckets);
+        for (a, b) in homo.iter().zip(&het) {
+            assert_eq!(a.iteration_time.to_bits(), b.iteration_time.to_bits());
+            assert_eq!(a.n_stages, b.n_stages);
+        }
+        // A genuinely different plan changes the replica's stage layout.
+        let mut deep = th;
+        deep.llm.pp = 7;
+        let mixed = simulate_shards_hetero(&m, &truth, &[th, deep, th], &shard_buckets);
+        assert_eq!(mixed[0].n_stages, homo[0].n_stages);
+        assert_eq!(mixed[1].n_stages, 1 + 7, "per-replica θ must drive the layout");
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Iteration-level training simulation of complete systems (DFLOP,
 //! ablations, baselines) over the ground-truth cluster, plus the parallel
-//! evaluation-grid substrate the figure harness sweeps with.
+//! evaluation-grid substrate the figure harness sweeps with. The run
+//! machinery itself lives behind `crate::engine`'s policy/executor seams;
+//! this module keeps the run vocabulary and entry points.
 pub mod trainer;
 
 pub use trainer::{run_cells, run_system, Cell, RunConfig, RunResult, SystemKind};

@@ -7,34 +7,20 @@
 //! engine against the ground-truth cluster, and feeding measurements back
 //! into Adaptive Correction — and aggregates the statistics every figure
 //! consumes.
+//!
+//! Since PR 5 the actual machinery lives in `crate::engine`: one shared
+//! iteration loop behind the `PlanPolicy` / `ExecModel` seams, with the
+//! unified `Telemetry` collector assembling [`RunResult`]. This module
+//! keeps the run *vocabulary* ([`SystemKind`], [`RunConfig`],
+//! [`RunResult`], [`Cell`]) and the two historical entry points, both thin
+//! delegates to [`crate::engine::run`].
 
-use crate::baselines::homogeneous::{
-    megatron_tune, pytorch_tune, random_buckets, PYTORCH_SOFTWARE_FACTOR,
-};
-use crate::data::dataset::Dataset;
-use crate::data::item::ItemShape;
 use crate::model::catalog::Mllm;
 use crate::optimizer::plan::Theta;
-use crate::optimizer::search::{optimize, OptimizerInputs};
-use crate::perfmodel::{ClusterSpec, Truth};
-use crate::pipeline::build::{iterate_ws, IterationStats, SystemPlan};
-use crate::pipeline::sim::SimWorkspace;
-use crate::profiling::backend::{MeasureBackend, SimBackend};
-use crate::profiling::engine::{profile_data, ModelProfiler, ProfilerGrids};
-use crate::profiling::estimator::Estimator;
-use crate::scheduler::correction::{Correction, CorrectionConfig};
-use crate::scheduler::lpt::ItemCost;
-use crate::scheduler::online::{OnlineScheduler, SchedulerConfig, Solver};
-use crate::shard::agg::{merge_shard_stats, ShardWindows};
-use crate::shard::balance::rebalance;
-use crate::shard::partition::ShardedDataset;
-use crate::shard::sync::{
-    cross_shard_allreduce, lpt_shard_buckets, simulate_shards, step_barrier, BarrierStats,
-};
+use crate::pipeline::build::IterationStats;
 use crate::shard::ShardConfig;
-use crate::stream::replan::{ReplanConfig, ReplanContext, ReplanEvent, Replanner};
-use crate::stream::window::ShapeStats;
-use crate::util::rng::Rng;
+use crate::stream::replan::{ReplanConfig, ReplanEvent};
+use crate::util::error::Result;
 use std::time::Duration;
 
 /// The systems compared in the evaluation (§5.1 baselines + §5.3.2
@@ -50,7 +36,9 @@ pub enum SystemKind {
     /// cross-shard rebalancing behind a distributional skew gate, the
     /// step barrier with straggler-gap telemetry, and *global* (merged)
     /// drift replanning. `RunConfig::shard` configures the shard layer;
-    /// `rebalance: false` is the static-sharding baseline.
+    /// `rebalance: false` is the static-sharding baseline and
+    /// `hetero: true` fits heterogeneous per-replica plans
+    /// (`engine::hetero`).
     DflopSharded,
     /// Ablation: data-aware optimizer, random microbatching.
     DflopOptimizerOnly,
@@ -152,6 +140,10 @@ pub struct RunResult {
     /// Total items migrated across shards over the run (sharded runs;
     /// 0 elsewhere — and 0 on homogeneous shards is the quiet guarantee).
     pub migrations: usize,
+    /// The assigned per-replica plans of a heterogeneous sharded run, in
+    /// shard order (empty everywhere else — including hetero runs whose
+    /// shards never diverged from the global θ).
+    pub hetero_thetas: Vec<Theta>,
     /// Full per-iteration stats for figure-specific postprocessing.
     pub iterations: Vec<IterationStats>,
 }
@@ -172,14 +164,6 @@ impl RunResult {
     }
 }
 
-/// Materialize bucket index groups into item-shape buckets.
-fn materialize(shapes: &[ItemShape], groups: &[Vec<usize>]) -> Vec<Vec<ItemShape>> {
-    groups
-        .iter()
-        .map(|g| g.iter().map(|&i| shapes[i]).collect())
-        .collect()
-}
-
 /// One independent (system × model × dataset × cluster) evaluation cell of
 /// the paper's grid. Cells are self-contained — the model, dataset key,
 /// and full [`RunConfig`] (cluster size included) travel with the cell —
@@ -194,463 +178,41 @@ pub struct Cell {
 
 /// Evaluate a batch of cells on the `util::parallel` pool.
 ///
-/// Results come back in cell order, and every cell is seeded from its own
-/// `cfg.seed`, so the output is identical to calling [`run_system`] in a
-/// serial loop — this is what lets the figure harness sweep a whole
-/// (system × model × dataset) grid across all cores.
-pub fn run_cells(cells: &[Cell]) -> Vec<RunResult> {
-    crate::util::parallel::par_map(cells.len(), |i| {
+/// Every cell is validated (`engine::validate`) *before* any worker
+/// starts, so a bad dataset key is an error here rather than a panic on a
+/// pool thread. Results come back in cell order, and every cell is seeded
+/// from its own `cfg.seed`, so the output is identical to calling
+/// [`run_system`] in a serial loop — this is what lets the figure harness
+/// sweep a whole (system × model × dataset) grid across all cores.
+pub fn run_cells(cells: &[Cell]) -> Result<Vec<RunResult>> {
+    for c in cells {
+        crate::engine::validate(c.kind, &c.dataset, &c.cfg)?;
+    }
+    Ok(crate::util::parallel::par_map(cells.len(), |i| {
         let c = &cells[i];
         run_system(c.kind, &c.m, &c.dataset, &c.cfg)
-    })
+    }))
 }
 
-/// Run one system on one workload.
+/// Run one system on one workload through [`crate::engine::run`].
+///
+/// Infallible wrapper kept for tests, benches, and examples that pass
+/// literal keys; fallible callers (the CLI, [`run_cells`]) use the engine
+/// entry directly.
 pub fn run_system(
     kind: SystemKind,
     m: &Mllm,
     dataset_key: &str,
     cfg: &RunConfig,
 ) -> RunResult {
-    if kind == SystemKind::DflopSharded {
-        return run_sharded(m, dataset_key, cfg);
-    }
-    let cluster = ClusterSpec::hgx_a100(cfg.nodes);
-    let mut truth = Truth::new(cluster);
-    truth.injected = cfg.injected.clone();
-    if kind == SystemKind::Pytorch {
-        truth.software_factor = PYTORCH_SOFTWARE_FACTOR;
-    }
-
-    // ---- offline phase ----
-    let mut backend = SimBackend::new(truth.clone());
-    let profile = ModelProfiler::new(&mut backend, ProfilerGrids::standard(cluster.gpus_per_node))
-        .profile(m);
-    let mut profile_ds = Dataset::by_key(dataset_key, cfg.seed ^ 0xDA7A)
-        .unwrap_or_else(|| panic!("unknown dataset '{dataset_key}'"));
-    let data = profile_data(m, &mut profile_ds, cfg.profile_samples);
-    let profiling_seconds = backend.measured_seconds().max(data.profiling_seconds);
-
-    let (mut theta, optimizer_elapsed) = match kind {
-        SystemKind::Dflop | SystemKind::DflopAdaptive | SystemKind::DflopOptimizerOnly => {
-            let inp = OptimizerInputs {
-                m,
-                profile: &profile,
-                data: &data,
-                n_gpus: cluster.total_gpus(),
-                gpus_per_node: cluster.gpus_per_node,
-                mem_capacity: cluster.gpu.mem_bytes,
-                gbs: cfg.gbs,
-                assume_balanced: kind != SystemKind::DflopOptimizerOnly,
-            };
-            let r = optimize(&inp).expect("no feasible DFLOP configuration");
-            (r.theta, r.elapsed)
-        }
-        SystemKind::DflopSchedulerOnly | SystemKind::Megatron => {
-            let c = megatron_tune(m, &truth, cfg.gbs, data.mean_units(), data.mean_seq())
-                .expect("no feasible Megatron configuration");
-            (c.theta, Duration::ZERO)
-        }
-        SystemKind::Pytorch => {
-            let c = pytorch_tune(m, &truth, cfg.gbs, data.mean_units(), data.mean_seq())
-                .expect("no feasible PyTorch configuration");
-            (c.theta, Duration::ZERO)
-        }
-    };
-
-    // ---- online phase ----
-    let est = Estimator::new(m, &profile.throughput);
-    let uses_scheduler = matches!(
-        kind,
-        SystemKind::Dflop | SystemKind::DflopAdaptive | SystemKind::DflopSchedulerOnly
-    );
-    let mut correction_cfg = CorrectionConfig::default();
-    if cfg.disable_correction {
-        // A zero-benefit window of one iteration deactivates immediately.
-        correction_cfg.window = 1;
-        correction_cfg.cost_fraction = f64::INFINITY;
-    }
-    let mut scheduler = OnlineScheduler::new(
-        theta,
-        SchedulerConfig { ilp_budget: cfg.ilp_budget },
-        Correction::new(correction_cfg),
-    );
-
-    let mut ds = Dataset::by_key(dataset_key, cfg.seed).expect("dataset");
-    let mut rng = Rng::new(cfg.seed ^ 0xB0CC);
-
-    // Stream subsystem: window + drift detector + warm-replan controller,
-    // seeded with the offline Data Profiler output as the reference
-    // distribution (the contract θ* was optimized against).
-    let mut replanner = if kind == SystemKind::DflopAdaptive {
-        Some(Replanner::new(
-            &data,
-            theta,
-            cfg.replan.clone().unwrap_or_default(),
-        ))
-    } else {
-        None
-    };
-    let rctx = ReplanContext {
-        m,
-        profile: &profile,
-        n_gpus: cluster.total_gpus(),
-        gpus_per_node: cluster.gpus_per_node,
-        mem_capacity: cluster.gpu.mem_bytes,
-        gbs: cfg.gbs,
-    };
-
-    // One simulation workspace per run (= per pool worker task): every
-    // iteration's route build + 1F1B execution reuses the same arena.
-    let mut sim_ws = SimWorkspace::new();
-    let mut iterations = Vec::with_capacity(cfg.iters);
-    let mut sched_elapsed = Vec::with_capacity(cfg.iters);
-    let mut lpt_fallbacks = 0usize;
-    let mut stage_thr_samples = Vec::new();
-    let mut bucket_enc_times = Vec::new();
-    let mut bucket_llm_times = Vec::new();
-
-    for _ in 0..cfg.iters {
-        let shapes = ds.shaped_batch(m, cfg.gbs);
-
-        // Drift check before scheduling: the batch's shapes are known to
-        // the CPU-side scheduler ahead of execution, and a confirmed
-        // drift swaps the plan at this iteration boundary.
-        if let Some(rp) = replanner.as_mut() {
-            if let Some(new_theta) = rp.observe_batch(&rctx, &shapes) {
-                theta = new_theta;
-                scheduler.theta = new_theta;
-            }
-        }
-        let plan = SystemPlan { m, truth: &truth, theta };
-
-        let buckets: Vec<Vec<ItemShape>> = if uses_scheduler {
-            let sched = scheduler.schedule(&est, &shapes);
-            sched_elapsed.push(sched.elapsed);
-            if sched.solver == Solver::LptFallback {
-                lpt_fallbacks += 1;
-            }
-            materialize(&shapes, &sched.assignment.buckets)
-        } else {
-            let t0 = std::time::Instant::now();
-            let b = random_buckets(&shapes, theta.buckets(), &mut rng);
-            sched_elapsed.push(t0.elapsed());
-            b
-        };
-
-        let stats = iterate_ws(&plan, &buckets, &mut sim_ws);
-
-        // ---- Adaptive Correction feedback (Eq 7) ----
-        if uses_scheduler && scheduler.correction.is_active() {
-            let mut observations = Vec::new();
-            let mut mispredicted = 0.0;
-            let l_layers = m.llm.layers as f64;
-            for bucket in &buckets {
-                let total: f64 = bucket.iter().map(|i| i.llm_seq as f64).sum();
-                if total <= 0.0 {
-                    continue;
-                }
-                for item in bucket {
-                    let seq = item.llm_seq as f64;
-                    if seq <= 0.0 {
-                        continue;
-                    }
-                    // Observed per-item time: the coordinator times the
-                    // per-instance attention kernels and apportions the
-                    // packed linear time by token share.
-                    let lin_share = truth
-                        .llm_linear_time(m, total, l_layers, theta.llm.tp)
-                        * seq
-                        / total;
-                    let attn = truth.llm_attn_time(m, seq, l_layers, theta.llm.tp);
-                    let actual = lin_share + attn;
-                    let pred = est.llm_item_dur(item, theta.llm.tp);
-                    let flop = item.llm_flop(m);
-                    observations.push((
-                        Truth::llm_bucket(seq),
-                        flop / actual,
-                        flop / pred,
-                    ));
-                    mispredicted += (actual - pred).abs() / theta.llm.pp as f64;
-                }
-            }
-            let benefit = mispredicted
-                / (stats.buckets.len().max(1) as f64)
-                / stats.pipeline_makespan.max(1e-12);
-            scheduler.feedback(&observations, benefit);
-        }
-
-        stage_thr_samples.extend(stats.stage_throughputs());
-        for b in &stats.buckets {
-            if b.enc_time > 0.0 {
-                bucket_enc_times.push(b.enc_time);
-            }
-            if b.llm_time > 0.0 {
-                bucket_llm_times.push(b.llm_time);
-            }
-        }
-        iterations.push(stats);
-    }
-
-    let n = iterations.len().max(1) as f64;
-    let mean_iter = iterations.iter().map(|s| s.iteration_time).sum::<f64>() / n;
-    let mean_idle = iterations.iter().map(|s| s.total_idle()).sum::<f64>() / n;
-    let mean_thr = iterations
-        .iter()
-        .map(|s| s.cluster_throughput())
-        .sum::<f64>()
-        / n;
-
-    let (replans, replan_events) = match replanner {
-        Some(rp) => (rp.swaps(), rp.events),
-        None => (0, Vec::new()),
-    };
-
-    RunResult {
-        system: kind,
-        theta,
-        n_gpus: cluster.total_gpus(),
-        per_gpu_throughput: mean_thr / cluster.total_gpus() as f64,
-        mean_iteration_time: mean_iter,
-        mean_idle,
-        stage_throughput_samples: stage_thr_samples,
-        bucket_enc_times,
-        bucket_llm_times,
-        sched_elapsed,
-        lpt_fallbacks,
-        profiling_seconds,
-        optimizer_elapsed,
-        replans,
-        replan_events,
-        straggler_gaps: Vec::new(),
-        migrations: 0,
-        iterations,
-    }
-}
-
-/// Combine one step's per-replica iteration stats into a cluster-level
-/// view: stage arrays concatenate in shard order, idle is charged against
-/// the slowest replica's pipeline (straggler wait shows up as idle on the
-/// fast replicas), and the iteration time is the barrier's step time.
-/// Per-op timelines are dropped — an S-replica timeline has no single
-/// 1F1B rendering.
-fn merge_shard_iterations(per: Vec<IterationStats>, barrier: &BarrierStats) -> IterationStats {
-    let pipeline_max = per.iter().map(|s| s.pipeline_makespan).fold(0.0, f64::max);
-    let n_stages = per.iter().map(|s| s.n_stages).sum();
-    let mut stage_busy = Vec::with_capacity(n_stages);
-    let mut stage_flop = Vec::with_capacity(n_stages);
-    let mut buckets = Vec::new();
-    let mut total_flop = 0.0;
-    for s in per {
-        stage_busy.extend(s.stage_busy);
-        stage_flop.extend(s.stage_flop);
-        buckets.extend(s.buckets);
-        total_flop += s.total_flop;
-    }
-    let stage_idle = stage_busy.iter().map(|&b| pipeline_max - b).collect();
-    IterationStats {
-        iteration_time: barrier.step_time,
-        pipeline_makespan: pipeline_max,
-        dp_sync_time: barrier.step_time - pipeline_max,
-        stage_busy,
-        stage_idle,
-        stage_flop,
-        n_stages,
-        total_flop,
-        buckets,
-        timeline: Vec::new(),
-    }
-}
-
-/// [`run_system`] for [`SystemKind::DflopSharded`]: S data-parallel
-/// replicas of the per-replica plan θ*, each drawing from its own shard
-/// dataset (`shard::partition`), synchronized by the step barrier
-/// (`shard::sync`). Per iteration:
-///
-/// 1. per-shard batches are summarized and merged (`shard::agg`) — one
-///    *global* drift detector watches the pooled window and, on confirmed
-///    drift, one warm-started replan swaps θ for every replica at the
-///    iteration boundary;
-/// 2. the skew gate scores each shard's window against the pooled window;
-///    at or above `skew_enter` (and with `rebalance` on) the bounded
-///    migration walk (`shard::balance`) redistributes the global batch on
-///    predicted per-item cost;
-/// 3. every replica LPT-partitions its items and runs its own 1F1B sim,
-///    fanned over the worker pool in shard order; the step time is the
-///    slowest replica plus the cross-shard allreduce.
-///
-/// The whole path is budget-free (no ILP deadline), so every statistic is
-/// bit-identical across `--threads` settings.
-fn run_sharded(m: &Mllm, scenario: &str, cfg: &RunConfig) -> RunResult {
-    let sc = cfg.shard.clone().unwrap_or_default();
-    let shards = sc.dp_shards;
-    assert!(shards >= 1, "sharded run needs at least one shard");
-    assert!(
-        cfg.gbs >= shards,
-        "per-shard batch must be non-empty: gbs {} < {} shards",
-        cfg.gbs,
-        shards
-    );
-    // `cfg.nodes` sizes one replica; the deployment is `shards` replicas.
-    let cluster = ClusterSpec::hgx_a100(cfg.nodes);
-    let mut truth = Truth::new(cluster);
-    // Fig-15-style anomaly injection applies to every replica (they share
-    // the ground-truth cluster model).
-    truth.injected = cfg.injected.clone();
-
-    // ---- offline phase: model profile + pooled data profile + θ* ----
-    let mut backend = SimBackend::new(truth.clone());
-    let profile = ModelProfiler::new(&mut backend, ProfilerGrids::standard(cluster.gpus_per_node))
-        .profile(m);
-    let mut profile_sd = ShardedDataset::by_key(scenario, shards, cfg.seed ^ 0xDA7A)
-        .unwrap_or_else(|| panic!("unknown shard scenario '{scenario}'"));
-    let data = profile_sd.profile_pooled(m, cfg.profile_samples);
-    let profiling_seconds = backend.measured_seconds().max(data.profiling_seconds);
-
-    // θ* sizes one replica: per-replica GBS (ceil so memory is checked
-    // against the largest shard after remainder distribution). As
-    // everywhere else, Eq 4–5 prices activations at the *mean* shape — a
-    // skewed shard's heavy batches exceed that mean under static sharding
-    // already, and the rebalance walk only tightens this envelope: it
-    // never raises any replica's predicted load above the static
-    // bottleneck (accepted moves keep every touched shard strictly below
-    // the current maximum), and per-bucket memory scales with
-    // load / bucket count, not raw item count.
-    let rctx = ReplanContext {
-        m,
-        profile: &profile,
-        n_gpus: cluster.total_gpus(),
-        gpus_per_node: cluster.gpus_per_node,
-        mem_capacity: cluster.gpu.mem_bytes,
-        gbs: cfg.gbs.div_ceil(shards),
-    };
-    let r0 = optimize(&rctx.inputs(&data)).expect("no feasible sharded configuration");
-    let (mut theta, optimizer_elapsed) = (r0.theta, r0.elapsed);
-
-    // ---- online phase ----
-    let est = Estimator::new(m, &profile.throughput);
-    let mut sd = ShardedDataset::by_key(scenario, shards, cfg.seed).expect("scenario");
-    let counts = ShardedDataset::split_counts(cfg.gbs, shards);
-    let mut replanner =
-        Replanner::new(&data, theta, cfg.replan.clone().unwrap_or_default());
-    let mut gate = ShardWindows::new(shards, sc.window_batches);
-
-    let mut iterations = Vec::with_capacity(cfg.iters);
-    let mut sched_elapsed = Vec::with_capacity(cfg.iters);
-    let mut straggler_gaps = Vec::with_capacity(cfg.iters);
-    let mut migrations = 0usize;
-    let mut stage_thr_samples = Vec::new();
-    let mut bucket_enc_times = Vec::new();
-    let mut bucket_llm_times = Vec::new();
-
-    for _ in 0..cfg.iters {
-        let shard_batches = sd.shard_batches(m, &counts);
-
-        // Global drift: merge the per-shard summaries (bit-identical to a
-        // pooled recompute) and let ONE detector/replanner see the step.
-        let per_stats: Vec<ShapeStats> =
-            shard_batches.iter().map(|b| ShapeStats::of_batch(b)).collect();
-        let merged = merge_shard_stats(&per_stats);
-        let pooled: Vec<ItemShape> =
-            shard_batches.iter().flat_map(|b| b.iter().copied()).collect();
-        if let Some(new_theta) = replanner.observe_stats(&rctx, merged, &pooled) {
-            theta = new_theta;
-        }
-        gate.push(per_stats);
-
-        let t0 = std::time::Instant::now();
-        // Skew gate + bounded migration on predicted per-item cost at θ.
-        let home: Vec<usize> = shard_batches
-            .iter()
-            .enumerate()
-            .flat_map(|(r, b)| std::iter::repeat(r).take(b.len()))
-            .collect();
-        let groups: Vec<Vec<usize>> = if sc.rebalance && gate.skewed(sc.skew_enter) {
-            let items: Vec<ItemCost> = pooled
-                .iter()
-                .map(|s| ItemCost {
-                    enc: est.enc_item_dur(s, theta.enc.tp) / theta.enc.pp as f64,
-                    llm: est.llm_item_dur(s, theta.llm.tp) / theta.llm.pp as f64,
-                })
-                .collect();
-            let rb = rebalance(&items, &home, shards, &sc.balance);
-            migrations += rb.migrations;
-            rb.groups(shards)
-        } else {
-            // Static sharding: every item executes where it was drawn.
-            let mut g: Vec<Vec<usize>> = vec![Vec::new(); shards];
-            for (i, &r) in home.iter().enumerate() {
-                g[r].push(i);
-            }
-            g
-        };
-
-        // Per-replica LPT microbatching, then the replica fan-out.
-        let shard_buckets: Vec<Vec<Vec<ItemShape>>> = groups
-            .iter()
-            .map(|g| {
-                let shapes: Vec<ItemShape> = g.iter().map(|&i| pooled[i]).collect();
-                lpt_shard_buckets(&est, theta, &shapes)
-            })
-            .collect();
-        sched_elapsed.push(t0.elapsed());
-
-        let per_replica = simulate_shards(m, &truth, theta, &shard_buckets);
-        let barrier = step_barrier(
-            per_replica.iter().map(|s| s.iteration_time).collect(),
-            cross_shard_allreduce(m, &truth, theta, shards),
-        );
-        straggler_gaps.push(barrier.straggler_gap);
-        let stats = merge_shard_iterations(per_replica, &barrier);
-
-        stage_thr_samples.extend(stats.stage_throughputs());
-        for b in &stats.buckets {
-            if b.enc_time > 0.0 {
-                bucket_enc_times.push(b.enc_time);
-            }
-            if b.llm_time > 0.0 {
-                bucket_llm_times.push(b.llm_time);
-            }
-        }
-        iterations.push(stats);
-    }
-
-    let n = iterations.len().max(1) as f64;
-    let mean_iter = iterations.iter().map(|s| s.iteration_time).sum::<f64>() / n;
-    let mean_idle = iterations.iter().map(|s| s.total_idle()).sum::<f64>() / n;
-    let mean_thr = iterations
-        .iter()
-        .map(|s| s.cluster_throughput())
-        .sum::<f64>()
-        / n;
-    let n_gpus = cluster.total_gpus() * shards;
-
-    RunResult {
-        system: SystemKind::DflopSharded,
-        theta,
-        n_gpus,
-        per_gpu_throughput: mean_thr / n_gpus as f64,
-        mean_iteration_time: mean_iter,
-        mean_idle,
-        stage_throughput_samples: stage_thr_samples,
-        bucket_enc_times,
-        bucket_llm_times,
-        sched_elapsed,
-        lpt_fallbacks: 0,
-        profiling_seconds,
-        optimizer_elapsed,
-        replans: replanner.swaps(),
-        replan_events: replanner.events,
-        straggler_gaps,
-        migrations,
-        iterations,
-    }
+    crate::engine::run(kind, m, dataset_key, cfg).unwrap_or_else(|e| panic!("{e}"))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::catalog::{llava_ov, llama3};
+    use crate::perfmodel::Truth;
 
     fn quick_cfg() -> RunConfig {
         let mut c = RunConfig::new(1, 32, 3, 42);
@@ -710,6 +272,7 @@ mod tests {
         assert!(r.profiling_seconds > 0.0);
         assert!(r.per_gpu_throughput > 0.0);
         assert!(r.per_gpu_throughput < 312e12, "exceeds peak");
+        assert!(r.hetero_thetas.is_empty());
     }
 
     #[test]
@@ -720,6 +283,27 @@ mod tests {
         let b = run_system(SystemKind::Megatron, &m, "mixed", &cfg);
         assert_eq!(a.per_gpu_throughput, b.per_gpu_throughput);
         assert_eq!(a.theta, b.theta);
+    }
+
+    #[test]
+    fn unknown_dataset_key_is_an_error_not_a_pool_panic() {
+        // Satellite: keys are validated before any profiling or pool
+        // work, at both the engine entry and the cell batch.
+        let m = llava_ov(llama3("8b"));
+        let cfg = RunConfig::new(1, 8, 1, 1);
+        assert!(crate::engine::run(SystemKind::Dflop, &m, "bogus", &cfg).is_err());
+        assert!(crate::engine::run(SystemKind::DflopSharded, &m, "bogus", &cfg).is_err());
+        let cells = vec![Cell {
+            kind: SystemKind::Dflop,
+            m: m.clone(),
+            dataset: "bogus".into(),
+            cfg: cfg.clone(),
+        }];
+        assert!(run_cells(&cells).is_err());
+        // Shard-count arithmetic is validated up front too.
+        let mut tiny = RunConfig::new(1, 2, 1, 1);
+        tiny.shard = Some(ShardConfig { dp_shards: 4, ..ShardConfig::default() });
+        assert!(crate::engine::run(SystemKind::DflopSharded, &m, "mixed", &tiny).is_err());
     }
 
     #[test]
@@ -874,5 +458,195 @@ mod tests {
         let first = adaptive.replan_events.iter().find(|e| e.swapped).expect("swap");
         assert!(first.iteration >= 7, "swapped before the ramp: {first:?}");
         assert_ne!(first.old, first.new);
+    }
+
+    #[test]
+    fn plan_swap_resets_stale_correction_penalties_on_curriculum() {
+        // Satellite regression: anomaly injection makes Adaptive
+        // Correction learn strong per-bucket penalties against the
+        // warm-up θ; the curriculum ramp then swaps the plan. The engine
+        // resets the Eq-7 EMAs at the swap (see
+        // `engine::exec::SingleReplicaExec::apply_plan`), so the adaptive
+        // run must still replan and must not lose to the frozen plan in
+        // the post-ramp steady state — with stale penalties carried
+        // across the swap, the first post-replan schedules would be
+        // biased by ratios measured under the old θ.
+        let m = crate::model::catalog::internvl_25(
+            crate::model::catalog::qwen25("7b"),
+        );
+        let mut cfg = RunConfig::new(2, 32, 22, 42);
+        cfg.profile_samples = 256;
+        cfg.replan = Some(crate::stream::replan::ReplanConfig {
+            window_batches: 6,
+            cooldown: 4,
+            ..crate::stream::replan::ReplanConfig::default()
+        });
+        // Slow down a spread of LLM shape buckets so the tracker learns
+        // real penalties during the warm-up phase.
+        let mut ds = crate::data::dataset::Dataset::curriculum(42);
+        let probe = ds.shaped_batch(&m, 256);
+        let mut buckets: Vec<u64> = probe
+            .iter()
+            .map(|s| Truth::llm_bucket(s.llm_seq as f64))
+            .collect();
+        buckets.sort_unstable();
+        buckets.dedup();
+        cfg.injected = buckets.iter().step_by(4).map(|&b| (b, 0.6)).collect();
+        let frozen = run_system(SystemKind::Dflop, &m, "curriculum", &cfg);
+        let adaptive = run_system(SystemKind::DflopAdaptive, &m, "curriculum", &cfg);
+        assert!(
+            adaptive.replans >= 1,
+            "anomalous curriculum never swapped: {:?}",
+            adaptive.replan_events
+        );
+        let steady = |r: &RunResult| {
+            let tail = &r.iterations[r.iterations.len() - 4..];
+            tail.iter().map(|s| s.iteration_time).sum::<f64>() / tail.len() as f64
+        };
+        assert!(
+            steady(&adaptive) < steady(&frozen),
+            "post-swap steady state regressed: adaptive {:.3}s vs frozen {:.3}s",
+            steady(&adaptive),
+            steady(&frozen)
+        );
+    }
+
+    fn hetero_cfg(hetero: bool, rebalance: bool) -> RunConfig {
+        let mut cfg = RunConfig::new(2, 64, 12, 42);
+        cfg.profile_samples = 256;
+        cfg.shard = Some(ShardConfig {
+            rebalance,
+            hetero,
+            window_batches: 4,
+            ..ShardConfig::default()
+        });
+        cfg
+    }
+
+    #[test]
+    fn hetero_plans_beat_global_on_skewed_shards() {
+        // The PR-5 acceptance scenario: graded video→image tilt across
+        // four static shards (no migrations — the comparison isolates the
+        // plans). InternVL's 6B encoder makes the encoder/LLM split
+        // strongly distribution-dependent, so the video-heavy replica's
+        // per-shard θ must strictly cut both the step time (it is the
+        // barrier bottleneck) and the straggler gap.
+        let m = crate::model::catalog::internvl_25(
+            crate::model::catalog::qwen25("7b"),
+        );
+        let global = run_system(
+            SystemKind::DflopSharded,
+            &m,
+            "skewed-shard",
+            &hetero_cfg(false, false),
+        );
+        let hetero = run_system(
+            SystemKind::DflopSharded,
+            &m,
+            "skewed-shard",
+            &hetero_cfg(true, false),
+        );
+        assert!(
+            !hetero.hetero_thetas.is_empty(),
+            "skewed shards never triggered a per-shard fit"
+        );
+        assert_eq!(hetero.hetero_thetas.len(), 4);
+        assert!(
+            hetero.hetero_thetas.iter().any(|t| *t != global.theta),
+            "per-shard fit only reproduced the global plan: {:?}",
+            hetero.hetero_thetas
+        );
+        assert!(
+            hetero.mean_iteration_time < global.mean_iteration_time,
+            "per-replica plans did not beat the global θ*: {:.3}s vs {:.3}s",
+            hetero.mean_iteration_time,
+            global.mean_iteration_time
+        );
+        assert!(
+            hetero.mean_straggler_gap() < global.mean_straggler_gap(),
+            "straggler gap not reduced: {:.3}s vs {:.3}s",
+            hetero.mean_straggler_gap(),
+            global.mean_straggler_gap()
+        );
+        // Static sharding in both arms, and the global controller sees
+        // the same merged stream — no migrations, same replan count.
+        assert_eq!(hetero.migrations, 0);
+        assert_eq!(global.migrations, 0);
+        assert_eq!(hetero.replans, global.replans, "per-shard fits are not replans");
+    }
+
+    #[test]
+    fn hetero_composes_with_rebalancing() {
+        // The CLI default for `--hetero-plans` leaves rebalancing ON:
+        // migrations are priced at the global θ in both arms (and the
+        // global θ never changes here — skewed shards pool to a
+        // stationary mixture), so the migration stream must be
+        // bit-identical with hetero on or off, and per-replica plans must
+        // not wreck the composed system. The strict plan-win comparison
+        // lives in the static-sharding test above; this guards the
+        // composition against interaction bugs.
+        let m = llava_ov(llama3("8b"));
+        let global = run_system(
+            SystemKind::DflopSharded,
+            &m,
+            "skewed-shard",
+            &{
+                let mut c = hetero_cfg(false, true);
+                c.nodes = 1;
+                c
+            },
+        );
+        let hetero = run_system(
+            SystemKind::DflopSharded,
+            &m,
+            "skewed-shard",
+            &{
+                let mut c = hetero_cfg(true, true);
+                c.nodes = 1;
+                c
+            },
+        );
+        assert_eq!(hetero.migrations, global.migrations, "migration stream diverged");
+        assert_eq!(hetero.replans, global.replans);
+        assert_eq!(hetero.straggler_gaps.len(), 12);
+        assert!(hetero.straggler_gaps.iter().all(|g| g.is_finite() && *g >= 0.0));
+        assert!(hetero.per_gpu_throughput > 0.0);
+        // Per-shard plans only swap in on a strict predicted win for the
+        // shard's (home-dominated) items, so the composed system must not
+        // regress materially against the global plan.
+        assert!(
+            hetero.mean_iteration_time <= global.mean_iteration_time * 1.05,
+            "hetero + rebalance regressed: {:.3}s vs {:.3}s",
+            hetero.mean_iteration_time,
+            global.mean_iteration_time
+        );
+    }
+
+    #[test]
+    fn hetero_homogeneous_is_bit_identical_to_global() {
+        // Zero extra replans and bit-identical telemetry on homogeneous
+        // shards: the skew gate never opens, so the per-shard policy must
+        // leave the exact global code path untouched.
+        let m = llava_ov(llama3("8b"));
+        let mut cfg = RunConfig::new(1, 64, 12, 42);
+        cfg.profile_samples = 256;
+        cfg.shard = Some(ShardConfig::default());
+        let mut hcfg = cfg.clone();
+        hcfg.shard = Some(ShardConfig { hetero: true, ..ShardConfig::default() });
+        let global = run_system(SystemKind::DflopSharded, &m, "mixed", &cfg);
+        let hetero = run_system(SystemKind::DflopSharded, &m, "mixed", &hcfg);
+        assert!(hetero.hetero_thetas.is_empty(), "homogeneous shards fitted plans");
+        assert_eq!(hetero.replans, 0);
+        assert_eq!(
+            hetero.per_gpu_throughput.to_bits(),
+            global.per_gpu_throughput.to_bits(),
+            "hetero mode changed a homogeneous run"
+        );
+        assert_eq!(
+            hetero.mean_iteration_time.to_bits(),
+            global.mean_iteration_time.to_bits()
+        );
+        assert_eq!(hetero.theta, global.theta);
+        assert_eq!(hetero.migrations, global.migrations);
     }
 }

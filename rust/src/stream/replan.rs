@@ -76,7 +76,10 @@ pub struct ReplanEvent {
 
 /// The optimizer-facing context a replan needs (everything in
 /// `OptimizerInputs` except the data profile, which the replanner refits
-/// itself).
+/// itself). The engine's plan policies carry one per run — per-replica
+/// GBS for sharded runs — and `engine::hetero` reuses it for every
+/// per-shard fit.
+#[derive(Clone, Copy)]
 pub struct ReplanContext<'a> {
     pub m: &'a Mllm,
     pub profile: &'a ModelProfile,

@@ -94,9 +94,9 @@ fn simulated_runs_identical_across_thread_counts() {
     })
     .collect();
     set_max_threads(1);
-    let serial = run_cells(&cells);
+    let serial = run_cells(&cells).expect("known dataset keys");
     set_max_threads(8);
-    let parallel = run_cells(&cells);
+    let parallel = run_cells(&cells).expect("known dataset keys");
     set_max_threads(0);
     assert_eq!(serial.len(), parallel.len());
     for (cell, (a, b)) in cells.iter().zip(serial.iter().zip(&parallel)) {

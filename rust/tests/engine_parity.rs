@@ -1,0 +1,639 @@
+//! Golden parity suite for the PR-5 engine extraction.
+//!
+//! `reference_run_system` / `reference_run_sharded` below are verbatim
+//! transcriptions of the two training loops that lived in
+//! `sim::trainer` before the `engine` layer replaced them (the
+//! PR-2-style oracle pattern: keep the old implementation as the
+//! bit-exactness reference). The one deliberate delta is carried on both
+//! sides: this PR's drift-aware Adaptive Correction satellite resets the
+//! Eq-7 penalties at a plan swap, so the reference performs the same
+//! reset — everything else is the pre-refactor code, line for line.
+//!
+//! Every `SystemKind` must produce bit-identical telemetry through
+//! `engine::run` vs the reference, at `--threads 1` and `--threads 8`.
+//! Wall-clock fields (`sched_elapsed` durations, `profiling_seconds`,
+//! `optimizer_elapsed`) are compared by shape only — they are real timer
+//! reads on both sides. The scheduled systems run with a 10 s ILP budget
+//! over small batches so every branch-and-bound call proves optimality:
+//! a budget-expired incumbent is wall-clock-dependent by design
+//! (`scheduler::ilp`) and would make *any* run-to-run comparison
+//! meaningless; the suite asserts `lpt_fallbacks == 0` so a too-hard
+//! instance fails loudly instead of flaking.
+
+use dflop::baselines::homogeneous::{
+    megatron_tune, pytorch_tune, random_buckets, PYTORCH_SOFTWARE_FACTOR,
+};
+use dflop::data::dataset::Dataset;
+use dflop::data::item::ItemShape;
+use dflop::model::catalog::{llama3, llava_ov, Mllm};
+use dflop::optimizer::plan::Theta;
+use dflop::optimizer::search::{optimize, OptimizerInputs};
+use dflop::perfmodel::{ClusterSpec, Truth};
+use dflop::pipeline::build::{iterate_ws, IterationStats};
+use dflop::pipeline::sim::SimWorkspace;
+use dflop::profiling::backend::{MeasureBackend, SimBackend};
+use dflop::profiling::engine::{profile_data, ModelProfiler, ProfilerGrids};
+use dflop::profiling::estimator::Estimator;
+use dflop::scheduler::correction::{Correction, CorrectionConfig};
+use dflop::scheduler::lpt::ItemCost;
+use dflop::scheduler::online::{OnlineScheduler, SchedulerConfig, Solver};
+use dflop::shard::agg::{merge_shard_stats, ShardWindows};
+use dflop::shard::balance::rebalance;
+use dflop::shard::partition::ShardedDataset;
+use dflop::shard::sync::{
+    cross_shard_allreduce, lpt_shard_buckets, simulate_shards, step_barrier, BarrierStats,
+};
+use dflop::shard::ShardConfig;
+use dflop::sim::{RunConfig, RunResult, SystemKind};
+use dflop::stream::replan::{ReplanConfig, ReplanContext, Replanner};
+use dflop::stream::window::ShapeStats;
+use dflop::util::parallel::set_max_threads;
+use dflop::util::rng::Rng;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// The pool width is process-global; tests that flip it hold this lock.
+static WIDTH_LOCK: Mutex<()> = Mutex::new(());
+
+fn width_guard() -> std::sync::MutexGuard<'static, ()> {
+    WIDTH_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ------------------------------------------------------------------
+// The pre-refactor loops, transcribed.
+// ------------------------------------------------------------------
+
+fn materialize(shapes: &[ItemShape], groups: &[Vec<usize>]) -> Vec<Vec<ItemShape>> {
+    groups
+        .iter()
+        .map(|g| g.iter().map(|&i| shapes[i]).collect())
+        .collect()
+}
+
+/// Pre-engine `run_system` (non-sharded kinds).
+fn reference_run_system(
+    kind: SystemKind,
+    m: &Mllm,
+    dataset_key: &str,
+    cfg: &RunConfig,
+) -> RunResult {
+    assert_ne!(kind, SystemKind::DflopSharded, "use reference_run_sharded");
+    let cluster = ClusterSpec::hgx_a100(cfg.nodes);
+    let mut truth = Truth::new(cluster);
+    truth.injected = cfg.injected.clone();
+    if kind == SystemKind::Pytorch {
+        truth.software_factor = PYTORCH_SOFTWARE_FACTOR;
+    }
+
+    // ---- offline phase ----
+    let mut backend = SimBackend::new(truth.clone());
+    let profile = ModelProfiler::new(&mut backend, ProfilerGrids::standard(cluster.gpus_per_node))
+        .profile(m);
+    let mut profile_ds = Dataset::by_key(dataset_key, cfg.seed ^ 0xDA7A)
+        .unwrap_or_else(|| panic!("unknown dataset '{dataset_key}'"));
+    let data = profile_data(m, &mut profile_ds, cfg.profile_samples);
+    let profiling_seconds = backend.measured_seconds().max(data.profiling_seconds);
+
+    let (mut theta, optimizer_elapsed) = match kind {
+        SystemKind::Dflop | SystemKind::DflopAdaptive | SystemKind::DflopOptimizerOnly => {
+            let inp = OptimizerInputs {
+                m,
+                profile: &profile,
+                data: &data,
+                n_gpus: cluster.total_gpus(),
+                gpus_per_node: cluster.gpus_per_node,
+                mem_capacity: cluster.gpu.mem_bytes,
+                gbs: cfg.gbs,
+                assume_balanced: kind != SystemKind::DflopOptimizerOnly,
+            };
+            let r = optimize(&inp).expect("no feasible DFLOP configuration");
+            (r.theta, r.elapsed)
+        }
+        SystemKind::DflopSchedulerOnly | SystemKind::Megatron => {
+            let c = megatron_tune(m, &truth, cfg.gbs, data.mean_units(), data.mean_seq())
+                .expect("no feasible Megatron configuration");
+            (c.theta, Duration::ZERO)
+        }
+        SystemKind::Pytorch => {
+            let c = pytorch_tune(m, &truth, cfg.gbs, data.mean_units(), data.mean_seq())
+                .expect("no feasible PyTorch configuration");
+            (c.theta, Duration::ZERO)
+        }
+        SystemKind::DflopSharded => unreachable!(),
+    };
+
+    // ---- online phase ----
+    let est = Estimator::new(m, &profile.throughput);
+    let uses_scheduler = matches!(
+        kind,
+        SystemKind::Dflop | SystemKind::DflopAdaptive | SystemKind::DflopSchedulerOnly
+    );
+    let mut correction_cfg = CorrectionConfig::default();
+    if cfg.disable_correction {
+        correction_cfg.window = 1;
+        correction_cfg.cost_fraction = f64::INFINITY;
+    }
+    let mut scheduler = OnlineScheduler::new(
+        theta,
+        SchedulerConfig { ilp_budget: cfg.ilp_budget },
+        Correction::new(correction_cfg),
+    );
+
+    let mut ds = Dataset::by_key(dataset_key, cfg.seed).expect("dataset");
+    let mut rng = Rng::new(cfg.seed ^ 0xB0CC);
+
+    let mut replanner = if kind == SystemKind::DflopAdaptive {
+        Some(Replanner::new(
+            &data,
+            theta,
+            cfg.replan.clone().unwrap_or_default(),
+        ))
+    } else {
+        None
+    };
+    let rctx = ReplanContext {
+        m,
+        profile: &profile,
+        n_gpus: cluster.total_gpus(),
+        gpus_per_node: cluster.gpus_per_node,
+        mem_capacity: cluster.gpu.mem_bytes,
+        gbs: cfg.gbs,
+    };
+
+    let mut sim_ws = SimWorkspace::new();
+    let mut iterations = Vec::with_capacity(cfg.iters);
+    let mut sched_elapsed = Vec::with_capacity(cfg.iters);
+    let mut lpt_fallbacks = 0usize;
+    let mut stage_thr_samples = Vec::new();
+    let mut bucket_enc_times = Vec::new();
+    let mut bucket_llm_times = Vec::new();
+
+    for _ in 0..cfg.iters {
+        let shapes = ds.shaped_batch(m, cfg.gbs);
+
+        if let Some(rp) = replanner.as_mut() {
+            if let Some(new_theta) = rp.observe_batch(&rctx, &shapes) {
+                theta = new_theta;
+                scheduler.theta = new_theta;
+                // PR-5 satellite, mirrored on both sides: stale Eq-7
+                // penalties reset with the plan.
+                scheduler.correction.reset_penalties();
+            }
+        }
+        let plan = dflop::pipeline::build::SystemPlan { m, truth: &truth, theta };
+
+        let buckets: Vec<Vec<ItemShape>> = if uses_scheduler {
+            let sched = scheduler.schedule(&est, &shapes);
+            sched_elapsed.push(sched.elapsed);
+            if sched.solver == Solver::LptFallback {
+                lpt_fallbacks += 1;
+            }
+            materialize(&shapes, &sched.assignment.buckets)
+        } else {
+            let t0 = std::time::Instant::now();
+            let b = random_buckets(&shapes, theta.buckets(), &mut rng);
+            sched_elapsed.push(t0.elapsed());
+            b
+        };
+
+        let stats = iterate_ws(&plan, &buckets, &mut sim_ws);
+
+        // ---- Adaptive Correction feedback (Eq 7) ----
+        if uses_scheduler && scheduler.correction.is_active() {
+            let mut observations = Vec::new();
+            let mut mispredicted = 0.0;
+            let l_layers = m.llm.layers as f64;
+            for bucket in &buckets {
+                let total: f64 = bucket.iter().map(|i| i.llm_seq as f64).sum();
+                if total <= 0.0 {
+                    continue;
+                }
+                for item in bucket {
+                    let seq = item.llm_seq as f64;
+                    if seq <= 0.0 {
+                        continue;
+                    }
+                    let lin_share = truth
+                        .llm_linear_time(m, total, l_layers, theta.llm.tp)
+                        * seq
+                        / total;
+                    let attn = truth.llm_attn_time(m, seq, l_layers, theta.llm.tp);
+                    let actual = lin_share + attn;
+                    let pred = est.llm_item_dur(item, theta.llm.tp);
+                    let flop = item.llm_flop(m);
+                    observations.push((
+                        Truth::llm_bucket(seq),
+                        flop / actual,
+                        flop / pred,
+                    ));
+                    mispredicted += (actual - pred).abs() / theta.llm.pp as f64;
+                }
+            }
+            let benefit = mispredicted
+                / (stats.buckets.len().max(1) as f64)
+                / stats.pipeline_makespan.max(1e-12);
+            scheduler.feedback(&observations, benefit);
+        }
+
+        stage_thr_samples.extend(stats.stage_throughputs());
+        for b in &stats.buckets {
+            if b.enc_time > 0.0 {
+                bucket_enc_times.push(b.enc_time);
+            }
+            if b.llm_time > 0.0 {
+                bucket_llm_times.push(b.llm_time);
+            }
+        }
+        iterations.push(stats);
+    }
+
+    let n = iterations.len().max(1) as f64;
+    let mean_iter = iterations.iter().map(|s| s.iteration_time).sum::<f64>() / n;
+    let mean_idle = iterations.iter().map(|s| s.total_idle()).sum::<f64>() / n;
+    let mean_thr = iterations
+        .iter()
+        .map(|s| s.cluster_throughput())
+        .sum::<f64>()
+        / n;
+
+    let (replans, replan_events) = match replanner {
+        Some(rp) => (rp.swaps(), rp.events),
+        None => (0, Vec::new()),
+    };
+
+    RunResult {
+        system: kind,
+        theta,
+        n_gpus: cluster.total_gpus(),
+        per_gpu_throughput: mean_thr / cluster.total_gpus() as f64,
+        mean_iteration_time: mean_iter,
+        mean_idle,
+        stage_throughput_samples: stage_thr_samples,
+        bucket_enc_times,
+        bucket_llm_times,
+        sched_elapsed,
+        lpt_fallbacks,
+        profiling_seconds,
+        optimizer_elapsed,
+        replans,
+        replan_events,
+        straggler_gaps: Vec::new(),
+        migrations: 0,
+        hetero_thetas: Vec::new(),
+        iterations,
+    }
+}
+
+fn merge_shard_iterations(per: Vec<IterationStats>, barrier: &BarrierStats) -> IterationStats {
+    let pipeline_max = per.iter().map(|s| s.pipeline_makespan).fold(0.0, f64::max);
+    let n_stages = per.iter().map(|s| s.n_stages).sum();
+    let mut stage_busy = Vec::with_capacity(n_stages);
+    let mut stage_flop = Vec::with_capacity(n_stages);
+    let mut buckets = Vec::new();
+    let mut total_flop = 0.0;
+    for s in per {
+        stage_busy.extend(s.stage_busy);
+        stage_flop.extend(s.stage_flop);
+        buckets.extend(s.buckets);
+        total_flop += s.total_flop;
+    }
+    let stage_idle = stage_busy.iter().map(|&b| pipeline_max - b).collect();
+    IterationStats {
+        iteration_time: barrier.step_time,
+        pipeline_makespan: pipeline_max,
+        dp_sync_time: barrier.step_time - pipeline_max,
+        stage_busy,
+        stage_idle,
+        stage_flop,
+        n_stages,
+        total_flop,
+        buckets,
+        timeline: Vec::new(),
+    }
+}
+
+/// Pre-engine `run_sharded`.
+fn reference_run_sharded(m: &Mllm, scenario: &str, cfg: &RunConfig) -> RunResult {
+    let sc = cfg.shard.clone().unwrap_or_default();
+    let shards = sc.dp_shards;
+    assert!(shards >= 1, "sharded run needs at least one shard");
+    assert!(cfg.gbs >= shards, "per-shard batch must be non-empty");
+    let cluster = ClusterSpec::hgx_a100(cfg.nodes);
+    let mut truth = Truth::new(cluster);
+    truth.injected = cfg.injected.clone();
+
+    // ---- offline phase: model profile + pooled data profile + θ* ----
+    let mut backend = SimBackend::new(truth.clone());
+    let profile = ModelProfiler::new(&mut backend, ProfilerGrids::standard(cluster.gpus_per_node))
+        .profile(m);
+    let mut profile_sd = ShardedDataset::by_key(scenario, shards, cfg.seed ^ 0xDA7A)
+        .unwrap_or_else(|| panic!("unknown shard scenario '{scenario}'"));
+    let data = profile_sd.profile_pooled(m, cfg.profile_samples);
+    let profiling_seconds = backend.measured_seconds().max(data.profiling_seconds);
+
+    let rctx = ReplanContext {
+        m,
+        profile: &profile,
+        n_gpus: cluster.total_gpus(),
+        gpus_per_node: cluster.gpus_per_node,
+        mem_capacity: cluster.gpu.mem_bytes,
+        gbs: cfg.gbs.div_ceil(shards),
+    };
+    let r0 = optimize(&rctx.inputs(&data)).expect("no feasible sharded configuration");
+    let (mut theta, optimizer_elapsed) = (r0.theta, r0.elapsed);
+
+    // ---- online phase ----
+    let est = Estimator::new(m, &profile.throughput);
+    let mut sd = ShardedDataset::by_key(scenario, shards, cfg.seed).expect("scenario");
+    let counts = ShardedDataset::split_counts(cfg.gbs, shards);
+    let mut replanner =
+        Replanner::new(&data, theta, cfg.replan.clone().unwrap_or_default());
+    let mut gate = ShardWindows::new(shards, sc.window_batches);
+
+    let mut iterations = Vec::with_capacity(cfg.iters);
+    let mut sched_elapsed = Vec::with_capacity(cfg.iters);
+    let mut straggler_gaps = Vec::with_capacity(cfg.iters);
+    let mut migrations = 0usize;
+    let mut stage_thr_samples = Vec::new();
+    let mut bucket_enc_times = Vec::new();
+    let mut bucket_llm_times = Vec::new();
+
+    for _ in 0..cfg.iters {
+        let shard_batches = sd.shard_batches(m, &counts);
+
+        let per_stats: Vec<ShapeStats> =
+            shard_batches.iter().map(|b| ShapeStats::of_batch(b)).collect();
+        let merged = merge_shard_stats(&per_stats);
+        let pooled: Vec<ItemShape> =
+            shard_batches.iter().flat_map(|b| b.iter().copied()).collect();
+        if let Some(new_theta) = replanner.observe_stats(&rctx, merged, &pooled) {
+            theta = new_theta;
+        }
+        gate.push(per_stats);
+
+        let t0 = std::time::Instant::now();
+        let home: Vec<usize> = shard_batches
+            .iter()
+            .enumerate()
+            .flat_map(|(r, b)| std::iter::repeat(r).take(b.len()))
+            .collect();
+        let groups: Vec<Vec<usize>> = if sc.rebalance && gate.skewed(sc.skew_enter) {
+            let items: Vec<ItemCost> = pooled
+                .iter()
+                .map(|s| ItemCost {
+                    enc: est.enc_item_dur(s, theta.enc.tp) / theta.enc.pp as f64,
+                    llm: est.llm_item_dur(s, theta.llm.tp) / theta.llm.pp as f64,
+                })
+                .collect();
+            let rb = rebalance(&items, &home, shards, &sc.balance);
+            migrations += rb.migrations;
+            rb.groups(shards)
+        } else {
+            let mut g: Vec<Vec<usize>> = vec![Vec::new(); shards];
+            for (i, &r) in home.iter().enumerate() {
+                g[r].push(i);
+            }
+            g
+        };
+
+        let shard_buckets: Vec<Vec<Vec<ItemShape>>> = groups
+            .iter()
+            .map(|g| {
+                let shapes: Vec<ItemShape> = g.iter().map(|&i| pooled[i]).collect();
+                lpt_shard_buckets(&est, theta, &shapes)
+            })
+            .collect();
+        sched_elapsed.push(t0.elapsed());
+
+        let per_replica = simulate_shards(m, &truth, theta, &shard_buckets);
+        let barrier = step_barrier(
+            per_replica.iter().map(|s| s.iteration_time).collect(),
+            cross_shard_allreduce(m, &truth, theta, shards),
+        );
+        straggler_gaps.push(barrier.straggler_gap);
+        let stats = merge_shard_iterations(per_replica, &barrier);
+
+        stage_thr_samples.extend(stats.stage_throughputs());
+        for b in &stats.buckets {
+            if b.enc_time > 0.0 {
+                bucket_enc_times.push(b.enc_time);
+            }
+            if b.llm_time > 0.0 {
+                bucket_llm_times.push(b.llm_time);
+            }
+        }
+        iterations.push(stats);
+    }
+
+    let n = iterations.len().max(1) as f64;
+    let mean_iter = iterations.iter().map(|s| s.iteration_time).sum::<f64>() / n;
+    let mean_idle = iterations.iter().map(|s| s.total_idle()).sum::<f64>() / n;
+    let mean_thr = iterations
+        .iter()
+        .map(|s| s.cluster_throughput())
+        .sum::<f64>()
+        / n;
+    let n_gpus = cluster.total_gpus() * shards;
+
+    RunResult {
+        system: SystemKind::DflopSharded,
+        theta,
+        n_gpus,
+        per_gpu_throughput: mean_thr / n_gpus as f64,
+        mean_iteration_time: mean_iter,
+        mean_idle,
+        stage_throughput_samples: stage_thr_samples,
+        bucket_enc_times,
+        bucket_llm_times,
+        sched_elapsed,
+        lpt_fallbacks: 0,
+        profiling_seconds,
+        optimizer_elapsed,
+        replans: replanner.swaps(),
+        replan_events: replanner.events,
+        straggler_gaps,
+        migrations,
+        hetero_thetas: Vec::new(),
+        iterations,
+    }
+}
+
+// ------------------------------------------------------------------
+// The comparison.
+// ------------------------------------------------------------------
+
+fn assert_bits(a: f64, b: f64, what: &str, label: &str) {
+    assert_eq!(a.to_bits(), b.to_bits(), "{label}: {what} drifted ({a} vs {b})");
+}
+
+/// Bitwise telemetry parity (wall-clock fields by shape only).
+fn assert_parity(reference: &RunResult, engine: &RunResult, label: &str) {
+    assert_eq!(reference.system, engine.system, "{label}: system");
+    assert_eq!(reference.theta, engine.theta, "{label}: final θ");
+    assert_eq!(reference.n_gpus, engine.n_gpus, "{label}: n_gpus");
+    assert_bits(
+        reference.per_gpu_throughput,
+        engine.per_gpu_throughput,
+        "per-GPU throughput",
+        label,
+    );
+    assert_bits(
+        reference.mean_iteration_time,
+        engine.mean_iteration_time,
+        "mean iteration time",
+        label,
+    );
+    assert_bits(reference.mean_idle, engine.mean_idle, "mean idle", label);
+    assert_eq!(
+        reference.stage_throughput_samples.len(),
+        engine.stage_throughput_samples.len(),
+        "{label}: stage sample count"
+    );
+    for (i, (a, b)) in reference
+        .stage_throughput_samples
+        .iter()
+        .zip(&engine.stage_throughput_samples)
+        .enumerate()
+    {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label}: stage sample {i}");
+    }
+    assert_eq!(reference.bucket_enc_times.len(), engine.bucket_enc_times.len());
+    assert_eq!(reference.bucket_llm_times.len(), engine.bucket_llm_times.len());
+    for (a, b) in reference.bucket_llm_times.iter().zip(&engine.bucket_llm_times) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label}: bucket LLM time");
+    }
+    assert_eq!(reference.sched_elapsed.len(), engine.sched_elapsed.len());
+    assert_eq!(reference.lpt_fallbacks, engine.lpt_fallbacks, "{label}: fallbacks");
+    assert!(reference.profiling_seconds > 0.0 && engine.profiling_seconds > 0.0);
+    assert_eq!(reference.replans, engine.replans, "{label}: replans");
+    type EventKey = (usize, Theta, Theta, bool, u64);
+    let events = |r: &RunResult| -> Vec<EventKey> {
+        r.replan_events
+            .iter()
+            .map(|e| (e.iteration, e.old, e.new, e.swapped, e.expected_makespan.to_bits()))
+            .collect()
+    };
+    assert_eq!(events(reference), events(engine), "{label}: replan events");
+    assert_eq!(
+        reference.straggler_gaps.len(),
+        engine.straggler_gaps.len(),
+        "{label}: gap count"
+    );
+    for (i, (a, b)) in reference
+        .straggler_gaps
+        .iter()
+        .zip(&engine.straggler_gaps)
+        .enumerate()
+    {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label}: straggler gap {i}");
+    }
+    assert_eq!(reference.migrations, engine.migrations, "{label}: migrations");
+    assert_eq!(reference.hetero_thetas, engine.hetero_thetas, "{label}: hetero plans");
+    assert_eq!(reference.iterations.len(), engine.iterations.len());
+    for (i, (a, b)) in reference.iterations.iter().zip(&engine.iterations).enumerate() {
+        assert_eq!(
+            a.iteration_time.to_bits(),
+            b.iteration_time.to_bits(),
+            "{label}: iteration {i} time"
+        );
+        assert_eq!(
+            a.total_flop.to_bits(),
+            b.total_flop.to_bits(),
+            "{label}: iteration {i} FLOP"
+        );
+        assert_eq!(a.n_stages, b.n_stages, "{label}: iteration {i} stages");
+    }
+}
+
+fn check_kind_at_widths(kind: SystemKind, m: &Mllm, dataset: &str, cfg: &RunConfig) {
+    for threads in [1usize, 8] {
+        set_max_threads(threads);
+        let reference = if kind == SystemKind::DflopSharded {
+            reference_run_sharded(m, dataset, cfg)
+        } else {
+            reference_run_system(kind, m, dataset, cfg)
+        };
+        let engine = dflop::engine::run(kind, m, dataset, cfg).expect("valid run");
+        assert_parity(
+            &reference,
+            &engine,
+            &format!("{kind:?}/{dataset}@threads={threads}"),
+        );
+    }
+    set_max_threads(0);
+}
+
+#[test]
+fn parity_budget_free_kinds() {
+    let _g = width_guard();
+    // Megatron / PyTorch / optimizer-only never touch the deadline ILP,
+    // so full bitwise parity holds unconditionally.
+    let m = llava_ov(llama3("8b"));
+    let mut cfg = RunConfig::new(1, 32, 3, 42);
+    cfg.profile_samples = 256;
+    for kind in [
+        SystemKind::Megatron,
+        SystemKind::Pytorch,
+        SystemKind::DflopOptimizerOnly,
+    ] {
+        check_kind_at_widths(kind, &m, "mixed", &cfg);
+    }
+}
+
+#[test]
+fn parity_scheduled_kinds() {
+    let _g = width_guard();
+    // The ILP-scheduled systems: small batches + a 10 s budget keep every
+    // branch-and-bound call provably optimal, hence deterministic.
+    let m = llava_ov(llama3("8b"));
+    let mut cfg = RunConfig::new(1, 16, 3, 42);
+    cfg.profile_samples = 256;
+    cfg.ilp_budget = Duration::from_secs(10);
+    for kind in [SystemKind::Dflop, SystemKind::DflopSchedulerOnly] {
+        check_kind_at_widths(kind, &m, "mixed", &cfg);
+        // The comparison is only meaningful when the ILP proved
+        // optimality throughout (see module docs).
+        let r = dflop::engine::run(kind, &m, "mixed", &cfg).expect("valid run");
+        assert_eq!(
+            r.lpt_fallbacks, 0,
+            "{kind:?}: ILP budget expired — shrink the parity instance"
+        );
+    }
+}
+
+#[test]
+fn parity_adaptive_on_curriculum() {
+    let _g = width_guard();
+    // The replanner-in-the-loop path: drift windows, warm restarts, plan
+    // swaps, and the correction reset all run on both sides.
+    let m = llava_ov(llama3("8b"));
+    let mut cfg = RunConfig::new(1, 16, 12, 42);
+    cfg.profile_samples = 256;
+    cfg.ilp_budget = Duration::from_secs(10);
+    let mut rp = ReplanConfig { window_batches: 4, cooldown: 4, ..ReplanConfig::default() };
+    rp.drift.confirm = 1;
+    cfg.replan = Some(rp);
+    check_kind_at_widths(SystemKind::DflopAdaptive, &m, "curriculum", &cfg);
+    let r = dflop::engine::run(SystemKind::DflopAdaptive, &m, "curriculum", &cfg)
+        .expect("valid run");
+    assert_eq!(r.lpt_fallbacks, 0, "ILP budget expired — shrink the parity instance");
+}
+
+#[test]
+fn parity_sharded_kinds() {
+    let _g = width_guard();
+    // The sharded path is budget-free end to end; skewed-shard exercises
+    // the gate + migration walk, curriculum the global replan.
+    let m = llava_ov(llama3("8b"));
+    let mut cfg = RunConfig::new(1, 48, 10, 42);
+    cfg.profile_samples = 256;
+    cfg.shard = Some(ShardConfig {
+        dp_shards: 4,
+        window_batches: 4,
+        ..ShardConfig::default()
+    });
+    check_kind_at_widths(SystemKind::DflopSharded, &m, "skewed-shard", &cfg);
+    let mut curr = cfg.clone();
+    curr.iters = 12;
+    check_kind_at_widths(SystemKind::DflopSharded, &m, "curriculum", &curr);
+}
