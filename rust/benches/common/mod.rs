@@ -9,8 +9,14 @@
 //! Setting `DFLOP_BENCH_JSON=<path>` additionally records every result in
 //! a machine-readable JSON document (see [`emit_json`]): the bench targets
 //! run sequentially under `cargo bench` and each merges its rows into the
-//! same file, which CI uploads as an artifact (`BENCH_PR5.json` since the
-//! execution engine landed; the PR-2..4 protocol files read identically).
+//! same file, which CI uploads as an artifact (`BENCH_PR6.json` since the
+//! delta evaluator landed; the PR-2..5 protocol files read identically).
+//!
+//! Setting `DFLOP_BENCH_JSON_DIR=<dir>` writes one *per-target* document
+//! (`<dir>/BENCH_<target>.json`, same schema, only that target's rows) on
+//! top of — or instead of — the merged file, so a CI run stays comparable
+//! row-for-row against the single-target artifacts older PRs uploaded.
+//! Both variables may be set at once.
 use std::time::Instant;
 
 /// True when the CI smoke mode is requested via `DFLOP_BENCH_QUICK`.
@@ -62,48 +68,74 @@ pub fn emit_json(target: &str, results: &[BenchResult]) {
     use dflop::util::json::{emit, parse, Json};
     use std::collections::BTreeMap;
 
-    let Ok(path) = std::env::var("DFLOP_BENCH_JSON") else { return };
-    if path.is_empty() {
+    let merged = std::env::var("DFLOP_BENCH_JSON").ok().filter(|p| !p.is_empty());
+    let dir = std::env::var("DFLOP_BENCH_JSON_DIR").ok().filter(|p| !p.is_empty());
+    if merged.is_none() && dir.is_none() {
         return;
     }
-    let mut root = std::fs::read_to_string(&path)
-        .ok()
-        .and_then(|text| parse(&text).ok())
-        .and_then(|v| match v {
-            Json::Obj(o) => Some(o),
-            _ => None,
-        })
-        .unwrap_or_default();
-    root.insert("schema".into(), Json::Str("dflop-bench-v1".into()));
-    root.insert(
-        "threads".into(),
-        Json::Num(dflop::util::parallel::max_threads() as f64),
-    );
-    root.insert("quick".into(), Json::Bool(quick()));
-    let mut rows = match root.remove("results") {
-        Some(Json::Arr(rows)) => rows,
-        _ => Vec::new(),
+
+    let fresh_rows = || -> Vec<Json> {
+        results
+            .iter()
+            .map(|r| {
+                let mut o = BTreeMap::new();
+                o.insert("target".into(), Json::Str(target.into()));
+                o.insert("bench".into(), Json::Str(r.name.clone()));
+                o.insert("mean_s".into(), Json::Num(r.mean));
+                o.insert("min_s".into(), Json::Num(r.min));
+                o.insert("max_s".into(), Json::Num(r.max));
+                o.insert("reps".into(), Json::Num(r.reps as f64));
+                Json::Obj(o)
+            })
+            .collect()
     };
-    // Drop this target's previous rows wholesale: a target always reports
-    // its complete result set in one call, and keeping partially-matching
-    // leftovers would mix rows from different protocols under the one
-    // top-level threads/quick header.
-    rows.retain(|row| {
-        let Json::Obj(o) = row else { return false };
-        o.get("target").and_then(Json::as_str) != Some(target)
-    });
-    for r in results {
-        let mut o = BTreeMap::new();
-        o.insert("target".into(), Json::Str(target.into()));
-        o.insert("bench".into(), Json::Str(r.name.clone()));
-        o.insert("mean_s".into(), Json::Num(r.mean));
-        o.insert("min_s".into(), Json::Num(r.min));
-        o.insert("max_s".into(), Json::Num(r.max));
-        o.insert("reps".into(), Json::Num(r.reps as f64));
-        rows.push(Json::Obj(o));
+    let header = |root: &mut BTreeMap<String, Json>| {
+        root.insert("schema".into(), Json::Str("dflop-bench-v1".into()));
+        root.insert(
+            "threads".into(),
+            Json::Num(dflop::util::parallel::max_threads() as f64),
+        );
+        root.insert("quick".into(), Json::Bool(quick()));
+    };
+
+    if let Some(path) = merged {
+        let mut root = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| parse(&text).ok())
+            .and_then(|v| match v {
+                Json::Obj(o) => Some(o),
+                _ => None,
+            })
+            .unwrap_or_default();
+        header(&mut root);
+        let mut rows = match root.remove("results") {
+            Some(Json::Arr(rows)) => rows,
+            _ => Vec::new(),
+        };
+        // Drop this target's previous rows wholesale: a target always
+        // reports its complete result set in one call, and keeping
+        // partially-matching leftovers would mix rows from different
+        // protocols under the one top-level threads/quick header.
+        rows.retain(|row| {
+            let Json::Obj(o) = row else { return false };
+            o.get("target").and_then(Json::as_str) != Some(target)
+        });
+        rows.extend(fresh_rows());
+        root.insert("results".into(), Json::Arr(rows));
+        if let Err(e) = std::fs::write(&path, emit(&Json::Obj(root)) + "\n") {
+            eprintln!("warning: could not write {path}: {e}");
+        }
     }
-    root.insert("results".into(), Json::Arr(rows));
-    if let Err(e) = std::fs::write(&path, emit(&Json::Obj(root)) + "\n") {
-        eprintln!("warning: could not write {path}: {e}");
+
+    if let Some(dir) = dir {
+        // Per-target document: always written fresh — one target, one
+        // file, no merge step to go stale.
+        let mut root = BTreeMap::new();
+        header(&mut root);
+        root.insert("results".into(), Json::Arr(fresh_rows()));
+        let path = format!("{dir}/BENCH_{target}.json");
+        if let Err(e) = std::fs::write(&path, emit(&Json::Obj(root)) + "\n") {
+            eprintln!("warning: could not write {path}: {e}");
+        }
     }
 }

@@ -6,6 +6,8 @@ mod common;
 use common::bench;
 use dflop::data::dataset::Dataset;
 use dflop::model::catalog::{llava_ov, llama3};
+use dflop::optimizer::batch::{candidate_tables, eval_candidates, eval_candidates_serial};
+use dflop::optimizer::plan::{ModPar, Theta};
 use dflop::optimizer::search::{optimize, OptimizerInputs};
 use dflop::perfmodel::{ClusterSpec, Truth};
 use dflop::profiling::backend::SimBackend;
@@ -35,5 +37,40 @@ fn main() {
             std::hint::black_box(r.theta);
         }));
     }
+
+    // Refinement evaluator pair: the same 48-candidate θ sweep scored one
+    // full pipeline sim per candidate (serial oracle) vs through the
+    // batched evaluator (shared cost tables + delta-replayed re-pricing
+    // within a structure group). Read by name in `dflop-bench-compare`.
+    let inp = OptimizerInputs {
+        m: &m,
+        profile: &profile,
+        data: &data,
+        n_gpus: 64,
+        gpus_per_node: 8,
+        mem_capacity: ClusterSpec::hgx_a100(1).gpu.mem_bytes,
+        gbs: 512,
+        assume_balanced: true,
+    };
+    let mut cands: Vec<Theta> = Vec::new();
+    for &l_tp in &[1usize, 2, 4] {
+        for l_pp in 1..=4usize {
+            for &n_mb in &[4usize, 8, 16, 32] {
+                cands.push(Theta {
+                    enc: ModPar { tp: 1, pp: 1, dp: 2 },
+                    llm: ModPar { tp: l_tp, pp: l_pp, dp: 1 },
+                    n_mb,
+                });
+            }
+        }
+    }
+    results.push(bench("refine 48 candidates, serial (gbs 512)", 5, || {
+        let (keys, tables) = candidate_tables(&inp, &cands);
+        std::hint::black_box(eval_candidates_serial(&inp, &keys, &tables, &cands));
+    }));
+    results.push(bench("refine 48 candidates, batched (gbs 512)", 5, || {
+        let (keys, tables) = candidate_tables(&inp, &cands);
+        std::hint::black_box(eval_candidates(&inp, &keys, &tables, &cands));
+    }));
     common::emit_json("optimizer_bench", &results);
 }

@@ -46,6 +46,37 @@ fn main() {
         std::hint::black_box(simulate_reference(16, &routes).makespan);
     }));
 
+    // Delta re-simulation pair: the same 64-edit stream (one leg of one
+    // bucket retimed per edit) costed as 64 full re-runs vs 64 delta
+    // replays over a tracked workspace. These two rows back the PR-6 ≥3×
+    // claim and are read by name in `dflop-bench-compare`; 64 edits per
+    // repetition amortize timer noise in quick mode.
+    let mut full_ws = SimWorkspace::new();
+    full_ws.routes.clear();
+    for r in &routes {
+        full_ws.routes.push_route(r);
+    }
+    results.push(bench("full re-sim x64 single-bucket edits (256x16)", 10, || {
+        for k in 0..64usize {
+            let f = 1.0 + (k % 10) as f64 * 0.01;
+            full_ws.update_leg(k * 37 % 256, k % 16, f, 2.0 + f * 0.5);
+            std::hint::black_box(full_ws.run(16, false));
+        }
+    }));
+    let mut delta_ws = SimWorkspace::new();
+    delta_ws.routes.clear();
+    for r in &routes {
+        delta_ws.routes.push_route(r);
+    }
+    delta_ws.run_tracked(16);
+    results.push(bench("delta re-sim x64 single-bucket edits (256x16)", 10, || {
+        for k in 0..64usize {
+            let f = 1.0 + (k % 10) as f64 * 0.01;
+            delta_ws.update_leg(k * 37 % 256, k % 16, f, 2.0 + f * 0.5);
+            std::hint::black_box(delta_ws.delta_run(16));
+        }
+    }));
+
     // Full iteration with ground-truth durations.
     let m = llava_ov(llama3("8b"));
     let truth = Truth::new(ClusterSpec::hgx_a100(4));

@@ -71,6 +71,34 @@ fn main() {
         },
     ));
 
+    // Larger instance with a free budget: the walk takes many more steps,
+    // which is where the incrementally-sorted member lists (PR 6) pay off
+    // over the per-step donor re-sort.
+    let big_counts = ShardedDataset::split_counts(2048, shards);
+    let big_batches = sd.shard_batches(&m, &big_counts);
+    let big_items: Vec<ItemCost> = big_batches
+        .iter()
+        .flatten()
+        .map(|s| ItemCost {
+            enc: s.units as f64 * 1e-3,
+            llm: s.llm_seq as f64 * 1e-6,
+        })
+        .collect();
+    let big_home: Vec<usize> = big_batches
+        .iter()
+        .enumerate()
+        .flat_map(|(r, b)| std::iter::repeat(r).take(b.len()))
+        .collect();
+    let free = BalanceConfig { migration_budget: 1.0, min_gain: 0.0 };
+    results.push(bench(
+        &format!("rebalance 2048 items across {shards} shards (free budget)"),
+        10,
+        || {
+            let r = rebalance(&big_items, &big_home, shards, &free);
+            std::hint::black_box(r.migrations);
+        },
+    ));
+
     // Full sharded step: per-replica LPT + 1F1B fan-out + barrier.
     let cluster = ClusterSpec::hgx_a100(1);
     let truth = Truth::new(cluster);

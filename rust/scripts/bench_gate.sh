@@ -1,0 +1,36 @@
+#!/usr/bin/env sh
+# PR-6 bench-regression gate: regenerate the bench document and check the
+# named in-binary speedup claims with dflop-bench-compare.
+#
+# Usage:  rust/scripts/bench_gate.sh [<out.json>]
+#
+# <out.json> defaults to BENCH_PR6.json at the repository root. The run is
+# single-threaded (override with DFLOP_THREADS) and quick-mode by default
+# so CI finishes in seconds; set FULL=1 for stable full-rep statistics.
+# Alongside the merged document, per-target BENCH_<target>.json files are
+# written next to it (DFLOP_BENCH_JSON_DIR), keeping rows comparable with
+# the single-target artifacts older PRs uploaded.
+#
+# Exit status is dflop-bench-compare's: 0 all expectations hold, 1 a
+# claimed speedup regressed, 2 the document is missing rows or malformed.
+set -eu
+
+root="$(git rev-parse --show-toplevel)"
+cd "$root"
+out="${1:-$root/BENCH_PR6.json}"
+case "$out" in
+    /*) ;;
+    *) out="$root/$out" ;;
+esac
+
+quick="1"
+[ "${FULL:-0}" = "1" ] && quick=""
+
+rm -f "$out"
+DFLOP_THREADS="${DFLOP_THREADS:-1}" \
+    DFLOP_BENCH_QUICK="$quick" \
+    DFLOP_BENCH_JSON="$out" \
+    DFLOP_BENCH_JSON_DIR="$(dirname "$out")" \
+    cargo bench
+
+cargo run --release --bin dflop-bench-compare -- "$out"

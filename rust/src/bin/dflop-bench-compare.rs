@@ -1,0 +1,125 @@
+//! CI bench-regression gate: check a `dflop-bench-v1` JSON document
+//! against the named in-binary speedup claims.
+//!
+//! Every expectation is a (numerator row, denominator row, max ratio)
+//! triple over `mean_s` of two benches from the *same* run — paired rows
+//! measured in one process on one machine, so the ratio cancels the
+//! host's absolute speed and stays meaningful even in quick mode. The
+//! current claims:
+//!
+//! - delta re-sim ≤ ⅓ of full re-sim on a single-bucket edit stream
+//!   (`pipeline_bench`, the PR-6 tentpole's ≥3× target),
+//! - batched θ-candidate evaluation ≤ serial evaluation
+//!   (`optimizer_bench`),
+//! - warm replan from the incumbent ≤ cold optimize (`stream_bench`).
+//!
+//! A missing row is a hard error, not a skip: renaming a bench silently
+//! would otherwise disarm the gate. Exit code 1 on any violation, 2 on
+//! usage/parse errors; `rust/scripts/bench_gate.sh` regenerates the
+//! document and runs this binary, and CI fails the workflow on its exit
+//! status.
+
+use dflop::util::json::{parse, Json};
+use std::process::ExitCode;
+
+struct Expect {
+    target: &'static str,
+    numerator: &'static str,
+    denominator: &'static str,
+    max_ratio: f64,
+    claim: &'static str,
+}
+
+const EXPECTATIONS: &[Expect] = &[
+    Expect {
+        target: "pipeline_bench",
+        numerator: "delta re-sim x64 single-bucket edits (256x16)",
+        denominator: "full re-sim x64 single-bucket edits (256x16)",
+        max_ratio: 1.0 / 3.0,
+        claim: "delta re-sim >= 3x faster than full re-sim per edit",
+    },
+    Expect {
+        target: "optimizer_bench",
+        numerator: "refine 48 candidates, batched (gbs 512)",
+        denominator: "refine 48 candidates, serial (gbs 512)",
+        max_ratio: 1.0,
+        claim: "batched candidate evaluation no slower than serial",
+    },
+    Expect {
+        target: "stream_bench",
+        numerator: "warm replan from incumbent theta*",
+        denominator: "cold optimize (8 GPUs, gbs 64)",
+        max_ratio: 1.0,
+        claim: "warm replan no slower than a cold optimize",
+    },
+];
+
+fn mean_of(rows: &[Json], target: &str, bench: &str) -> Result<f64, String> {
+    for row in rows {
+        let t = row.get("target").and_then(Json::as_str);
+        let b = row.get("bench").and_then(Json::as_str);
+        if t == Some(target) && b == Some(bench) {
+            return row
+                .get("mean_s")
+                .and_then(Json::as_f64)
+                .filter(|m| m.is_finite() && *m > 0.0)
+                .ok_or_else(|| {
+                    format!("row {target} / {bench:?} has no positive finite mean_s")
+                });
+        }
+    }
+    Err(format!("missing row: target={target} bench={bench:?}"))
+}
+
+fn run() -> Result<bool, String> {
+    let path = std::env::args()
+        .nth(1)
+        .ok_or_else(|| "usage: dflop-bench-compare <bench.json>".to_string())?;
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| format!("cannot read {path}: {e}"))?;
+    let doc = parse(&text).map_err(|e| format!("cannot parse {path}: {e:?}"))?;
+    if doc.get("schema").and_then(Json::as_str) != Some("dflop-bench-v1") {
+        return Err(format!("{path}: not a dflop-bench-v1 document"));
+    }
+    let rows = doc
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{path}: no results array"))?;
+
+    println!("bench-regression gate over {path}:");
+    let mut ok = true;
+    for e in EXPECTATIONS {
+        let num = mean_of(rows, e.target, e.numerator)?;
+        let den = mean_of(rows, e.target, e.denominator)?;
+        let ratio = num / den;
+        let pass = ratio <= e.max_ratio;
+        ok &= pass;
+        println!(
+            "  [{}] {:14} {:<52} ratio {:.3} (max {:.3})  # {}",
+            if pass { "PASS" } else { "FAIL" },
+            e.target,
+            e.numerator,
+            ratio,
+            e.max_ratio,
+            e.claim,
+        );
+    }
+    Ok(ok)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => {
+            println!("all bench expectations hold");
+            ExitCode::SUCCESS
+        }
+        Ok(false) => {
+            eprintln!("bench regression detected (see FAIL rows above)");
+            ExitCode::from(1)
+        }
+        Err(msg) => {
+            eprintln!("error: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -19,7 +19,11 @@
 //!    Phase-2-style proxy score ([`plan_score`]) — the `shard::balance`
 //!    bi-metric load model (`ItemCost` pricing, LPT bottleneck) times the
 //!    1F1B pipeline occupancy `(m + p − 1)` — is strictly better; ties
-//!    keep the shard's own plan. The whole step is a pure function of the
+//!    keep the shard's own plan. The candidate sweep runs through the
+//!    batched [`plan_scores`], which shares one priced cost table per
+//!    distinct `(tp, pp)` key and memoizes the LPT bottleneck per
+//!    `(key, m)` while staying bit-identical to per-candidate
+//!    [`plan_score`] calls. The whole step is a pure function of the
 //!    reservoirs, so assignments are deterministic across thread counts.
 //!
 //! Memory feasibility of every fitted θ_s is enforced by the optimizer at
@@ -36,9 +40,10 @@ use crate::model::catalog::Mllm;
 use crate::optimizer::plan::Theta;
 use crate::optimizer::search::optimize_warm;
 use crate::profiling::estimator::Estimator;
-use crate::scheduler::lpt::{lpt, ItemCost};
+use crate::scheduler::lpt::{lpt, lpt_table_into, Assignment, CostTable, ItemCost};
 use crate::stream::replan::{live_profile, ReplanContext};
 use crate::stream::reservoir::ShapeReservoir;
+use std::collections::BTreeMap;
 
 /// The widest per-GPU gradient slice θ ships through the cross-shard
 /// ring (`shard::sync::grad_slices`, the allreduce's own byte term). The
@@ -98,6 +103,60 @@ pub fn plan_score(est: &Estimator, theta: Theta, shapes: &[ItemShape]) -> f64 {
     (m + theta.pipeline_depth() - 1) as f64 * a.c_max()
 }
 
+/// Batched [`plan_score`]: one proxy score per candidate over the same
+/// `shapes`, sharing the expensive pieces across candidates instead of
+/// recomputing them per call. Two tiers of sharing:
+///
+/// 1. **Pricing**: item costs depend only on `(enc.tp, enc.pp, llm.tp,
+///    llm.pp)`, so one structure-of-arrays [`CostTable`] is priced per
+///    distinct key and shared by every candidate carrying it.
+/// 2. **Partition**: the LPT bottleneck depends only on `(key, m)` —
+///    candidates that differ merely in `dp`/`n_mb` combinations yielding
+///    the same bucket count reuse one memoized `c_max`.
+///
+/// Scores are bit-identical to calling [`plan_score`] per candidate, in
+/// candidate order (asserted by `batched_plan_scores_bitmatch_serial`) —
+/// [`assign_plans`] leans on that to keep its tie-breaking semantics.
+pub fn plan_scores(est: &Estimator<'_>, cands: &[Theta], shapes: &[ItemShape]) -> Vec<f64> {
+    if cands.is_empty() {
+        return Vec::new();
+    }
+    if shapes.is_empty() {
+        return vec![0.0; cands.len()];
+    }
+    let key_of = |t: &Theta| (t.enc.tp, t.enc.pp, t.llm.tp, t.llm.pp);
+    let mut keys: Vec<(usize, usize, usize, usize)> = cands.iter().map(key_of).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    let tables: Vec<CostTable> = keys
+        .iter()
+        .map(|&(e_tp, e_pp, l_tp, l_pp)| {
+            let mut t = CostTable::new();
+            for s in shapes {
+                t.push(
+                    est.enc_item_dur(s, e_tp) / e_pp as f64,
+                    est.llm_item_dur(s, l_tp) / l_pp as f64,
+                );
+            }
+            t
+        })
+        .collect();
+    let mut cmax: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    let mut scratch = Assignment::default();
+    cands
+        .iter()
+        .map(|t| {
+            let ki = keys.binary_search(&key_of(t)).expect("key was collected");
+            let m = t.buckets().min(shapes.len());
+            let c = *cmax.entry((ki, m)).or_insert_with(|| {
+                lpt_table_into(&tables[ki], m, &mut scratch);
+                scratch.c_max()
+            });
+            (m + t.pipeline_depth() - 1) as f64 * c
+        })
+        .collect()
+}
+
 /// The deterministic assignment step: shard r's candidate list is its own
 /// fitted plan first, then every *distinct* other fitted plan in shard
 /// order; the proxy score picks the winner and ties keep the earliest
@@ -117,9 +176,9 @@ pub fn assign_plans(
                     cands.push(t);
                 }
             }
-            let mut best = (plan_score(est, cands[0], shapes), 0usize);
-            for (ci, &t) in cands.iter().enumerate().skip(1) {
-                let s = plan_score(est, t, shapes);
+            let scores = plan_scores(est, &cands, shapes);
+            let mut best = (scores[0], 0usize);
+            for (ci, &s) in scores.iter().enumerate().skip(1) {
                 if s < best.0 {
                     best = (s, ci);
                 }
@@ -191,6 +250,44 @@ mod tests {
         assert!(a > 0.0);
         assert_eq!(a.to_bits(), b.to_bits());
         assert_eq!(plan_score(&est, theta(3, 4), &[]), 0.0);
+    }
+
+    #[test]
+    fn batched_plan_scores_bitmatch_serial() {
+        // The batched evaluator must reproduce per-candidate plan_score
+        // bit-for-bit, in candidate order, including duplicate candidates
+        // and candidates sharing a pricing key but not a bucket count.
+        let (m, p) = fixture();
+        let est = Estimator::new(&m, &p.throughput);
+        let mut ds = Dataset::mixed(21);
+        crate::util::prop::forall("plan_scores = plan_score", 30, |g| {
+            let shapes = ds.shaped_batch(&m, g.size(24));
+            let n_c = g.size(8);
+            let mut cands: Vec<Theta> = (0..n_c)
+                .map(|_| Theta {
+                    enc: ModPar { tp: 1 << g.rng.index(2), pp: g.size(2), dp: 1 },
+                    llm: ModPar { tp: 1 << g.rng.index(2), pp: g.size(4), dp: 1 },
+                    n_mb: g.size(12),
+                })
+                .collect();
+            cands.push(cands[0]); // forced duplicate
+            let batch = plan_scores(&est, &cands, &shapes);
+            let ok = batch.len() == cands.len()
+                && cands.iter().zip(&batch).all(|(&t, &s)| {
+                    s.to_bits() == plan_score(&est, t, &shapes).to_bits()
+                });
+            (format!("shapes={} cands={}", shapes.len(), cands.len()), ok)
+        });
+    }
+
+    #[test]
+    fn plan_scores_degenerate_inputs() {
+        let (m, p) = fixture();
+        let est = Estimator::new(&m, &p.throughput);
+        let shapes = Dataset::mixed(11).shaped_batch(&m, 8);
+        assert!(plan_scores(&est, &[], &shapes).is_empty());
+        let cands = [theta(3, 4), theta(2, 8)];
+        assert_eq!(plan_scores(&est, &cands, &[]), vec![0.0, 0.0]);
     }
 
     #[test]

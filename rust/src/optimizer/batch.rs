@@ -1,0 +1,544 @@
+//! Batched Eq-1 candidate evaluation over a shared simulation arena.
+//!
+//! The optimizer's refinement pass (and the heterogeneous per-shard fit
+//! that reuses it) scores dozens of θ candidates against the sampled
+//! distribution. Scoring one candidate costs an LPT partition plus a full
+//! 1F1B simulation — but candidates overlap heavily:
+//!
+//! - candidates sharing `(E_tp, E_pp, L_tp, L_pp)` price items
+//!   identically, so they share one structure-of-arrays [`CostTable`]
+//!   (built once by [`candidate_tables`]);
+//! - candidates additionally sharing the bucket count `m` share the whole
+//!   LPT partition, emission order, and per-bucket stage prices;
+//! - candidates sharing `(E_pp, L_pp, E_dp, L_dp, m)` — the *structure
+//!   signature* — build byte-identical route topologies, differing only
+//!   in leg durations. The batch evaluator sorts candidates by signature
+//!   and, inside a signature group, re-prices the standing route set via
+//!   [`SimWorkspace::update_leg`] + [`SimWorkspace::delta_run`] instead of
+//!   rebuilding it: the counting sort, successor dedup, and 1F1B order
+//!   construction run once per signature instead of once per candidate;
+//! - candidates identical under both keys (same signature *and* same
+//!   pricing key — they differ only in an `N_mb` that collapses to the
+//!   same `m`) share a single simulation outright.
+//!
+//! [`eval_candidates`] exploits all four tiers and returns scores in
+//! candidate order, bit-identical to the serial one-candidate-at-a-time
+//! path ([`eval_candidates_serial`]) at any thread count — signature
+//! groups fan out over the `util::parallel` pool, but every score is a
+//! pure function of its candidate. The parity is enforced by a property
+//! test here and exercised at `--threads {1,8}` by the CI matrix.
+
+use crate::optimizer::plan::Theta;
+use crate::optimizer::search::OptimizerInputs;
+use crate::pipeline::sim::SimWorkspace;
+use crate::profiling::estimator::Estimator;
+use crate::scheduler::lpt::{lpt_table_into, Assignment, CostTable};
+use crate::util::parallel::par_map;
+use std::cell::RefCell;
+
+/// A candidate's pricing key: `(E_tp, E_pp, L_tp, L_pp)` — the fields an
+/// item's per-stage cost depends on.
+pub type PriceKey = (usize, usize, usize, usize);
+
+/// The pricing key of a candidate θ.
+pub fn price_key(t: &Theta) -> PriceKey {
+    (t.enc.tp, t.enc.pp, t.llm.tp, t.llm.pp)
+}
+
+/// Per-thread Eq-1 evaluation arena: the LPT output, emission order,
+/// ablation scratch, and the 1F1B simulation workspace. Workspaces obey
+/// the one-per-worker rule ([`SimWorkspace`]) by construction — each pool
+/// worker (and the serial path) owns its thread-local instance and reuses
+/// it across every candidate it scores.
+#[derive(Default)]
+pub(crate) struct EvalWorkspace {
+    pub(crate) sim: SimWorkspace,
+    pub(crate) assign: Assignment,
+    pub(crate) order: Vec<usize>,
+    pub(crate) shuffled: Vec<usize>,
+    pub(crate) buckets: Vec<Vec<usize>>,
+}
+
+thread_local! {
+    pub(crate) static EVAL_WS: RefCell<EvalWorkspace> = RefCell::new(EvalWorkspace::default());
+}
+
+/// The evaluation's bucket count: the candidate's `m = N_mb · L_dp`
+/// compressed by the proportional-subsample scale (`gbs / eval_n` items
+/// per pseudo-sample) and clamped to the evaluation batch. One definition
+/// shared by the serial scorer and the batch grouper — the signature
+/// grouping is only sound while both compute the same `m`.
+fn bucket_count(gbs: usize, eval_n: usize, n_mb: usize, l_dp: usize) -> usize {
+    let scale = (gbs as f64 / eval_n as f64).round().max(1.0) as usize;
+    ((n_mb * l_dp).div_ceil(scale)).min(eval_n).max(1)
+}
+
+/// Eq 1: expected makespan over the sampled dataset D for one candidate.
+///
+/// Where Algorithm 1's inner loop scores with the mean shape, the
+/// refinement evaluates the candidate against the *distribution*: the
+/// sampled items are partitioned into the candidate's `m = N_mb · L_dp`
+/// buckets with the same balancing the Online Scheduler will apply (LPT),
+/// and the makespan is assembled from the resulting per-bucket stage
+/// durations by running the 1F1B engine — steady-state plus warm-up/drain
+/// bubbles, heterogeneity stalls, and encoder/LLM pipeline coupling that
+/// closed forms miss. This is what lets DFLOP trade theoretical bubble
+/// fraction for schedulable bucket sizes (§5.3.5).
+///
+/// `table` is the memoized per-item stage-cost column for this
+/// candidate's pricing key (see [`candidate_tables`]): entry `i` prices
+/// sample `i mod |D|` of one pseudo global batch. All mutable state lives
+/// in `ws`; in steady state the call allocates nothing.
+pub(crate) fn expected_makespan(
+    inp: &OptimizerInputs,
+    table: &CostTable,
+    enc: crate::optimizer::plan::ModPar,
+    llm: crate::optimizer::plan::ModPar,
+    n_mb: usize,
+    ws: &mut EvalWorkspace,
+) -> f64 {
+    let est = Estimator::new(inp.m, &inp.profile.throughput);
+    let samples = &inp.data.samples;
+    let n = samples.len();
+    let eval_n = table.len();
+    let m = bucket_count(inp.gbs, eval_n, n_mb, llm.dp);
+
+    // Score a partition by *running the 1F1B engine* over the estimated
+    // per-bucket stage durations. `order[j]` names the bucket launched at
+    // position j; routes build into the workspace arena and the engine
+    // skips timeline recording (only the makespan is needed).
+    let e_ovh = inp.profile.throughput.enc_overhead(enc.tp);
+    let l_ovh = inp.profile.throughput.llm_overhead(llm.tp);
+    let n_stages = enc.dp * enc.pp + llm.dp * llm.pp;
+    let score = |sim: &mut SimWorkspace, buckets: &[Vec<usize>], order: &[usize]| -> f64 {
+        sim.routes.clear();
+        for (j, &bj) in order.iter().enumerate() {
+            // Packed pricing of this bucket's contents.
+            let mut units = 0.0f64;
+            sim.seqs.clear();
+            for &i in &buckets[bj] {
+                let shape = &samples[i % n];
+                units += shape.units as f64;
+                let seq = shape.llm_seq as f64;
+                if seq > 0.0 {
+                    sim.seqs.push(seq);
+                }
+            }
+            let e_t = est.enc_bucket_dur(units, enc.tp) / enc.pp as f64 + e_ovh;
+            let l_t = est.llm_bucket_dur(&sim.seqs, llm.tp) / llm.pp as f64 + l_ovh;
+            let e = j % enc.dp;
+            let g = j % llm.dp;
+            for sidx in 0..enc.pp {
+                sim.routes.push_leg(e * enc.pp + sidx, e_t / 3.0, e_t * 2.0 / 3.0, 0.0);
+            }
+            for sidx in 0..llm.pp {
+                sim.routes.push_leg(
+                    enc.dp * enc.pp + g * llm.pp + sidx,
+                    l_t / 3.0,
+                    l_t * 2.0 / 3.0,
+                    0.0,
+                );
+            }
+            sim.routes.end_route();
+        }
+        sim.run(n_stages, false)
+    };
+
+    if inp.assume_balanced {
+        lpt_table_into(table, m, &mut ws.assign);
+        // Heaviest-bucket-first emission (mirrors the Online Scheduler's
+        // launch order) — as a visit permutation, no clone/reorder.
+        ws.assign.heavy_order(&mut ws.order);
+        score(&mut ws.sim, &ws.assign.buckets, &ws.order)
+    } else {
+        // Optimizer-only ablation: the runtime partitions randomly, so
+        // evaluate the expected makespan over seeded random partitions
+        // (matching `baselines::random_buckets`' semantics). The shuffle
+        // and bucket scratch live in the workspace — they used to be
+        // reallocated every rep of every candidate.
+        let mut rng = crate::util::rng::Rng::new(0xAB1A);
+        let reps = 2;
+        let mut acc = 0.0;
+        // Identity emission order: the random partitioner shuffles bucket
+        // contents, not their launch order.
+        ws.order.clear();
+        ws.order.extend(0..m);
+        ws.buckets.resize_with(m, Vec::new);
+        for _ in 0..reps {
+            ws.shuffled.clear();
+            ws.shuffled.extend(0..eval_n);
+            rng.shuffle(&mut ws.shuffled);
+            for b in ws.buckets.iter_mut() {
+                b.clear();
+            }
+            for (pos, &i) in ws.shuffled.iter().enumerate() {
+                ws.buckets[pos % m].push(i);
+            }
+            acc += score(&mut ws.sim, &ws.buckets, &ws.order);
+        }
+        acc / reps as f64
+    }
+}
+
+/// Build the memoized per-pricing-key cost tables for a candidate set.
+///
+/// Refinement partitions one pseudo global batch of item costs whose
+/// entries depend only on the candidate's pricing key — and many
+/// candidates share that key, differing only in `N_mb` — so each distinct
+/// key's table is built once. Per-item durations are precomputed per TP
+/// degree first, then divided by each key's PP.
+///
+/// Evaluation batch cap: beyond 512 items the score is computed on a
+/// proportional subsample (bucket sizes — gbs/m items each — are
+/// preserved, so granularity effects survive the scaling). Keeps the
+/// refinement inside Fig 16a's budget at GBS 2048.
+///
+/// Returns the sorted, deduplicated keys and their tables in key order;
+/// look a candidate up with `keys.binary_search(&price_key(t))`.
+pub fn candidate_tables(
+    inp: &OptimizerInputs,
+    cands: &[Theta],
+) -> (Vec<PriceKey>, Vec<CostTable>) {
+    let est = Estimator::new(inp.m, &inp.profile.throughput);
+    let mut tps: Vec<usize> = cands.iter().flat_map(|t| [t.enc.tp, t.llm.tp]).collect();
+    tps.sort_unstable();
+    tps.dedup();
+    let mut enc_durs: Vec<(usize, Vec<f64>)> = Vec::new();
+    let mut llm_durs: Vec<(usize, Vec<f64>)> = Vec::new();
+    for &tp in &tps {
+        enc_durs.push((
+            tp,
+            inp.data.samples.iter().map(|s| est.enc_item_dur(s, tp)).collect(),
+        ));
+        llm_durs.push((
+            tp,
+            inp.data.samples.iter().map(|s| est.llm_item_dur(s, tp)).collect(),
+        ));
+    }
+    fn durs_for(v: &[(usize, Vec<f64>)], tp: usize) -> &[f64] {
+        &v.iter().find(|(t, _)| *t == tp).expect("precomputed tp").1
+    }
+
+    let eval_n = inp.gbs.min(512);
+    let n_samples = inp.data.samples.len();
+    let mut keys: Vec<PriceKey> = cands.iter().map(price_key).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    let tables: Vec<CostTable> = keys
+        .iter()
+        .map(|&(e_tp, e_pp, l_tp, l_pp)| {
+            let e = durs_for(&enc_durs, e_tp);
+            let l = durs_for(&llm_durs, l_tp);
+            let mut t = CostTable::new();
+            for i in 0..eval_n {
+                t.push(e[i % n_samples] / e_pp as f64, l[i % n_samples] / l_pp as f64);
+            }
+            t
+        })
+        .collect();
+    (keys, tables)
+}
+
+/// The route-topology fields of a candidate: two candidates with equal
+/// signatures build byte-identical route sets (stage ids, leg counts,
+/// zero hops), differing only in durations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct Sig {
+    e_pp: usize,
+    l_pp: usize,
+    e_dp: usize,
+    l_dp: usize,
+    m: usize,
+}
+
+/// Score one pricing key under a fixed structure signature. `reuse` means
+/// the workspace's standing route set was built by a previous call with
+/// the same signature: legs are re-priced in place ([`SimWorkspace::update_leg`])
+/// and the recorded execution order replayed ([`SimWorkspace::delta_run`])
+/// instead of rebuilding the topology and the 1F1B static order.
+#[allow(clippy::too_many_arguments)]
+fn eval_keyed(
+    inp: &OptimizerInputs,
+    est: &Estimator<'_>,
+    table: &CostTable,
+    key: PriceKey,
+    sig: Sig,
+    n_stages: usize,
+    reuse: bool,
+    ws: &mut EvalWorkspace,
+) -> f64 {
+    let (e_tp, e_pp, l_tp, l_pp) = key;
+    let samples = &inp.data.samples;
+    let n = samples.len();
+    let e_ovh = inp.profile.throughput.enc_overhead(e_tp);
+    let l_ovh = inp.profile.throughput.llm_overhead(l_tp);
+    lpt_table_into(table, sig.m, &mut ws.assign);
+    ws.assign.heavy_order(&mut ws.order);
+    if !reuse {
+        ws.sim.routes.clear();
+    }
+    for (j, &bj) in ws.order.iter().enumerate() {
+        let mut units = 0.0f64;
+        ws.sim.seqs.clear();
+        for &i in &ws.assign.buckets[bj] {
+            let shape = &samples[i % n];
+            units += shape.units as f64;
+            let seq = shape.llm_seq as f64;
+            if seq > 0.0 {
+                ws.sim.seqs.push(seq);
+            }
+        }
+        let e_t = est.enc_bucket_dur(units, e_tp) / e_pp as f64 + e_ovh;
+        let l_t = est.llm_bucket_dur(&ws.sim.seqs, l_tp) / l_pp as f64 + l_ovh;
+        if reuse {
+            for sidx in 0..e_pp {
+                ws.sim.update_leg(j, sidx, e_t / 3.0, e_t * 2.0 / 3.0);
+            }
+            for sidx in 0..l_pp {
+                ws.sim.update_leg(j, e_pp + sidx, l_t / 3.0, l_t * 2.0 / 3.0);
+            }
+        } else {
+            let e = j % sig.e_dp;
+            let g = j % sig.l_dp;
+            for sidx in 0..e_pp {
+                ws.sim.routes.push_leg(e * e_pp + sidx, e_t / 3.0, e_t * 2.0 / 3.0, 0.0);
+            }
+            for sidx in 0..l_pp {
+                ws.sim.routes.push_leg(
+                    sig.e_dp * e_pp + g * l_pp + sidx,
+                    l_t / 3.0,
+                    l_t * 2.0 / 3.0,
+                    0.0,
+                );
+            }
+            ws.sim.routes.end_route();
+        }
+    }
+    if reuse {
+        ws.sim.delta_run(n_stages)
+    } else {
+        ws.sim.run_tracked(n_stages)
+    }
+}
+
+/// Score every candidate, batched: scores return in candidate order and
+/// bit-match [`eval_candidates_serial`] (and therefore the pre-batching
+/// per-candidate path) at any thread count.
+///
+/// `keys`/`tables` come from [`candidate_tables`] over a superset of
+/// `cands`. The random-partition ablation (`assume_balanced = false`)
+/// keeps the per-candidate path — its shuffle stream is per-candidate
+/// state with nothing to share.
+pub fn eval_candidates(
+    inp: &OptimizerInputs,
+    keys: &[PriceKey],
+    tables: &[CostTable],
+    cands: &[Theta],
+) -> Vec<f64> {
+    if cands.is_empty() {
+        return Vec::new();
+    }
+    if !inp.assume_balanced {
+        return eval_candidates_serial(inp, keys, tables, cands);
+    }
+    let eval_n = tables.first().map(CostTable::len).unwrap_or(0);
+    // Tag each candidate with (signature, pricing-key index) and sort:
+    // equal signatures become contiguous runs, equal (sig, key) pairs
+    // collapse to one simulation.
+    let mut tagged: Vec<(Sig, usize, usize)> = cands
+        .iter()
+        .enumerate()
+        .map(|(k, t)| {
+            let ti = keys.binary_search(&price_key(t)).expect("memoized key");
+            let sig = Sig {
+                e_pp: t.enc.pp,
+                l_pp: t.llm.pp,
+                e_dp: t.enc.dp,
+                l_dp: t.llm.dp,
+                m: bucket_count(inp.gbs, eval_n, t.n_mb, t.llm.dp),
+            };
+            (sig, ti, k)
+        })
+        .collect();
+    tagged.sort_unstable();
+    let mut groups: Vec<(usize, usize)> = Vec::new();
+    let mut lo = 0usize;
+    for hi in 1..=tagged.len() {
+        if hi == tagged.len() || tagged[hi].0 != tagged[lo].0 {
+            groups.push((lo, hi));
+            lo = hi;
+        }
+    }
+
+    let est = Estimator::new(inp.m, &inp.profile.throughput);
+    let est = &est;
+    let tagged = &tagged;
+    let parts: Vec<Vec<(usize, f64)>> = par_map(groups.len(), |gi| {
+        let (lo, hi) = groups[gi];
+        let sig = tagged[lo].0;
+        let n_stages = sig.e_dp * sig.e_pp + sig.l_dp * sig.l_pp;
+        EVAL_WS.with(|cell| {
+            let ws = &mut *cell.borrow_mut();
+            let mut out = Vec::with_capacity(hi - lo);
+            let mut last_ti = usize::MAX;
+            let mut last_score = 0.0f64;
+            let mut have_routes = false;
+            for &(_, ti, k) in &tagged[lo..hi] {
+                if ti != last_ti {
+                    last_score = eval_keyed(
+                        inp, est, &tables[ti], keys[ti], sig, n_stages, have_routes, ws,
+                    );
+                    have_routes = true;
+                    last_ti = ti;
+                }
+                out.push((k, last_score));
+            }
+            out
+        })
+    });
+    let mut scores = vec![0.0f64; cands.len()];
+    for part in parts {
+        for (k, s) in part {
+            scores[k] = s;
+        }
+    }
+    scores
+}
+
+/// The serial reference: one [`expected_makespan`] call per candidate in
+/// order, no cross-candidate sharing. Retained as the batched path's
+/// bit-exactness oracle (property-tested below) and as the before/after
+/// baseline in `optimizer_bench`.
+pub fn eval_candidates_serial(
+    inp: &OptimizerInputs,
+    keys: &[PriceKey],
+    tables: &[CostTable],
+    cands: &[Theta],
+) -> Vec<f64> {
+    par_map(cands.len(), |k| {
+        let t = &cands[k];
+        let ti = keys.binary_search(&price_key(t)).expect("memoized key");
+        EVAL_WS.with(|ws| {
+            expected_makespan(inp, &tables[ti], t.enc, t.llm, t.n_mb, &mut ws.borrow_mut())
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::model::catalog::{llama3, llava_ov, Mllm};
+    use crate::optimizer::plan::ModPar;
+    use crate::perfmodel::{ClusterSpec, Truth};
+    use crate::profiling::backend::SimBackend;
+    use crate::profiling::engine::{profile_data, DataProfile, ModelProfile, ModelProfiler, ProfilerGrids};
+    use crate::util::prop::forall;
+
+    fn fixture() -> (Mllm, ModelProfile, DataProfile, ClusterSpec) {
+        let m = llava_ov(llama3("8b"));
+        let cluster = ClusterSpec::hgx_a100(2);
+        let mut backend = SimBackend::new(Truth::new(cluster));
+        let profile =
+            ModelProfiler::new(&mut backend, ProfilerGrids::coarse(8)).profile(&m);
+        let mut ds = Dataset::mixed(77);
+        let data = profile_data(&m, &mut ds, 128);
+        (m, profile, data, cluster)
+    }
+
+    fn inputs<'a>(
+        m: &'a Mllm,
+        profile: &'a ModelProfile,
+        data: &'a DataProfile,
+        cluster: &ClusterSpec,
+        gbs: usize,
+        balanced: bool,
+    ) -> OptimizerInputs<'a> {
+        OptimizerInputs {
+            m,
+            profile,
+            data,
+            n_gpus: cluster.total_gpus(),
+            gpus_per_node: cluster.gpus_per_node,
+            mem_capacity: cluster.gpu.mem_bytes,
+            gbs,
+            assume_balanced: balanced,
+        }
+    }
+
+    /// A random plausible θ (feasibility is irrelevant to the evaluator).
+    fn random_theta(g: &mut crate::util::prop::Gen) -> Theta {
+        Theta {
+            enc: ModPar { tp: 1 << g.rng.index(2), pp: g.size(2), dp: g.size(2) },
+            llm: ModPar { tp: 1 << g.rng.index(3), pp: g.size(4), dp: g.size(2) },
+            n_mb: g.size(24),
+        }
+    }
+
+    #[test]
+    fn batched_scores_bitmatch_serial_in_candidate_order() {
+        // The tentpole contract for the evaluator: batching (shared
+        // tables, shared partitions, delta-replayed route re-pricing,
+        // collapsed duplicates) must not move a single bit relative to
+        // scoring each candidate alone.
+        let (m, profile, data, cluster) = fixture();
+        let inp = inputs(&m, &profile, &data, &cluster, 96, true);
+        forall("batched eval = serial eval", 25, |g| {
+            let n_cands = g.size(24);
+            let cands: Vec<Theta> = (0..n_cands).map(|_| random_theta(g)).collect();
+            let (keys, tables) = candidate_tables(&inp, &cands);
+            let batched = eval_candidates(&inp, &keys, &tables, &cands);
+            let serial = eval_candidates_serial(&inp, &keys, &tables, &cands);
+            let ok = batched.len() == serial.len()
+                && batched
+                    .iter()
+                    .zip(&serial)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+            (format!("n_cands={n_cands} keys={}", keys.len()), ok)
+        });
+    }
+
+    #[test]
+    fn unbalanced_path_matches_serial_too() {
+        let (m, profile, data, cluster) = fixture();
+        let inp = inputs(&m, &profile, &data, &cluster, 64, false);
+        forall("unbalanced batched = serial", 8, |g| {
+            let cands: Vec<Theta> = (0..g.size(8)).map(|_| random_theta(g)).collect();
+            let (keys, tables) = candidate_tables(&inp, &cands);
+            let batched = eval_candidates(&inp, &keys, &tables, &cands);
+            let serial = eval_candidates_serial(&inp, &keys, &tables, &cands);
+            let ok = batched
+                .iter()
+                .zip(&serial)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            (format!("n_cands={}", cands.len()), ok)
+        });
+    }
+
+    #[test]
+    fn duplicate_candidates_share_one_score() {
+        let (m, profile, data, cluster) = fixture();
+        let inp = inputs(&m, &profile, &data, &cluster, 48, true);
+        let t = Theta {
+            enc: ModPar { tp: 1, pp: 1, dp: 1 },
+            llm: ModPar { tp: 1, pp: 3, dp: 1 },
+            n_mb: 6,
+        };
+        let cands = vec![t, t, t];
+        let (keys, tables) = candidate_tables(&inp, &cands);
+        let scores = eval_candidates(&inp, &keys, &tables, &cands);
+        assert_eq!(scores.len(), 3);
+        assert!(scores[0] > 0.0);
+        assert_eq!(scores[0].to_bits(), scores[1].to_bits());
+        assert_eq!(scores[1].to_bits(), scores[2].to_bits());
+    }
+
+    #[test]
+    fn empty_candidate_set_yields_empty_scores() {
+        let (m, profile, data, cluster) = fixture();
+        let inp = inputs(&m, &profile, &data, &cluster, 48, true);
+        let (keys, tables) = candidate_tables(&inp, &[]);
+        assert!(keys.is_empty() && tables.is_empty());
+        assert!(eval_candidates(&inp, &keys, &tables, &[]).is_empty());
+    }
+}

@@ -1,4 +1,5 @@
 //! The Data-aware 3D Parallelism Optimizer (§3.3, Algorithm 1).
+pub mod batch;
 pub mod plan;
 pub mod search;
 

@@ -12,26 +12,26 @@
 //!   scan the full space;
 //! - the **expected makespan** of Eq 1: the top `REFINE_K` candidates are
 //!   re-scored as `1/|D| · Σ_d T(d;θ)` over the Data Profiler's samples,
-//!   which is what the objective actually asks for. Per-item durations are
-//!   precomputed per TP degree and the partitioned `ItemCost` tables are
-//!   memoized per (TP, PP) key, so refinement costs O(K·|D|) with the
-//!   per-candidate work running allocation-free against a thread-local
-//!   [`EvalWorkspace`] (LPT buffers + the event-driven 1F1B arena).
+//!   which is what the objective actually asks for. The refinement is
+//!   delegated to the batched candidate evaluator (`optimizer::batch`):
+//!   per-item durations are memoized per (TP, PP) key into
+//!   structure-of-arrays cost tables, candidates sharing a route-topology
+//!   signature re-price one standing simulation arena via the delta-replay
+//!   engine, and duplicates collapse to a single simulation — bit-identical
+//!   to scoring every candidate alone.
 //!
 //! Both tiers run on the `util::parallel` pool: each split's (pair × N_mb)
 //! scan is scored across workers and merged in candidate order, and the
-//! REFINE_K expected-makespan evaluations (the dominant cost) run one per
-//! worker. Merging preserves the serial insertion order, so θ* is
-//! bit-identical to the single-threaded search at any `--threads` value.
+//! refinement's signature groups (the dominant cost) run one per worker.
+//! Merging preserves the serial insertion order, so θ* is bit-identical to
+//! the single-threaded search at any `--threads` value.
 
 use crate::model::catalog::Mllm;
+use crate::optimizer::batch::{candidate_tables, eval_candidates};
 use crate::optimizer::plan::{find_combs, ModPar, Theta};
-use crate::pipeline::sim::SimWorkspace;
 use crate::profiling::engine::{DataProfile, ModelProfile};
 use crate::profiling::estimator::Estimator;
-use crate::scheduler::lpt::{lpt_into, Assignment, ItemCost};
 use crate::util::parallel::par_map;
-use std::cell::RefCell;
 
 /// Inputs fixed for one optimization run.
 pub struct OptimizerInputs<'a> {
@@ -117,135 +117,6 @@ fn memory_feasible(
     let mem_l = mem.l_state_bytes(l_layers, llm.tp)
         + llm.pp as f64 * mem.l_act_bytes(l_layers, llm.tp, mb_seq);
     mem_e <= inp.mem_capacity && mem_l <= inp.mem_capacity
-}
-
-/// Per-thread Eq-1 evaluation arena: the LPT output, emission order,
-/// ablation scratch, and the 1F1B simulation workspace. Workspaces obey
-/// the one-per-worker rule ([`SimWorkspace`]) by construction — each pool
-/// worker (and the serial path) owns its thread-local instance and reuses
-/// it across every refinement candidate it scores.
-#[derive(Default)]
-struct EvalWorkspace {
-    sim: SimWorkspace,
-    assign: Assignment,
-    order: Vec<usize>,
-    shuffled: Vec<usize>,
-    buckets: Vec<Vec<usize>>,
-}
-
-thread_local! {
-    static EVAL_WS: RefCell<EvalWorkspace> = RefCell::new(EvalWorkspace::default());
-}
-
-/// Eq 1: expected makespan over the sampled dataset D for a candidate.
-///
-/// Where Algorithm 1's inner loop scores with the mean shape, the
-/// refinement evaluates the candidate against the *distribution*: the
-/// sampled items are partitioned into the candidate's `m = N_mb · L_dp`
-/// buckets with the same balancing the Online Scheduler will apply (LPT),
-/// and the makespan is assembled from the resulting per-bucket stage
-/// durations — steady-state (each pipeline's bucket sequence, bottleneck
-/// module) plus the 1F1B warm-up/drain term. This is what lets DFLOP
-/// trade theoretical bubble fraction for schedulable bucket sizes
-/// (§5.3.5: the optimizer "deliberately selects a smaller number of
-/// microbatches").
-///
-/// `items` is the memoized per-item stage-cost table for this candidate's
-/// (TP, PP) key (see `optimize`): entry `i` prices sample `i mod |D|` of
-/// one pseudo global batch. All mutable state lives in `ws`; in steady
-/// state the call allocates nothing.
-fn expected_makespan(
-    inp: &OptimizerInputs,
-    items: &[ItemCost],
-    enc: ModPar,
-    llm: ModPar,
-    n_mb: usize,
-    ws: &mut EvalWorkspace,
-) -> f64 {
-    let est = Estimator::new(inp.m, &inp.profile.throughput);
-    let samples = &inp.data.samples;
-    let n = samples.len();
-    let eval_n = items.len();
-    let scale = (inp.gbs as f64 / eval_n as f64).round().max(1.0) as usize;
-    let m = ((n_mb * llm.dp).div_ceil(scale)).min(eval_n).max(1);
-
-    // Score a partition by *running the 1F1B engine* over the estimated
-    // per-bucket stage durations — this captures warm-up/drain bubbles,
-    // heterogeneity stalls, and encoder/LLM pipeline coupling that closed
-    // forms miss. `order[j]` names the bucket launched at position j;
-    // routes build into the workspace arena and the engine skips timeline
-    // recording (only the makespan is needed).
-    let e_ovh = inp.profile.throughput.enc_overhead(enc.tp);
-    let l_ovh = inp.profile.throughput.llm_overhead(llm.tp);
-    let n_stages = enc.dp * enc.pp + llm.dp * llm.pp;
-    let score = |sim: &mut SimWorkspace, buckets: &[Vec<usize>], order: &[usize]| -> f64 {
-        sim.routes.clear();
-        for (j, &bj) in order.iter().enumerate() {
-            // Packed pricing of this bucket's contents.
-            let mut units = 0.0f64;
-            sim.seqs.clear();
-            for &i in &buckets[bj] {
-                let shape = &samples[i % n];
-                units += shape.units as f64;
-                let seq = shape.llm_seq as f64;
-                if seq > 0.0 {
-                    sim.seqs.push(seq);
-                }
-            }
-            let e_t = est.enc_bucket_dur(units, enc.tp) / enc.pp as f64 + e_ovh;
-            let l_t = est.llm_bucket_dur(&sim.seqs, llm.tp) / llm.pp as f64 + l_ovh;
-            let e = j % enc.dp;
-            let g = j % llm.dp;
-            for sidx in 0..enc.pp {
-                sim.routes.push_leg(e * enc.pp + sidx, e_t / 3.0, e_t * 2.0 / 3.0, 0.0);
-            }
-            for sidx in 0..llm.pp {
-                sim.routes.push_leg(
-                    enc.dp * enc.pp + g * llm.pp + sidx,
-                    l_t / 3.0,
-                    l_t * 2.0 / 3.0,
-                    0.0,
-                );
-            }
-            sim.routes.end_route();
-        }
-        sim.run(n_stages, false)
-    };
-
-    if inp.assume_balanced {
-        lpt_into(items, m, &mut ws.assign);
-        // Heaviest-bucket-first emission (mirrors the Online Scheduler's
-        // launch order) — as a visit permutation, no clone/reorder.
-        ws.assign.heavy_order(&mut ws.order);
-        score(&mut ws.sim, &ws.assign.buckets, &ws.order)
-    } else {
-        // Optimizer-only ablation: the runtime partitions randomly, so
-        // evaluate the expected makespan over seeded random partitions
-        // (matching `baselines::random_buckets`' semantics). The shuffle
-        // and bucket scratch live in the workspace — they used to be
-        // reallocated every rep of every candidate.
-        let mut rng = crate::util::rng::Rng::new(0xAB1A);
-        let reps = 2;
-        let mut acc = 0.0;
-        // Identity emission order: the random partitioner shuffles bucket
-        // contents, not their launch order.
-        ws.order.clear();
-        ws.order.extend(0..m);
-        ws.buckets.resize_with(m, Vec::new);
-        for _ in 0..reps {
-            ws.shuffled.clear();
-            ws.shuffled.extend(0..eval_n);
-            rng.shuffle(&mut ws.shuffled);
-            for b in ws.buckets.iter_mut() {
-                b.clear();
-            }
-            for (pos, &i) in ws.shuffled.iter().enumerate() {
-                ws.buckets[pos % m].push(i);
-            }
-            acc += score(&mut ws.sim, &ws.buckets, &ws.order);
-        }
-        acc / reps as f64
-    }
 }
 
 /// Run Algorithm 1 and return θ*.
@@ -435,82 +306,17 @@ pub fn optimize_warm(
     }
 
     // ---- Refinement: Eq-1 expected makespan over the sampled D ----
-    // Precompute per-item durations for every TP degree that appears.
-    let mut tps: Vec<usize> = top
-        .iter()
-        .flat_map(|(_, t)| [t.enc.tp, t.llm.tp])
-        .collect();
-    tps.sort_unstable();
-    tps.dedup();
-    let mut enc_durs: Vec<(usize, Vec<f64>)> = Vec::new();
-    let mut llm_durs: Vec<(usize, Vec<f64>)> = Vec::new();
-    for &tp in &tps {
-        enc_durs.push((
-            tp,
-            inp.data.samples.iter().map(|s| est.enc_item_dur(s, tp)).collect(),
-        ));
-        llm_durs.push((
-            tp,
-            inp.data.samples.iter().map(|s| est.llm_item_dur(s, tp)).collect(),
-        ));
-    }
-    fn durs_for(v: &[(usize, Vec<f64>)], tp: usize) -> &[f64] {
-        &v.iter().find(|(t, _)| *t == tp).expect("precomputed tp").1
-    }
-
-    // Memoized per-candidate stage-cost tables. Refinement partitions one
-    // pseudo global batch of `ItemCost`s whose entries depend only on the
-    // candidate's (E_tp, E_pp, L_tp, L_pp) — and many top-K candidates
-    // share that key, differing only in N_mb — so each distinct key's
-    // table is built once here instead of once per refinement call.
-    //
-    // Evaluation batch cap: beyond 512 items the score is computed on a
-    // proportional subsample (bucket sizes — gbs/m items each — are
-    // preserved, so granularity effects survive the scaling). Keeps the
-    // refinement inside Fig 16a's budget at GBS 2048.
-    let eval_n = inp.gbs.min(512);
-    let n_samples = inp.data.samples.len();
-    let mut keys: Vec<(usize, usize, usize, usize)> = top
-        .iter()
-        .map(|(_, t)| (t.enc.tp, t.enc.pp, t.llm.tp, t.llm.pp))
-        .collect();
-    keys.sort_unstable();
-    keys.dedup();
-    let item_tables: Vec<Vec<ItemCost>> = keys
-        .iter()
-        .map(|&(e_tp, e_pp, l_tp, l_pp)| {
-            let e = durs_for(&enc_durs, e_tp);
-            let l = durs_for(&llm_durs, l_tp);
-            (0..eval_n)
-                .map(|i| ItemCost {
-                    enc: e[i % n_samples] / e_pp as f64,
-                    llm: l[i % n_samples] / l_pp as f64,
-                })
-                .collect()
-        })
-        .collect();
-
-    // Eq-1 scoring dominates the optimizer's wall-clock (each candidate
-    // runs LPT plus the 1F1B engine over up to 512 items): fan the top-K
-    // out over the pool — every worker reuses its own thread-local
-    // evaluation arena — then select serially in rank order; the strict
-    // `<` keeps the earliest-ranked of tied scores, matching the serial
+    // Eq-1 scoring dominates the optimizer's wall-clock: hand the top-K
+    // to the batched evaluator, which memoizes one SoA cost table per
+    // (TP, PP) pricing key, shares LPT partitions and delta-replays route
+    // re-pricing inside each structure-signature group, and fans the
+    // groups out over the pool. Scores come back in rank order,
+    // bit-identical to scoring each candidate alone; the strict `<` below
+    // keeps the earliest-ranked of tied scores, matching the serial
     // scan's winner.
-    let scores = par_map(top.len(), |k| {
-        let theta = &top[k].1;
-        let key = (theta.enc.tp, theta.enc.pp, theta.llm.tp, theta.llm.pp);
-        let ti = keys.binary_search(&key).expect("memoized key");
-        EVAL_WS.with(|ws| {
-            expected_makespan(
-                inp,
-                &item_tables[ti],
-                theta.enc,
-                theta.llm,
-                theta.n_mb,
-                &mut ws.borrow_mut(),
-            )
-        })
-    });
+    let thetas: Vec<Theta> = top.iter().map(|&(_, t)| t).collect();
+    let (keys, tables) = candidate_tables(inp, &thetas);
+    let scores = eval_candidates(inp, &keys, &tables, &thetas);
     let mut best: Option<(f64, Theta)> = None;
     for (score, (_, theta)) in scores.iter().zip(&top) {
         if best.map(|(b, _)| *score < b).unwrap_or(true) {

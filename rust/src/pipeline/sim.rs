@@ -99,6 +99,13 @@ pub struct RouteSet {
     bwd: Vec<f64>,
     comm: Vec<f64>,
     ends: Vec<usize>,
+    /// Structure generation: bumped by every mutation that can change the
+    /// route *topology* (stages, leg counts, hop costs). The delta-replay
+    /// path ([`SimWorkspace::delta_run`]) compares this against the
+    /// generation it recorded its execution order under and falls back to
+    /// a full run on mismatch. Cost-only edits via
+    /// [`SimWorkspace::update_leg`] deliberately do not bump it.
+    version: u64,
 }
 
 impl RouteSet {
@@ -113,6 +120,7 @@ impl RouteSet {
         self.bwd.clear();
         self.comm.clear();
         self.ends.clear();
+        self.version += 1;
     }
 
     /// Number of sealed routes.
@@ -133,12 +141,14 @@ impl RouteSet {
         self.fwd.push(fwd);
         self.bwd.push(bwd);
         self.comm.push(comm);
+        self.version += 1;
     }
 
     /// Seal the route under construction (possibly empty).
     #[inline]
     pub fn end_route(&mut self) {
         self.ends.push(self.stages.len());
+        self.version += 1;
     }
 
     /// Append a materialized [`Route`].
@@ -248,6 +258,38 @@ pub struct SimWorkspace {
     in_ready: Vec<bool>,
     timeline: Vec<OpRecord>,
     makespan: f64,
+
+    // ---- delta-replay record (valid only while `tracked`) ----
+    /// Global execution order of the last tracked run: a topological order
+    /// of the dependency DAG (dep edges + same-stage predecessor edges).
+    /// The engine's control flow is duration-independent — every branch it
+    /// takes tests *structure* (`finish[i].is_nan()`, queue membership),
+    /// never a time value — so this order stays valid under arbitrary
+    /// cost-only edits and can be replayed instead of re-scheduled.
+    exec: Vec<OpId>,
+    /// Buckets edited since the last (delta or full) run.
+    dirty_bucket: Vec<bool>,
+    dirty_list: Vec<usize>,
+    /// Per finish-table index: did the last delta walk change this op's
+    /// finish bits? Written before any dependent reads it (topological
+    /// walk), so it never needs pre-clearing.
+    changed: Vec<bool>,
+    /// Stages hosting at least one dirty-bucket leg (busy re-sum set).
+    dirty_stage: Vec<bool>,
+    /// Walk state: finish of the stage's latest replayed op, and whether
+    /// that finish changed bits.
+    delta_prev: Vec<f64>,
+    delta_prev_changed: Vec<bool>,
+    /// A delta-replayable record exists (set by [`SimWorkspace::run_tracked`],
+    /// cleared by plain [`SimWorkspace::run`]).
+    tracked: bool,
+    tracked_version: u64,
+    tracked_stages: usize,
+    /// The tracked run exercised the work-conserving hoist. The recorded
+    /// order is still a valid topological order, but replay keeps this as
+    /// a conservative full-rerun trigger for the one code path whose
+    /// order mutation is hardest to audit.
+    hoisted: bool,
 }
 
 impl SimWorkspace {
@@ -293,6 +335,17 @@ impl SimWorkspace {
     /// optimizer's refinement loop only needs the makespan, and the
     /// timeline is the one per-op cost that cannot be amortized.
     pub fn run(&mut self, n_stages: usize, record_timeline: bool) -> f64 {
+        self.run_impl(n_stages, record_timeline, false)
+    }
+
+    /// [`SimWorkspace::run`] (timeline off) that additionally records the
+    /// global execution order, arming [`SimWorkspace::update_leg`] +
+    /// [`SimWorkspace::delta_run`] for cheap cost-only re-evaluation.
+    pub fn run_tracked(&mut self, n_stages: usize) -> f64 {
+        self.run_impl(n_stages, false, true)
+    }
+
+    fn run_impl(&mut self, n_stages: usize, record_timeline: bool, track: bool) -> f64 {
         let routes = &self.routes;
         let n_routes = routes.len();
 
@@ -391,7 +444,10 @@ impl SimWorkspace {
         self.in_ready.resize(n_stages, false);
         self.ready.clear();
         self.timeline.clear();
+        self.exec.clear();
+        let mut hoisted = false;
 
+        let exec = &mut self.exec;
         let order = &mut self.order;
         let order_off = &self.order_off;
         let finish = &mut self.finish;
@@ -448,6 +504,7 @@ impl SimWorkspace {
                             ready.push(s);
                             in_ready[s] = true;
                             recovered = true;
+                            hoisted = true;
                             break 'outer;
                         }
                     }
@@ -496,6 +553,9 @@ impl SimWorkspace {
                 }
                 stage_ptr[s] += 1;
                 done += 1;
+                if track {
+                    exec.push(op);
+                }
                 // This completion readies exactly one dependent op; if it
                 // now heads a *different* stage, queue that stage (this
                 // stage's own head is re-checked by the loop).
@@ -524,6 +584,156 @@ impl SimWorkspace {
         }
 
         self.makespan = stage_free.iter().cloned().fold(0.0, f64::max);
+        self.tracked = track;
+        if track {
+            self.tracked_version = self.routes.version;
+            self.tracked_stages = n_stages;
+            self.hoisted = hoisted;
+            let n_routes = self.routes.len();
+            self.dirty_bucket.clear();
+            self.dirty_bucket.resize(n_routes, false);
+            self.dirty_list.clear();
+            // `changed` carries no information across walks — sized here,
+            // written before read inside every delta walk.
+            self.changed.clear();
+            self.changed.resize(self.finish.len(), false);
+        }
+        self.makespan
+    }
+
+    /// Overwrite one leg's forward/backward cost in place and mark its
+    /// bucket dirty for the next [`SimWorkspace::delta_run`].
+    ///
+    /// This is a *cost-only* edit: the stage id and hop cost are fixed (a
+    /// comm change alters `dep_of` arithmetic mid-route and therefore
+    /// requires a route rebuild, which bumps the structure generation and
+    /// forces the full path anyway).
+    #[inline]
+    pub fn update_leg(&mut self, bucket: usize, pos: usize, fwd: f64, bwd: f64) {
+        let (lo, hi) = self.routes.bounds(bucket);
+        assert!(pos < hi - lo, "leg {pos} out of range for bucket {bucket}");
+        self.routes.fwd[lo + pos] = fwd;
+        self.routes.bwd[lo + pos] = bwd;
+        self.mark_bucket_dirty(bucket);
+    }
+
+    /// Flag a bucket whose costs were edited (idempotent). Callers that
+    /// write `routes` costs directly must call this per touched bucket or
+    /// the next [`SimWorkspace::delta_run`] will skip their ops.
+    #[inline]
+    pub fn mark_bucket_dirty(&mut self, bucket: usize) {
+        if self.tracked && !self.dirty_bucket[bucket] {
+            self.dirty_bucket[bucket] = true;
+            self.dirty_list.push(bucket);
+        }
+    }
+
+    /// Re-evaluate the makespan after cost-only edits by replaying the
+    /// recorded execution order, recomputing only ops that can have moved:
+    /// ops of dirty buckets, ops whose single dependency changed bits, and
+    /// ops whose same-stage predecessor changed bits. Everything upstream
+    /// of the dirty frontier is skipped; results are bit-identical to a
+    /// full [`SimWorkspace::run`] over the edited routes.
+    ///
+    /// Falls back to a full tracked run when no replayable record exists:
+    /// never tracked, the route structure changed (generation mismatch),
+    /// the stage count changed, or the tracked run hoisted. The op
+    /// timeline is not maintained on this path.
+    pub fn delta_run(&mut self, n_stages: usize) -> f64 {
+        if !self.tracked
+            || self.hoisted
+            || n_stages != self.tracked_stages
+            || self.routes.version != self.tracked_version
+        {
+            return self.run_tracked(n_stages);
+        }
+        if self.dirty_list.is_empty() {
+            return self.makespan;
+        }
+        let routes = &self.routes;
+        let stride = routes.max_depth().max(1);
+        self.delta_prev.clear();
+        self.delta_prev.resize(n_stages, 0.0);
+        self.delta_prev_changed.clear();
+        self.delta_prev_changed.resize(n_stages, false);
+        self.dirty_stage.clear();
+        self.dirty_stage.resize(n_stages, false);
+
+        let finish = &mut self.finish;
+        let changed = &mut self.changed;
+        let delta_prev = &mut self.delta_prev;
+        let prev_changed = &mut self.delta_prev_changed;
+        let dirty_stage = &mut self.dirty_stage;
+        let dirty_bucket = &self.dirty_bucket;
+
+        // The recorded order is a topological order of both edge kinds, so
+        // a single forward walk sees every op's dependency and same-stage
+        // predecessor already settled.
+        for &op in &self.exec {
+            let (lo, _) = routes.bounds(op.bucket);
+            let s = routes.stages[lo + op.pos];
+            let fin = idx_of(op, stride);
+            let bucket_dirty = dirty_bucket[op.bucket];
+            if bucket_dirty {
+                dirty_stage[s] = true;
+            }
+            let dep = dep_of(op, routes, stride);
+            let dep_changed = match dep {
+                None => false,
+                Some((i, _)) => changed[i],
+            };
+            // Skip requires the predecessor unchanged too; the skip path
+            // therefore never needs to update `prev_changed[s]` (it is
+            // false and stays false).
+            if !bucket_dirty && !dep_changed && !prev_changed[s] {
+                changed[fin] = false;
+                delta_prev[s] = finish[fin];
+                continue;
+            }
+            let dep_t = match dep {
+                None => 0.0,
+                Some((i, c)) => finish[i] + c,
+            };
+            let dur =
+                if op.forward { routes.fwd[lo + op.pos] } else { routes.bwd[lo + op.pos] };
+            // Same max() argument order as the full engine's
+            // `stage_free[s].max(dep_t)` — bit-exactness depends on it.
+            let start = delta_prev[s].max(dep_t);
+            let end = start + dur;
+            let ch = end.to_bits() != finish[fin].to_bits();
+            finish[fin] = end;
+            changed[fin] = ch;
+            delta_prev[s] = end;
+            prev_changed[s] = ch;
+        }
+
+        // Busy time only moves on stages hosting dirty legs; re-SUM in the
+        // stage's executed segment order (the full engine's addition
+        // order) — an incremental subtract/add would reassociate floats.
+        let order = &self.order;
+        let order_off = &self.order_off;
+        for s in 0..n_stages {
+            if dirty_stage[s] {
+                let mut busy = 0.0;
+                for &op in &order[order_off[s]..order_off[s + 1]] {
+                    let (lo, _) = routes.bounds(op.bucket);
+                    busy +=
+                        if op.forward { routes.fwd[lo + op.pos] } else { routes.bwd[lo + op.pos] };
+                }
+                self.stage_busy[s] = busy;
+            }
+            // stage_free[s] is the finish of the stage's last executed op.
+            self.stage_free[s] = match order[order_off[s]..order_off[s + 1]].last() {
+                None => 0.0,
+                Some(&op) => finish[idx_of(op, stride)],
+            };
+        }
+        self.makespan = self.stage_free.iter().cloned().fold(0.0, f64::max);
+
+        for &b in &self.dirty_list {
+            self.dirty_bucket[b] = false;
+        }
+        self.dirty_list.clear();
         self.makespan
     }
 }
@@ -1008,5 +1218,150 @@ mod tests {
         assert!(ws.timeline().is_empty());
         let busy2: Vec<u64> = ws.stage_busy().iter().map(|b| b.to_bits()).collect();
         assert_eq!(busy, busy2);
+    }
+
+    /// Assert the workspace's last run bit-matches a fresh full simulation
+    /// of `routes` (makespan + per-stage busy).
+    fn assert_matches_fresh(ws: &SimWorkspace, n_stages: usize, routes: &[Route]) -> bool {
+        let fresh = simulate(n_stages, routes);
+        ws.makespan().to_bits() == fresh.makespan.to_bits()
+            && ws.stage_busy().len() == fresh.stage_busy.len()
+            && ws
+                .stage_busy()
+                .iter()
+                .zip(&fresh.stage_busy)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+
+    #[test]
+    fn delta_run_matches_full_run_bitwise() {
+        // The delta contract: after any sequence of single- and
+        // multi-bucket cost edits, delta_run reproduces a from-scratch
+        // full simulation of the edited routes bit-for-bit — makespan and
+        // per-stage busy. One workspace is reused across cases, and each
+        // case chains several edit rounds so a stale dirty flag or finish
+        // entry from round k poisons round k+1.
+        let mut ws = SimWorkspace::new();
+        forall("delta re-sim = full re-sim", 120, |g| {
+            let n_stages = g.size(8);
+            let mut routes = random_routes(g, n_stages);
+            ws.routes.clear();
+            for r in &routes {
+                ws.routes.push_route(r);
+            }
+            ws.run_tracked(n_stages);
+            let mut ok = assert_matches_fresh(&ws, n_stages, &routes);
+            let mut edits = 0usize;
+            for _round in 0..4 {
+                if routes.is_empty() || !ok {
+                    break;
+                }
+                // 1..=3 random bucket edits per round (possibly the same
+                // bucket twice — the dirty set must be idempotent).
+                let n_edits = g.size(3);
+                for _ in 0..n_edits {
+                    let b = g.rng.below(routes.len() as u64) as usize;
+                    if routes[b].depth() == 0 {
+                        continue;
+                    }
+                    let pos = g.rng.below(routes[b].depth() as u64) as usize;
+                    let fwd = g.rng.uniform(0.1, 3.0);
+                    let bwd = g.rng.uniform(0.1, 5.0);
+                    routes[b].fwd[pos] = fwd;
+                    routes[b].bwd[pos] = bwd;
+                    ws.update_leg(b, pos, fwd, bwd);
+                    edits += 1;
+                }
+                ws.delta_run(n_stages);
+                ok = assert_matches_fresh(&ws, n_stages, &routes);
+            }
+            (
+                format!(
+                    "n_stages={n_stages} n_routes={} edits={edits} makespan={}",
+                    routes.len(),
+                    ws.makespan()
+                ),
+                ok,
+            )
+        });
+    }
+
+    #[test]
+    fn delta_frontier_reaches_stage_zero() {
+        // Edit bucket 0's first leg: the dirty frontier starts at stage 0
+        // and every downstream op must replay correctly.
+        let mut routes = uniform(6, 10, 1.0, 2.0);
+        let mut ws = SimWorkspace::new();
+        for r in &routes {
+            ws.routes.push_route(r);
+        }
+        ws.run_tracked(6);
+        routes[0].fwd[0] = 7.5;
+        routes[0].bwd[0] = 0.25;
+        ws.update_leg(0, 0, 7.5, 0.25);
+        ws.delta_run(6);
+        assert!(assert_matches_fresh(&ws, 6, &routes));
+    }
+
+    #[test]
+    fn delta_run_without_edits_is_a_no_op() {
+        let routes = uniform(4, 8, 1.0, 2.0);
+        let mut ws = SimWorkspace::new();
+        for r in &routes {
+            ws.routes.push_route(r);
+        }
+        let full = ws.run_tracked(4);
+        let again = ws.delta_run(4);
+        assert_eq!(full.to_bits(), again.to_bits());
+        assert!(assert_matches_fresh(&ws, 4, &routes));
+    }
+
+    #[test]
+    fn delta_run_falls_back_on_structure_or_stage_change() {
+        // Route rebuild bumps the structure generation → full path.
+        let first = uniform(4, 6, 1.0, 2.0);
+        let mut ws = SimWorkspace::new();
+        for r in &first {
+            ws.routes.push_route(r);
+        }
+        ws.run_tracked(4);
+        let second = uniform(5, 9, 0.7, 1.9);
+        ws.routes.clear();
+        for r in &second {
+            ws.routes.push_route(r);
+        }
+        ws.delta_run(5);
+        assert!(assert_matches_fresh(&ws, 5, &second));
+        // Same routes, different stage count (extra idle stage) → full
+        // path via the tracked_stages mismatch.
+        ws.delta_run(7);
+        assert!(assert_matches_fresh(&ws, 7, &second));
+        // An untracked run() disarms replay; delta_run self-heals.
+        ws.run(7, false);
+        ws.delta_run(7);
+        assert!(assert_matches_fresh(&ws, 7, &second));
+    }
+
+    #[test]
+    fn repeated_deltas_keep_the_record_valid() {
+        // Many successive single-bucket edits over one tracked record —
+        // the replay must stay exact without re-tracking in between.
+        let mut routes = uniform(8, 16, 1.0, 2.0);
+        let mut ws = SimWorkspace::new();
+        for r in &routes {
+            ws.routes.push_route(r);
+        }
+        ws.run_tracked(8);
+        for k in 0..32 {
+            let b = (k * 7) % routes.len();
+            let pos = (k * 3) % routes[b].depth();
+            let fwd = 0.5 + 0.13 * k as f64;
+            let bwd = 1.5 + 0.07 * k as f64;
+            routes[b].fwd[pos] = fwd;
+            routes[b].bwd[pos] = bwd;
+            ws.update_leg(b, pos, fwd, bwd);
+            ws.delta_run(8);
+            assert!(assert_matches_fresh(&ws, 8, &routes), "edit {k}");
+        }
     }
 }

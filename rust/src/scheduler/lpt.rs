@@ -15,6 +15,58 @@ pub struct ItemCost {
     pub llm: f64,
 }
 
+/// Structure-of-arrays [`ItemCost`] table: the batched candidate
+/// evaluator's layout (`optimizer::batch`). Per-candidate-key cost columns
+/// live contiguously, so the LPT's hot placement scan streams one metric
+/// at a time instead of striding over interleaved pairs, and a table can
+/// be built once and shared by every candidate with the same `(tp, pp)`
+/// key. [`lpt_table_into`] over a table is bit-identical to [`lpt_into`]
+/// over the equivalent `&[ItemCost]` slice — both run the same generic
+/// core.
+#[derive(Clone, Debug, Default)]
+pub struct CostTable {
+    pub enc: Vec<f64>,
+    pub llm: Vec<f64>,
+}
+
+impl CostTable {
+    pub fn new() -> CostTable {
+        CostTable::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.enc.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.enc.is_empty()
+    }
+
+    /// Drop all rows, keeping capacity.
+    pub fn clear(&mut self) {
+        self.enc.clear();
+        self.llm.clear();
+    }
+
+    #[inline]
+    pub fn push(&mut self, enc: f64, llm: f64) {
+        self.enc.push(enc);
+        self.llm.push(llm);
+    }
+
+    pub fn from_items(items: &[ItemCost]) -> CostTable {
+        CostTable {
+            enc: items.iter().map(|i| i.enc).collect(),
+            llm: items.iter().map(|i| i.llm).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> ItemCost {
+        ItemCost { enc: self.enc[i], llm: self.llm[i] }
+    }
+}
+
 /// Result of a partitioning pass.
 #[derive(Clone, Debug, Default)]
 pub struct Assignment {
@@ -117,12 +169,30 @@ pub fn lpt(items: &[ItemCost], m: usize) -> Assignment {
 /// refilled, keeping their capacity — the optimizer's Eq-1 refinement
 /// calls this once per candidate and must not churn the allocator.
 pub fn lpt_into(items: &[ItemCost], m: usize, out: &mut Assignment) {
+    lpt_core(items.len(), |i| items[i].enc, |i| items[i].llm, m, out);
+}
+
+/// [`lpt_into`] over a structure-of-arrays [`CostTable`]. Shares
+/// [`lpt_core`] with the slice path, so the two are bit-identical on
+/// equivalent inputs (asserted by `lpt_table_matches_slice_bitwise`).
+pub fn lpt_table_into(table: &CostTable, m: usize, out: &mut Assignment) {
+    lpt_core(table.len(), |i| table.enc[i], |i| table.llm[i], m, out);
+}
+
+/// The single greedy implementation behind both item layouts: costs are
+/// reached only through the accessor closures, so any layout that returns
+/// the same bits produces the same partition.
+fn lpt_core<E, L>(n: usize, enc: E, llm: L, m: usize, out: &mut Assignment)
+where
+    E: Fn(usize) -> f64,
+    L: Fn(usize) -> f64,
+{
     assert!(m > 0, "lpt with zero buckets");
-    let mut order: Vec<usize> = (0..items.len()).collect();
+    let mut order: Vec<usize> = (0..n).collect();
     // Descending by combined weight (ties broken by index for determinism).
     order.sort_by(|&a, &b| {
-        let wa = items[a].enc + items[a].llm;
-        let wb = items[b].enc + items[b].llm;
+        let wa = enc(a) + llm(a);
+        let wb = enc(b) + llm(b);
         wb.partial_cmp(&wa).expect("NaN duration").then(a.cmp(&b))
     });
 
@@ -138,11 +208,12 @@ pub fn lpt_into(items: &[ItemCost], m: usize, out: &mut Assignment) {
         (&mut out.buckets, &mut out.enc_loads, &mut out.llm_loads);
     for &i in &order {
         // Place where the resulting bottleneck grows least.
+        let (ei, li) = (enc(i), llm(i));
         let mut best_j = 0usize;
         let mut best_key = f64::INFINITY;
         for j in 0..m {
-            let e = enc_loads[j] + items[i].enc;
-            let l = llm_loads[j] + items[i].llm;
+            let e = enc_loads[j] + ei;
+            let l = llm_loads[j] + li;
             // Primary: bucket bottleneck; secondary: combined load for
             // tie-breaking (keeps buckets even when one metric is zero).
             let key = e.max(l) + 1e-9 * (e + l);
@@ -152,8 +223,8 @@ pub fn lpt_into(items: &[ItemCost], m: usize, out: &mut Assignment) {
             }
         }
         buckets[best_j].push(i);
-        enc_loads[best_j] += items[i].enc;
-        llm_loads[best_j] += items[i].llm;
+        enc_loads[best_j] += ei;
+        llm_loads[best_j] += li;
     }
 }
 
@@ -314,6 +385,45 @@ mod tests {
             let k1 = a.enc_loads[w + 1].max(a.llm_loads[w + 1]);
             assert!(k0 >= k1, "not heaviest-first at {w}: {k0} < {k1}");
         }
+    }
+
+    #[test]
+    fn lpt_table_matches_slice_bitwise() {
+        // The SoA table path must reproduce the slice path exactly:
+        // identical buckets and bit-identical loads.
+        forall("lpt table = lpt slice", 150, |g| {
+            let n = g.size(60);
+            let items: Vec<ItemCost> = (0..n)
+                .map(|_| ItemCost {
+                    enc: g.rng.uniform(0.0, 5.0),
+                    llm: g.rng.uniform(0.0, 5.0),
+                })
+                .collect();
+            let m = g.size(10);
+            let a = lpt(&items, m);
+            let table = CostTable::from_items(&items);
+            let mut b = Assignment::default();
+            lpt_table_into(&table, m, &mut b);
+            let ok = a.buckets == b.buckets
+                && a.enc_loads.iter().zip(&b.enc_loads).all(|(x, y)| x.to_bits() == y.to_bits())
+                && a.llm_loads.iter().zip(&b.llm_loads).all(|(x, y)| x.to_bits() == y.to_bits());
+            (format!("n={n} m={m} c_max={}", a.c_max()), ok)
+        });
+    }
+
+    #[test]
+    fn cost_table_round_trips_items() {
+        let items = items_from(&[(3.0, 1.0), (2.0, 2.0), (0.5, 4.0)]);
+        let mut t = CostTable::from_items(&items);
+        assert_eq!(t.len(), 3);
+        assert!(!t.is_empty());
+        for (i, &it) in items.iter().enumerate() {
+            assert_eq!(t.get(i), it);
+        }
+        t.clear();
+        assert!(t.is_empty());
+        t.push(1.0, 2.0);
+        assert_eq!(t.get(0), ItemCost { enc: 1.0, llm: 2.0 });
     }
 
     #[test]

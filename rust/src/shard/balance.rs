@@ -90,6 +90,23 @@ pub fn rebalance(
         llm[r] += items[i].llm;
         members[r].push(i);
     }
+    // Candidate order is (heaviest item, lowest global index) — a *total*
+    // order, so each shard's sorted member list is unique and can be kept
+    // sorted incrementally across the whole walk: one binary-search remove
+    // plus one binary-search insert per accepted migration, instead of a
+    // clone + O(k log k) re-sort of the donor on every step. The iteration
+    // order any step observes is bit-identical to the re-sorted clone, so
+    // every decision (and hence the final assignment) is unchanged; the
+    // pre-refactor implementation survives as the oracle in
+    // `tests::incremental_walk_matches_resort_reference`.
+    let cmp = |a: usize, b: usize| {
+        let wa = items[a].enc + items[a].llm;
+        let wb = items[b].enc + items[b].llm;
+        wb.partial_cmp(&wa).expect("NaN cost").then(a.cmp(&b))
+    };
+    for list in members.iter_mut() {
+        list.sort_by(|&a, &b| cmp(a, b));
+    }
     let bneck = |enc: &[f64], llm: &[f64], r: usize| enc[r].max(llm[r]);
     let objective = |enc: &[f64], llm: &[f64]| {
         (0..shards).map(|r| bneck(enc, llm, r)).fold(0.0, f64::max)
@@ -133,15 +150,10 @@ pub fn rebalance(
         // but it shrinks the set of bottleneck shards, so accepting it
         // (see below) keeps the walk moving instead of stalling at the
         // first tie. Remaining ties keep the first candidate in (heaviest
-        // item, lowest item index, lowest receiver index) order.
-        let mut order: Vec<usize> = members[d].clone();
-        order.sort_by(|&a, &b| {
-            let wa = items[a].enc + items[a].llm;
-            let wb = items[b].enc + items[b].llm;
-            wb.partial_cmp(&wa).expect("NaN cost").then(a.cmp(&b))
-        });
+        // item, lowest item index, lowest receiver index) order — exactly
+        // the order `members[d]` is maintained in.
         let mut best: Option<(f64, f64, usize, usize)> = None;
-        for &i in &order {
+        for &i in &members[d] {
             for r in 0..shards {
                 if r == d {
                     continue;
@@ -176,8 +188,14 @@ pub fn rebalance(
                 llm[d] -= items[i].llm;
                 enc[r] += items[i].enc;
                 llm[r] += items[i].llm;
-                members[d].retain(|&j| j != i);
-                members[r].push(i);
+                let pos = members[d]
+                    .binary_search_by(|&x| cmp(x, i))
+                    .expect("chosen item is a donor member");
+                members[d].remove(pos);
+                let ins = match members[r].binary_search_by(|&x| cmp(x, i)) {
+                    Ok(p) | Err(p) => p,
+                };
+                members[r].insert(ins, i);
                 shard_of[i] = r;
                 migrations += 1;
                 cur = new_obj;
@@ -206,6 +224,148 @@ mod tests {
 
     fn homes(n: usize, shards: usize) -> Vec<usize> {
         (0..n).map(|i| i * shards / n.max(1)).collect()
+    }
+
+    /// The pre-refactor walk, verbatim: clones and re-sorts the donor's
+    /// member list on every step. Kept as the oracle for the
+    /// incrementally-sorted production walk — the two must agree bit-wise.
+    fn rebalance_reference(
+        items: &[ItemCost],
+        home: &[usize],
+        shards: usize,
+        cfg: &BalanceConfig,
+    ) -> Rebalance {
+        let n = items.len();
+        let mut shard_of = home.to_vec();
+        let mut enc = vec![0.0f64; shards];
+        let mut llm = vec![0.0f64; shards];
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); shards];
+        for (i, &r) in home.iter().enumerate() {
+            enc[r] += items[i].enc;
+            llm[r] += items[i].llm;
+            members[r].push(i);
+        }
+        let bneck = |enc: &[f64], llm: &[f64], r: usize| enc[r].max(llm[r]);
+        let objective = |enc: &[f64], llm: &[f64]| {
+            (0..shards).map(|r| bneck(enc, llm, r)).fold(0.0, f64::max)
+        };
+        let before = objective(&enc, &llm);
+        let lb = lower_bound(items, shards);
+        let target = lb * (1.0 + cfg.min_gain);
+        let budget = ((cfg.migration_budget * n as f64).floor() as usize).min(n);
+        let mut cur = before;
+        let mut migrations = 0usize;
+        while migrations < budget && cur > target {
+            let mut d = 0usize;
+            for r in 1..shards {
+                if bneck(&enc, &llm, r) > bneck(&enc, &llm, d) {
+                    d = r;
+                }
+            }
+            let (mut top1, mut top1_r, mut top2) =
+                (f64::NEG_INFINITY, usize::MAX, f64::NEG_INFINITY);
+            for r in 0..shards {
+                if r == d {
+                    continue;
+                }
+                let b = bneck(&enc, &llm, r);
+                if b > top1 {
+                    top2 = top1;
+                    top1 = b;
+                    top1_r = r;
+                } else if b > top2 {
+                    top2 = b;
+                }
+            }
+            let mut order: Vec<usize> = members[d].clone();
+            order.sort_by(|&a, &b| {
+                let wa = items[a].enc + items[a].llm;
+                let wb = items[b].enc + items[b].llm;
+                wb.partial_cmp(&wa).expect("NaN cost").then(a.cmp(&b))
+            });
+            let mut best: Option<(f64, f64, usize, usize)> = None;
+            for &i in &order {
+                for r in 0..shards {
+                    if r == d {
+                        continue;
+                    }
+                    let new_d = (enc[d] - items[i].enc).max(llm[d] - items[i].llm);
+                    let new_r = (enc[r] + items[i].enc).max(llm[r] + items[i].llm);
+                    let pair_max = new_d.max(new_r);
+                    let others = if r == top1_r { top2 } else { top1 };
+                    let new_obj = pair_max.max(others.max(0.0));
+                    let improves = match best {
+                        None => true,
+                        Some((bo, bp, _, _)) => {
+                            new_obj < bo || (new_obj == bo && pair_max < bp)
+                        }
+                    };
+                    if improves {
+                        best = Some((new_obj, pair_max, i, r));
+                    }
+                }
+            }
+            let accepted = match best {
+                Some((new_obj, pair_max, i, r))
+                    if new_obj < cur * (1.0 - 1e-12)
+                        || (new_obj <= cur && pair_max < cur * (1.0 - 1e-12)) =>
+                {
+                    enc[d] -= items[i].enc;
+                    llm[d] -= items[i].llm;
+                    enc[r] += items[i].enc;
+                    llm[r] += items[i].llm;
+                    members[d].retain(|&j| j != i);
+                    members[r].push(i);
+                    shard_of[i] = r;
+                    migrations += 1;
+                    cur = new_obj;
+                    true
+                }
+                _ => false,
+            };
+            if !accepted {
+                break;
+            }
+        }
+        Rebalance {
+            shard_of,
+            migrations,
+            bottleneck_before: before,
+            bottleneck_after: cur,
+        }
+    }
+
+    #[test]
+    fn incremental_walk_matches_resort_reference() {
+        forall("incremental vs re-sort walk", 150, |g| {
+            let n = g.size(80);
+            let shards = g.size(6);
+            let dup = g.rng.below(2) == 0; // force weight ties sometimes
+            let items: Vec<ItemCost> = (0..n)
+                .map(|i| {
+                    if dup && i % 3 == 0 {
+                        ItemCost { enc: 0.5, llm: 2.0 }
+                    } else {
+                        ItemCost {
+                            enc: g.rng.uniform(0.0, 2.0),
+                            llm: g.rng.uniform(0.0, 5.0),
+                        }
+                    }
+                })
+                .collect();
+            let home: Vec<usize> = (0..n).map(|_| g.rng.index(shards)).collect();
+            let cfg = BalanceConfig {
+                migration_budget: g.rng.uniform(0.05, 1.0),
+                min_gain: g.rng.uniform(0.0, 0.05),
+            };
+            let a = rebalance(&items, &home, shards, &cfg);
+            let b = rebalance_reference(&items, &home, shards, &cfg);
+            let ok = a.shard_of == b.shard_of
+                && a.migrations == b.migrations
+                && a.bottleneck_before.to_bits() == b.bottleneck_before.to_bits()
+                && a.bottleneck_after.to_bits() == b.bottleneck_after.to_bits();
+            (format!("n={n} shards={shards} dup={dup} moved={}", a.migrations), ok)
+        });
     }
 
     #[test]
