@@ -1,0 +1,90 @@
+//! Bench: the fault subsystem's per-step costs plus the PR-7 acceptance
+//! pair — static θ* vs degradation-aware replanning under the *same*
+//! deterministic skewed-churn `FaultTrace`.
+//!
+//! The real-time rows cover the machinery that runs at every iteration
+//! boundary of a fleet run (trace generation, `FleetState::advance`, the
+//! slowdown-weighted batch split): all must be negligible next to a
+//! pipeline sim. The `fleet mean step` / `fleet worst straggler gap` rows
+//! are *simulated* seconds lifted from paired `run_system` calls — both
+//! arms replay the identical trace, so `dflop-bench-compare` can gate the
+//! acceptance claims (aware strictly faster, aware strictly smaller worst
+//! gap) as in-binary paired ratios that cancel the host's absolute speed.
+mod common;
+use common::{bench, BenchResult};
+use dflop::fault::{FaultTrace, FleetState};
+use dflop::model::catalog::{llama3, llava_ov};
+use dflop::shard::ShardConfig;
+use dflop::sim::{run_system, FaultConfig, RunConfig, RunResult, SystemKind};
+
+/// The acceptance configuration shared with `tests/fleet.rs`: a 4-shard
+/// fleet of single-node replicas on the skewed-shard dataset, long enough
+/// for the scripted scenario (last heal at iteration 15) plus post-heal
+/// iterations.
+fn fleet_cfg(trace: &str, respond: bool) -> RunConfig {
+    let mut cfg = RunConfig::new(1, 48, 18, 42);
+    cfg.profile_samples = 256;
+    cfg.shard = Some(ShardConfig {
+        dp_shards: 4,
+        rebalance: false,
+        window_batches: 4,
+        ..ShardConfig::default()
+    });
+    cfg.faults = Some(FaultConfig { trace: trace.to_string(), respond });
+    cfg
+}
+
+/// A simulated-seconds row: the value is model output, not wall-clock,
+/// so one rep with mean = min = max.
+fn simulated(name: &str, v: f64) -> BenchResult {
+    println!("{name:56} simulated {v:.6} s");
+    BenchResult { name: name.to_string(), mean: v, min: v, max: v, reps: 1 }
+}
+
+fn main() {
+    println!("== fault_bench ==");
+    let mut results = Vec::new();
+
+    // Per-boundary machinery: all µs-scale next to a pipeline sim.
+    results.push(bench("generate long-horizon trace (512 iters, 8 shards)", 50, || {
+        let t = FaultTrace::by_key("long-horizon", 8, 42).expect("trace");
+        std::hint::black_box(t.events.len());
+    }));
+    let trace = FaultTrace::by_key("long-horizon", 8, 42).expect("trace");
+    results.push(bench("replay 512 fleet boundaries (advance + counts)", 50, || {
+        let mut fs = FleetState::new(trace.clone(), true, 2);
+        let mut total = 0usize;
+        for it in 0..512 {
+            fs.advance(it);
+            total += fs.counts(512).iter().sum::<usize>();
+        }
+        std::hint::black_box(total);
+    }));
+
+    // The acceptance pair: identical skewed-churn physics, the only
+    // difference is whether the system responds.
+    let m = llava_ov(llama3("8b"));
+    let aware = run_system(SystemKind::DflopSharded, &m, "skewed-shard", &fleet_cfg("skewed-churn", true));
+    let stat = run_system(SystemKind::DflopSharded, &m, "skewed-shard", &fleet_cfg("skewed-churn", false));
+    let control = run_system(SystemKind::DflopSharded, &m, "skewed-shard", &fleet_cfg("none", true));
+    assert_eq!(control.replans, 0, "fault-free control replanned");
+    let worst = |r: &RunResult| r.straggler_gaps.iter().cloned().fold(0.0f64, f64::max);
+    results.push(simulated(
+        "fleet mean step, fault-aware (skewed-churn, 4 shards)",
+        aware.mean_iteration_time,
+    ));
+    results.push(simulated(
+        "fleet mean step, static theta (skewed-churn, 4 shards)",
+        stat.mean_iteration_time,
+    ));
+    results.push(simulated(
+        "fleet worst straggler gap, fault-aware (skewed-churn, 4 shards)",
+        worst(&aware),
+    ));
+    results.push(simulated(
+        "fleet worst straggler gap, static theta (skewed-churn, 4 shards)",
+        worst(&stat),
+    ));
+
+    common::emit_json("fault_bench", &results);
+}

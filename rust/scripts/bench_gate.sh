@@ -1,10 +1,13 @@
 #!/usr/bin/env sh
-# PR-6 bench-regression gate: regenerate the bench document and check the
-# named in-binary speedup claims with dflop-bench-compare.
+# Bench-regression gate: regenerate the bench document and check the
+# named in-binary speedup claims with dflop-bench-compare — including the
+# PR-7 fault-fleet acceptance pair (fault-aware strictly faster mean step
+# and strictly smaller worst straggler gap than static θ* under the same
+# skewed-churn FaultTrace).
 #
 # Usage:  rust/scripts/bench_gate.sh [<out.json>]
 #
-# <out.json> defaults to BENCH_PR6.json at the repository root. The run is
+# <out.json> defaults to BENCH_PR7.json at the repository root. The run is
 # single-threaded (override with DFLOP_THREADS) and quick-mode by default
 # so CI finishes in seconds; set FULL=1 for stable full-rep statistics.
 # Alongside the merged document, per-target BENCH_<target>.json files are
@@ -17,7 +20,7 @@ set -eu
 
 root="$(git rev-parse --show-toplevel)"
 cd "$root"
-out="${1:-$root/BENCH_PR6.json}"
+out="${1:-$root/BENCH_PR7.json}"
 case "$out" in
     /*) ;;
     *) out="$root/$out" ;;

@@ -11,7 +11,12 @@
 //!   (`pipeline_bench`, the PR-6 tentpole's ≥3× target),
 //! - batched θ-candidate evaluation ≤ serial evaluation
 //!   (`optimizer_bench`),
-//! - warm replan from the incumbent ≤ cold optimize (`stream_bench`).
+//! - warm replan from the incumbent ≤ cold optimize (`stream_bench`),
+//! - under the skewed-churn `FaultTrace` the fault-aware fleet sustains
+//!   a strictly faster mean step AND a strictly smaller worst straggler
+//!   gap than the static-θ* arm (`fault_bench`, the PR-7 acceptance —
+//!   these rows are *simulated* seconds from paired runs replaying the
+//!   identical trace, so the ratio is exactly reproducible).
 //!
 //! A missing row is a hard error, not a skip: renaming a bench silently
 //! would otherwise disarm the gate. Exit code 1 on any violation, 2 on
@@ -51,6 +56,20 @@ const EXPECTATIONS: &[Expect] = &[
         denominator: "cold optimize (8 GPUs, gbs 64)",
         max_ratio: 1.0,
         claim: "warm replan no slower than a cold optimize",
+    },
+    Expect {
+        target: "fault_bench",
+        numerator: "fleet mean step, fault-aware (skewed-churn, 4 shards)",
+        denominator: "fleet mean step, static theta (skewed-churn, 4 shards)",
+        max_ratio: 0.999,
+        claim: "fault-aware replanning sustains higher throughput under churn",
+    },
+    Expect {
+        target: "fault_bench",
+        numerator: "fleet worst straggler gap, fault-aware (skewed-churn, 4 shards)",
+        denominator: "fleet worst straggler gap, static theta (skewed-churn, 4 shards)",
+        max_ratio: 0.999,
+        claim: "fault-aware replanning shrinks the worst straggler gap under churn",
     },
 ];
 

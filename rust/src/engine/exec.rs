@@ -24,6 +24,7 @@ use crate::data::item::ItemShape;
 use crate::engine::policy::PlanSet;
 use crate::engine::telemetry::Telemetry;
 use crate::engine::Draw;
+use crate::fault::FleetView;
 use crate::model::catalog::Mllm;
 use crate::perfmodel::Truth;
 use crate::pipeline::build::{iterate_ws, IterationStats, SystemPlan};
@@ -35,8 +36,8 @@ use crate::scheduler::online::{OnlineScheduler, SchedulerConfig, Solver};
 use crate::shard::agg::ShardWindows;
 use crate::shard::balance::rebalance;
 use crate::shard::sync::{
-    cross_shard_allreduce, lpt_shard_buckets, simulate_shards, simulate_shards_hetero,
-    step_barrier, BarrierStats,
+    charge_straggler, cross_shard_allreduce, degraded_allreduce, lpt_shard_buckets,
+    simulate_shards, simulate_shards_hetero, step_barrier, BarrierStats,
 };
 use crate::shard::ShardConfig;
 use crate::sim::trainer::{RunConfig, SystemKind};
@@ -67,6 +68,16 @@ pub trait ExecModel {
     /// Feed execution measurements back into the plan's estimators
     /// (Adaptive Correction); default no-op for models without it.
     fn correct(&mut self, _sched: &Scheduled, _stats: &IterationStats) {}
+
+    /// Expose the fault layer's injected health for this iteration (raw
+    /// view, active-member order). Default no-op: models without a
+    /// degradation path ignore it.
+    fn set_health(&mut self, _view: &FleetView) {}
+
+    /// The health the model would charge this iteration, if any.
+    fn health(&self) -> Option<&FleetView> {
+        None
+    }
 }
 
 /// Materialize bucket index groups into item-shape buckets.
@@ -255,6 +266,10 @@ pub struct ShardedExec<'a> {
     /// The rebalance skew gate's per-shard windows.
     gate: ShardWindows,
     sc: ShardConfig,
+    /// Injected cluster health for the current iteration (fault runs
+    /// only); `None` or an all-healthy view leaves the execution path
+    /// bit-identical to a run without fault injection.
+    health: Option<FleetView>,
 }
 
 impl<'a> ShardedExec<'a> {
@@ -272,6 +287,7 @@ impl<'a> ShardedExec<'a> {
             plan: PlanSet::global(theta),
             gate: ShardWindows::new(sc.dp_shards, sc.window_batches),
             sc: sc.clone(),
+            health: None,
         }
     }
 }
@@ -289,10 +305,17 @@ impl ExecModel for ShardedExec<'_> {
         let Draw::Sharded { batches, stats, pooled } = draw else {
             unreachable!("sharded exec fed a single-replica draw")
         };
+        // Elastic membership: the group is however many batches were
+        // drawn this iteration. A membership change resets the skew
+        // gate's windows — the old per-shard histories describe a group
+        // that no longer exists — deterministically on every replica.
+        if stats.len() != self.gate.n_shards() {
+            self.gate = ShardWindows::new(stats.len(), self.sc.window_batches);
+        }
         self.gate.push(stats.clone());
         let t0 = std::time::Instant::now();
         let theta = self.plan.global;
-        let shards = self.sc.dp_shards;
+        let shards = batches.len();
         // Skew gate + bounded migration on predicted per-item cost at the
         // global θ — the reference frame every replica shares, so the
         // migration decision is identical whether per-replica plans are
@@ -336,9 +359,17 @@ impl ExecModel for ShardedExec<'_> {
         Scheduled { replicas }
     }
 
+    fn set_health(&mut self, view: &FleetView) {
+        self.health = Some(view.clone());
+    }
+
+    fn health(&self) -> Option<&FleetView> {
+        self.health.as_ref()
+    }
+
     fn execute(&mut self, sched: &Scheduled, tel: &mut Telemetry) -> IterationStats {
         let shards = sched.replicas.len();
-        let (per_replica, allreduce) = match &self.plan.per_replica {
+        let (mut per_replica, mut allreduce) = match &self.plan.per_replica {
             Some(thetas) => (
                 simulate_shards_hetero(self.m, self.truth, thetas, &sched.replicas),
                 // The ring runs at the pace of the slowest replica
@@ -353,6 +384,26 @@ impl ExecModel for ShardedExec<'_> {
                 cross_shard_allreduce(self.m, self.truth, self.plan.global, shards),
             ),
         };
+        // Charge injected degradation before the barrier so straggler
+        // slowdowns and slow links surface in the step time and the
+        // straggler gap exactly like organic skew. Skipped entirely when
+        // the fleet is healthy, keeping those iterations bit-identical
+        // to a run without fault injection.
+        if let Some(h) = &self.health {
+            if h.is_degrading() {
+                debug_assert_eq!(
+                    h.slowdown.len(),
+                    per_replica.len(),
+                    "health view must match the active membership"
+                );
+                for (stats, &factor) in per_replica.iter_mut().zip(&h.slowdown) {
+                    if factor != 1.0 {
+                        charge_straggler(stats, factor);
+                    }
+                }
+                allreduce = degraded_allreduce(allreduce, h.link_factor);
+            }
+        }
         let barrier = step_barrier(
             per_replica.iter().map(|s| s.iteration_time).collect(),
             allreduce,

@@ -44,6 +44,7 @@ pub mod telemetry;
 use crate::baselines::homogeneous::{megatron_tune, pytorch_tune, PYTORCH_SOFTWARE_FACTOR};
 use crate::data::dataset::Dataset;
 use crate::data::item::ItemShape;
+use crate::fault::{FaultTrace, FleetState};
 use crate::model::catalog::Mllm;
 use crate::optimizer::plan::Theta;
 use crate::optimizer::search::{optimize, OptimizerInputs};
@@ -60,7 +61,7 @@ use crate::stream::replan::ReplanContext;
 use crate::stream::window::ShapeStats;
 use crate::util::error::Result;
 use exec::{ExecModel, ShardedExec, SingleReplicaExec};
-use policy::{AdaptivePolicy, PerShardPolicy, PlanPolicy, StaticPolicy};
+use policy::{AdaptivePolicy, FaultAwarePolicy, PerShardPolicy, PlanPolicy, StaticPolicy};
 use std::time::Duration;
 use telemetry::Telemetry;
 
@@ -83,8 +84,18 @@ pub enum Draw {
 /// The engine's dataset seam: one stream per run, drawn in iteration
 /// order.
 pub enum DataFeed {
-    Single { ds: Dataset, gbs: usize },
-    Sharded { sd: ShardedDataset, counts: Vec<usize> },
+    Single {
+        ds: Dataset,
+        gbs: usize,
+    },
+    Sharded {
+        sd: ShardedDataset,
+        /// Active shard slots, ascending; `counts[i]` items come from
+        /// shard `members[i]`'s stream. Full membership unless a fault
+        /// trace shrinks the group.
+        members: Vec<usize>,
+        counts: Vec<usize>,
+    },
 }
 
 impl DataFeed {
@@ -93,15 +104,28 @@ impl DataFeed {
     }
 
     pub fn sharded(sd: ShardedDataset, counts: Vec<usize>) -> DataFeed {
-        DataFeed::Sharded { sd, counts }
+        let members = (0..sd.n_shards()).collect();
+        DataFeed::Sharded { sd, members, counts }
+    }
+
+    /// Repoint a sharded feed at an elastic fleet's current membership
+    /// and per-member batch split (fault-injected runs; the healthy path
+    /// never calls this).
+    pub fn set_fleet(&mut self, new_members: Vec<usize>, new_counts: Vec<usize>) {
+        let DataFeed::Sharded { members, counts, .. } = self else {
+            unreachable!("fleet membership on a single-replica feed")
+        };
+        assert_eq!(new_members.len(), new_counts.len(), "one count per member");
+        *members = new_members;
+        *counts = new_counts;
     }
 
     /// Draw the next iteration's input.
     pub fn draw(&mut self, m: &Mllm) -> Draw {
         match self {
             DataFeed::Single { ds, gbs } => Draw::Single(ds.shaped_batch(m, *gbs)),
-            DataFeed::Sharded { sd, counts } => {
-                let batches = sd.shard_batches(m, counts);
+            DataFeed::Sharded { sd, members, counts } => {
+                let batches = sd.shard_batches_members(m, members, counts);
                 let stats = batches.iter().map(|b| ShapeStats::of_batch(b)).collect();
                 let pooled = batches.iter().flat_map(|b| b.iter().copied()).collect();
                 Draw::Sharded { batches, stats, pooled }
@@ -138,6 +162,31 @@ pub fn validate(kind: SystemKind, dataset_key: &str, cfg: &RunConfig) -> Result<
             "unknown dataset '{dataset_key}' (try mixed|multi-image|video|audio|\
              curriculum|bursty-video|modality-dropout)"
         );
+    }
+    if let Some(fc) = &cfg.faults {
+        if kind != SystemKind::DflopSharded {
+            crate::bail!(
+                "fault injection needs the sharded fleet ({} has no DP group to degrade)",
+                kind.label()
+            );
+        }
+        let sc = cfg.shard.clone().unwrap_or_default();
+        if sc.hetero {
+            crate::bail!("fault injection does not compose with per-shard plans (hetero)");
+        }
+        if sc.dp_shards < 2 {
+            crate::bail!(
+                "fault injection needs at least 2 DP shards to degrade, got {}",
+                sc.dp_shards
+            );
+        }
+        if FaultTrace::by_key(&fc.trace, sc.dp_shards, cfg.seed).is_none() {
+            crate::bail!(
+                "unknown fault trace '{}' (try none|churn|straggler|degraded-link|\
+                 skewed-churn|long-horizon)",
+                fc.trace
+            );
+        }
     }
     Ok(())
 }
@@ -275,9 +324,35 @@ pub fn run(kind: SystemKind, m: &Mllm, dataset_key: &str, cfg: &RunConfig) -> Re
 
     // Plan policy: who decides which θ executes next.
     let replan_cfg = cfg.replan.clone().unwrap_or_default();
+    // Fault-injected fleet: the seeded trace replayed at iteration
+    // boundaries, with confirmation debounce matched to the drift
+    // detector's so topology responses share the no-thrash cadence.
+    let mut fleet = cfg.faults.as_ref().map(|fc| {
+        FleetState::new(
+            FaultTrace::by_key(&fc.trace, shards, cfg.seed).expect("validated fault trace"),
+            fc.respond,
+            replan_cfg.drift.confirm,
+        )
+    });
     let mut policy: Box<dyn PlanPolicy + '_> = match kind {
         SystemKind::DflopAdaptive => {
             Box::new(AdaptivePolicy::new(&off.data, off.theta, replan_cfg, rctx))
+        }
+        SystemKind::DflopSharded if cfg.faults.is_some() => {
+            if cfg.faults.as_ref().is_some_and(|fc| fc.respond) {
+                Box::new(FaultAwarePolicy::new(
+                    &off.data,
+                    off.theta,
+                    replan_cfg,
+                    rctx,
+                    cfg.gbs,
+                    shards,
+                ))
+            } else {
+                // The static-θ* arm absorbs the injected physics without
+                // replanning — the comparison baseline.
+                Box::new(StaticPolicy)
+            }
         }
         SystemKind::DflopSharded if sc.hetero => Box::new(PerShardPolicy::new(
             &off.data,
@@ -302,7 +377,18 @@ pub fn run(kind: SystemKind, m: &Mllm, dataset_key: &str, cfg: &RunConfig) -> Re
 
     // ---- the one shared iteration loop ----
     let mut tel = Telemetry::new(cfg.iters);
-    for _ in 0..cfg.iters {
+    for it in 0..cfg.iters {
+        // Fault events land strictly at iteration boundaries, before the
+        // draw, so membership, batch split, and injected health are fixed
+        // for the whole iteration — this is what keeps fleet runs
+        // bit-identical at any `DFLOP_THREADS`.
+        if let Some(fs) = fleet.as_mut() {
+            let delta = fs.advance(it);
+            tel.record_fault(&delta);
+            feed.set_fleet(fs.members(), fs.counts(cfg.gbs));
+            exec.set_health(&fs.view());
+            policy.observe_health(fs.confirmed_active());
+        }
         let draw = feed.draw(m);
         // Drift check before scheduling: the batch's shapes are known to
         // the CPU-side scheduler ahead of execution, and a confirmed

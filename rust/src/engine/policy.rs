@@ -59,6 +59,11 @@ pub trait PlanPolicy {
     fn take_events(&mut self) -> Vec<ReplanEvent> {
         Vec::new()
     }
+
+    /// The fault layer's *confirmed* (debounced) active-member count for
+    /// this iteration, reported ahead of `observe`. Default no-op:
+    /// health-blind policies plan for the configured topology forever.
+    fn observe_health(&mut self, _confirmed_active: usize) {}
 }
 
 /// The offline θ* frozen for the whole run (baselines, ablations, plain
@@ -104,6 +109,96 @@ impl PlanPolicy for AdaptivePolicy<'_> {
 
     fn take_events(&mut self) -> Vec<ReplanEvent> {
         std::mem::take(&mut self.rp.events)
+    }
+}
+
+/// The fault-aware sharded controller: the drift-adaptive global plan
+/// plus topology replans. Data drift runs through the exact
+/// `AdaptivePolicy` path (merged per-shard summaries into one
+/// `stream::replan` controller), so a fault-free run is bit-identical to
+/// the plain adaptive sharded policy. When the fault layer *confirms* a
+/// changed active-member count (debounced like drift confirmation, so
+/// transient blips never reach here), the per-replica batch the
+/// surviving replicas actually execute has changed — the policy
+/// warm-replans θ* for the new topology via the replanner's
+/// `force_replan`, which shares the drift path's event log, cooldown,
+/// and failed-refit retry contract.
+pub struct FaultAwarePolicy<'a> {
+    rp: Replanner,
+    /// Context template for the *full* configured membership; only the
+    /// per-replica GBS changes with the active-member count.
+    rctx: ReplanContext<'a>,
+    /// The run's global batch size (split over the active members).
+    gbs: usize,
+    /// The membership the live θ was fitted for.
+    fitted_active: usize,
+    /// The fault layer's confirmed membership this iteration.
+    confirmed_active: usize,
+}
+
+impl<'a> FaultAwarePolicy<'a> {
+    /// `rctx` is the engine's sharded replan context (per-replica GBS at
+    /// full membership); `gbs` the global batch; `shards` the configured
+    /// DP group size.
+    pub fn new(
+        reference: &DataProfile,
+        theta: Theta,
+        cfg: ReplanConfig,
+        rctx: ReplanContext<'a>,
+        gbs: usize,
+        shards: usize,
+    ) -> FaultAwarePolicy<'a> {
+        FaultAwarePolicy {
+            rp: Replanner::new(reference, theta, cfg),
+            rctx,
+            gbs,
+            fitted_active: shards,
+            confirmed_active: shards,
+        }
+    }
+
+    /// The replan context for an `active`-member group: same cluster and
+    /// profile, per-replica GBS re-split over the survivors (ceil, so
+    /// memory is checked against the largest shard — mirroring the
+    /// offline sharded fit).
+    fn ctx_at(&self, active: usize) -> ReplanContext<'a> {
+        ReplanContext { gbs: self.gbs.div_ceil(active.max(1)), ..self.rctx }
+    }
+}
+
+impl PlanPolicy for FaultAwarePolicy<'_> {
+    fn observe(&mut self, draw: &Draw) -> Option<PlanSet> {
+        let Draw::Sharded { stats, pooled, .. } = draw else {
+            unreachable!("fault-aware policy fed a single-replica draw")
+        };
+        // Drift first, against the topology the live plan was fitted
+        // for — byte-for-byte the AdaptivePolicy path while the fleet
+        // stays at full strength.
+        let ctx = self.ctx_at(self.fitted_active);
+        if let Some(new) = self.rp.observe_stats(&ctx, merge_shard_stats(stats), pooled) {
+            return Some(PlanSet::global(new));
+        }
+        // A confirmed topology change re-sizes the per-replica batch:
+        // warm-replan θ* for the surviving group. One forced refit per
+        // confirmed change — the optimizer keeping the incumbent (or
+        // failing, which enters the bounded-retry contract) still counts
+        // as planned-for, so the fleet doesn't refit every iteration.
+        if self.confirmed_active != self.fitted_active {
+            let iteration = self.rp.iterations_observed().saturating_sub(1);
+            let ctx = self.ctx_at(self.confirmed_active);
+            let swap = self.rp.force_replan(&ctx, iteration);
+            self.fitted_active = self.confirmed_active;
+            return swap.map(PlanSet::global);
+        }
+        None
+    }
+
+    fn take_events(&mut self) -> Vec<ReplanEvent> {
+        std::mem::take(&mut self.rp.events)
+    }
+
+    fn observe_health(&mut self, confirmed_active: usize) {
+        self.confirmed_active = confirmed_active;
     }
 }
 

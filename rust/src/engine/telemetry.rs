@@ -9,10 +9,12 @@
 //! of the old loops' epilogue, so results are bit-identical
 //! (`tests/engine_parity.rs`).
 
+use crate::fault::{FaultDelta, FaultStats};
 use crate::optimizer::plan::Theta;
 use crate::pipeline::build::IterationStats;
 use crate::sim::trainer::{RunResult, SystemKind};
 use crate::stream::replan::ReplanEvent;
+use crate::util::stats::quantile;
 use std::time::Duration;
 
 /// Everything one run accumulates across iterations.
@@ -33,6 +35,9 @@ pub struct Telemetry {
     /// Per-bucket module times pooled over iterations (Fig 4).
     pub bucket_enc_times: Vec<f64>,
     pub bucket_llm_times: Vec<f64>,
+    /// Injected-fault counters (fault-injected fleet runs; all zero
+    /// otherwise).
+    pub fault: FaultStats,
 }
 
 impl Telemetry {
@@ -43,6 +48,15 @@ impl Telemetry {
             straggler_gaps: Vec::with_capacity(iters),
             ..Telemetry::default()
         }
+    }
+
+    /// Fold one iteration boundary's fault-layer activity into the run's
+    /// counters — the single place injected-fault telemetry is recorded.
+    pub fn record_fault(&mut self, d: &FaultDelta) {
+        self.fault.failures += d.failures;
+        self.fault.recoveries += d.recoveries;
+        self.fault.reshard_events += usize::from(d.resharded);
+        self.fault.degraded_iters += usize::from(d.degraded);
     }
 
     /// Fold one executed iteration into the pooled distributions and
@@ -83,6 +97,14 @@ impl Telemetry {
             .sum::<f64>()
             / n;
         let replans = replan_events.iter().filter(|e| e.swapped).count();
+        let straggler_gap_percentiles = if self.straggler_gaps.is_empty() {
+            Vec::new()
+        } else {
+            [0.5, 0.9, 0.99]
+                .iter()
+                .map(|&q| (q, quantile(&self.straggler_gaps, q)))
+                .collect()
+        };
         RunResult {
             system,
             theta,
@@ -100,7 +122,9 @@ impl Telemetry {
             replans,
             replan_events,
             straggler_gaps: self.straggler_gaps,
+            straggler_gap_percentiles,
             migrations: self.migrations,
+            fault: self.fault,
             hetero_thetas,
             iterations: self.iterations,
         }
@@ -166,6 +190,45 @@ mod tests {
         // Zero-time encoder buckets are filtered, LLM buckets kept.
         assert!(r.bucket_enc_times.is_empty());
         assert_eq!(r.bucket_llm_times, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn fault_counters_and_gap_percentiles_flow_into_the_result() {
+        let mut t = Telemetry::new(4);
+        t.record_fault(&FaultDelta {
+            failures: 1,
+            recoveries: 0,
+            resharded: true,
+            degraded: true,
+        });
+        t.record_fault(&FaultDelta {
+            failures: 0,
+            recoveries: 1,
+            resharded: true,
+            degraded: false,
+        });
+        t.straggler_gaps = vec![1.0, 4.0, 2.0, 3.0];
+        for _ in 0..4 {
+            t.record_iteration(stats(2.0));
+        }
+        let r = t.finish(
+            SystemKind::DflopSharded,
+            theta(),
+            8,
+            1.0,
+            Duration::ZERO,
+            Vec::new(),
+            Vec::new(),
+        );
+        assert_eq!(r.fault.failures, 1);
+        assert_eq!(r.fault.recoveries, 1);
+        assert_eq!(r.fault.reshard_events, 2);
+        assert_eq!(r.fault.degraded_iters, 1);
+        let qs: Vec<f64> = r.straggler_gap_percentiles.iter().map(|&(q, _)| q).collect();
+        assert_eq!(qs, vec![0.5, 0.9, 0.99]);
+        let vs: Vec<f64> = r.straggler_gap_percentiles.iter().map(|&(_, v)| v).collect();
+        assert!(vs.windows(2).all(|w| w[0] <= w[1]), "percentiles are monotone: {vs:?}");
+        assert_eq!(r.straggler_gap_percentiles[0].1, 2.5, "median of the four gaps");
     }
 
     #[test]

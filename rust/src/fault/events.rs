@@ -1,0 +1,362 @@
+//! Seeded, replayable fault event streams.
+//!
+//! A [`FaultTrace`] is a deterministic schedule of cluster-health events —
+//! replica fail/recover, elastic shard join/leave, persistent stragglers
+//! with a slowdown factor, and degraded allreduce links — delivered at
+//! iteration boundaries only, so the bit-determinism contract (identical
+//! results at any `DFLOP_THREADS`) holds under injection. Traces come
+//! from named scenario keys or from the seeded long-horizon generator
+//! emulating hours of production churn; the same `(key, shards, seed)`
+//! triple always replays the same stream.
+
+use crate::util::rng::Rng;
+
+/// One kind of cluster-health transition. `Fail`/`Recover` model
+/// crashes, `Leave`/`Join` model deliberate elastic membership changes;
+/// both pairs move the same up/down bit and differ only in intent, so a
+/// trace can mix them freely.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Replica crash: the shard drops out of the DP group.
+    Fail { shard: usize },
+    /// A crashed replica comes back and rejoins the group.
+    Recover { shard: usize },
+    /// Elastic scale-down: the shard leaves the group deliberately.
+    Leave { shard: usize },
+    /// Elastic scale-up: the shard (re)joins the group.
+    Join { shard: usize },
+    /// Persistent straggler: every iteration on this shard runs
+    /// `slowdown`× slower (factor ≥ 1) until cleared.
+    Straggle { shard: usize, slowdown: f64 },
+    /// The straggling shard returns to full speed.
+    StraggleClear { shard: usize },
+    /// The cross-shard allreduce link degrades by `factor` (≥ 1).
+    LinkDegrade { factor: f64 },
+    /// The allreduce link returns to full bandwidth.
+    LinkRestore,
+}
+
+impl FaultKind {
+    /// The shard a per-shard event targets (`None` for link events).
+    pub fn shard(&self) -> Option<usize> {
+        match *self {
+            FaultKind::Fail { shard }
+            | FaultKind::Recover { shard }
+            | FaultKind::Leave { shard }
+            | FaultKind::Join { shard }
+            | FaultKind::Straggle { shard, .. }
+            | FaultKind::StraggleClear { shard } => Some(shard),
+            FaultKind::LinkDegrade { .. } | FaultKind::LinkRestore => None,
+        }
+    }
+}
+
+/// A fault delivered at the start of iteration `iteration`, before the
+/// batch is drawn.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub iteration: usize,
+    pub kind: FaultKind,
+}
+
+/// A replayable fault schedule over a DP group of `shards` slots.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultTrace {
+    pub key: String,
+    pub shards: usize,
+    /// Sorted by iteration; order within an iteration is delivery order.
+    pub events: Vec<FaultEvent>,
+}
+
+/// The slot the named scenarios straggle: slot 1 when the fleet is big
+/// enough, else slot 0 (the scenarios fail the *last* slot, so the two
+/// roles never collide on fleets of ≥ 2 shards).
+fn straggle_slot(shards: usize) -> usize {
+    usize::from(shards >= 3)
+}
+
+/// The acceptance scenario: a replica failure, an *escalating* straggler
+/// (1.25× then 1.7×, so a confirmation-debounced responder is already
+/// re-weighting when the worse factor lands), and a degraded allreduce
+/// link, all healing before the run ends. Pairs with the `skewed-shard`
+/// dataset so data skew and cluster faults overlap.
+fn skewed_churn(shards: usize) -> Vec<FaultEvent> {
+    let failed = shards - 1;
+    let slow = straggle_slot(shards);
+    vec![
+        ev(3, FaultKind::Fail { shard: failed }),
+        ev(5, FaultKind::Straggle { shard: slow, slowdown: 1.25 }),
+        ev(7, FaultKind::Straggle { shard: slow, slowdown: 1.7 }),
+        ev(9, FaultKind::LinkDegrade { factor: 1.8 }),
+        ev(13, FaultKind::Recover { shard: failed }),
+        ev(14, FaultKind::StraggleClear { shard: slow }),
+        ev(15, FaultKind::LinkRestore),
+    ]
+}
+
+/// Crash/recover plus a deliberate leave/join on another slot.
+fn churn(shards: usize) -> Vec<FaultEvent> {
+    vec![
+        ev(2, FaultKind::Fail { shard: shards - 1 }),
+        ev(6, FaultKind::Recover { shard: shards - 1 }),
+        ev(9, FaultKind::Leave { shard: 0 }),
+        ev(13, FaultKind::Join { shard: 0 }),
+    ]
+}
+
+/// One persistent straggler that never heals.
+fn straggler(shards: usize) -> Vec<FaultEvent> {
+    vec![ev(4, FaultKind::Straggle { shard: straggle_slot(shards), slowdown: 1.5 })]
+}
+
+/// A degraded allreduce link for a window of iterations.
+fn degraded_link() -> Vec<FaultEvent> {
+    vec![
+        ev(4, FaultKind::LinkDegrade { factor: 2.0 }),
+        ev(12, FaultKind::LinkRestore),
+    ]
+}
+
+/// Seeded long-horizon traffic trace: a per-iteration random walk over
+/// ~512 iterations of simulated production churn. Events are generated
+/// in iteration order with explicit bookkeeping, so every fault is
+/// properly paired, the fleet never empties, and the same seed always
+/// replays the same stream.
+fn long_horizon(shards: usize, seed: u64) -> Vec<FaultEvent> {
+    const HORIZON: usize = 512;
+    let mut rng = Rng::new(seed ^ 0xF1EE7);
+    let mut events = Vec::new();
+    let mut up = vec![true; shards];
+    let mut straggling = vec![false; shards];
+    let mut degraded = false;
+    for t in 8..HORIZON {
+        for shard in 0..shards {
+            if up[shard] {
+                let survivors = up.iter().filter(|u| **u).count();
+                if survivors > 1 && rng.chance(0.01) {
+                    up[shard] = false;
+                    events.push(ev(t, FaultKind::Fail { shard }));
+                }
+            } else if rng.chance(0.08) {
+                up[shard] = true;
+                events.push(ev(t, FaultKind::Recover { shard }));
+            }
+            if !straggling[shard] {
+                if rng.chance(0.008) {
+                    straggling[shard] = true;
+                    let slowdown = 1.0 + rng.uniform(0.2, 0.9);
+                    events.push(ev(t, FaultKind::Straggle { shard, slowdown }));
+                }
+            } else if rng.chance(0.06) {
+                straggling[shard] = false;
+                events.push(ev(t, FaultKind::StraggleClear { shard }));
+            }
+        }
+        if !degraded {
+            if rng.chance(0.004) {
+                degraded = true;
+                let factor = 1.0 + rng.uniform(0.3, 1.2);
+                events.push(ev(t, FaultKind::LinkDegrade { factor }));
+            }
+        } else if rng.chance(0.05) {
+            degraded = false;
+            events.push(ev(t, FaultKind::LinkRestore));
+        }
+    }
+    events
+}
+
+fn ev(iteration: usize, kind: FaultKind) -> FaultEvent {
+    FaultEvent { iteration, kind }
+}
+
+impl FaultTrace {
+    /// Build the named trace for a DP group of `shards` slots. `seed`
+    /// only feeds the `long-horizon` generator; the short named
+    /// scenarios are fixed schedules. Returns `None` for unknown keys
+    /// or fleets too small to inject into (< 2 shards).
+    pub fn by_key(key: &str, shards: usize, seed: u64) -> Option<FaultTrace> {
+        if shards < 2 {
+            return None;
+        }
+        let events = match key {
+            "none" => Vec::new(),
+            "churn" => churn(shards),
+            "straggler" => straggler(shards),
+            "degraded-link" => degraded_link(),
+            "skewed-churn" => skewed_churn(shards),
+            "long-horizon" => long_horizon(shards, seed),
+            _ => return None,
+        };
+        let events: Vec<FaultEvent> = events
+            .into_iter()
+            .filter(|e| e.kind.shard().is_none_or(|s| s < shards))
+            .collect();
+        Some(FaultTrace { key: key.to_string(), shards, events })
+    }
+
+    /// The scenario keys `by_key` accepts, for error messages.
+    pub fn keys() -> &'static [&'static str] {
+        &["none", "churn", "straggler", "degraded-link", "skewed-churn", "long-horizon"]
+    }
+}
+
+/// Instantaneous cluster health over the DP group's shard slots.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetHealth {
+    /// Whether each slot participates in the group this iteration.
+    pub up: Vec<bool>,
+    /// Execution-time multiplier per slot (1.0 = healthy, ≥ 1).
+    pub slowdown: Vec<f64>,
+    /// Cross-shard allreduce multiplier (1.0 = healthy, ≥ 1).
+    pub link_factor: f64,
+}
+
+impl FleetHealth {
+    pub fn healthy(shards: usize) -> FleetHealth {
+        assert!(shards >= 1, "a fleet needs at least one shard slot");
+        FleetHealth {
+            up: vec![true; shards],
+            slowdown: vec![1.0; shards],
+            link_factor: 1.0,
+        }
+    }
+
+    /// Active slot indices, ascending.
+    pub fn active(&self) -> Vec<usize> {
+        (0..self.up.len()).filter(|&s| self.up[s]).collect()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.up.iter().filter(|u| **u).count()
+    }
+
+    /// Anything off nominal: a down slot, a straggler, or a slow link.
+    pub fn is_degraded(&self) -> bool {
+        self.up.iter().any(|u| !u)
+            || self.slowdown.iter().any(|s| *s != 1.0)
+            || self.link_factor != 1.0
+    }
+
+    /// Apply one event; returns whether the state changed. Idempotent
+    /// (re-applying the same event is a no-op) and refuses to take down
+    /// the last active slot, so the group always has a survivor.
+    pub fn apply(&mut self, kind: FaultKind) -> bool {
+        match kind {
+            FaultKind::Fail { shard } | FaultKind::Leave { shard } => {
+                if self.up[shard] && self.n_active() > 1 {
+                    self.up[shard] = false;
+                    true
+                } else {
+                    false
+                }
+            }
+            FaultKind::Recover { shard } | FaultKind::Join { shard } => {
+                if !self.up[shard] {
+                    self.up[shard] = true;
+                    true
+                } else {
+                    false
+                }
+            }
+            FaultKind::Straggle { shard, slowdown } => {
+                assert!(slowdown >= 1.0, "slowdown factors are multipliers >= 1");
+                if self.slowdown[shard] != slowdown {
+                    self.slowdown[shard] = slowdown;
+                    true
+                } else {
+                    false
+                }
+            }
+            FaultKind::StraggleClear { shard } => {
+                if self.slowdown[shard] != 1.0 {
+                    self.slowdown[shard] = 1.0;
+                    true
+                } else {
+                    false
+                }
+            }
+            FaultKind::LinkDegrade { factor } => {
+                assert!(factor >= 1.0, "link factors are multipliers >= 1");
+                if self.link_factor != factor {
+                    self.link_factor = factor;
+                    true
+                } else {
+                    false
+                }
+            }
+            FaultKind::LinkRestore => {
+                if self.link_factor != 1.0 {
+                    self.link_factor = 1.0;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_key_covers_every_scenario_and_rejects_unknowns() {
+        for key in FaultTrace::keys() {
+            let t = FaultTrace::by_key(key, 4, 42).expect("named trace");
+            assert_eq!(t.key, *key);
+            assert_eq!(t.shards, 4);
+        }
+        assert!(FaultTrace::by_key("bogus", 4, 42).is_none());
+        assert!(FaultTrace::by_key("churn", 1, 42).is_none(), "no fleet to inject into");
+    }
+
+    #[test]
+    fn traces_are_sorted_in_bounds_and_survivable() {
+        for key in FaultTrace::keys() {
+            for shards in [2, 3, 4, 8] {
+                let t = FaultTrace::by_key(key, shards, 7).expect("named trace");
+                let mut health = FleetHealth::healthy(shards);
+                let mut last = 0usize;
+                for e in &t.events {
+                    assert!(e.iteration >= last, "{key}: events out of order");
+                    last = e.iteration;
+                    if let Some(s) = e.kind.shard() {
+                        assert!(s < shards, "{key}: shard {s} out of bounds");
+                    }
+                    health.apply(e.kind);
+                    assert!(health.n_active() >= 1, "{key}: fleet emptied");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn long_horizon_is_replayable_and_seed_sensitive() {
+        let a = FaultTrace::by_key("long-horizon", 4, 11).expect("trace");
+        let b = FaultTrace::by_key("long-horizon", 4, 11).expect("trace");
+        assert_eq!(a, b, "same (key, shards, seed) must replay bit-identically");
+        assert!(!a.events.is_empty(), "512 iterations of churn produce events");
+        let c = FaultTrace::by_key("long-horizon", 4, 12).expect("trace");
+        assert_ne!(a.events, c.events, "different seeds explore different churn");
+    }
+
+    #[test]
+    fn health_apply_is_idempotent_and_guards_the_last_survivor() {
+        let mut h = FleetHealth::healthy(2);
+        assert!(h.apply(FaultKind::Fail { shard: 0 }));
+        assert!(!h.apply(FaultKind::Fail { shard: 0 }), "re-applying is a no-op");
+        assert!(!h.apply(FaultKind::Fail { shard: 1 }), "last survivor stays up");
+        assert_eq!(h.active(), vec![1]);
+        assert!(h.apply(FaultKind::Recover { shard: 0 }));
+        assert_eq!(h, FleetHealth::healthy(2), "fail-then-recover round-trips");
+
+        assert!(h.apply(FaultKind::Straggle { shard: 1, slowdown: 1.5 }));
+        assert!(h.is_degraded());
+        assert!(h.apply(FaultKind::StraggleClear { shard: 1 }));
+        assert!(h.apply(FaultKind::LinkDegrade { factor: 2.0 }));
+        assert!(h.apply(FaultKind::LinkRestore));
+        assert!(!h.is_degraded());
+    }
+}

@@ -1,0 +1,240 @@
+//! Fault-injected elastic fleet: deterministic churn, stragglers, and
+//! link degradation threaded through the engine at iteration boundaries.
+//!
+//! [`FleetState`] replays a [`FaultTrace`] and keeps two views of
+//! cluster health. The **raw** view is physics: it decides which shards
+//! draw data this iteration and which slowdown/link factors
+//! `shard::sync` charges into the step barrier, and it applies to every
+//! system identically — a crashed replica is gone whether or not the
+//! planner is fault-aware. The **confirmed** view is the raw view
+//! debounced over `confirm` consecutive iterations (mirroring the drift
+//! detector's confirmation hysteresis), and is the only thing
+//! *responses* — slowdown-weighted batch splits, warm topology replans —
+//! may react to, so transient blips don't thrash the plan.
+
+pub mod events;
+
+pub use events::{FaultEvent, FaultKind, FaultTrace, FleetHealth};
+
+use crate::shard::ShardedDataset;
+
+/// What `FleetState::advance` did at one iteration boundary, for the
+/// engine's telemetry counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultDelta {
+    /// Shards taken down this boundary (crashes and elastic leaves).
+    pub failures: usize,
+    /// Shards brought back this boundary (recoveries and elastic joins).
+    pub recoveries: usize,
+    /// Whether active membership changed, forcing a deterministic
+    /// reshard of the batch split.
+    pub resharded: bool,
+    /// Whether the fleet runs this iteration off nominal health.
+    pub degraded: bool,
+}
+
+/// Aggregate fault counters carried on `RunResult`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultStats {
+    pub failures: usize,
+    pub recoveries: usize,
+    pub reshard_events: usize,
+    pub degraded_iters: usize,
+}
+
+/// The raw health the executor charges this iteration, in active-member
+/// order (parallel to the drawn per-shard batches).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetView {
+    /// Execution-time multiplier per active member (1.0 = healthy).
+    pub slowdown: Vec<f64>,
+    /// Cross-shard allreduce multiplier (1.0 = healthy).
+    pub link_factor: f64,
+}
+
+impl FleetView {
+    /// Whether charging would change anything. When false the executor
+    /// skips the degradation path entirely, keeping healthy iterations
+    /// bit-identical to a run without fault injection.
+    pub fn is_degrading(&self) -> bool {
+        self.link_factor != 1.0 || self.slowdown.iter().any(|s| *s != 1.0)
+    }
+}
+
+/// Replays a [`FaultTrace`] across a run, maintaining the raw and
+/// confirmed health views.
+#[derive(Clone, Debug)]
+pub struct FleetState {
+    trace: FaultTrace,
+    raw: FleetHealth,
+    confirmed: FleetHealth,
+    streak: usize,
+    confirm: usize,
+    respond: bool,
+    next_event: usize,
+}
+
+impl FleetState {
+    /// `confirm` is the number of consecutive diverged iterations before
+    /// the raw view is promoted to confirmed — pass the drift detector's
+    /// confirmation count so faults debounce like drift does.
+    pub fn new(trace: FaultTrace, respond: bool, confirm: usize) -> FleetState {
+        let shards = trace.shards;
+        FleetState {
+            trace,
+            raw: FleetHealth::healthy(shards),
+            confirmed: FleetHealth::healthy(shards),
+            streak: 0,
+            confirm: confirm.max(1),
+            respond,
+            next_event: 0,
+        }
+    }
+
+    /// Deliver every event due at `iteration`, then advance the
+    /// confirmation debounce one step. Call once per iteration, before
+    /// the batch is drawn.
+    pub fn advance(&mut self, iteration: usize) -> FaultDelta {
+        let mut d = FaultDelta::default();
+        while self.next_event < self.trace.events.len()
+            && self.trace.events[self.next_event].iteration <= iteration
+        {
+            let e = self.trace.events[self.next_event];
+            self.next_event += 1;
+            let active_before = self.raw.n_active();
+            if self.raw.apply(e.kind) {
+                match e.kind {
+                    FaultKind::Fail { .. } | FaultKind::Leave { .. } => d.failures += 1,
+                    FaultKind::Recover { .. } | FaultKind::Join { .. } => d.recoveries += 1,
+                    _ => {}
+                }
+                if self.raw.n_active() != active_before {
+                    d.resharded = true;
+                }
+            }
+        }
+        if self.raw == self.confirmed {
+            self.streak = 0;
+        } else {
+            self.streak += 1;
+            if self.streak >= self.confirm {
+                self.confirmed = self.raw.clone();
+                self.streak = 0;
+            }
+        }
+        d.degraded = self.raw.is_degraded();
+        d
+    }
+
+    /// Active shard slots this iteration (raw view — physics).
+    pub fn members(&self) -> Vec<usize> {
+        self.raw.active()
+    }
+
+    /// Per-member batch counts for this iteration. Responding fleets
+    /// weight the split by the *confirmed* inverse slowdown so confirmed
+    /// stragglers draw less work; non-responding fleets (and healthy
+    /// ones) split evenly, bit-identical to the un-injected path.
+    pub fn counts(&self, gbs: usize) -> Vec<usize> {
+        let members = self.members();
+        if self.respond {
+            let weights: Vec<f64> = members
+                .iter()
+                .map(|&s| 1.0 / self.confirmed.slowdown[s])
+                .collect();
+            ShardedDataset::weighted_counts(gbs, &weights)
+        } else {
+            ShardedDataset::split_counts(gbs, members.len())
+        }
+    }
+
+    /// The raw factors the executor must charge this iteration.
+    pub fn view(&self) -> FleetView {
+        FleetView {
+            slowdown: self.members().iter().map(|&s| self.raw.slowdown[s]).collect(),
+            link_factor: self.raw.link_factor,
+        }
+    }
+
+    /// Confirmed active-member count — what a fault-aware policy plans
+    /// for (debounced, so transient blips don't trigger replans).
+    pub fn confirmed_active(&self) -> usize {
+        self.confirmed.n_active()
+    }
+
+    pub fn raw_health(&self) -> &FleetHealth {
+        &self.raw
+    }
+
+    pub fn confirmed_health(&self) -> &FleetHealth {
+        &self.confirmed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(key: &str, respond: bool) -> FleetState {
+        let trace = FaultTrace::by_key(key, 4, 42).expect("named trace");
+        FleetState::new(trace, respond, 2)
+    }
+
+    #[test]
+    fn advance_counts_faults_and_debounces_confirmation() {
+        let mut fs = fleet("skewed-churn", true);
+        for it in 0..3 {
+            let d = fs.advance(it);
+            assert_eq!(d, FaultDelta::default(), "healthy prefix at iteration {it}");
+        }
+        let d = fs.advance(3);
+        assert_eq!(d.failures, 1);
+        assert!(d.resharded);
+        assert!(d.degraded);
+        assert_eq!(fs.members(), vec![0, 1, 2], "raw membership shrinks immediately");
+        assert_eq!(fs.confirmed_active(), 4, "confirmation lags the raw view");
+        fs.advance(4);
+        assert_eq!(fs.confirmed_active(), 3, "promoted after `confirm` iterations");
+        let mut recoveries = 0;
+        for it in 5..18 {
+            recoveries += fs.advance(it).recoveries;
+        }
+        assert_eq!(recoveries, 1);
+        assert_eq!(fs.members(), vec![0, 1, 2, 3]);
+        assert!(!fs.raw_health().is_degraded(), "skewed-churn heals by the end");
+    }
+
+    #[test]
+    fn responding_fleets_shift_work_off_confirmed_stragglers() {
+        let mut fs = fleet("skewed-churn", true);
+        for it in 0..9 {
+            fs.advance(it);
+        }
+        // By iteration 8 the 1.7x straggler on slot 1 is confirmed and
+        // slot 3 is still down (it recovers at iteration 13).
+        let counts = fs.counts(48);
+        assert_eq!(counts.iter().sum::<usize>(), 48);
+        assert_eq!(counts.len(), 3, "slot 3 is down");
+        assert!(
+            counts[1] < counts[0] && counts[1] < counts[2],
+            "confirmed straggler draws the least work: {counts:?}"
+        );
+
+        let mut st = fleet("skewed-churn", false);
+        for it in 0..9 {
+            st.advance(it);
+        }
+        assert_eq!(st.counts(48), vec![16, 16, 16], "static fleets split evenly");
+    }
+
+    #[test]
+    fn healthy_fleet_views_do_not_degrade() {
+        let mut fs = fleet("none", true);
+        for it in 0..20 {
+            let d = fs.advance(it);
+            assert_eq!(d, FaultDelta::default());
+        }
+        assert!(!fs.view().is_degrading());
+        assert_eq!(fs.counts(48), ShardedDataset::split_counts(48, 4));
+    }
+}

@@ -30,7 +30,7 @@ use crate::profiling::engine::{profile_data, ModelProfiler, ProfilerGrids};
 use crate::scheduler::ilp;
 use crate::scheduler::lpt::{self, ItemCost};
 use crate::shard::ShardConfig;
-use crate::sim::{run_cells, Cell, RunConfig, RunResult, SystemKind};
+use crate::sim::{run_cells, Cell, FaultConfig, RunConfig, RunResult, SystemKind};
 use crate::util::stats::{BoxPlot, Histogram, Summary};
 use crate::util::table::{bytes, f, secs, speedup, Table};
 
@@ -972,6 +972,148 @@ pub fn fig_hetero(o: &FigOpts) -> String {
 }
 
 // ------------------------------------------------------------------
+// Fig 20 (extension) — fault-injected elastic fleet: static θ* vs
+// degradation-aware replanning under the same deterministic FaultTrace
+// ------------------------------------------------------------------
+
+/// Minimum iterations for a fleet-grid run: the scripted fault scenarios
+/// play out over ~16 iterations (last recovery at 15), and the comparison
+/// needs post-heal iterations on both sides. Shared with the
+/// `fleet_churn` example.
+pub const FLEET_MIN_ITERS: usize = 18;
+
+/// The (fault scenario × {static θ*, fault-aware}) evaluation grid behind
+/// Fig 20 and the `fleet_churn` example. Both arms replay the *same*
+/// seeded [`crate::fault::FaultTrace`] — identical failures, stragglers,
+/// and link degradation — and differ only in whether the system responds
+/// (slowdown-weighted resharding + warm topology replans). Rebalancing is
+/// off: the cost balancer is slowdown-blind, so it would fight the
+/// fault-aware batch weighting. The "none" control pins the zero-replans
+/// guarantee. Returns `(trace, dataset, static, aware)` rows in scenario
+/// order.
+pub fn fleet_grid_with(
+    o: &FigOpts,
+    dp_shards: usize,
+) -> Vec<(&'static str, &'static str, RunResult, RunResult)> {
+    let m = llava_ov(llama3("8b"));
+    let iters = o.iters.max(FLEET_MIN_ITERS);
+    let scenarios: [(&'static str, &'static str); 5] = [
+        ("skewed-churn", "skewed-shard"),
+        ("churn", "mixed"),
+        ("straggler", "mixed"),
+        ("degraded-link", "mixed"),
+        ("none", "skewed-shard"),
+    ];
+    let mut cells = Vec::new();
+    for (trace, dataset) in scenarios {
+        for respond in [false, true] {
+            let mut cfg = RunConfig::new(o.nodes, o.gbs, iters, o.seed);
+            cfg.shard = Some(ShardConfig {
+                dp_shards,
+                rebalance: false,
+                window_batches: 4,
+                ..ShardConfig::default()
+            });
+            cfg.faults = Some(FaultConfig { trace: trace.to_string(), respond });
+            cells.push(Cell {
+                kind: SystemKind::DflopSharded,
+                m: m.clone(),
+                dataset: dataset.to_string(),
+                cfg,
+            });
+        }
+    }
+    let mut results = run_cells(&cells).expect("built-in scenario keys").into_iter();
+    scenarios
+        .into_iter()
+        .map(|(trace, dataset)| {
+            let stat = results.next().expect("grid row");
+            let aware = results.next().expect("grid row");
+            (trace, dataset, stat, aware)
+        })
+        .collect()
+}
+
+/// [`fleet_grid_with`] at the default shard count.
+pub fn fleet_grid(o: &FigOpts) -> Vec<(&'static str, &'static str, RunResult, RunResult)> {
+    fleet_grid_with(o, ShardConfig::default().dp_shards)
+}
+
+pub fn fig_fleet(o: &FigOpts) -> String {
+    let mut t = Table::new(
+        "Fig 20 — fault-injected fleet: static θ* vs degradation-aware replanning (same FaultTrace both arms, LLaVA-OV / Llama-3 8B, 4 DP shards)",
+        &[
+            "fault trace",
+            "static step (s)",
+            "aware step (s)",
+            "gain",
+            "worst gap static (s)",
+            "worst gap aware (s)",
+            "fail/rec",
+            "degr iters",
+            "replans",
+        ],
+    );
+    let rows = fleet_grid(o);
+    // Survival threshold: 1.25× the healthy fleet's mean step (the
+    // "none"-trace aware arm is the healthy control by construction).
+    let control = rows
+        .iter()
+        .find(|(trace, ..)| *trace == "none")
+        .map(|(_, _, _, aware)| aware.mean_iteration_time)
+        .expect("none control in the grid");
+    let worst = |r: &RunResult| r.straggler_gaps.iter().cloned().fold(0.0f64, f64::max);
+    let mut survival = String::from(
+        "survival (fraction of iterations with step <= 1.25x healthy mean):\n",
+    );
+    let mut notes = String::new();
+    for (trace, dataset, stat, aware) in &rows {
+        t.row(vec![
+            format!("{trace} ({dataset})"),
+            f(stat.mean_iteration_time, 3),
+            f(aware.mean_iteration_time, 3),
+            speedup(stat.mean_iteration_time / aware.mean_iteration_time),
+            f(worst(stat), 3),
+            f(worst(aware), 3),
+            format!("{}/{}", aware.fault.failures, aware.fault.recoveries),
+            format!("{}", aware.fault.degraded_iters),
+            format!("{}", aware.replans),
+        ]);
+        let survive = |r: &RunResult| {
+            let ok = r
+                .iterations
+                .iter()
+                .filter(|s| s.iteration_time <= 1.25 * control)
+                .count();
+            ok as f64 / r.iterations.len().max(1) as f64
+        };
+        survival.push_str(&format!(
+            "  {trace:14} static {:.2}  aware {:.2}\n",
+            survive(stat),
+            survive(aware)
+        ));
+        if *trace == "none" {
+            notes.push_str(&format!(
+                "fault-free control: {} replans (must be 0), {} fault events\n",
+                aware.replans,
+                aware.fault.failures + aware.fault.recoveries,
+            ));
+        }
+        if *trace == "skewed-churn" {
+            if let Some((q, p99)) = aware.straggler_gap_percentiles.last() {
+                notes.push_str(&format!(
+                    "straggler gap p{:.0} under skewed-churn: static {:.3}s, aware {:.3}s\n",
+                    q * 100.0,
+                    stat.straggler_gap_percentiles.last().map_or(0.0, |&(_, v)| v),
+                    p99,
+                ));
+            }
+        }
+    }
+    t.render() + &survival + &notes
+}
+
+// ------------------------------------------------------------------
 // Tables 2 and 4
 // ------------------------------------------------------------------
 
@@ -1054,6 +1196,7 @@ pub fn all(o: &FigOpts) -> String {
     out.push_str(&fig_drift(o));
     out.push_str(&fig_shard(o));
     out.push_str(&fig_hetero(o));
+    out.push_str(&fig_fleet(o));
     out.push_str(&table2(o));
     out.push_str(&table4(o));
     out
@@ -1078,6 +1221,7 @@ pub fn by_id(id: &str, o: &FigOpts) -> Option<String> {
         "17" | "drift" => fig_drift(o),
         "18" | "shard" => fig_shard(o),
         "19" | "hetero" => fig_hetero(o),
+        "20" | "fleet" => fig_fleet(o),
         "all" => all(o),
         _ => return None,
     })

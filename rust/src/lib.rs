@@ -29,6 +29,7 @@ pub mod baselines;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod fault;
 pub mod figures;
 pub mod perfmodel;
 pub mod pipeline;

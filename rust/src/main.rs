@@ -2,10 +2,11 @@
 //! optimizer/scheduler inspection, and real-artifact profiling.
 //!
 //! ```text
-//! dflop figures --fig <1|2|4|7|8|9|10|11|12|13|14|15|16|17|drift|18|shard|19|hetero|all> [--nodes N] [--gbs N] [--iters N] [--seed S] [--threads N]
+//! dflop figures --fig <1|2|4|7|8|9|10|11|12|13|14|15|16|17|drift|18|shard|19|hetero|20|fleet|all> [--nodes N] [--gbs N] [--iters N] [--seed S] [--threads N]
 //! dflop table   --n <2|4>
 //! dflop run     --system <dflop|adaptive|sharded|megatron|pytorch|opt-only|sched-only> --model <key> --dataset <key>
 //!               [--dp-shards N] [--shard-skew <skewed|hot|laggard|homogeneous>] [--static-sharding] [--hetero-plans]   # --system sharded
+//!               [--faults <none|churn|straggler|degraded-link|skewed-churn|long-horizon>] [--static-faults]            # fault-injected fleet
 //! dflop optimize --model <key> --nodes N --gbs N
 //! dflop profile-real [--artifacts DIR]      # PJRT timing (needs `xla` feature)
 //! dflop models                              # list catalog keys
@@ -21,7 +22,7 @@ use dflop::bail;
 use dflop::err;
 use dflop::figures::{by_id, table2, table4, FigOpts};
 use dflop::model::catalog;
-use dflop::sim::{RunConfig, SystemKind};
+use dflop::sim::{FaultConfig, RunConfig, SystemKind};
 use dflop::util::cli::{Args, Spec};
 use dflop::util::error::Result;
 use std::process::ExitCode;
@@ -50,9 +51,9 @@ fn real_main() -> Result<()> {
     let spec = Spec {
         valued: vec![
             "fig", "n", "nodes", "gbs", "iters", "seed", "system", "model", "dataset",
-            "artifacts", "threads", "dp-shards", "shard-skew",
+            "artifacts", "threads", "dp-shards", "shard-skew", "faults",
         ],
-        boolean: vec!["help", "static-sharding", "hetero-plans"],
+        boolean: vec!["help", "static-sharding", "hetero-plans", "static-faults"],
     };
     let args = Args::parse(std::env::args().skip(1), &spec)?;
     // Pool width for every parallel section below (0 = auto-detect).
@@ -116,6 +117,15 @@ fn real_main() -> Result<()> {
                         "unknown --shard-skew '{other}' (skewed|hot|laggard|homogeneous)"
                     ),
                 }
+                // --faults <trace> injects a deterministic fault scenario;
+                // --static-faults keeps the static-θ* arm that absorbs the
+                // same physics without responding.
+                if let Some(trace) = args.get("faults") {
+                    cfg.faults = Some(FaultConfig {
+                        trace: trace.to_string(),
+                        respond: !args.has("static-faults"),
+                    });
+                }
             }
             // The engine entry returns a Result, so a bad key is a clean
             // CLI error instead of a panic inside a worker thread.
@@ -140,6 +150,18 @@ fn real_main() -> Result<()> {
                 println!("total GPUs    : {}", r.n_gpus);
                 println!("migrations    : {}", r.migrations);
                 println!("straggler gap : {:.3} s (mean over iterations)", r.mean_straggler_gap());
+                if let Some(fc) = &cfg.faults {
+                    println!("fault trace   : {} ({})", fc.trace,
+                        if fc.respond { "degradation-aware" } else { "static θ* arm" });
+                    println!(
+                        "fault events  : {} failures, {} recoveries, {} reshards, {} degraded iters",
+                        r.fault.failures, r.fault.recoveries,
+                        r.fault.reshard_events, r.fault.degraded_iters
+                    );
+                    for (q, v) in &r.straggler_gap_percentiles {
+                        println!("  gap p{:<4} : {v:.3} s", q * 100.0);
+                    }
+                }
                 if !r.hetero_thetas.is_empty() {
                     println!("per-replica θ :");
                     for (i, t) in r.hetero_thetas.iter().enumerate() {
@@ -250,7 +272,10 @@ fn real_main() -> Result<()> {
                  --shard-skew <skewed|hot|laggard|homogeneous> (per-shard data skew \
                  scenario; homogeneous keeps --dataset), --static-sharding \
                  (disable cross-shard rebalancing: the baseline), --hetero-plans \
-                 (fit per-replica plans behind the skew gate)"
+                 (fit per-replica plans behind the skew gate), --faults <key> \
+                 (inject a deterministic fault trace: none|churn|straggler|\
+                 degraded-link|skewed-churn|long-horizon), --static-faults \
+                 (absorb the faults without responding: the comparison arm)"
             );
             println!("see rust/src/main.rs header or DESIGN.md for details");
         }

@@ -89,14 +89,68 @@ impl ShardedDataset {
         (0..shards).map(|r| base + usize::from(r < rem)).collect()
     }
 
+    /// Split a global batch over weighted slots (largest-remainder
+    /// apportionment, ties to the lower index). A slot's share is
+    /// proportional to its weight; every slot keeps at least one item
+    /// whenever `gbs` covers it, so every active replica keeps drawing
+    /// from its stream. Equal weights delegate to
+    /// [`ShardedDataset::split_counts`] so the healthy path stays
+    /// bit-identical to the even split.
+    pub fn weighted_counts(gbs: usize, weights: &[f64]) -> Vec<usize> {
+        assert!(!weights.is_empty(), "split over zero shards");
+        assert!(
+            weights.iter().all(|w| w.is_finite() && *w > 0.0),
+            "weights must be positive and finite: {weights:?}"
+        );
+        let n = weights.len();
+        if weights.iter().all(|w| *w == weights[0]) {
+            return Self::split_counts(gbs, n);
+        }
+        let floor_each = usize::from(gbs >= n);
+        let spare = gbs - floor_each * n;
+        let total: f64 = weights.iter().sum();
+        let quota: Vec<f64> = weights.iter().map(|w| spare as f64 * w / total).collect();
+        let mut counts: Vec<usize> = quota.iter().map(|q| q.floor() as usize).collect();
+        let assigned: usize = counts.iter().sum();
+        let mut by_frac: Vec<usize> = (0..n).collect();
+        by_frac.sort_by(|&a, &b| {
+            let (fa, fb) = (quota[a] - quota[a].floor(), quota[b] - quota[b].floor());
+            fb.partial_cmp(&fa).expect("finite fractions").then(a.cmp(&b))
+        });
+        for &slot in by_frac.iter().take(spare - assigned) {
+            counts[slot] += 1;
+        }
+        for c in &mut counts {
+            *c += floor_each;
+        }
+        counts
+    }
+
     /// Draw one global batch: `counts[r]` shaped items from shard r's own
     /// stream, in shard order.
     pub fn shard_batches(&mut self, m: &Mllm, counts: &[usize]) -> Vec<Vec<ItemShape>> {
         assert_eq!(counts.len(), self.shards.len(), "one count per shard");
-        self.shards
-            .iter_mut()
+        let members: Vec<usize> = (0..self.shards.len()).collect();
+        self.shard_batches_members(m, &members, counts)
+    }
+
+    /// Draw one global batch over an elastic membership: `counts[i]`
+    /// shaped items from shard `members[i]`'s own stream, in member
+    /// order. Inactive shards are skipped entirely — their streams do
+    /// not advance while they are out of the group — so the draw is a
+    /// pure function of each member's own stream position, regardless of
+    /// who else is in the group.
+    pub fn shard_batches_members(
+        &mut self,
+        m: &Mllm,
+        members: &[usize],
+        counts: &[usize],
+    ) -> Vec<Vec<ItemShape>> {
+        assert_eq!(counts.len(), members.len(), "one count per active member");
+        members
+            .iter()
             .zip(counts)
-            .map(|(d, &n)| d.shaped_batch(m, n))
+            .map(|(&r, &n)| self.shards[r].shaped_batch(m, n))
             .collect()
     }
 
@@ -140,6 +194,55 @@ mod tests {
                 gbs
             );
         }
+    }
+
+    #[test]
+    fn weighted_counts_apportion_by_weight() {
+        // Equal weights are bit-identical to the even split.
+        assert_eq!(
+            ShardedDataset::weighted_counts(10, &[1.0; 4]),
+            ShardedDataset::split_counts(10, 4)
+        );
+        // A 2x-slower slot (half weight) draws roughly half the work,
+        // and the split still partitions the batch exactly.
+        let counts = ShardedDataset::weighted_counts(48, &[1.0, 0.5, 1.0, 1.0]);
+        assert_eq!(counts.iter().sum::<usize>(), 48);
+        assert!(counts[1] < counts[0], "{counts:?}");
+        assert!(counts[1] >= 48 / 4 / 2, "{counts:?}");
+        // Every slot keeps at least one item when the batch covers it.
+        let tiny = ShardedDataset::weighted_counts(4, &[10.0, 0.1, 0.1, 0.1]);
+        assert_eq!(tiny.iter().sum::<usize>(), 4);
+        assert!(tiny.iter().all(|&c| c >= 1), "{tiny:?}");
+        // Deterministic: same inputs, same split.
+        assert_eq!(
+            ShardedDataset::weighted_counts(31, &[1.0, 0.7, 0.4]),
+            ShardedDataset::weighted_counts(31, &[1.0, 0.7, 0.4])
+        );
+    }
+
+    #[test]
+    fn member_draws_skip_inactive_shards_and_preserve_streams() {
+        let m = llava_ov(llama3("8b"));
+        let counts = ShardedDataset::split_counts(48, 4);
+        let mut full = ShardedDataset::by_key("skewed-shard", 4, 9).expect("scenario");
+        let mut elastic = ShardedDataset::by_key("skewed-shard", 4, 9).expect("scenario");
+        // Full membership is bit-identical to the plain draw.
+        let all: Vec<usize> = (0..4).collect();
+        assert_eq!(
+            full.shard_batches(&m, &counts),
+            elastic.shard_batches_members(&m, &all, &counts)
+        );
+        // Skipping shard 3 for a draw leaves its stream untouched: each
+        // shard's next batch depends only on its own stream position,
+        // not on who else was in the group.
+        let full_next = full.shard_batches(&m, &counts);
+        let partial = elastic.shard_batches_members(&m, &[0, 1, 2], &counts[..3]);
+        assert_eq!(partial[..], full_next[..3], "survivors draw as if nothing changed");
+        let rejoined = elastic.shard_batches_members(&m, &[3], &counts[3..]);
+        assert_eq!(
+            rejoined[0], full_next[3],
+            "the skipped shard resumes exactly where it left off"
+        );
     }
 
     #[test]

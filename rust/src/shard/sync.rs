@@ -52,6 +52,37 @@ pub fn step_barrier(per_replica: Vec<f64>, allreduce: f64) -> BarrierStats {
     }
 }
 
+/// Charge a persistent-straggler slowdown into one replica's iteration:
+/// every time term (makespan, busy/idle, bucket execution, intra-replica
+/// sync) stretches by `factor`, while FLOP counts stay untouched — the
+/// replica does the same work on slower hardware. The per-iteration
+/// `timeline` is left alone: the cross-shard merge drops it. Charging
+/// happens *before* the step barrier, so the factor flows into the step
+/// time and the straggler gap exactly like organic data skew does.
+pub fn charge_straggler(stats: &mut IterationStats, factor: f64) {
+    assert!(factor >= 1.0, "slowdown factors are multipliers >= 1");
+    stats.iteration_time *= factor;
+    stats.pipeline_makespan *= factor;
+    stats.dp_sync_time *= factor;
+    for t in &mut stats.stage_busy {
+        *t *= factor;
+    }
+    for t in &mut stats.stage_idle {
+        *t *= factor;
+    }
+    for b in &mut stats.buckets {
+        b.enc_time *= factor;
+        b.llm_time *= factor;
+    }
+}
+
+/// A degraded cross-shard link stretches the second-level allreduce by
+/// `link_factor` (≥ 1; 1.0 is a no-op, bit for bit).
+pub fn degraded_allreduce(allreduce: f64, link_factor: f64) -> f64 {
+    assert!(link_factor >= 1.0, "link factors are multipliers >= 1");
+    allreduce * link_factor
+}
+
 /// Per-GPU gradient slice each module ships through the cross-shard ring
 /// under θ: `(encoder bytes, llm bytes)`. The single source of the byte
 /// term shared by [`cross_shard_allreduce`] and the hetero plan guard
@@ -178,6 +209,44 @@ mod tests {
         let single = step_barrier(vec![4.0], 0.0);
         assert_eq!(single.step_time, 4.0);
         assert_eq!(single.straggler_gap, 0.0);
+    }
+
+    #[test]
+    fn straggler_charge_scales_time_terms_but_not_flops() {
+        let m = llava_ov(llama3("8b"));
+        let truth = Truth::smooth(ClusterSpec::hgx_a100(1));
+        let th = theta();
+        let mut ds = Dataset::mixed(13);
+        let buckets = {
+            let mut backend = SimBackend::new(truth.clone());
+            let profile =
+                ModelProfiler::new(&mut backend, ProfilerGrids::coarse(8)).profile(&m);
+            let est = Estimator::new(&m, &profile.throughput);
+            lpt_shard_buckets(&est, th, &ds.shaped_batch(&m, 12))
+        };
+        let plan = SystemPlan { m: &m, truth: &truth, theta: th };
+        let mut ws = SimWorkspace::new();
+        let healthy = iterate_ws(&plan, &buckets, &mut ws);
+        let mut charged = healthy.clone();
+        charge_straggler(&mut charged, 1.5);
+        assert_eq!(charged.iteration_time, healthy.iteration_time * 1.5);
+        assert_eq!(charged.pipeline_makespan, healthy.pipeline_makespan * 1.5);
+        assert_eq!(charged.total_flop.to_bits(), healthy.total_flop.to_bits());
+        for (c, h) in charged.buckets.iter().zip(&healthy.buckets) {
+            assert_eq!(c.enc_time, h.enc_time * 1.5);
+            assert_eq!(c.llm_time, h.llm_time * 1.5);
+            assert_eq!(c.enc_flop.to_bits(), h.enc_flop.to_bits());
+        }
+        // The charged replica raises the barrier like an organic laggard.
+        let b = step_barrier(vec![healthy.iteration_time, charged.iteration_time], 0.0);
+        assert!(b.straggler_gap > 0.0);
+        assert_eq!(b.step_time, charged.iteration_time);
+    }
+
+    #[test]
+    fn degraded_link_stretches_the_allreduce() {
+        assert_eq!(degraded_allreduce(0.25, 2.0), 0.5);
+        assert_eq!(degraded_allreduce(0.25, 1.0).to_bits(), 0.25_f64.to_bits());
     }
 
     #[test]

@@ -5,4 +5,4 @@
 //! this module keeps the run vocabulary and entry points.
 pub mod trainer;
 
-pub use trainer::{run_cells, run_system, Cell, RunConfig, RunResult, SystemKind};
+pub use trainer::{run_cells, run_system, Cell, FaultConfig, RunConfig, RunResult, SystemKind};

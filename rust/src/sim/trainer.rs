@@ -15,6 +15,7 @@
 //! [`RunResult`], [`Cell`]) and the two historical entry points, both thin
 //! delegates to [`crate::engine::run`].
 
+use crate::fault::FaultStats;
 use crate::model::catalog::Mllm;
 use crate::optimizer::plan::Theta;
 use crate::pipeline::build::IterationStats;
@@ -86,6 +87,28 @@ pub struct RunConfig {
     /// Shard-layer tuning for [`SystemKind::DflopSharded`] runs (`None` =
     /// [`ShardConfig::default`]); ignored by other systems.
     pub shard: Option<ShardConfig>,
+    /// Fault injection for [`SystemKind::DflopSharded`] fleet runs:
+    /// `None` runs the healthy pipeline untouched. Requires `shard` with
+    /// `dp_shards >= 2` and no `hetero` (validated up front).
+    pub faults: Option<FaultConfig>,
+}
+
+/// Fault-injection arm of a fleet run.
+#[derive(Clone, Debug)]
+pub struct FaultConfig {
+    /// Scenario key for [`crate::fault::FaultTrace::by_key`] — one of
+    /// `none|churn|straggler|degraded-link|skewed-churn|long-horizon`.
+    pub trace: String,
+    /// `true` = degradation-aware arm (slowdown-weighted resharding +
+    /// warm topology replans); `false` = static-θ* arm that absorbs the
+    /// same injected physics without responding.
+    pub respond: bool,
+}
+
+impl Default for FaultConfig {
+    fn default() -> FaultConfig {
+        FaultConfig { trace: "none".to_string(), respond: true }
+    }
 }
 
 impl RunConfig {
@@ -101,6 +124,7 @@ impl RunConfig {
             injected: Vec::new(),
             replan: None,
             shard: None,
+            faults: None,
         }
     }
 }
@@ -137,9 +161,15 @@ pub struct RunResult {
     /// Per-iteration cross-shard straggler gap — the slowest replica's
     /// lead over the fastest (sharded runs; empty elsewhere).
     pub straggler_gaps: Vec<f64>,
+    /// `(quantile, gap)` percentiles of `straggler_gaps` at p50/p90/p99
+    /// (sharded runs; empty elsewhere).
+    pub straggler_gap_percentiles: Vec<(f64, f64)>,
     /// Total items migrated across shards over the run (sharded runs;
     /// 0 elsewhere — and 0 on homogeneous shards is the quiet guarantee).
     pub migrations: usize,
+    /// Injected-fault counters of a fleet run (all zero without
+    /// `RunConfig::faults`).
+    pub fault: FaultStats,
     /// The assigned per-replica plans of a heterogeneous sharded run, in
     /// shard order (empty everywhere else — including hetero runs whose
     /// shards never diverged from the global θ).

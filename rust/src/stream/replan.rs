@@ -42,6 +42,14 @@ pub struct ReplanConfig {
     pub reservoir: usize,
     /// Iterations after a replan before drift is evaluated again.
     pub cooldown: usize,
+    /// Base cooldown after a *failed* refit (optimizer found no feasible
+    /// plan): the retry fires after `retry_backoff << (attempt − 1)`
+    /// iterations, capped at `cooldown`, instead of silently keeping the
+    /// stale θ* for a full cooldown.
+    pub retry_backoff: usize,
+    /// Failed-refit retries before giving up: the stale plan is then
+    /// accepted as the new reference and the normal cadence resumes.
+    pub max_refit_retries: usize,
     /// Detector thresholds (hysteresis + confirmation).
     pub drift: DriftConfig,
 }
@@ -52,6 +60,8 @@ impl Default for ReplanConfig {
             window_batches: 8,
             reservoir: 384,
             cooldown: 8,
+            retry_backoff: 2,
+            max_refit_retries: 3,
             drift: DriftConfig::default(),
         }
     }
@@ -121,6 +131,7 @@ pub struct Replanner {
     pub events: Vec<ReplanEvent>,
     cooldown: usize,
     iteration: usize,
+    failed_refits: usize,
 }
 
 impl Replanner {
@@ -135,6 +146,7 @@ impl Replanner {
             events: Vec::new(),
             cooldown: 0,
             iteration: 0,
+            failed_refits: 0,
             cfg,
         }
     }
@@ -185,37 +197,107 @@ impl Replanner {
     /// Confirmed drift: refit `D` from the reservoir and warm-restart the
     /// optimizer from the incumbent.
     fn replan(&mut self, ctx: &ReplanContext, iteration: usize) -> Option<Theta> {
+        let stat = self.detector.last.expect("observe ran before replan");
+        self.refit(ctx, iteration, stat)
+    }
+
+    /// Refit for a *confirmed external event* — a debounced topology
+    /// change reported by the fault layer — rather than for data drift:
+    /// same reservoir refit, warm restart, event record, and cooldown as
+    /// a drift replan, but triggered by the caller. Returns `None` before
+    /// any batch has been observed (nothing to refit from) or when the
+    /// optimizer keeps the incumbent plan.
+    pub fn force_replan(&mut self, ctx: &ReplanContext, iteration: usize) -> Option<Theta> {
+        if self.reservoir.shapes().is_empty() {
+            return None;
+        }
+        // Not a drift trigger: record whatever the detector last measured
+        // (zero statistics if it never evaluated a window).
+        let stat = self.detector.last.unwrap_or(DriftStat {
+            quantile_dist: 0.0,
+            units_dist: 0.0,
+            mix_tv: 0.0,
+        });
+        self.refit(ctx, iteration, stat)
+    }
+
+    fn refit(&mut self, ctx: &ReplanContext, iteration: usize, stat: DriftStat) -> Option<Theta> {
         let t0 = Instant::now();
         let live = live_profile(ctx.m, self.reservoir.shapes());
         let inp = ctx.inputs(&live);
-        let stat = self.detector.last.expect("observe ran before replan");
-        let (new, expected, swapped) = match optimize_warm(&inp, Some(self.theta)) {
-            Some(r) => (r.theta, r.expected_makespan, r.theta != self.theta),
+        match optimize_warm(&inp, Some(self.theta)) {
+            Some(r) => {
+                let swapped = r.theta != self.theta;
+                self.events.push(ReplanEvent {
+                    iteration,
+                    stat,
+                    old: self.theta,
+                    new: r.theta,
+                    swapped,
+                    expected_makespan: r.expected_makespan,
+                    elapsed: t0.elapsed(),
+                });
+                self.theta = r.theta;
+                self.failed_refits = 0;
+                // Rebase: the new plan was fitted to (approximately) the
+                // current window; measure future drift against it, and
+                // hold off while the window refills with post-swap
+                // batches.
+                self.detector.rebase(self.window.stats().clone());
+                self.cooldown = self.cfg.cooldown;
+                swapped.then_some(r.theta)
+            }
             // No feasible plan under the live distribution (should not
             // happen when the incumbent itself is feasible): keep θ.
-            None => (self.theta, f64::NAN, false),
-        };
-        self.events.push(ReplanEvent {
-            iteration,
-            stat,
-            old: self.theta,
-            new,
-            swapped,
-            expected_makespan: expected,
-            elapsed: t0.elapsed(),
-        });
-        self.theta = new;
-        // Rebase: the new plan was fitted to (approximately) the current
-        // window; measure future drift against it, and hold off while the
-        // window refills with post-swap batches.
-        self.detector.rebase(self.window.stats().clone());
-        self.cooldown = self.cfg.cooldown;
-        swapped.then_some(new)
+            None => {
+                self.failed_refits += 1;
+                self.events.push(ReplanEvent {
+                    iteration,
+                    stat,
+                    old: self.theta,
+                    new: self.theta,
+                    swapped: false,
+                    expected_makespan: f64::NAN,
+                    elapsed: t0.elapsed(),
+                });
+                if self.failed_refits <= self.cfg.max_refit_retries {
+                    // Bounded deterministic retry: no rebase (the detector
+                    // keeps firing on the unchanged reference) and an
+                    // exponentially backed-off cooldown, so the refit gets
+                    // another chance soon instead of silently keeping the
+                    // stale θ* for a full cooldown.
+                    self.cooldown = (self.cfg.retry_backoff << (self.failed_refits - 1))
+                        .clamp(1, self.cfg.cooldown.max(1));
+                } else {
+                    // Retries exhausted: accept the stale plan as the new
+                    // reference and return to the normal cadence.
+                    self.failed_refits = 0;
+                    self.detector.rebase(self.window.stats().clone());
+                    self.cooldown = self.cfg.cooldown;
+                }
+                None
+            }
+        }
     }
 
     /// Confirmed drifts that actually changed the plan.
     pub fn swaps(&self) -> usize {
         self.events.iter().filter(|e| e.swapped).count()
+    }
+
+    /// Batches observed so far (the next batch's iteration index).
+    pub fn iterations_observed(&self) -> usize {
+        self.iteration
+    }
+
+    /// Iterations left before drift is evaluated again.
+    pub fn cooldown_remaining(&self) -> usize {
+        self.cooldown
+    }
+
+    /// Consecutive refits the optimizer has failed (retry attempt count).
+    pub fn failed_refits(&self) -> usize {
+        self.failed_refits
     }
 
     /// Detector statistics of the latest evaluated window.
@@ -319,6 +401,68 @@ mod tests {
         assert!(e.stat.score() >= rp.cfg.drift.enter);
         assert!(e.expected_makespan > 0.0);
         assert_eq!(rp.theta.gpus(), cluster.total_gpus());
+    }
+
+    #[test]
+    fn failed_refits_retry_with_bounded_backoff() {
+        let (m, profile, cluster) = fixture();
+        let data = profile_data(&m, &mut Dataset::mixed(0xDA7A), 256);
+        let rctx = ctx(&m, &profile, &cluster, 32);
+        let theta = crate::optimizer::search::optimize(&rctx.inputs(&data))
+            .expect("feasible")
+            .theta;
+        let mut rp = Replanner::new(&data, theta, ReplanConfig::default());
+        let mut ds = Dataset::mixed(9);
+        for _ in 0..3 {
+            rp.observe_batch(&rctx, &ds.shaped_batch(&m, 32));
+        }
+        // A context no plan can satisfy: every refit fails.
+        let infeasible = ReplanContext { mem_capacity: 1.0, ..rctx };
+        // Attempts 1..=max retry with exponential backoff, capped at the
+        // normal cooldown; the stale plan is kept throughout.
+        for (attempt, want_cooldown) in [(1usize, 2usize), (2, 4), (3, 8)] {
+            assert!(rp.force_replan(&infeasible, attempt).is_none());
+            assert_eq!(rp.failed_refits(), attempt);
+            assert_eq!(rp.cooldown_remaining(), want_cooldown, "attempt {attempt}");
+            assert_eq!(rp.theta, theta, "failed refits keep the incumbent");
+        }
+        // One more failure exhausts the retries: the counter resets and
+        // the normal cadence resumes.
+        assert!(rp.force_replan(&infeasible, 4).is_none());
+        assert_eq!(rp.failed_refits(), 0);
+        assert_eq!(rp.cooldown_remaining(), rp.cfg.cooldown);
+        assert_eq!(rp.events.len(), 4);
+        assert!(rp.events.iter().all(|e| !e.swapped));
+        assert!(rp.events.iter().all(|e| e.expected_makespan.is_nan()));
+        // A feasible refit clears the failure streak.
+        assert_eq!(rp.force_replan(&rctx, 5).is_some(), rp.theta != theta);
+        assert_eq!(rp.failed_refits(), 0);
+    }
+
+    #[test]
+    fn force_replan_needs_observed_batches_and_records_an_event() {
+        let (m, profile, cluster) = fixture();
+        let data = profile_data(&m, &mut Dataset::mixed(0xDA7A), 256);
+        let rctx = ctx(&m, &profile, &cluster, 32);
+        let theta = crate::optimizer::search::optimize(&rctx.inputs(&data))
+            .expect("feasible")
+            .theta;
+        let mut rp = Replanner::new(&data, theta, ReplanConfig::default());
+        // Nothing observed yet: nothing to refit from.
+        assert!(rp.force_replan(&rctx, 0).is_none());
+        assert!(rp.events.is_empty());
+        let mut ds = Dataset::mixed(9);
+        for _ in 0..2 {
+            rp.observe_batch(&rctx, &ds.shaped_batch(&m, 32));
+        }
+        // A confirmed topology change shrinks the group: the per-replica
+        // batch grows and the refit runs against the live reservoir.
+        let shrunk = ReplanContext { gbs: 48, ..rctx };
+        rp.force_replan(&shrunk, 2);
+        assert_eq!(rp.events.len(), 1, "forced refits are recorded like drift replans");
+        assert_eq!(rp.events[0].iteration, 2);
+        assert_eq!(rp.events[0].stat.score(), 0.0, "no drift statistic backs the event");
+        assert_eq!(rp.cooldown_remaining(), rp.cfg.cooldown);
     }
 
     #[test]

@@ -1,0 +1,226 @@
+//! Integration tests for the fault-injected elastic fleet (PR 7).
+//!
+//! The contract under test: fault delivery happens at iteration
+//! boundaries from a seeded, replayable `FaultTrace`, so a fleet run is
+//! bit-identical at any `DFLOP_THREADS`; a `"none"` trace leaves the
+//! healthy pipeline bit-untouched; resharding round-trips; and on the
+//! skewed-churn acceptance scenario the degradation-aware arm strictly
+//! beats the static-θ* arm on both mean step time and worst straggler
+//! gap while the fault-free control never replans.
+
+use dflop::fault::{FaultKind, FaultTrace, FleetHealth};
+use dflop::model::catalog::{llama3, llava_ov};
+use dflop::shard::partition::ShardedDataset;
+use dflop::shard::ShardConfig;
+use dflop::sim::{run_system, FaultConfig, RunConfig, RunResult, SystemKind};
+use dflop::util::parallel::set_max_threads;
+use dflop::util::prop::forall;
+use std::sync::Mutex;
+
+/// The pool width is process-global; tests that flip it hold this lock so
+/// the two runs being compared really execute at the width they claim.
+static WIDTH_LOCK: Mutex<()> = Mutex::new(());
+
+fn width_guard() -> std::sync::MutexGuard<'static, ()> {
+    WIDTH_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The acceptance configuration (shared with `benches/fault_bench.rs`):
+/// a 4-shard fleet of single-node replicas, long enough for the scripted
+/// scenarios (last heal at iteration 15) plus post-heal iterations.
+fn fleet_cfg(trace: &str, respond: bool) -> RunConfig {
+    let mut cfg = RunConfig::new(1, 48, 18, 42);
+    cfg.profile_samples = 256;
+    cfg.shard = Some(ShardConfig {
+        dp_shards: 4,
+        rebalance: false,
+        window_batches: 4,
+        ..ShardConfig::default()
+    });
+    cfg.faults = Some(FaultConfig { trace: trace.to_string(), respond });
+    cfg
+}
+
+fn run_fleet(cfg: &RunConfig) -> RunResult {
+    let m = llava_ov(llama3("8b"));
+    run_system(SystemKind::DflopSharded, &m, "skewed-shard", cfg)
+}
+
+#[test]
+fn fleet_run_bit_identical_across_thread_counts() {
+    let _g = width_guard();
+    let cfg = fleet_cfg("skewed-churn", true);
+    set_max_threads(1);
+    let serial = run_fleet(&cfg);
+    set_max_threads(8);
+    let parallel = run_fleet(&cfg);
+    set_max_threads(0);
+    assert_eq!(serial.theta, parallel.theta);
+    assert_eq!(
+        serial.per_gpu_throughput.to_bits(),
+        parallel.per_gpu_throughput.to_bits(),
+        "fleet throughput drifted with thread count"
+    );
+    assert_eq!(
+        serial.mean_iteration_time.to_bits(),
+        parallel.mean_iteration_time.to_bits()
+    );
+    assert_eq!(serial.fault, parallel.fault, "fault counters drifted");
+    assert_eq!(serial.straggler_gaps.len(), parallel.straggler_gaps.len());
+    for (a, b) in serial.straggler_gaps.iter().zip(&parallel.straggler_gaps) {
+        assert_eq!(a.to_bits(), b.to_bits(), "straggler gap drifted");
+    }
+    assert_eq!(serial.replans, parallel.replans);
+    let key = |r: &RunResult| -> Vec<_> {
+        r.replan_events
+            .iter()
+            .map(|e| (e.iteration, e.swapped, e.old, e.new))
+            .collect()
+    };
+    assert_eq!(key(&serial), key(&parallel), "replan stream drifted");
+}
+
+#[test]
+fn none_trace_is_bit_identical_to_a_healthy_run() {
+    // The charging paths, the members-aware feed, and the fault-aware
+    // policy must all be exactly invisible when the trace has no events:
+    // a `faults: Some("none")` run and a `faults: None` run are the same
+    // simulation bit for bit.
+    let _g = width_guard();
+    let with_fleet = run_fleet(&fleet_cfg("none", true));
+    let mut plain = fleet_cfg("none", true);
+    plain.faults = None;
+    let healthy = run_fleet(&plain);
+    assert_eq!(
+        with_fleet.per_gpu_throughput.to_bits(),
+        healthy.per_gpu_throughput.to_bits(),
+        "an event-free FaultTrace changed the simulation"
+    );
+    assert_eq!(
+        with_fleet.mean_iteration_time.to_bits(),
+        healthy.mean_iteration_time.to_bits()
+    );
+    assert_eq!(with_fleet.theta, healthy.theta);
+    assert_eq!(with_fleet.migrations, healthy.migrations);
+    assert_eq!(with_fleet.replans, healthy.replans);
+    for (a, b) in with_fleet.straggler_gaps.iter().zip(&healthy.straggler_gaps) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    // And the fault ledger of an event-free run is all zeros.
+    assert_eq!(with_fleet.fault.failures, 0);
+    assert_eq!(with_fleet.fault.recoveries, 0);
+    assert_eq!(with_fleet.fault.reshard_events, 0);
+    assert_eq!(with_fleet.fault.degraded_iters, 0);
+}
+
+#[test]
+fn fault_aware_beats_static_under_skewed_churn() {
+    // The acceptance criterion: both arms replay the identical
+    // skewed-churn FaultTrace (a replica failure, an escalating
+    // straggler, a degraded allreduce link — all healing before the end)
+    // over skewed shard data; the degradation-aware arm must sustain a
+    // strictly faster mean step AND a strictly smaller worst straggler
+    // gap, and the fault-free control must never replan.
+    let _g = width_guard();
+    let aware = run_fleet(&fleet_cfg("skewed-churn", true));
+    let stat = run_fleet(&fleet_cfg("skewed-churn", false));
+    let control = run_fleet(&fleet_cfg("none", true));
+    assert_eq!(control.replans, 0, "fault-free control replanned");
+    assert!(
+        aware.mean_iteration_time < stat.mean_iteration_time,
+        "aware step {:.3}s not below static {:.3}s",
+        aware.mean_iteration_time,
+        stat.mean_iteration_time
+    );
+    let worst = |r: &RunResult| r.straggler_gaps.iter().cloned().fold(0.0f64, f64::max);
+    assert!(
+        worst(&aware) < worst(&stat),
+        "worst gap not reduced: {:.3}s vs {:.3}s",
+        worst(&aware),
+        worst(&stat)
+    );
+    // Both arms see the same injected physics in the ledger.
+    assert_eq!(aware.fault, stat.fault, "arms saw different fault streams");
+    assert!(aware.fault.failures >= 1);
+    assert!(aware.fault.recoveries >= 1);
+    assert!(aware.fault.reshard_events >= 2, "fail + recover each reshard");
+    assert!(aware.fault.degraded_iters > 0);
+    // Gap percentiles are present and monotone.
+    assert_eq!(aware.straggler_gap_percentiles.len(), 3);
+    let vs: Vec<f64> = aware.straggler_gap_percentiles.iter().map(|&(_, v)| v).collect();
+    assert!(vs.windows(2).all(|w| w[0] <= w[1]), "percentiles not monotone: {vs:?}");
+}
+
+#[test]
+fn resharding_round_trips_and_counts_conserve_the_batch() {
+    // Property: any fail/recover sequence that ends with every slot back
+    // up restores the exact healthy membership; and the slowdown-weighted
+    // batch split always conserves the global batch with every member
+    // getting at least one item.
+    forall("shrink-then-grow resharding round-trips", 200, |g| {
+        let shards = g.size(7) + 1; // 2..=8
+        let mut h = FleetHealth::healthy(shards);
+        let mut downed = Vec::new();
+        // Shrink: a random set of distinct failures (never the last one).
+        for _ in 0..g.size(shards) {
+            let s = g.rng.index(shards);
+            if h.apply(FaultKind::Fail { shard: s }) {
+                downed.push(s);
+            }
+        }
+        let shrunk = h.active();
+        let shrink_ok = shrunk.len() == shards - downed.len() && !shrunk.is_empty();
+        // Weighted counts over the shrunken fleet conserve the batch.
+        let gbs = g.size(256);
+        let weights: Vec<f64> = shrunk.iter().map(|_| g.rng.uniform(0.4, 1.0)).collect();
+        let counts = ShardedDataset::weighted_counts(gbs, &weights);
+        let conserve_ok = counts.iter().sum::<usize>() == gbs
+            && (gbs < shrunk.len() || counts.iter().all(|&c| c >= 1));
+        // Grow back: recover everything that went down (any order).
+        for &s in downed.iter().rev() {
+            h.apply(FaultKind::Recover { shard: s });
+        }
+        let round_trip_ok = h == FleetHealth::healthy(shards);
+        (
+            format!("shards={shards} downed={downed:?} gbs={gbs} counts={counts:?}"),
+            shrink_ok && conserve_ok && round_trip_ok,
+        )
+    });
+}
+
+#[test]
+fn traces_are_deterministic_given_key_and_seed() {
+    forall("FaultTrace::by_key is a pure function", 40, |g| {
+        let shards = g.size(7) + 1;
+        let seed = g.rng.range(0, 1 << 20) as u64;
+        let ok = FaultTrace::keys().iter().all(|key| {
+            FaultTrace::by_key(key, shards, seed) == FaultTrace::by_key(key, shards, seed)
+        });
+        (format!("shards={shards} seed={seed}"), ok)
+    });
+}
+
+#[test]
+fn fault_validation_rejects_bad_configs_up_front() {
+    // Satellite: fault/scenario keys are validated before any profiling
+    // or pool work, as `util::error::Result` errors.
+    let m = llava_ov(llama3("8b"));
+    // Unknown trace key.
+    let mut cfg = fleet_cfg("quake", true);
+    assert!(dflop::engine::run(SystemKind::DflopSharded, &m, "mixed", &cfg).is_err());
+    // Faults on a system with no DP group.
+    cfg = fleet_cfg("churn", true);
+    cfg.shard = None;
+    assert!(dflop::engine::run(SystemKind::Dflop, &m, "mixed", &cfg).is_err());
+    // Too few shards to degrade.
+    cfg = fleet_cfg("churn", true);
+    cfg.shard = Some(ShardConfig { dp_shards: 1, ..ShardConfig::default() });
+    assert!(dflop::engine::run(SystemKind::DflopSharded, &m, "mixed", &cfg).is_err());
+    // Hetero per-shard plans don't compose with fault injection.
+    cfg = fleet_cfg("churn", true);
+    cfg.shard = Some(ShardConfig { dp_shards: 4, hetero: true, ..ShardConfig::default() });
+    assert!(dflop::engine::run(SystemKind::DflopSharded, &m, "mixed", &cfg).is_err());
+    // The happy path still validates.
+    cfg = fleet_cfg("churn", true);
+    assert!(dflop::engine::validate(SystemKind::DflopSharded, "skewed-shard", &cfg).is_ok());
+}
