@@ -1,0 +1,81 @@
+//! Scenario: deterministic run tracing end to end. Runs the acceptance
+//! fleet — a 4-shard fleet of single-node replicas replaying the
+//! skewed-churn fault trace over skewed shard data — with the recorder
+//! fully on, then exports everything the obs subsystem produces: the
+//! Chrome trace (replica-tagged op spans, bubble spans, fault/replan
+//! instant events; load it in Perfetto or `chrome://tracing`), the
+//! metrics registry dump, and the machine-readable run summary. The
+//! trace is schema-validated before it is written, and CI uploads it as
+//! `TRACE_EXPORT`.
+//!
+//!   cargo run --release --offline --example trace_export -- \
+//!       [--nodes 1] [--gbs 48] [--iters 18] [--seed 42] [--dp-shards 4] \
+//!       [--faults skewed-churn] [--out TRACE_EXPORT.json] \
+//!       [--metrics-out TRACE_METRICS.json] [--summary-out TRACE_SUMMARY.json]
+
+use dflop::model::catalog::{llama3, llava_ov};
+use dflop::obs::chrome::{trace_json, validate_trace};
+use dflop::obs::{run_result_json, ObsConfig};
+use dflop::shard::ShardConfig;
+use dflop::sim::{FaultConfig, RunConfig, SystemKind};
+use dflop::util::cli::{Args, Spec};
+
+fn main() -> dflop::util::error::Result<()> {
+    let spec = Spec {
+        valued: vec![
+            "nodes", "gbs", "iters", "seed", "dp-shards", "faults", "out",
+            "metrics-out", "summary-out", "threads",
+        ],
+        boolean: vec![],
+    };
+    let args = Args::parse(std::env::args().skip(1), &spec)?;
+    dflop::util::parallel::set_max_threads(args.get_usize("threads", 0)?);
+    let nodes = args.get_usize("nodes", 1)?;
+    let gbs = args.get_usize("gbs", 48)?;
+    let iters = args.get_usize("iters", 18)?;
+    let seed = args.get_u64("seed", 42)?;
+    let dp_shards = args.get_usize("dp-shards", 4)?;
+    let trace_key = args.get_or("faults", "skewed-churn");
+    let out_path = args.get_or("out", "TRACE_EXPORT.json");
+    let metrics_path = args.get_or("metrics-out", "TRACE_METRICS.json");
+    let summary_path = args.get_or("summary-out", "TRACE_SUMMARY.json");
+
+    let m = llava_ov(llama3("8b"));
+    let mut cfg = RunConfig::new(nodes, gbs, iters, seed);
+    cfg.shard = Some(ShardConfig {
+        dp_shards,
+        rebalance: false,
+        window_batches: 4,
+        ..ShardConfig::default()
+    });
+    cfg.faults = Some(FaultConfig { trace: trace_key.clone(), respond: true });
+    cfg.obs = Some(ObsConfig { timelines: true, metrics: true });
+
+    let r = dflop::engine::run(SystemKind::DflopSharded, &m, "skewed-shard", &cfg)?;
+    println!("fleet         : {dp_shards} shards × {nodes} node(s), {iters} iterations");
+    println!("fault trace   : {trace_key}");
+    println!("theta         : {}", r.theta);
+    println!("mean step     : {:.3} s", r.mean_iteration_time);
+    println!(
+        "fault events  : {} failures, {} recoveries, {} reshards",
+        r.fault.failures, r.fault.recoveries, r.fault.reshard_events
+    );
+    println!("replans       : {}", r.replans);
+
+    let log = r.obs.as_ref().expect("recorder was on");
+    let trace = trace_json(log);
+    validate_trace(&trace).map_err(|e| dflop::err!("trace failed validation: {e}"))?;
+    std::fs::write(&out_path, &trace)?;
+    println!("trace         : {} events -> {out_path}", log.events.len());
+
+    let reg = log.metrics.as_ref().expect("metrics were on");
+    std::fs::write(&metrics_path, reg.dump())?;
+    println!(
+        "metrics       : {} snapshots -> {metrics_path}",
+        reg.snapshots().len()
+    );
+
+    std::fs::write(&summary_path, run_result_json(&r))?;
+    println!("summary       : -> {summary_path}");
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! Bench: the observability subsystem — the zero-overhead-off guarantee
+//! plus the wall-clock cost of the export paths.
+//!
+//! The gated pair is `fleet mean step, recorder off` vs `fleet mean
+//! step, recorder on (timelines+metrics)`: both are *simulated* seconds
+//! from the acceptance fleet run (skewed-churn, 4 shards), so the
+//! recorder-on/recorder-off ratio is exactly 1.0 whenever the seam
+//! holds its contract — the recorder copies values out and never feeds
+//! anything back. The bench asserts bit-equality outright and
+//! `dflop-bench-compare` gates the ratio at 1.02× so a protocol break
+//! fails CI twice over. The real-time rows (trace/metrics export, bubble
+//! extraction) are informational: one-shot end-of-run costs, not
+//! per-iteration ones.
+mod common;
+use common::{bench, BenchResult};
+use dflop::model::catalog::{llama3, llava_ov};
+use dflop::obs::bubble::stage_bubbles;
+use dflop::obs::chrome::{trace_json, validate_trace};
+use dflop::obs::ObsConfig;
+use dflop::shard::ShardConfig;
+use dflop::sim::{run_system, FaultConfig, RunConfig, SystemKind};
+
+/// The acceptance configuration shared with `tests/fleet.rs` and
+/// `fault_bench`: a 4-shard fleet of single-node replicas replaying the
+/// skewed-churn trace over skewed shard data.
+fn fleet_cfg(obs: Option<ObsConfig>) -> RunConfig {
+    let mut cfg = RunConfig::new(1, 48, 18, 42);
+    cfg.profile_samples = 256;
+    cfg.shard = Some(ShardConfig {
+        dp_shards: 4,
+        rebalance: false,
+        window_batches: 4,
+        ..ShardConfig::default()
+    });
+    cfg.faults = Some(FaultConfig { trace: "skewed-churn".to_string(), respond: true });
+    cfg.obs = obs;
+    cfg
+}
+
+/// A simulated-seconds row: the value is model output, not wall-clock,
+/// so one rep with mean = min = max.
+fn simulated(name: &str, v: f64) -> BenchResult {
+    println!("{name:56} simulated {v:.6} s");
+    BenchResult { name: name.to_string(), mean: v, min: v, max: v, reps: 1 }
+}
+
+fn main() {
+    println!("== obs_bench ==");
+    let mut results = Vec::new();
+
+    let m = llava_ov(llama3("8b"));
+    let off = run_system(SystemKind::DflopSharded, &m, "skewed-shard", &fleet_cfg(None));
+    let on = run_system(
+        SystemKind::DflopSharded,
+        &m,
+        "skewed-shard",
+        &fleet_cfg(Some(ObsConfig { timelines: true, metrics: true })),
+    );
+    // The contract behind the gate: observation changes nothing. A drift
+    // here means the recorder fed a value back into the simulation.
+    assert_eq!(
+        off.mean_iteration_time.to_bits(),
+        on.mean_iteration_time.to_bits(),
+        "recorder-on changed the simulation: {} vs {}",
+        off.mean_iteration_time,
+        on.mean_iteration_time
+    );
+    assert_eq!(off.per_gpu_throughput.to_bits(), on.per_gpu_throughput.to_bits());
+    results.push(simulated(
+        "fleet mean step, recorder off (skewed-churn, 4 shards)",
+        off.mean_iteration_time,
+    ));
+    results.push(simulated(
+        "fleet mean step, recorder on (skewed-churn, 4 shards)",
+        on.mean_iteration_time,
+    ));
+
+    // End-of-run export costs (wall-clock, informational).
+    let log = on.obs.as_ref().expect("recorder was on");
+    results.push(bench("chrome trace export (18-iter fleet log)", 20, || {
+        std::hint::black_box(trace_json(log).len());
+    }));
+    let trace = trace_json(log);
+    results.push(bench("chrome trace schema validation", 20, || {
+        validate_trace(&trace).expect("valid trace");
+    }));
+    let reg = log.metrics.as_ref().expect("metrics were on");
+    results.push(bench("metrics registry dump", 50, || {
+        std::hint::black_box(reg.dump().len());
+    }));
+    results.push(bench("bubble extraction (all replica timelines)", 50, || {
+        let mut gaps = 0usize;
+        for it in &log.iterations {
+            for rep in &it.replicas {
+                gaps += stage_bubbles(
+                    &rep.timeline,
+                    rep.n_stages,
+                    rep.makespan,
+                    &rep.stage_busy,
+                )
+                .gaps
+                .len();
+            }
+        }
+        std::hint::black_box(gaps);
+    }));
+
+    common::emit_json("obs_bench", &results);
+}

@@ -16,7 +16,12 @@
 //!   a strictly faster mean step AND a strictly smaller worst straggler
 //!   gap than the static-θ* arm (`fault_bench`, the PR-7 acceptance —
 //!   these rows are *simulated* seconds from paired runs replaying the
-//!   identical trace, so the ratio is exactly reproducible).
+//!   identical trace, so the ratio is exactly reproducible),
+//! - switching the observability recorder fully on leaves the simulated
+//!   mean step within 1.02× of the recorder-off run (`obs_bench`, the
+//!   PR-8 zero-overhead seam — the paired rows are simulated seconds and
+//!   bit-identical by contract, so any ratio above 1.0 means the
+//!   recorder fed a value back into the simulation).
 //!
 //! A missing row is a hard error, not a skip: renaming a bench silently
 //! would otherwise disarm the gate. Exit code 1 on any violation, 2 on
@@ -70,6 +75,13 @@ const EXPECTATIONS: &[Expect] = &[
         denominator: "fleet worst straggler gap, static theta (skewed-churn, 4 shards)",
         max_ratio: 0.999,
         claim: "fault-aware replanning shrinks the worst straggler gap under churn",
+    },
+    Expect {
+        target: "obs_bench",
+        numerator: "fleet mean step, recorder on (skewed-churn, 4 shards)",
+        denominator: "fleet mean step, recorder off (skewed-churn, 4 shards)",
+        max_ratio: 1.02,
+        claim: "switching the recorder on leaves the simulated step unchanged",
     },
 ];
 

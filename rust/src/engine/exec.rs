@@ -162,6 +162,7 @@ impl ExecModel for SingleReplicaExec<'_> {
             tel.sched_elapsed.push(sched.elapsed);
             if sched.solver == Solver::LptFallback {
                 tel.lpt_fallbacks += 1;
+                tel.rec.lpt_fallback();
             }
             materialize(shapes, &sched.assignment.buckets)
         } else {
@@ -226,8 +227,10 @@ impl ExecModel for SingleReplicaExec<'_> {
 /// view: stage arrays concatenate in shard order, idle is charged against
 /// the slowest replica's pipeline (straggler wait shows up as idle on the
 /// fast replicas), and the iteration time is the barrier's step time.
-/// Per-op timelines are dropped — an S-replica timeline has no single
-/// 1F1B rendering.
+/// The merged stats carry no `timeline` — an S-replica timeline has no
+/// single 1F1B rendering — but the observability recorder captures the
+/// per-replica timelines replica-tagged before the merge (see
+/// `ShardedExec::execute`), so `--trace` renders every replica's ops.
 fn merge_shard_iterations(per: Vec<IterationStats>, barrier: &BarrierStats) -> IterationStats {
     let pipeline_max = per.iter().map(|s| s.pipeline_makespan).fold(0.0, f64::max);
     let n_stages = per.iter().map(|s| s.n_stages).sum();
@@ -336,6 +339,7 @@ impl ExecModel for ShardedExec<'_> {
                 .collect();
             let rb = rebalance(&items, &home, shards, &self.sc.balance);
             tel.migrations += rb.migrations;
+            tel.rec.migrations(rb.migrations);
             rb.groups(shards)
         } else {
             // Static sharding: every item executes where it was drawn.
@@ -409,6 +413,13 @@ impl ExecModel for ShardedExec<'_> {
             allreduce,
         );
         tel.straggler_gaps.push(barrier.straggler_gap);
+        // Capture the per-replica execution *after* the health charge so
+        // recorded traces match the stretched times the barrier saw, and
+        // *before* the merge drops the timelines.
+        if tel.rec.is_on() {
+            tel.rec.replica_timelines(&per_replica);
+            tel.rec.barrier(&barrier);
+        }
         merge_shard_iterations(per_replica, &barrier)
     }
 }

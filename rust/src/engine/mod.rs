@@ -46,6 +46,7 @@ use crate::data::dataset::Dataset;
 use crate::data::item::ItemShape;
 use crate::fault::{FaultTrace, FleetState};
 use crate::model::catalog::Mllm;
+use crate::obs::Recorder;
 use crate::optimizer::plan::Theta;
 use crate::optimizer::search::{optimize, OptimizerInputs};
 use crate::perfmodel::{ClusterSpec, Truth};
@@ -377,6 +378,10 @@ pub fn run(kind: SystemKind, m: &Mllm, dataset_key: &str, cfg: &RunConfig) -> Re
 
     // ---- the one shared iteration loop ----
     let mut tel = Telemetry::new(cfg.iters);
+    // The observability recorder rides on the telemetry collector so the
+    // policy/exec seams reach it without signature changes. `None` keeps
+    // the zero-cost `Recorder::Off`.
+    tel.rec = Recorder::new(cfg.obs.as_ref());
     for it in 0..cfg.iters {
         // Fault events land strictly at iteration boundaries, before the
         // draw, so membership, batch split, and injected health are fixed
@@ -394,7 +399,11 @@ pub fn run(kind: SystemKind, m: &Mllm, dataset_key: &str, cfg: &RunConfig) -> Re
         // the CPU-side scheduler ahead of execution, and a confirmed
         // drift swaps the plan at this iteration boundary.
         if let Some(plan) = policy.observe(&draw) {
+            tel.rec.plan_swap(exec.plan().global, &plan);
             exec.apply_plan(&plan);
+        }
+        if tel.rec.is_on() {
+            tel.rec.drift_phase(policy.drift_phase());
         }
         let sched = exec.schedule(&draw, &mut tel);
         let stats = exec.execute(&sched, &mut tel);

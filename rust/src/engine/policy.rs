@@ -20,8 +20,18 @@ use crate::profiling::engine::DataProfile;
 use crate::profiling::estimator::Estimator;
 use crate::shard::agg::{merge_shard_stats, ShardWindows};
 use crate::shard::ShardConfig;
+use crate::stream::drift::Decision;
 use crate::stream::replan::{ReplanConfig, ReplanContext, ReplanEvent, Replanner};
 use crate::stream::reservoir::ShapeReservoir;
+
+/// Map a drift detector's decision to the recorder's phase vocabulary.
+fn phase_of(d: Option<Decision>) -> Option<&'static str> {
+    d.map(|d| match d {
+        Decision::Stable => "stable",
+        Decision::Watch => "watch",
+        Decision::Drift => "drift",
+    })
+}
 
 /// The plan a policy hands the executor for one iteration.
 #[derive(Clone, Debug)]
@@ -64,6 +74,13 @@ pub trait PlanPolicy {
     /// this iteration, reported ahead of `observe`. Default no-op:
     /// health-blind policies plan for the configured topology forever.
     fn observe_health(&mut self, _confirmed_active: usize) {}
+
+    /// The drift detector's phase after this iteration's `observe`
+    /// (`stable`/`watch`/`drift`), for the observability recorder.
+    /// `None` — the default — for policies without a detector.
+    fn drift_phase(&self) -> Option<&'static str> {
+        None
+    }
 }
 
 /// The offline θ* frozen for the whole run (baselines, ablations, plain
@@ -109,6 +126,10 @@ impl PlanPolicy for AdaptivePolicy<'_> {
 
     fn take_events(&mut self) -> Vec<ReplanEvent> {
         std::mem::take(&mut self.rp.events)
+    }
+
+    fn drift_phase(&self) -> Option<&'static str> {
+        phase_of(self.rp.drift_decision())
     }
 }
 
@@ -199,6 +220,10 @@ impl PlanPolicy for FaultAwarePolicy<'_> {
 
     fn observe_health(&mut self, confirmed_active: usize) {
         self.confirmed_active = confirmed_active;
+    }
+
+    fn drift_phase(&self) -> Option<&'static str> {
+        phase_of(self.rp.drift_decision())
     }
 }
 
@@ -339,6 +364,10 @@ impl PlanPolicy for PerShardPolicy<'_> {
 
     fn take_events(&mut self) -> Vec<ReplanEvent> {
         std::mem::take(&mut self.global.events)
+    }
+
+    fn drift_phase(&self) -> Option<&'static str> {
+        phase_of(self.global.drift_decision())
     }
 }
 

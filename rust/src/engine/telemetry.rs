@@ -10,6 +10,7 @@
 //! (`tests/engine_parity.rs`).
 
 use crate::fault::{FaultDelta, FaultStats};
+use crate::obs::Recorder;
 use crate::optimizer::plan::Theta;
 use crate::pipeline::build::IterationStats;
 use crate::sim::trainer::{RunResult, SystemKind};
@@ -38,6 +39,11 @@ pub struct Telemetry {
     /// Injected-fault counters (fault-injected fleet runs; all zero
     /// otherwise).
     pub fault: FaultStats,
+    /// The observability recorder (`crate::obs`). Defaults to
+    /// [`Recorder::Off`] — a zero-cost no-op — and is switched on by the
+    /// engine from `RunConfig::obs`. Execution models and policies reach
+    /// it through the `&mut Telemetry` they already receive.
+    pub rec: Recorder,
 }
 
 impl Telemetry {
@@ -53,6 +59,7 @@ impl Telemetry {
     /// Fold one iteration boundary's fault-layer activity into the run's
     /// counters — the single place injected-fault telemetry is recorded.
     pub fn record_fault(&mut self, d: &FaultDelta) {
+        self.rec.fault(d);
         self.fault.failures += d.failures;
         self.fault.recoveries += d.recoveries;
         self.fault.reshard_events += usize::from(d.resharded);
@@ -62,6 +69,7 @@ impl Telemetry {
     /// Fold one executed iteration into the pooled distributions and
     /// retain its full stats.
     pub fn record_iteration(&mut self, stats: IterationStats) {
+        self.rec.end_iteration(&stats);
         self.stage_throughput_samples.extend(stats.stage_throughputs());
         for b in &stats.buckets {
             if b.enc_time > 0.0 {
@@ -78,7 +86,7 @@ impl Telemetry {
     /// that used to live at the tail of both training loops.
     #[allow(clippy::too_many_arguments)] // the offline-phase scalars are a run's identity
     pub fn finish(
-        self,
+        mut self,
         system: SystemKind,
         theta: Theta,
         n_gpus: usize,
@@ -97,6 +105,7 @@ impl Telemetry {
             .sum::<f64>()
             / n;
         let replans = replan_events.iter().filter(|e| e.swapped).count();
+        let obs = self.rec.take_log(&replan_events);
         let straggler_gap_percentiles = if self.straggler_gaps.is_empty() {
             Vec::new()
         } else {
@@ -127,6 +136,7 @@ impl Telemetry {
             fault: self.fault,
             hetero_thetas,
             iterations: self.iterations,
+            obs,
         }
     }
 }

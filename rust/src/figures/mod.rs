@@ -20,6 +20,7 @@ use crate::data::dataset::Dataset;
 use crate::model::catalog::{
     internvl_25, llava_ov, llama3, paper_configs, qwen2_audio, qwen25, Mllm,
 };
+use crate::obs::bubble::{iteration_bubble_fraction, stage_bubbles};
 use crate::optimizer::plan::{ModPar, Theta};
 use crate::optimizer::search::{optimize, OptimizerInputs};
 use crate::perfmodel::{ClusterSpec, Truth};
@@ -1114,6 +1115,60 @@ pub fn fig_fleet(o: &FigOpts) -> String {
 }
 
 // ------------------------------------------------------------------
+// Bubbles (extension) — per-stage bubble/utilization accounting from
+// the obs subsystem's gap-interval extraction
+// ------------------------------------------------------------------
+
+pub fn fig_bubbles(o: &FigOpts) -> String {
+    let m = llava_ov(llama3("8b"));
+    let mut t = Table::new(
+        "Bubbles — per-iteration pipeline bubble fraction (obs::bubble, mixed dataset)",
+        &["system", "ideal (1F1B)", "mean", "min", "max"],
+    );
+    let results = run_grid(cross_specs(&[&m], &SYSTEMS, "mixed"), o);
+    for (kind, r) in SYSTEMS.into_iter().zip(&results) {
+        let fracs: Vec<f64> = r.iterations.iter().map(iteration_bubble_fraction).collect();
+        let mean = fracs.iter().sum::<f64>() / fracs.len().max(1) as f64;
+        let lo = fracs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = fracs.iter().cloned().fold(0.0f64, f64::max);
+        let ideal = ideal_bubble_fraction(r.theta.pipeline_depth(), r.theta.n_mb);
+        t.row(vec![
+            kind.label().to_string(),
+            f(ideal, 3),
+            f(mean, 3),
+            f(lo, 3),
+            f(hi, 3),
+        ]);
+    }
+    // Per-stage drill-down on DFLOP's last iteration: where the bubbles
+    // actually sit once the scheduler has balanced the buckets.
+    let d = &results[0];
+    let last = d.iterations.last().expect("at least one iteration");
+    let sb = stage_bubbles(&last.timeline, last.n_stages, last.pipeline_makespan, &last.stage_busy);
+    let mut t2 = Table::new(
+        "Bubbles — DFLOP per-stage busy/idle, last iteration (gap intervals)",
+        &["stage", "busy (s)", "idle (s)", "gaps", "longest gap (s)"],
+    );
+    for s in 0..sb.busy.len() {
+        let gaps: Vec<_> = sb.gaps.iter().filter(|g| g.stage == s).collect();
+        let longest = gaps.iter().map(|g| g.len()).fold(0.0f64, f64::max);
+        t2.row(vec![
+            format!("{s}"),
+            f(sb.busy[s], 3),
+            f(sb.idle[s], 3),
+            format!("{}", gaps.len()),
+            f(longest, 3),
+        ]);
+    }
+    t.render()
+        + &t2.render()
+        + &format!(
+            "stage-area bubble fraction (last DFLOP iteration): {:.3}\n",
+            sb.bubble_fraction()
+        )
+}
+
+// ------------------------------------------------------------------
 // Tables 2 and 4
 // ------------------------------------------------------------------
 
@@ -1197,6 +1252,7 @@ pub fn all(o: &FigOpts) -> String {
     out.push_str(&fig_shard(o));
     out.push_str(&fig_hetero(o));
     out.push_str(&fig_fleet(o));
+    out.push_str(&fig_bubbles(o));
     out.push_str(&table2(o));
     out.push_str(&table4(o));
     out
@@ -1222,6 +1278,7 @@ pub fn by_id(id: &str, o: &FigOpts) -> Option<String> {
         "18" | "shard" => fig_shard(o),
         "19" | "hetero" => fig_hetero(o),
         "20" | "fleet" => fig_fleet(o),
+        "bubbles" => fig_bubbles(o),
         "all" => all(o),
         _ => return None,
     })

@@ -31,6 +31,7 @@ pub mod data;
 pub mod engine;
 pub mod fault;
 pub mod figures;
+pub mod obs;
 pub mod perfmodel;
 pub mod pipeline;
 pub mod optimizer;

@@ -2,11 +2,12 @@
 //! optimizer/scheduler inspection, and real-artifact profiling.
 //!
 //! ```text
-//! dflop figures --fig <1|2|4|7|8|9|10|11|12|13|14|15|16|17|drift|18|shard|19|hetero|20|fleet|all> [--nodes N] [--gbs N] [--iters N] [--seed S] [--threads N]
+//! dflop figures --fig <1|2|4|7|8|9|10|11|12|13|14|15|16|17|drift|18|shard|19|hetero|20|fleet|bubbles|all> [--nodes N] [--gbs N] [--iters N] [--seed S] [--threads N]
 //! dflop table   --n <2|4>
 //! dflop run     --system <dflop|adaptive|sharded|megatron|pytorch|opt-only|sched-only> --model <key> --dataset <key>
 //!               [--dp-shards N] [--shard-skew <skewed|hot|laggard|homogeneous>] [--static-sharding] [--hetero-plans]   # --system sharded
 //!               [--faults <none|churn|straggler|degraded-link|skewed-churn|long-horizon>] [--static-faults]            # fault-injected fleet
+//!               [--trace out.json] [--metrics out.json] [--json out.json]    # obs: Chrome trace / metrics / summary
 //! dflop optimize --model <key> --nodes N --gbs N
 //! dflop profile-real [--artifacts DIR]      # PJRT timing (needs `xla` feature)
 //! dflop models                              # list catalog keys
@@ -51,7 +52,8 @@ fn real_main() -> Result<()> {
     let spec = Spec {
         valued: vec![
             "fig", "n", "nodes", "gbs", "iters", "seed", "system", "model", "dataset",
-            "artifacts", "threads", "dp-shards", "shard-skew", "faults",
+            "artifacts", "threads", "dp-shards", "shard-skew", "faults", "trace",
+            "metrics", "json",
         ],
         boolean: vec!["help", "static-sharding", "hetero-plans", "static-faults"],
     };
@@ -127,6 +129,17 @@ fn real_main() -> Result<()> {
                     });
                 }
             }
+            // --trace / --metrics switch the recorder on; --json only
+            // reads the summary struct, so it needs no recorder at all.
+            let trace_path = args.get("trace").map(String::from);
+            let metrics_path = args.get("metrics").map(String::from);
+            let json_path = args.get("json").map(String::from);
+            if trace_path.is_some() || metrics_path.is_some() {
+                cfg.obs = Some(dflop::obs::ObsConfig {
+                    timelines: trace_path.is_some(),
+                    metrics: metrics_path.is_some(),
+                });
+            }
             // The engine entry returns a Result, so a bad key is a clean
             // CLI error instead of a panic inside a worker thread.
             let r = dflop::engine::run(kind, &m, &dataset, &cfg)?;
@@ -181,6 +194,28 @@ fn real_main() -> Result<()> {
                         e.new
                     );
                 }
+            }
+            if let Some(path) = &trace_path {
+                let log = r.obs.as_ref().ok_or_else(|| {
+                    err!("--trace requested but the run returned no observation log")
+                })?;
+                std::fs::write(path, dflop::obs::chrome::trace_json(log))?;
+                println!("trace         : wrote Chrome trace to {path}");
+            }
+            if let Some(path) = &metrics_path {
+                let reg = r
+                    .obs
+                    .as_ref()
+                    .and_then(|log| log.metrics.as_ref())
+                    .ok_or_else(|| {
+                        err!("--metrics requested but the run returned no metrics registry")
+                    })?;
+                std::fs::write(path, reg.dump())?;
+                println!("metrics       : wrote metrics dump to {path}");
+            }
+            if let Some(path) = &json_path {
+                std::fs::write(path, dflop::obs::run_result_json(&r))?;
+                println!("summary       : wrote run summary to {path}");
             }
         }
         "optimize" => {
@@ -276,6 +311,11 @@ fn real_main() -> Result<()> {
                  (inject a deterministic fault trace: none|churn|straggler|\
                  degraded-link|skewed-churn|long-horizon), --static-faults \
                  (absorb the faults without responding: the comparison arm)"
+            );
+            println!(
+                "run observability: --trace out.json (Chrome trace, load in \
+                 Perfetto/chrome://tracing), --metrics out.json (counter/gauge/\
+                 histogram dump), --json out.json (machine-readable run summary)"
             );
             println!("see rust/src/main.rs header or DESIGN.md for details");
         }

@@ -1,0 +1,162 @@
+//! Per-stage bubble (idle-gap) accounting over recorded op timelines.
+//!
+//! A *bubble* is a maximal interval inside `[0, makespan]` during which
+//! a pipeline stage executes nothing. The extraction walks the recorded
+//! `OpRecord` timeline — the `SimWorkspace` finish table flattened into
+//! per-op start/finish pairs — and is purely derivational: `busy` is
+//! copied bit-for-bit from the simulation's own `stage_busy`
+//! accumulation and `idle` uses the exact expression `iterate_ws` uses
+//! for `stage_idle` (`makespan - busy`), so the figures and traces
+//! built on top can be cross-checked bit-exactly against `RunResult`.
+//! Only the gap *intervals* are recomputed here (from the op
+//! endpoints); their sum matches `idle` up to float associativity.
+
+use crate::pipeline::build::IterationStats;
+use crate::pipeline::sim::OpRecord;
+
+/// One idle interval on one stage.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Gap {
+    pub stage: usize,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl Gap {
+    pub fn len(&self) -> f64 {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.end <= self.start
+    }
+}
+
+/// Per-stage busy/idle accounting plus the explicit gap intervals for
+/// one iteration.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StageBubbles {
+    pub makespan: f64,
+    /// Per-stage busy seconds — copied from the simulation, bit-exact
+    /// vs `IterationStats::stage_busy`.
+    pub busy: Vec<f64>,
+    /// Per-stage idle seconds — `makespan - busy[s]`, the same
+    /// expression `iterate_ws` evaluates for `stage_idle`.
+    pub idle: Vec<f64>,
+    /// Idle intervals, sorted by stage then by time within a stage.
+    pub gaps: Vec<Gap>,
+}
+
+impl StageBubbles {
+    /// Idle area over total area: `Σ idle / (makespan · n_stages)`
+    /// (0 when the iteration has no area).
+    pub fn bubble_fraction(&self) -> f64 {
+        let area = self.makespan * self.busy.len() as f64;
+        if area > 0.0 {
+            self.idle.iter().sum::<f64>() / area
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Extract per-stage bubbles from a recorded op timeline.
+///
+/// `stage_busy` is the simulation's own per-stage busy accumulation
+/// (copied, not recomputed). Stages execute their ops sequentially, so
+/// each stage's subsequence of `timeline` is already time-ordered — a
+/// gap opens wherever the next op starts after the previous finish, and
+/// a tail gap runs to `makespan`. A stage with no ops is one whole-span
+/// gap.
+pub fn stage_bubbles(
+    timeline: &[OpRecord],
+    n_stages: usize,
+    makespan: f64,
+    stage_busy: &[f64],
+) -> StageBubbles {
+    let mut gaps = Vec::new();
+    let mut cursor = vec![0.0_f64; n_stages];
+    let mut seen = vec![false; n_stages];
+    for op in timeline {
+        let s = op.stage;
+        if op.start > cursor[s] {
+            gaps.push(Gap { stage: s, start: cursor[s], end: op.start });
+        }
+        cursor[s] = op.finish;
+        seen[s] = true;
+    }
+    for (s, (&c, &saw)) in cursor.iter().zip(&seen).enumerate() {
+        if !saw {
+            if makespan > 0.0 {
+                gaps.push(Gap { stage: s, start: 0.0, end: makespan });
+            }
+        } else if makespan > c {
+            gaps.push(Gap { stage: s, start: c, end: makespan });
+        }
+    }
+    // Stable by stage: within a stage the push order above is already
+    // time order.
+    gaps.sort_by_key(|g| g.stage);
+    let busy: Vec<f64> = stage_busy.iter().take(n_stages).copied().collect();
+    let idle: Vec<f64> = busy.iter().map(|&b| makespan - b).collect();
+    StageBubbles { makespan, busy, idle, gaps }
+}
+
+/// The bubble fraction of one simulated iteration:
+/// `total_idle / (makespan · n_stages)`, 0 when the area is 0.
+pub fn iteration_bubble_fraction(stats: &IterationStats) -> f64 {
+    let area = stats.pipeline_makespan * stats.n_stages as f64;
+    if area > 0.0 {
+        stats.total_idle() / area
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(stage: usize, start: f64, finish: f64) -> OpRecord {
+        OpRecord { bucket: 0, stage, is_forward: true, start, finish }
+    }
+
+    #[test]
+    fn gaps_cover_idle_time_and_tail() {
+        // Stage 0: [0,1] [2,3]  → gap [1,2], tail [3,4].
+        // Stage 1: [1,2]        → gap [0,1], tail [2,4].
+        let tl =
+            vec![op(0, 0.0, 1.0), op(1, 1.0, 2.0), op(0, 2.0, 3.0)];
+        let b = stage_bubbles(&tl, 2, 4.0, &[2.0, 1.0]);
+        assert_eq!(b.busy, vec![2.0, 1.0]);
+        assert_eq!(b.idle, vec![2.0, 3.0]);
+        assert_eq!(
+            b.gaps,
+            vec![
+                Gap { stage: 0, start: 1.0, end: 2.0 },
+                Gap { stage: 0, start: 3.0, end: 4.0 },
+                Gap { stage: 1, start: 0.0, end: 1.0 },
+                Gap { stage: 1, start: 2.0, end: 4.0 },
+            ]
+        );
+        let per_stage_gap: Vec<f64> = (0..2)
+            .map(|s| b.gaps.iter().filter(|g| g.stage == s).map(Gap::len).sum())
+            .collect();
+        assert_eq!(per_stage_gap, b.idle);
+        assert!((b.bubble_fraction() - 5.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stage_is_one_whole_span_gap() {
+        let tl = vec![op(0, 0.0, 3.0)];
+        let b = stage_bubbles(&tl, 2, 3.0, &[3.0, 0.0]);
+        assert_eq!(b.gaps, vec![Gap { stage: 1, start: 0.0, end: 3.0 }]);
+    }
+
+    #[test]
+    fn zero_makespan_yields_no_gaps() {
+        let b = stage_bubbles(&[], 2, 0.0, &[0.0, 0.0]);
+        assert!(b.gaps.is_empty());
+        assert_eq!(b.bubble_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,350 @@
+//! Chrome Trace Event Format export (loadable in Perfetto /
+//! `chrome://tracing`).
+//!
+//! Lane layout: the synthetic *cluster* process (pid 1000) carries
+//! iteration spans (tid 0), sync spans (tid 1: allreduce / straggler
+//! gap / dp-sync), and all instant events; each replica is its own
+//! process (pid = replica index) with one thread per pipeline stage
+//! carrying op spans (`F<bucket>`/`B<bucket>`, cat `op`) and bubble
+//! spans (cat `bubble`, from [`crate::obs::bubble::stage_bubbles`]).
+//!
+//! Timestamps are simulated seconds scaled to microseconds (the
+//! format's unit); `dur` may be fractional, which the format allows.
+//! Events are emitted only as `X` (complete), `i` (instant, global
+//! scope) and `M` (metadata) phases, sorted by `ts` with a stable
+//! `total_cmp` — the export is byte-deterministic because the `RunLog`
+//! it renders is.
+
+use crate::obs::bubble::stage_bubbles;
+use crate::obs::record::{EventKind, RunLog};
+use crate::util::json::{emit, parse, Json};
+
+/// The cluster-wide synthetic process id (replica pids count from 0).
+pub const CLUSTER_PID: usize = 1000;
+
+const TID_ITER: usize = 0;
+const TID_SYNC: usize = 1;
+
+fn us(sim_seconds: f64) -> f64 {
+    sim_seconds * 1e6
+}
+
+fn span(
+    name: &str,
+    cat: &str,
+    pid: usize,
+    tid: usize,
+    ts_us: f64,
+    dur_us: f64,
+    args: Vec<(&str, Json)>,
+) -> (f64, Json) {
+    let mut fields = vec![
+        ("name", Json::str(name)),
+        ("cat", Json::str(cat)),
+        ("ph", Json::str("X")),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num(ts_us)),
+        ("dur", Json::Num(dur_us)),
+    ];
+    if !args.is_empty() {
+        fields.push(("args", Json::obj(args)));
+    }
+    (ts_us, Json::obj(fields))
+}
+
+fn meta_process(pid: usize, name: &str) -> (f64, Json) {
+    (
+        f64::NEG_INFINITY, // metadata sorts ahead of every timed event
+        Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(0.0)),
+            ("args", Json::obj(vec![("name", Json::str(name))])),
+        ]),
+    )
+}
+
+/// Render a recorded run as a Chrome Trace Event Format document
+/// (trailing newline included).
+pub fn trace_json(log: &RunLog) -> String {
+    let mut evs: Vec<(f64, Json)> = Vec::new();
+    evs.push(meta_process(CLUSTER_PID, "cluster"));
+    let n_replicas =
+        log.iterations.iter().map(|it| it.replicas.len()).max().unwrap_or(0);
+    for r in 0..n_replicas {
+        evs.push(meta_process(r, &format!("replica {r}")));
+    }
+
+    for (i, it) in log.iterations.iter().enumerate() {
+        evs.push(span(
+            &format!("iter {i}"),
+            "iteration",
+            CLUSTER_PID,
+            TID_ITER,
+            us(it.t_start),
+            us(it.iteration_time),
+            vec![
+                ("makespan_s", Json::Num(it.pipeline_makespan)),
+                ("dp_sync_s", Json::Num(it.dp_sync_time)),
+            ],
+        ));
+        if let Some(b) = &it.barrier {
+            if b.allreduce > 0.0 {
+                evs.push(span(
+                    "allreduce",
+                    "sync",
+                    CLUSTER_PID,
+                    TID_SYNC,
+                    us(it.t_start + (b.step_time - b.allreduce)),
+                    us(b.allreduce),
+                    Vec::new(),
+                ));
+            }
+            if b.straggler_gap > 0.0 {
+                let first_done =
+                    b.per_replica.iter().cloned().fold(f64::INFINITY, f64::min);
+                evs.push(span(
+                    "straggler gap",
+                    "sync",
+                    CLUSTER_PID,
+                    TID_SYNC,
+                    us(it.t_start + first_done),
+                    us(b.straggler_gap),
+                    Vec::new(),
+                ));
+            }
+        } else if it.dp_sync_time > 0.0 {
+            evs.push(span(
+                "dp sync",
+                "sync",
+                CLUSTER_PID,
+                TID_SYNC,
+                us(it.t_start + it.pipeline_makespan),
+                us(it.dp_sync_time),
+                Vec::new(),
+            ));
+        }
+        for rep in &it.replicas {
+            for op in &rep.timeline {
+                let name = format!(
+                    "{}{}",
+                    if op.is_forward { "F" } else { "B" },
+                    op.bucket
+                );
+                evs.push(span(
+                    &name,
+                    "op",
+                    rep.replica,
+                    op.stage,
+                    us(it.t_start + op.start),
+                    us(op.finish - op.start),
+                    Vec::new(),
+                ));
+            }
+            let bub = stage_bubbles(
+                &rep.timeline,
+                rep.n_stages,
+                rep.makespan,
+                &rep.stage_busy,
+            );
+            for g in bub.gaps.iter().filter(|g| !g.is_empty()) {
+                evs.push(span(
+                    "bubble",
+                    "bubble",
+                    rep.replica,
+                    g.stage,
+                    us(it.t_start + g.start),
+                    us(g.len()),
+                    Vec::new(),
+                ));
+            }
+        }
+    }
+
+    for e in &log.events {
+        let mut args = vec![("iteration", Json::Num(e.iteration as f64))];
+        let name = match &e.kind {
+            EventKind::Fault { failures, recoveries, resharded } => {
+                args.push(("failures", Json::Num(*failures as f64)));
+                args.push(("recoveries", Json::Num(*recoveries as f64)));
+                args.push(("resharded", Json::Bool(*resharded)));
+                "fault"
+            }
+            EventKind::PlanSwap { old, new, replicas } => {
+                args.push(("old", Json::str(format!("{old}"))));
+                args.push(("new", Json::str(format!("{new}"))));
+                args.push(("per_replica", Json::Num(*replicas as f64)));
+                "plan-swap"
+            }
+            EventKind::DriftPhase { phase } => *phase,
+            EventKind::Migration { items } => {
+                args.push(("items", Json::Num(*items as f64)));
+                "migration"
+            }
+            EventKind::LptFallback => "lpt-fallback",
+            EventKind::Replan { swapped, score, expected_makespan } => {
+                args.push(("score", Json::Num(*score)));
+                if let Some(m) = expected_makespan {
+                    args.push(("expected_makespan_s", Json::Num(*m)));
+                }
+                if *swapped {
+                    "replan"
+                } else if expected_makespan.is_some() {
+                    "replan-kept"
+                } else {
+                    "refit-retry"
+                }
+            }
+        };
+        let ts = us(e.t);
+        evs.push((
+            ts,
+            Json::obj(vec![
+                ("name", Json::str(name)),
+                ("cat", Json::str("event")),
+                ("ph", Json::str("i")),
+                ("s", Json::str("g")),
+                ("pid", Json::Num(CLUSTER_PID as f64)),
+                ("tid", Json::Num(TID_ITER as f64)),
+                ("ts", Json::Num(ts)),
+                ("args", Json::obj(args)),
+            ]),
+        ));
+    }
+
+    evs.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let doc = Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::Arr(evs.into_iter().map(|(_, j)| j).collect())),
+    ]);
+    emit(&doc) + "\n"
+}
+
+/// Validate a trace document against the slice of the Chrome Trace
+/// Event Format this exporter emits: valid JSON with a `traceEvents`
+/// array; every event carries `name`/`ph`/`pid`/`tid`; timed phases
+/// (`X`, `i`) carry finite `ts` in non-decreasing order; `X` carries a
+/// finite non-negative `dur`; `i` carries a scope `s`; no other phases
+/// appear (durations are exported as complete `X` spans, never `B`/`E`
+/// pairs).
+pub fn validate_trace(text: &str) -> Result<(), String> {
+    let doc = parse(text).map_err(|e| format!("invalid JSON: {e}"))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or("missing traceEvents array")?;
+    let mut last_ts = f64::NEG_INFINITY;
+    for (i, ev) in events.iter().enumerate() {
+        if ev.as_obj().is_none() {
+            return Err(format!("event {i}: not an object"));
+        }
+        for key in ["name", "ph"] {
+            if ev.get(key).and_then(Json::as_str).is_none() {
+                return Err(format!("event {i}: missing {key}"));
+            }
+        }
+        for key in ["pid", "tid"] {
+            if ev.get(key).and_then(Json::as_f64).is_none() {
+                return Err(format!("event {i}: missing {key}"));
+            }
+        }
+        let ph = ev.get("ph").and_then(Json::as_str).unwrap_or_default();
+        if ph == "M" {
+            continue;
+        }
+        let ts = ev
+            .get("ts")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("event {i}: missing ts"))?;
+        if !ts.is_finite() {
+            return Err(format!("event {i}: non-finite ts"));
+        }
+        if ts < last_ts {
+            return Err(format!("event {i}: ts out of order"));
+        }
+        last_ts = ts;
+        match ph {
+            "X" => {
+                let dur = ev
+                    .get("dur")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("event {i}: X without dur"))?;
+                if !dur.is_finite() || dur < 0.0 {
+                    return Err(format!("event {i}: bad dur"));
+                }
+            }
+            "i" => {
+                if ev.get("s").and_then(Json::as_str).is_none() {
+                    return Err(format!("event {i}: instant without scope"));
+                }
+            }
+            other => return Err(format!("event {i}: unexpected phase '{other}'")),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::record::{ObsConfig, Recorder};
+    use crate::pipeline::build::IterationStats;
+    use crate::pipeline::sim::OpRecord;
+
+    fn one_iteration_log() -> Box<RunLog> {
+        let mut rec =
+            Recorder::new(Some(&ObsConfig { timelines: true, metrics: false }));
+        rec.migrations(2);
+        rec.end_iteration(&IterationStats {
+            iteration_time: 1.5,
+            pipeline_makespan: 1.0,
+            dp_sync_time: 0.5,
+            stage_busy: vec![0.75],
+            stage_idle: vec![0.25],
+            stage_flop: vec![1.0],
+            n_stages: 1,
+            total_flop: 1.0,
+            buckets: Vec::new(),
+            timeline: vec![OpRecord {
+                bucket: 0,
+                stage: 0,
+                is_forward: true,
+                start: 0.25,
+                finish: 1.0,
+            }],
+        });
+        rec.take_log(&[]).expect("on")
+    }
+
+    #[test]
+    fn export_validates_and_contains_expected_lanes() {
+        let text = trace_json(&one_iteration_log());
+        validate_trace(&text).expect("schema-valid");
+        let doc = parse(&text).expect("json");
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let names: Vec<&str> = events
+            .iter()
+            .filter_map(|e| e.get("name").and_then(Json::as_str))
+            .collect();
+        assert!(names.contains(&"iter 0"));
+        assert!(names.contains(&"F0"));
+        assert!(names.contains(&"bubble"));
+        assert!(names.contains(&"dp sync"));
+        assert!(names.contains(&"migration"));
+        assert!(names.contains(&"process_name"));
+    }
+
+    #[test]
+    fn validator_rejects_unsorted_and_unknown_phases() {
+        let bad = r#"{"traceEvents":[
+            {"name":"a","ph":"X","pid":0,"tid":0,"ts":5,"dur":1},
+            {"name":"b","ph":"X","pid":0,"tid":0,"ts":1,"dur":1}]}"#;
+        assert!(validate_trace(bad).is_err());
+        let bad_ph = r#"{"traceEvents":[
+            {"name":"a","ph":"B","pid":0,"tid":0,"ts":1}]}"#;
+        assert!(validate_trace(bad_ph).is_err());
+        assert!(validate_trace("not json").is_err());
+    }
+}

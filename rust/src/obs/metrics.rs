@@ -1,0 +1,206 @@
+//! A std-only counter/gauge/histogram registry with per-iteration
+//! snapshots — the one place subsystems register run telemetry.
+//!
+//! The registry lives inside the recorder (`RunLog::metrics`), so it
+//! inherits the observability determinism contract for free: it is
+//! only ever touched from the single engine-loop thread at iteration
+//! boundaries, keys are `BTreeMap`-ordered, and every recorded value is
+//! a deterministic simulation output — the JSON dump is byte-identical
+//! at any `DFLOP_THREADS`.
+//!
+//! Registering a new metric is one call at the recording site:
+//! `reg.counter_add("my_counter", n)` / `reg.gauge_set("my_gauge", x)`
+//! / `reg.observe("my_hist", x)` — names are created on first use and
+//! appear in the dump (and in every subsequent snapshot for counters
+//! and gauges) automatically.
+
+use crate::util::json::{emit, Json};
+use crate::util::stats::quantile;
+use std::collections::BTreeMap;
+
+/// Counter/gauge state captured at the end of one iteration.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub iteration: usize,
+    /// Simulated seconds at the iteration's start.
+    pub t: f64,
+    pub counters: BTreeMap<&'static str, u64>,
+    pub gauges: BTreeMap<&'static str, f64>,
+}
+
+/// The metrics registry: monotonic counters, last-value gauges, and
+/// raw-sample histograms (summarized on dump).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Registry {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    hists: BTreeMap<&'static str, Vec<f64>>,
+    snapshots: Vec<Snapshot>,
+}
+
+impl Registry {
+    pub fn counter_add(&mut self, name: &'static str, n: u64) {
+        *self.counters.entry(name).or_default() += n;
+    }
+
+    /// Set a gauge. Non-finite values are dropped: the JSON layer has
+    /// no encoding for them, and a NaN gauge is always a bug upstream.
+    pub fn gauge_set(&mut self, name: &'static str, value: f64) {
+        if value.is_finite() {
+            self.gauges.insert(name, value);
+        }
+    }
+
+    /// Record one histogram sample (non-finite values register the
+    /// series but are dropped from it).
+    pub fn observe(&mut self, name: &'static str, value: f64) {
+        let xs = self.hists.entry(name).or_default();
+        if value.is_finite() {
+            xs.push(value);
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn samples(&self, name: &str) -> &[f64] {
+        self.hists.get(name).map_or(&[], Vec::as_slice)
+    }
+
+    pub fn snapshots(&self) -> &[Snapshot] {
+        &self.snapshots
+    }
+
+    /// Capture the current counter/gauge state as iteration `it`'s
+    /// snapshot (`t` = simulated seconds at its start).
+    pub fn snapshot(&mut self, it: usize, t: f64) {
+        self.snapshots.push(Snapshot {
+            iteration: it,
+            t,
+            counters: self.counters.clone(),
+            gauges: self.gauges.clone(),
+        });
+    }
+
+    /// The full registry as a JSON document: final counters/gauges,
+    /// histogram summaries, and the per-iteration snapshot series.
+    pub fn to_json(&self) -> Json {
+        let counters: Vec<(&str, Json)> =
+            self.counters.iter().map(|(&k, &v)| (k, Json::Num(v as f64))).collect();
+        let gauges: Vec<(&str, Json)> =
+            self.gauges.iter().map(|(&k, &v)| (k, Json::Num(v))).collect();
+        let hists: Vec<(&str, Json)> = self
+            .hists
+            .iter()
+            .map(|(&k, xs)| (k, hist_summary(xs)))
+            .collect();
+        let snaps: Vec<Json> = self
+            .snapshots
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("iteration", Json::Num(s.iteration as f64)),
+                    ("t_s", Json::Num(s.t)),
+                    (
+                        "counters",
+                        Json::obj(
+                            s.counters
+                                .iter()
+                                .map(|(&k, &v)| (k, Json::Num(v as f64)))
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "gauges",
+                        Json::obj(
+                            s.gauges.iter().map(|(&k, &v)| (k, Json::Num(v))).collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::str("dflop-metrics-v1")),
+            ("counters", Json::obj(counters)),
+            ("gauges", Json::obj(gauges)),
+            ("histograms", Json::obj(hists)),
+            ("snapshots", Json::Arr(snaps)),
+        ])
+    }
+
+    /// `to_json` rendered to a string (trailing newline included).
+    pub fn dump(&self) -> String {
+        emit(&self.to_json()) + "\n"
+    }
+}
+
+/// Summarize one histogram's samples. `quantile` asserts on empty
+/// input, so an empty series dumps as `{"count": 0}` only.
+fn hist_summary(xs: &[f64]) -> Json {
+    if xs.is_empty() {
+        return Json::obj(vec![("count", Json::Num(0.0))]);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    Json::obj(vec![
+        ("count", Json::Num(xs.len() as f64)),
+        ("mean", Json::Num(mean)),
+        ("min", Json::Num(xs.iter().cloned().fold(f64::INFINITY, f64::min))),
+        ("max", Json::Num(xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max))),
+        ("p50", Json::Num(quantile(xs, 0.50))),
+        ("p90", Json::Num(quantile(xs, 0.90))),
+        ("p99", Json::Num(quantile(xs, 0.99))),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn counters_gauges_and_snapshots_round_trip() {
+        let mut reg = Registry::default();
+        reg.counter_add("iterations", 1);
+        reg.gauge_set("step_time_s", 0.5);
+        reg.observe("step_time_s", 0.5);
+        reg.snapshot(0, 0.0);
+        reg.counter_add("iterations", 1);
+        reg.gauge_set("step_time_s", 0.7);
+        reg.observe("step_time_s", 0.7);
+        reg.snapshot(1, 0.5);
+        assert_eq!(reg.counter("iterations"), 2);
+        assert_eq!(reg.gauge("step_time_s"), Some(0.7));
+        assert_eq!(reg.snapshots()[0].counters["iterations"], 1);
+
+        let doc = parse(&reg.dump()).expect("valid json");
+        assert_eq!(
+            doc.get("schema").and_then(Json::as_str),
+            Some("dflop-metrics-v1")
+        );
+        assert_eq!(doc.path("counters.iterations").and_then(Json::as_usize), Some(2));
+        assert_eq!(
+            doc.path("histograms.step_time_s.count").and_then(Json::as_usize),
+            Some(2)
+        );
+        assert_eq!(
+            doc.get("snapshots").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(2)
+        );
+    }
+
+    #[test]
+    fn non_finite_values_are_dropped() {
+        let mut reg = Registry::default();
+        reg.gauge_set("g", f64::NAN);
+        reg.observe("h", f64::INFINITY);
+        assert_eq!(reg.gauge("g"), None);
+        // The empty histogram summarizes as count 0 without panicking.
+        let doc = parse(&reg.dump()).expect("valid json");
+        assert_eq!(doc.path("histograms.h.count").and_then(Json::as_usize), Some(0));
+    }
+}

@@ -1,0 +1,136 @@
+//! Observability: deterministic run tracing and telemetry export.
+//!
+//! Four layers on one seam:
+//!
+//! - [`record`] — the [`Recorder`] that `engine::run` threads through
+//!   `Telemetry`: structured sim-time-stamped events (plan swaps, drift
+//!   transitions, fault deltas, migrations, refit retries) plus opt-in
+//!   per-op / per-replica timelines, captured only at iteration
+//!   boundaries on the engine-loop thread.
+//! - [`bubble`] — per-stage bubble-interval extraction and
+//!   busy/idle/bubble-fraction accounting over recorded timelines
+//!   (`--fig bubbles`; the substrate for ROADMAP item 1's
+//!   bubble-exploiting execution model).
+//! - [`chrome`] — Chrome Trace Event Format export
+//!   (`dflop run ... --trace out.json`, loadable in Perfetto) plus a
+//!   schema validator.
+//! - [`metrics`] — the std-only counter/gauge/histogram [`Registry`]
+//!   with per-iteration snapshots (`--metrics out.json`) — the one
+//!   place new subsystems register run telemetry.
+//!
+//! **Determinism contract.** The recorder only copies values the
+//! simulation already produced, on one thread, at iteration
+//! boundaries, assembled in shard order — so a recorded log and every
+//! export derived from it are byte-identical at any `DFLOP_THREADS`,
+//! and recorder-on simulation results are bit-identical to
+//! recorder-off. Wall-clock quantities never enter the log or its
+//! exports; [`run_result_json`] (the `--json` summary) is the one
+//! place wall-clock overheads are reported, explicitly labelled.
+//!
+//! **Zero-overhead-off.** `Recorder::Off` is a unit variant; every
+//! hook is an inlined early return with no allocation and no
+//! arithmetic. `obs_bench` pins the guarantee with a paired
+//! recorder-off vs recorder-on row checked by `dflop-bench-compare`.
+
+pub mod bubble;
+pub mod chrome;
+pub mod metrics;
+pub mod record;
+
+pub use metrics::Registry;
+pub use record::{Event, EventKind, ObsConfig, Recorder, RunLog};
+
+use crate::sim::trainer::RunResult;
+use crate::util::json::{emit, Json};
+
+fn theta_json(t: &crate::optimizer::plan::Theta) -> Json {
+    let mp = |m: &crate::optimizer::plan::ModPar| {
+        Json::obj(vec![
+            ("tp", Json::Num(m.tp as f64)),
+            ("pp", Json::Num(m.pp as f64)),
+            ("dp", Json::Num(m.dp as f64)),
+        ])
+    };
+    Json::obj(vec![
+        ("label", Json::str(format!("{t}"))),
+        ("enc", mp(&t.enc)),
+        ("llm", mp(&t.llm)),
+        ("n_mb", Json::Num(t.n_mb as f64)),
+    ])
+}
+
+/// The full [`RunResult`] summary as machine-readable JSON
+/// (`dflop run --json <path>`): simulated means and series, fault
+/// counters, straggler percentiles, and replan events, plus the
+/// wall-clock offline overheads under `wall_clock` (the only
+/// non-deterministic fields — everything else is bit-deterministic).
+pub fn run_result_json(r: &RunResult) -> String {
+    let replans: Vec<Json> = r
+        .replan_events
+        .iter()
+        .map(|e| {
+            let mut fields = vec![
+                ("iteration", Json::Num(e.iteration as f64)),
+                ("swapped", Json::Bool(e.swapped)),
+                ("score", Json::Num(e.stat.score())),
+                ("old", Json::str(format!("{}", e.old))),
+                ("new", Json::str(format!("{}", e.new))),
+            ];
+            // NaN marks a failed refit and has no JSON encoding.
+            if e.expected_makespan.is_finite() {
+                fields.push(("expected_makespan_s", Json::Num(e.expected_makespan)));
+            }
+            fields.push(("elapsed_s", Json::Num(e.elapsed.as_secs_f64())));
+            Json::obj(fields)
+        })
+        .collect();
+    let gap_pcts: Vec<Json> = r
+        .straggler_gap_percentiles
+        .iter()
+        .map(|&(q, g)| Json::obj(vec![("q", Json::Num(q)), ("gap_s", Json::Num(g))]))
+        .collect();
+    let step_series: Vec<Json> =
+        r.iterations.iter().map(|s| Json::Num(s.iteration_time)).collect();
+    let sched_total: f64 = r.sched_elapsed.iter().map(|d| d.as_secs_f64()).sum();
+    let doc = Json::obj(vec![
+        ("schema", Json::str("dflop-run-v1")),
+        ("system", Json::str(r.system.label())),
+        ("theta", theta_json(&r.theta)),
+        ("n_gpus", Json::Num(r.n_gpus as f64)),
+        ("per_gpu_throughput_flops", Json::Num(r.per_gpu_throughput)),
+        ("mean_iteration_time_s", Json::Num(r.mean_iteration_time)),
+        ("mean_idle_gpu_s", Json::Num(r.mean_idle)),
+        ("iteration_time_s", Json::Arr(step_series)),
+        ("lpt_fallbacks", Json::Num(r.lpt_fallbacks as f64)),
+        ("replans", Json::Num(r.replans as f64)),
+        ("replan_events", Json::Arr(replans)),
+        (
+            "straggler_gaps_s",
+            Json::Arr(r.straggler_gaps.iter().map(|&g| Json::Num(g)).collect()),
+        ),
+        ("straggler_gap_percentiles", Json::Arr(gap_pcts)),
+        ("migrations", Json::Num(r.migrations as f64)),
+        (
+            "fault",
+            Json::obj(vec![
+                ("failures", Json::Num(r.fault.failures as f64)),
+                ("recoveries", Json::Num(r.fault.recoveries as f64)),
+                ("reshard_events", Json::Num(r.fault.reshard_events as f64)),
+                ("degraded_iters", Json::Num(r.fault.degraded_iters as f64)),
+            ]),
+        ),
+        (
+            "hetero_thetas",
+            Json::Arr(r.hetero_thetas.iter().map(theta_json).collect()),
+        ),
+        (
+            "wall_clock",
+            Json::obj(vec![
+                ("profiling_s", Json::Num(r.profiling_seconds)),
+                ("optimizer_s", Json::Num(r.optimizer_elapsed.as_secs_f64())),
+                ("sched_total_s", Json::Num(sched_total)),
+            ]),
+        ),
+    ]);
+    emit(&doc) + "\n"
+}

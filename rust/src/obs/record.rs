@@ -1,0 +1,481 @@
+//! The recorder seam: structured, sim-time-stamped run events plus
+//! opt-in per-op / per-replica timelines, captured at iteration
+//! boundaries only.
+//!
+//! [`Recorder`] lives on `engine::telemetry::Telemetry`, so every
+//! `PlanPolicy`/`ExecModel` hook reaches it through the `&mut Telemetry`
+//! the engine already threads — no trait-signature changes. Two
+//! guarantees back it:
+//!
+//! - **Zero-cost off.** [`Recorder::Off`] is a unit variant: every hook
+//!   is an `#[inline]` early-return behind one branch, allocates
+//!   nothing, and performs no arithmetic — so a recorder-off run is
+//!   bit-identical to a build without the seam.
+//! - **Bit-deterministic on.** Recording happens only on the single
+//!   engine-loop thread, at iteration boundaries, with sharded replica
+//!   results assembled in shard order — so the captured log (and every
+//!   export derived from it) is byte-identical at any `DFLOP_THREADS`.
+//!   The recorder copies values the simulation already produced; it
+//!   never feeds anything back, so recorder-on results equal
+//!   recorder-off results bit for bit.
+//!
+//! All timestamps are **simulated** seconds (the running sum of
+//! iteration times). Wall-clock quantities (`sched_elapsed`,
+//! `ReplanEvent::elapsed`) never enter the log — they would break the
+//! byte-identity contract.
+
+use crate::engine::policy::PlanSet;
+use crate::fault::FaultDelta;
+use crate::obs::bubble::iteration_bubble_fraction;
+use crate::obs::metrics::Registry;
+use crate::optimizer::plan::Theta;
+use crate::pipeline::build::IterationStats;
+use crate::pipeline::sim::OpRecord;
+use crate::shard::sync::BarrierStats;
+use crate::stream::replan::ReplanEvent;
+
+/// What a run's recorder captures beyond the always-on event stream and
+/// per-iteration boundary timings.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// Capture per-op timelines, replica-tagged on sharded systems
+    /// (`--trace` needs these for op and bubble spans).
+    pub timelines: bool,
+    /// Maintain the `obs::metrics` registry with per-iteration
+    /// snapshots (`--metrics`).
+    pub metrics: bool,
+}
+
+/// One structured run event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    /// Iteration the event landed on (events fire at boundaries).
+    pub iteration: usize,
+    /// Simulated seconds at the start of that iteration.
+    pub t: f64,
+    pub kind: EventKind,
+}
+
+/// What happened at an iteration boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// Fleet membership changed (failures/recoveries/reshard).
+    Fault { failures: usize, recoveries: usize, resharded: bool },
+    /// The policy applied a plan at this boundary. `replicas` is the
+    /// per-replica override count (0 = global plan only).
+    PlanSwap { old: Theta, new: Theta, replicas: usize },
+    /// The drift detector's phase changed: `drift-enter` (watch),
+    /// `drift-confirm` (confirmed drift), `drift-exit` (back to stable).
+    DriftPhase { phase: &'static str },
+    /// Items migrated between shards by the rebalance walk.
+    Migration { items: usize },
+    /// The ILP scheduler hit its budget and fell back to LPT.
+    LptFallback,
+    /// A replan fit ran: `swapped` plans, or kept/failed (`refit-retry`
+    /// when `expected_makespan` is `None` — the optimizer found no
+    /// feasible plan).
+    Replan { swapped: bool, score: f64, expected_makespan: Option<f64> },
+}
+
+/// One replica's recorded iteration execution (`ObsConfig::timelines`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplicaTrace {
+    /// Shard slot (0 on single-replica systems).
+    pub replica: usize,
+    pub n_stages: usize,
+    /// The replica's own pipeline makespan (post any straggler charge).
+    pub makespan: f64,
+    /// Per-stage busy seconds — the simulation's own accumulation.
+    pub stage_busy: Vec<f64>,
+    pub timeline: Vec<OpRecord>,
+}
+
+/// The step barrier's breakdown for one sharded iteration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BarrierTrace {
+    /// Per-replica iteration time, shard order.
+    pub per_replica: Vec<f64>,
+    pub allreduce: f64,
+    pub step_time: f64,
+    pub straggler_gap: f64,
+}
+
+/// One iteration's boundary record (always captured when the recorder
+/// is on; `replicas` only under [`ObsConfig::timelines`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct IterationTrace {
+    /// Simulated seconds at which the iteration started.
+    pub t_start: f64,
+    pub iteration_time: f64,
+    pub pipeline_makespan: f64,
+    pub dp_sync_time: f64,
+    pub n_stages: usize,
+    /// Per-replica op timelines, shard order (one entry, replica 0, on
+    /// single-replica systems). Empty unless timelines were requested.
+    pub replicas: Vec<ReplicaTrace>,
+    /// Step-barrier breakdown (sharded systems only).
+    pub barrier: Option<BarrierTrace>,
+}
+
+impl IterationTrace {
+    fn default_with(t_start: f64) -> IterationTrace {
+        IterationTrace { t_start, ..IterationTrace::default() }
+    }
+}
+
+/// Everything one run's recorder captured, in iteration order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RunLog {
+    pub cfg: ObsConfig,
+    /// Simulated seconds at run end (sum of iteration times).
+    pub sim_now: f64,
+    pub iterations: Vec<IterationTrace>,
+    /// Structured events sorted by iteration (stable within one).
+    pub events: Vec<Event>,
+    /// The metrics registry (`ObsConfig::metrics`).
+    pub metrics: Option<Registry>,
+    /// Replica traces staged by the executor for the in-flight
+    /// iteration, drained at the next `end_iteration`.
+    pending_replicas: Vec<ReplicaTrace>,
+    pending_barrier: Option<BarrierTrace>,
+    /// Last drift phase, so only transitions emit events.
+    last_phase: Option<&'static str>,
+}
+
+impl RunLog {
+    fn push_event(&mut self, kind: EventKind) {
+        if let Some(reg) = self.metrics.as_mut() {
+            match &kind {
+                EventKind::Fault { failures, recoveries, resharded } => {
+                    reg.counter_add("fault_failures", *failures as u64);
+                    reg.counter_add("fault_recoveries", *recoveries as u64);
+                    if *resharded {
+                        reg.counter_add("fault_reshards", 1);
+                    }
+                }
+                EventKind::PlanSwap { .. } => reg.counter_add("plan_swaps", 1),
+                EventKind::DriftPhase { .. } => reg.counter_add("drift_transitions", 1),
+                EventKind::Migration { items } => {
+                    reg.counter_add("migrated_items", *items as u64)
+                }
+                EventKind::LptFallback => reg.counter_add("lpt_fallbacks", 1),
+                EventKind::Replan { .. } => {}
+            }
+        }
+        self.events.push(Event { iteration: self.iterations.len(), t: self.sim_now, kind });
+    }
+
+    fn end_iteration(&mut self, stats: &IterationStats) {
+        let t_start = self.sim_now;
+        let mut replicas = std::mem::take(&mut self.pending_replicas);
+        // Single-replica systems never stage traces — lift replica 0
+        // straight off the iteration's own recorded timeline.
+        if self.cfg.timelines && replicas.is_empty() && !stats.timeline.is_empty() {
+            replicas.push(ReplicaTrace {
+                replica: 0,
+                n_stages: stats.n_stages,
+                makespan: stats.pipeline_makespan,
+                stage_busy: stats.stage_busy.clone(),
+                timeline: stats.timeline.clone(),
+            });
+        }
+        let barrier = self.pending_barrier.take();
+        if let Some(reg) = self.metrics.as_mut() {
+            reg.counter_add("iterations", 1);
+            reg.gauge_set("step_time_s", stats.iteration_time);
+            reg.gauge_set("pipeline_makespan_s", stats.pipeline_makespan);
+            reg.gauge_set("dp_sync_s", stats.dp_sync_time);
+            let frac = iteration_bubble_fraction(stats);
+            reg.gauge_set("bubble_fraction", frac);
+            reg.observe("step_time_s", stats.iteration_time);
+            reg.observe("bubble_fraction", frac);
+            if let Some(b) = &barrier {
+                reg.gauge_set("straggler_gap_s", b.straggler_gap);
+                reg.observe("straggler_gap_s", b.straggler_gap);
+            }
+            reg.snapshot(self.iterations.len(), t_start);
+        }
+        self.iterations.push(IterationTrace {
+            t_start,
+            iteration_time: stats.iteration_time,
+            pipeline_makespan: stats.pipeline_makespan,
+            dp_sync_time: stats.dp_sync_time,
+            n_stages: stats.n_stages,
+            replicas,
+            barrier,
+        });
+        self.sim_now += stats.iteration_time;
+    }
+}
+
+/// The recorder seam itself. `Off` is the default and the hot-path
+/// contract: every hook below is an inlined single-branch early return,
+/// with no allocation and no arithmetic.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum Recorder {
+    #[default]
+    Off,
+    On(Box<RunLog>),
+}
+
+impl Recorder {
+    /// A recorder for `cfg` (`None` = off — the engine passes
+    /// `RunConfig::obs` straight through).
+    pub fn new(cfg: Option<&ObsConfig>) -> Recorder {
+        match cfg {
+            None => Recorder::Off,
+            Some(c) => Recorder::On(Box::new(RunLog {
+                cfg: *c,
+                metrics: c.metrics.then(Registry::default),
+                ..RunLog::default()
+            })),
+        }
+    }
+
+    #[inline]
+    pub fn is_on(&self) -> bool {
+        matches!(self, Recorder::On(_))
+    }
+
+    /// Whether per-op timelines should be captured this run.
+    #[inline]
+    pub fn wants_timelines(&self) -> bool {
+        matches!(self, Recorder::On(log) if log.cfg.timelines)
+    }
+
+    /// Fleet activity at this boundary (no event for a quiet delta;
+    /// degraded iterations are counted in the metrics registry).
+    #[inline]
+    pub fn fault(&mut self, d: &FaultDelta) {
+        if let Recorder::On(log) = self {
+            if d.degraded {
+                if let Some(reg) = log.metrics.as_mut() {
+                    reg.counter_add("fault_degraded_iters", 1);
+                }
+            }
+            if d.failures > 0 || d.recoveries > 0 || d.resharded {
+                log.push_event(EventKind::Fault {
+                    failures: d.failures,
+                    recoveries: d.recoveries,
+                    resharded: d.resharded,
+                });
+            }
+        }
+    }
+
+    /// The policy handed the executor a new plan at this boundary.
+    #[inline]
+    pub fn plan_swap(&mut self, old: Theta, new: &PlanSet) {
+        if let Recorder::On(log) = self {
+            log.push_event(EventKind::PlanSwap {
+                old,
+                new: new.global,
+                replicas: new.per_replica.as_ref().map_or(0, Vec::len),
+            });
+        }
+    }
+
+    /// The drift detector's current phase (`stable`/`watch`/`drift`;
+    /// `None` for policies without a detector). Only transitions emit
+    /// events; an initial `stable` is the baseline, not a transition.
+    #[inline]
+    pub fn drift_phase(&mut self, phase: Option<&'static str>) {
+        if let Recorder::On(log) = self {
+            let Some(p) = phase else { return };
+            if log.last_phase == Some(p) || (log.last_phase.is_none() && p == "stable") {
+                log.last_phase = Some(p);
+                return;
+            }
+            log.last_phase = Some(p);
+            let name = match p {
+                "watch" => "drift-enter",
+                "drift" => "drift-confirm",
+                _ => "drift-exit",
+            };
+            log.push_event(EventKind::DriftPhase { phase: name });
+        }
+    }
+
+    /// Items the rebalance walk migrated this boundary (0 = no event).
+    #[inline]
+    pub fn migrations(&mut self, items: usize) {
+        if let Recorder::On(log) = self {
+            if items > 0 {
+                log.push_event(EventKind::Migration { items });
+            }
+        }
+    }
+
+    /// The ILP scheduler's budget expired; the LPT incumbent ran.
+    #[inline]
+    pub fn lpt_fallback(&mut self) {
+        if let Recorder::On(log) = self {
+            log.push_event(EventKind::LptFallback);
+        }
+    }
+
+    /// Stage the per-replica execution of the in-flight sharded
+    /// iteration, shard order (called by `ShardedExec` after the health
+    /// charge, so traces match the barrier's stretched times). No-op
+    /// unless timelines were requested.
+    #[inline]
+    pub fn replica_timelines(&mut self, per_replica: &[IterationStats]) {
+        if let Recorder::On(log) = self {
+            if !log.cfg.timelines {
+                return;
+            }
+            log.pending_replicas = per_replica
+                .iter()
+                .enumerate()
+                .map(|(r, s)| ReplicaTrace {
+                    replica: r,
+                    n_stages: s.n_stages,
+                    makespan: s.pipeline_makespan,
+                    stage_busy: s.stage_busy.clone(),
+                    timeline: s.timeline.clone(),
+                })
+                .collect();
+        }
+    }
+
+    /// Stage the in-flight sharded iteration's barrier breakdown.
+    #[inline]
+    pub fn barrier(&mut self, b: &BarrierStats) {
+        if let Recorder::On(log) = self {
+            log.pending_barrier = Some(BarrierTrace {
+                per_replica: b.per_replica.clone(),
+                allreduce: b.allreduce,
+                step_time: b.step_time,
+                straggler_gap: b.straggler_gap,
+            });
+        }
+    }
+
+    /// Close the in-flight iteration: drain staged traces, snapshot
+    /// metrics, advance the simulated clock.
+    #[inline]
+    pub fn end_iteration(&mut self, stats: &IterationStats) {
+        if let Recorder::On(log) = self {
+            log.end_iteration(stats);
+        }
+    }
+
+    /// Finish the run: fold the replanner's event log in (stamped with
+    /// each event's iteration start time) and hand the log out. `self`
+    /// reverts to `Off`.
+    pub fn take_log(&mut self, replans: &[ReplanEvent]) -> Option<Box<RunLog>> {
+        let Recorder::On(mut log) = std::mem::take(self) else {
+            return None;
+        };
+        if let Some(reg) = log.metrics.as_mut() {
+            let swapped = replans.iter().filter(|e| e.swapped).count() as u64;
+            reg.counter_add("replans", swapped);
+            reg.counter_add(
+                "refit_retries",
+                replans.iter().filter(|e| e.expected_makespan.is_nan()).count() as u64,
+            );
+        }
+        for e in replans {
+            let t = log
+                .iterations
+                .get(e.iteration)
+                .map_or(log.sim_now, |it| it.t_start);
+            log.events.push(Event {
+                iteration: e.iteration,
+                t,
+                kind: EventKind::Replan {
+                    swapped: e.swapped,
+                    score: e.stat.score(),
+                    expected_makespan: e
+                        .expected_makespan
+                        .is_finite()
+                        .then_some(e.expected_makespan),
+                },
+            });
+        }
+        // Stable: within one iteration, live events keep their order and
+        // replans land after them.
+        log.events.sort_by_key(|e| e.iteration);
+        Some(log)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::build::IterationStats;
+
+    fn stats(t: f64) -> IterationStats {
+        IterationStats {
+            iteration_time: t,
+            pipeline_makespan: t,
+            dp_sync_time: 0.0,
+            stage_busy: vec![t],
+            stage_idle: vec![0.0],
+            stage_flop: vec![1.0],
+            n_stages: 1,
+            total_flop: 1.0,
+            buckets: Vec::new(),
+            timeline: vec![OpRecord {
+                bucket: 0,
+                stage: 0,
+                is_forward: true,
+                start: 0.0,
+                finish: t,
+            }],
+        }
+    }
+
+    #[test]
+    fn off_recorder_is_inert_and_yields_no_log() {
+        let mut rec = Recorder::new(None);
+        assert!(!rec.is_on());
+        rec.end_iteration(&stats(1.0));
+        rec.migrations(5);
+        rec.lpt_fallback();
+        assert!(rec.take_log(&[]).is_none());
+    }
+
+    #[test]
+    fn sim_clock_advances_and_events_stamp_iteration_starts() {
+        let mut rec =
+            Recorder::new(Some(&ObsConfig { timelines: true, metrics: false }));
+        rec.end_iteration(&stats(2.0));
+        rec.migrations(3);
+        rec.end_iteration(&stats(3.0));
+        let log = rec.take_log(&[]).expect("on");
+        assert_eq!(log.iterations.len(), 2);
+        assert_eq!(log.iterations[0].t_start, 0.0);
+        assert_eq!(log.iterations[1].t_start, 2.0);
+        assert_eq!(log.sim_now, 5.0);
+        // The migration fired between the boundaries: iteration 1, t=2.
+        assert_eq!(log.events.len(), 1);
+        assert_eq!(log.events[0].iteration, 1);
+        assert_eq!(log.events[0].t, 2.0);
+        // Timelines were requested: replica 0 lifted off the stats.
+        assert_eq!(log.iterations[0].replicas.len(), 1);
+        assert_eq!(log.iterations[0].replicas[0].replica, 0);
+    }
+
+    #[test]
+    fn drift_phase_emits_transitions_only() {
+        let mut rec =
+            Recorder::new(Some(&ObsConfig { timelines: false, metrics: false }));
+        rec.drift_phase(None);
+        rec.drift_phase(Some("stable"));
+        rec.drift_phase(Some("stable"));
+        rec.drift_phase(Some("watch"));
+        rec.drift_phase(Some("drift"));
+        rec.drift_phase(Some("stable"));
+        let log = rec.take_log(&[]).expect("on");
+        let phases: Vec<&str> = log
+            .events
+            .iter()
+            .map(|e| match &e.kind {
+                EventKind::DriftPhase { phase } => *phase,
+                other => panic!("unexpected {other:?}"),
+            })
+            .collect();
+        assert_eq!(phases, vec!["drift-enter", "drift-confirm", "drift-exit"]);
+    }
+}

@@ -54,9 +54,11 @@ pub fn step_barrier(per_replica: Vec<f64>, allreduce: f64) -> BarrierStats {
 
 /// Charge a persistent-straggler slowdown into one replica's iteration:
 /// every time term (makespan, busy/idle, bucket execution, intra-replica
-/// sync) stretches by `factor`, while FLOP counts stay untouched — the
-/// replica does the same work on slower hardware. The per-iteration
-/// `timeline` is left alone: the cross-shard merge drops it. Charging
+/// sync, the per-op `timeline` endpoints) stretches by `factor`, while
+/// FLOP counts stay untouched — the replica does the same work on slower
+/// hardware. The cross-shard merge still drops the timeline, but the
+/// observability recorder captures it replica-tagged first, so its
+/// endpoints must stay consistent with the stretched makespan. Charging
 /// happens *before* the step barrier, so the factor flows into the step
 /// time and the straggler gap exactly like organic data skew does.
 pub fn charge_straggler(stats: &mut IterationStats, factor: f64) {
@@ -73,6 +75,10 @@ pub fn charge_straggler(stats: &mut IterationStats, factor: f64) {
     for b in &mut stats.buckets {
         b.enc_time *= factor;
         b.llm_time *= factor;
+    }
+    for op in &mut stats.timeline {
+        op.start *= factor;
+        op.finish *= factor;
     }
 }
 
@@ -236,6 +242,12 @@ mod tests {
             assert_eq!(c.enc_time, h.enc_time * 1.5);
             assert_eq!(c.llm_time, h.llm_time * 1.5);
             assert_eq!(c.enc_flop.to_bits(), h.enc_flop.to_bits());
+        }
+        // The recorded timeline stretches with the makespan it sits in.
+        assert!(!charged.timeline.is_empty());
+        for (c, h) in charged.timeline.iter().zip(&healthy.timeline) {
+            assert_eq!(c.start, h.start * 1.5);
+            assert_eq!(c.finish, h.finish * 1.5);
         }
         // The charged replica raises the barrier like an organic laggard.
         let b = step_barrier(vec![healthy.iteration_time, charged.iteration_time], 0.0);

@@ -17,6 +17,7 @@
 
 use crate::fault::FaultStats;
 use crate::model::catalog::Mllm;
+use crate::obs::{ObsConfig, RunLog};
 use crate::optimizer::plan::Theta;
 use crate::pipeline::build::IterationStats;
 use crate::shard::ShardConfig;
@@ -91,6 +92,10 @@ pub struct RunConfig {
     /// `None` runs the healthy pipeline untouched. Requires `shard` with
     /// `dp_shards >= 2` and no `hetero` (validated up front).
     pub faults: Option<FaultConfig>,
+    /// Observability recorder configuration (`crate::obs`). `None` — the
+    /// default — keeps the recorder off, which is guaranteed zero-cost
+    /// and bit-identical to a build without the seam.
+    pub obs: Option<ObsConfig>,
 }
 
 /// Fault-injection arm of a fleet run.
@@ -125,6 +130,7 @@ impl RunConfig {
             replan: None,
             shard: None,
             faults: None,
+            obs: None,
         }
     }
 }
@@ -176,6 +182,11 @@ pub struct RunResult {
     pub hetero_thetas: Vec<Theta>,
     /// Full per-iteration stats for figure-specific postprocessing.
     pub iterations: Vec<IterationStats>,
+    /// The observability recorder's log (`Some` iff `RunConfig::obs` was
+    /// set): structured events, per-iteration traces, and the metrics
+    /// registry, ready for `obs::chrome::trace_json` /
+    /// `Registry::dump`.
+    pub obs: Option<Box<RunLog>>,
 }
 
 impl RunResult {

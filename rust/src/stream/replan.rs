@@ -132,6 +132,9 @@ pub struct Replanner {
     cooldown: usize,
     iteration: usize,
     failed_refits: usize,
+    /// The detector's decision at the latest evaluated window (`None`
+    /// until one fills), surfaced for observability.
+    last_decision: Option<Decision>,
 }
 
 impl Replanner {
@@ -147,6 +150,7 @@ impl Replanner {
             cooldown: 0,
             iteration: 0,
             failed_refits: 0,
+            last_decision: None,
             cfg,
         }
     }
@@ -188,7 +192,9 @@ impl Replanner {
         if !self.window.is_full() {
             return None;
         }
-        match self.detector.observe(self.window.stats()) {
+        let decision = self.detector.observe(self.window.stats());
+        self.last_decision = Some(decision);
+        match decision {
             Decision::Drift => self.replan(ctx, iteration),
             Decision::Watch | Decision::Stable => None,
         }
@@ -303,6 +309,13 @@ impl Replanner {
     /// Detector statistics of the latest evaluated window.
     pub fn last_stat(&self) -> Option<DriftStat> {
         self.detector.last
+    }
+
+    /// The detector's decision at the latest evaluated window (`None`
+    /// until the first window fills) — the observability recorder's view
+    /// of the drift phase.
+    pub fn drift_decision(&self) -> Option<Decision> {
+        self.last_decision
     }
 
     pub fn window(&self) -> &ShapeWindow {
