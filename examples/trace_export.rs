@@ -49,7 +49,7 @@ fn main() -> dflop::util::error::Result<()> {
         ..ShardConfig::default()
     });
     cfg.faults = Some(FaultConfig { trace: trace_key.clone(), respond: true });
-    cfg.obs = Some(ObsConfig { timelines: true, metrics: true });
+    cfg.obs = Some(ObsConfig { timelines: true, metrics: true, audit: false });
 
     let r = dflop::engine::run(SystemKind::DflopSharded, &m, "skewed-shard", &cfg)?;
     println!("fleet         : {dp_shards} shards × {nodes} node(s), {iters} iterations");

@@ -1,0 +1,84 @@
+//! Bench: the counterfactual pricer behind `obs::audit`.
+//!
+//! The gated pair is `cf pricing x64 batches, delta replay` vs
+//! `cf pricing x64 batches, fresh re-sim`: the same 64 realized batches
+//! priced under the same incumbent θ, once through the standing route
+//! set (`update_leg` + `delta_run`, the path `run_audit` takes) and once
+//! rebuilding the full route set and running a fresh tracked simulation
+//! per batch (the oracle). The bench asserts bit-equality of every
+//! priced makespan outright — the audit's correctness contract — and
+//! `dflop-bench-compare` gates delta replay at ≤ ½× the fresh cost, the
+//! reason the audit can afford to re-price every epoch's batches.
+mod common;
+use common::{bench, emit_json};
+use dflop::data::dataset::Dataset;
+use dflop::model::catalog::{llama3, llava_ov};
+use dflop::obs::audit::CfPricer;
+use dflop::optimizer::plan::{ModPar, Theta};
+use dflop::perfmodel::{ClusterSpec, Truth};
+use dflop::profiling::backend::SimBackend;
+use dflop::profiling::engine::{ModelProfiler, ProfilerGrids};
+
+fn main() {
+    println!("== audit_bench ==");
+    let mut results = Vec::new();
+
+    let m = llava_ov(llama3("8b"));
+    let mut backend = SimBackend::new(Truth::new(ClusterSpec::hgx_a100(1)));
+    let profile = ModelProfiler::new(&mut backend, ProfilerGrids::standard(8)).profile(&m);
+    let theta = Theta {
+        enc: ModPar { tp: 1, pp: 1, dp: 2 },
+        llm: ModPar { tp: 2, pp: 2, dp: 1 },
+        n_mb: 8,
+    };
+    // 64 realized batches at constant GBS: the steady-state shape the
+    // audit re-prices (bucket count never changes, so delta replay stays
+    // on the standing routes after batch 0). The workload is cheap
+    // enough to keep constant in quick mode — `bench` already drops to
+    // one rep — so the row names the compare gate matches never change.
+    let n_batches = 64;
+    let gbs = 64;
+    let mut ds = Dataset::mixed(42);
+    let batches: Vec<Vec<_>> = (0..n_batches).map(|_| ds.shaped_batch(&m, gbs)).collect();
+
+    // Correctness first: the two paths must agree to the bit on every
+    // batch, or the benched speedup is pricing something else.
+    let mut delta = CfPricer::new(&m, &profile.throughput, theta);
+    let mut fresh = CfPricer::new(&m, &profile.throughput, theta);
+    for (i, b) in batches.iter().enumerate() {
+        let d = delta.price(b);
+        let f = fresh.price_fresh(b);
+        assert_eq!(
+            d.to_bits(),
+            f.to_bits(),
+            "delta replay diverged from fresh re-sim on batch {i}: {d} vs {f}"
+        );
+    }
+
+    results.push(bench(
+        &format!("cf pricing x{n_batches} batches, delta replay (gbs {gbs})"),
+        20,
+        || {
+            let mut p = CfPricer::new(&m, &profile.throughput, theta);
+            let mut acc = 0.0f64;
+            for b in &batches {
+                acc += p.price(b);
+            }
+            std::hint::black_box(acc);
+        },
+    ));
+    results.push(bench(
+        &format!("cf pricing x{n_batches} batches, fresh re-sim (gbs {gbs})"),
+        20,
+        || {
+            let mut p = CfPricer::new(&m, &profile.throughput, theta);
+            let mut acc = 0.0f64;
+            for b in &batches {
+                acc += p.price_fresh(b);
+            }
+            std::hint::black_box(acc);
+        },
+    ));
+
+    emit_json("audit_bench", &results);
+}

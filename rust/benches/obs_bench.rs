@@ -54,7 +54,7 @@ fn main() {
         SystemKind::DflopSharded,
         &m,
         "skewed-shard",
-        &fleet_cfg(Some(ObsConfig { timelines: true, metrics: true })),
+        &fleet_cfg(Some(ObsConfig { timelines: true, metrics: true, audit: false })),
     );
     // The contract behind the gate: observation changes nothing. A drift
     // here means the recorder fed a value back into the simulation.

@@ -3,13 +3,15 @@
 # named in-binary speedup claims with dflop-bench-compare — including the
 # PR-7 fault-fleet acceptance pair (fault-aware strictly faster mean step
 # and strictly smaller worst straggler gap than static θ* under the same
-# skewed-churn FaultTrace) and the PR-8 observability pair (recorder-on
+# skewed-churn FaultTrace), the PR-8 observability pair (recorder-on
 # mean step within 1.02× of recorder-off on the same fleet — bit-identical
-# by contract).
+# by contract), and the PR-9 audit pair (counterfactual pricing via delta
+# replay at ≤ ½× a fresh re-sim over the same 64 batches — bit-identical
+# by the pricer's own in-bench assertion).
 #
 # Usage:  rust/scripts/bench_gate.sh [<out.json>]
 #
-# <out.json> defaults to BENCH_PR8.json at the repository root. The run is
+# <out.json> defaults to BENCH_PR9.json at the repository root. The run is
 # single-threaded (override with DFLOP_THREADS) and quick-mode by default
 # so CI finishes in seconds; set FULL=1 for stable full-rep statistics.
 # Alongside the merged document, per-target BENCH_<target>.json files are
@@ -22,7 +24,7 @@ set -eu
 
 root="$(git rev-parse --show-toplevel)"
 cd "$root"
-out="${1:-$root/BENCH_PR8.json}"
+out="${1:-$root/BENCH_PR9.json}"
 case "$out" in
     /*) ;;
     *) out="$root/$out" ;;

@@ -21,7 +21,12 @@
 //!   mean step within 1.02× of the recorder-off run (`obs_bench`, the
 //!   PR-8 zero-overhead seam — the paired rows are simulated seconds and
 //!   bit-identical by contract, so any ratio above 1.0 means the
-//!   recorder fed a value back into the simulation).
+//!   recorder fed a value back into the simulation),
+//! - the audit's counterfactual pricer re-prices realized batches via
+//!   delta replay at ≤ ½ the cost of a fresh tracked re-simulation per
+//!   batch (`audit_bench`, the PR-9 claim that post-run replan
+//!   attribution needs no new simulations — the bench itself asserts
+//!   the two paths agree to the bit before timing them).
 //!
 //! A missing row is a hard error, not a skip: renaming a bench silently
 //! would otherwise disarm the gate. Exit code 1 on any violation, 2 on
@@ -82,6 +87,13 @@ const EXPECTATIONS: &[Expect] = &[
         denominator: "fleet mean step, recorder off (skewed-churn, 4 shards)",
         max_ratio: 1.02,
         claim: "switching the recorder on leaves the simulated step unchanged",
+    },
+    Expect {
+        target: "audit_bench",
+        numerator: "cf pricing x64 batches, delta replay (gbs 64)",
+        denominator: "cf pricing x64 batches, fresh re-sim (gbs 64)",
+        max_ratio: 0.5,
+        claim: "counterfactual pricing via delta replay >= 2x faster than fresh re-sim",
     },
 ];
 

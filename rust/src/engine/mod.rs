@@ -395,6 +395,14 @@ pub fn run(kind: SystemKind, m: &Mllm, dataset_key: &str, cfg: &RunConfig) -> Re
             policy.observe_health(fs.confirmed_active());
         }
         let draw = feed.draw(m);
+        // Stage the realized batch for the post-run audit (pooled view
+        // on sharded systems — the same shapes the drift merge sees).
+        if tel.rec.wants_audit() {
+            match &draw {
+                Draw::Single(b) => tel.rec.audit_batch(b),
+                Draw::Sharded { pooled, .. } => tel.rec.audit_batch(pooled),
+            }
+        }
         // Drift check before scheduling: the batch's shapes are known to
         // the CPU-side scheduler ahead of execution, and a confirmed
         // drift swaps the plan at this iteration boundary.
@@ -413,7 +421,7 @@ pub fn run(kind: SystemKind, m: &Mllm, dataset_key: &str, cfg: &RunConfig) -> Re
 
     let n_gpus = off.cluster.total_gpus() * if sharded { shards } else { 1 };
     let final_plan = exec.plan().clone();
-    Ok(tel.finish(
+    let mut result = tel.finish(
         kind,
         final_plan.global,
         n_gpus,
@@ -421,5 +429,21 @@ pub fn run(kind: SystemKind, m: &Mllm, dataset_key: &str, cfg: &RunConfig) -> Re
         off.optimizer_elapsed,
         policy.take_events(),
         final_plan.per_replica.unwrap_or_default(),
-    ))
+    );
+    // Post-run analysis tier: price the recorded batches against the
+    // plans that executed them. Runs after the loop on the same thread
+    // over sim-time data only, so the determinism contract holds.
+    if let Some(log) = result.obs.as_deref_mut() {
+        if log.cfg.audit {
+            crate::obs::audit::run_audit(
+                log,
+                off.theta,
+                &result.iterations,
+                &result.replan_events,
+                m,
+                &off.profile.throughput,
+            );
+        }
+    }
+    Ok(result)
 }

@@ -21,6 +21,8 @@ use crate::model::catalog::{
     internvl_25, llava_ov, llama3, paper_configs, qwen2_audio, qwen25, Mllm,
 };
 use crate::obs::bubble::{iteration_bubble_fraction, stage_bubbles};
+use crate::obs::critical::{critical_path, op_slack, OpSlack};
+use crate::obs::ObsConfig;
 use crate::optimizer::plan::{ModPar, Theta};
 use crate::optimizer::search::{optimize, OptimizerInputs};
 use crate::perfmodel::{ClusterSpec, Truth};
@@ -1169,6 +1171,171 @@ pub fn fig_bubbles(o: &FigOpts) -> String {
 }
 
 // ------------------------------------------------------------------
+// Critical path (extension) — chain extraction, slack, and blame from
+// the obs subsystem's critical-path analysis
+// ------------------------------------------------------------------
+
+pub fn fig_critpath(o: &FigOpts) -> String {
+    let m = llava_ov(llama3("8b"));
+    let results = run_grid(cross_specs(&[&m], &SYSTEMS, "mixed"), o);
+    let mut t = Table::new(
+        "Critical path — last-iteration chain accounting (obs::critical, mixed dataset)",
+        &["system", "makespan", "chain ops", "enc (s)", "llm (s)", "comm wait (s)", "bit-exact"],
+    );
+    for (kind, r) in SYSTEMS.into_iter().zip(&results) {
+        let last = r.iterations.last().expect("at least one iteration");
+        let cp = critical_path(&last.timeline, last.n_stages, last.pipeline_makespan)
+            .expect("recorded timeline always yields a chain");
+        let enc_stages = r.theta.enc.dp * r.theta.enc.pp;
+        let (enc, llm, comm) = cp.modality_blame(enc_stages);
+        t.row(vec![
+            kind.label().to_string(),
+            secs(last.pipeline_makespan),
+            format!("{}", cp.spans.iter().filter(|s| !s.is_comm).count()),
+            f(enc, 3),
+            f(llm, 3),
+            f(comm, 3),
+            // The defining property: chain span durations telescope to
+            // the makespan bit pattern, not merely within a tolerance.
+            if cp.total().to_bits() == last.pipeline_makespan.to_bits() {
+                "yes".to_string()
+            } else {
+                "NO".to_string()
+            },
+        ]);
+    }
+
+    // DFLOP drill-down: the per-stage blame split plus the largest
+    // off-chain slack slots — the machine-readable list the
+    // bubble-exploiting execution model (ROADMAP item 1) consumes.
+    let d = &results[0];
+    let last = d.iterations.last().expect("at least one iteration");
+    let cp = critical_path(&last.timeline, last.n_stages, last.pipeline_makespan)
+        .expect("recorded timeline always yields a chain");
+    let blame = cp.stage_blame(last.n_stages);
+    let worst = blame
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1).then(b.0.cmp(&a.0)))
+        .map(|(s, b)| format!("stage {s} ({:.3} s)", b))
+        .unwrap_or_else(|| "-".into());
+
+    let slacks = op_slack(&last.timeline, last.n_stages, last.pipeline_makespan);
+    let mut off_chain: Vec<&OpSlack> = slacks.iter().filter(|s| !s.critical).collect();
+    off_chain.sort_by(|a, b| {
+        b.slack
+            .total_cmp(&a.slack)
+            .then(a.stage.cmp(&b.stage))
+            .then(a.bucket.cmp(&b.bucket))
+            .then(a.is_forward.cmp(&b.is_forward))
+    });
+    let mut t2 = Table::new(
+        "Critical path — DFLOP top slack slots, last iteration (obs::critical::op_slack)",
+        &["stage", "bucket", "op", "start (s)", "finish (s)", "slack (s)"],
+    );
+    for s in off_chain.iter().take(8) {
+        t2.row(vec![
+            format!("{}", s.stage),
+            format!("{}", s.bucket),
+            if s.is_forward { "fwd".into() } else { "bwd".to_string() },
+            f(s.start, 3),
+            f(s.finish, 3),
+            f(s.slack, 3),
+        ]);
+    }
+    t.render()
+        + &t2.render()
+        + &format!(
+            "DFLOP chain: {} of {} ops critical, heaviest blame {worst}, comm wait {:.3} s\n",
+            slacks.iter().filter(|s| s.critical).count(),
+            slacks.len(),
+            cp.comm_wait(),
+        )
+}
+
+// ------------------------------------------------------------------
+// Audit (extension) — predicted-vs-measured residuals and replan
+// attribution from the obs subsystem's post-run audit
+// ------------------------------------------------------------------
+
+pub fn fig_audit(o: &FigOpts) -> String {
+    // Same grid shape as Fig 17: the drift scenarios are where plan
+    // epochs actually change, so the replan attribution has material.
+    let m = internvl_25(qwen25("7b"));
+    let iters = o.iters.max(DRIFT_MIN_ITERS);
+    let scenarios: [&'static str; 3] = ["curriculum", "bursty-video", "mixed"];
+    let mut cells = Vec::new();
+    for key in scenarios {
+        for kind in [SystemKind::Dflop, SystemKind::DflopAdaptive] {
+            let mut cfg = RunConfig::new(o.nodes, o.gbs, iters, o.seed);
+            cfg.obs = Some(ObsConfig { timelines: false, metrics: false, audit: true });
+            cells.push(Cell { kind, m: m.clone(), dataset: key.to_string(), cfg });
+        }
+    }
+    let results = run_cells(&cells).expect("built-in dataset keys");
+
+    let mut t = Table::new(
+        "Audit — estimator predicted vs simulated measured step time (obs::audit)",
+        &["scenario", "system", "audited iters", "mean |rel err|", "bias (s)"],
+    );
+    let mut audits = Vec::new();
+    for (i, key) in scenarios.into_iter().enumerate() {
+        for (j, kind) in [SystemKind::Dflop, SystemKind::DflopAdaptive].into_iter().enumerate()
+        {
+            let r = &results[i * 2 + j];
+            let a = r
+                .obs
+                .as_deref()
+                .and_then(|log| log.audit.as_ref())
+                .expect("audit-enabled run records a report");
+            t.row(vec![
+                key.to_string(),
+                kind.label().to_string(),
+                format!("{}", a.rows.len()),
+                format!("{:.2}%", a.mean_abs_rel_err * 100.0),
+                format!("{:+.3}", a.bias),
+            ]);
+            audits.push((key, kind, a.clone()));
+        }
+    }
+
+    // Counterfactual replan attribution: incumbent θ re-priced over the
+    // realized post-swap batches (delta replay) vs the plan it adopted.
+    let mut t2 = Table::new(
+        "Audit — counterfactual replan attribution (delta replay of the incumbent θ)",
+        &["scenario", "swap @ iter", "window", "incumbent (s)", "adopted (s)", "measured gain", "predicted gain"],
+    );
+    let mut any_swap = false;
+    for (key, kind, a) in &audits {
+        if *kind != SystemKind::DflopAdaptive {
+            continue;
+        }
+        for ra in &a.replans {
+            any_swap = true;
+            t2.row(vec![
+                key.to_string(),
+                format!("{}", ra.iteration),
+                format!("{}", ra.window),
+                f(ra.incumbent_mean, 3),
+                f(ra.adopted_mean, 3),
+                format!("{:+.3} s", ra.measured_benefit),
+                if ra.predicted_benefit.is_finite() {
+                    format!("{:+.3} s", ra.predicted_benefit)
+                } else {
+                    "-".to_string()
+                },
+            ]);
+        }
+    }
+    let note = if any_swap {
+        String::new()
+    } else {
+        "no plan swaps in any scenario — attribution table empty\n".to_string()
+    };
+    t.render() + &t2.render() + &note
+}
+
+// ------------------------------------------------------------------
 // Tables 2 and 4
 // ------------------------------------------------------------------
 
@@ -1253,6 +1420,8 @@ pub fn all(o: &FigOpts) -> String {
     out.push_str(&fig_hetero(o));
     out.push_str(&fig_fleet(o));
     out.push_str(&fig_bubbles(o));
+    out.push_str(&fig_critpath(o));
+    out.push_str(&fig_audit(o));
     out.push_str(&table2(o));
     out.push_str(&table4(o));
     out
@@ -1279,6 +1448,8 @@ pub fn by_id(id: &str, o: &FigOpts) -> Option<String> {
         "19" | "hetero" => fig_hetero(o),
         "20" | "fleet" => fig_fleet(o),
         "bubbles" => fig_bubbles(o),
+        "critpath" => fig_critpath(o),
+        "audit" => fig_audit(o),
         "all" => all(o),
         _ => return None,
     })

@@ -2,12 +2,12 @@
 //! optimizer/scheduler inspection, and real-artifact profiling.
 //!
 //! ```text
-//! dflop figures --fig <1|2|4|7|8|9|10|11|12|13|14|15|16|17|drift|18|shard|19|hetero|20|fleet|bubbles|all> [--nodes N] [--gbs N] [--iters N] [--seed S] [--threads N]
+//! dflop figures --fig <1|2|4|7|8|9|10|11|12|13|14|15|16|17|drift|18|shard|19|hetero|20|fleet|bubbles|critpath|audit|all> [--nodes N] [--gbs N] [--iters N] [--seed S] [--threads N]
 //! dflop table   --n <2|4>
 //! dflop run     --system <dflop|adaptive|sharded|megatron|pytorch|opt-only|sched-only> --model <key> --dataset <key>
 //!               [--dp-shards N] [--shard-skew <skewed|hot|laggard|homogeneous>] [--static-sharding] [--hetero-plans]   # --system sharded
 //!               [--faults <none|churn|straggler|degraded-link|skewed-churn|long-horizon>] [--static-faults]            # fault-injected fleet
-//!               [--trace out.json] [--metrics out.json] [--json out.json]    # obs: Chrome trace / metrics / summary
+//!               [--trace out.json] [--metrics out.json] [--audit] [--json out.json]   # obs: trace / metrics / audit / summary
 //! dflop optimize --model <key> --nodes N --gbs N
 //! dflop profile-real [--artifacts DIR]      # PJRT timing (needs `xla` feature)
 //! dflop models                              # list catalog keys
@@ -55,7 +55,7 @@ fn real_main() -> Result<()> {
             "artifacts", "threads", "dp-shards", "shard-skew", "faults", "trace",
             "metrics", "json",
         ],
-        boolean: vec!["help", "static-sharding", "hetero-plans", "static-faults"],
+        boolean: vec!["help", "static-sharding", "hetero-plans", "static-faults", "audit"],
     };
     let args = Args::parse(std::env::args().skip(1), &spec)?;
     // Pool width for every parallel section below (0 = auto-detect).
@@ -129,15 +129,18 @@ fn real_main() -> Result<()> {
                     });
                 }
             }
-            // --trace / --metrics switch the recorder on; --json only
-            // reads the summary struct, so it needs no recorder at all.
+            // --trace / --metrics / --audit switch the recorder on;
+            // --json only reads the summary struct, so it needs no
+            // recorder (but picks up the audit section when --audit ran).
             let trace_path = args.get("trace").map(String::from);
             let metrics_path = args.get("metrics").map(String::from);
             let json_path = args.get("json").map(String::from);
-            if trace_path.is_some() || metrics_path.is_some() {
+            let audit = args.has("audit");
+            if trace_path.is_some() || metrics_path.is_some() || audit {
                 cfg.obs = Some(dflop::obs::ObsConfig {
                     timelines: trace_path.is_some(),
                     metrics: metrics_path.is_some(),
+                    audit,
                 });
             }
             // The engine entry returns a Result, so a bad key is a clean
@@ -192,6 +195,37 @@ fn real_main() -> Result<()> {
                         if e.swapped { "swap" } else { "keep" },
                         e.old,
                         e.new
+                    );
+                }
+            }
+            if audit {
+                let a = r
+                    .obs
+                    .as_deref()
+                    .and_then(|log| log.audit.as_ref())
+                    .ok_or_else(|| {
+                        err!("--audit requested but the run recorded no audit report")
+                    })?;
+                println!(
+                    "audit         : {} iters, mean |rel err| {:.2}%, bias {:+.4} s",
+                    a.rows.len(),
+                    a.mean_abs_rel_err * 100.0,
+                    a.bias
+                );
+                for ra in &a.replans {
+                    println!(
+                        "  swap @ iter {:>3}: incumbent {:.3} s vs adopted {:.3} s over {} iters \
+                         -> measured {:+.3} s{}",
+                        ra.iteration,
+                        ra.incumbent_mean,
+                        ra.adopted_mean,
+                        ra.window,
+                        ra.measured_benefit,
+                        if ra.predicted_benefit.is_finite() {
+                            format!(", predicted {:+.3} s", ra.predicted_benefit)
+                        } else {
+                            String::new()
+                        }
                     );
                 }
             }
@@ -315,7 +349,9 @@ fn real_main() -> Result<()> {
             println!(
                 "run observability: --trace out.json (Chrome trace, load in \
                  Perfetto/chrome://tracing), --metrics out.json (counter/gauge/\
-                 histogram dump), --json out.json (machine-readable run summary)"
+                 histogram dump), --audit (predicted-vs-measured step-time \
+                 residuals + counterfactual replan attribution), --json out.json \
+                 (machine-readable run summary; includes the audit when --audit ran)"
             );
             println!("see rust/src/main.rs header or DESIGN.md for details");
         }

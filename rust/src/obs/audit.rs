@@ -1,0 +1,587 @@
+//! Predicted-vs-measured plan audit and counterfactual replan
+//! attribution — the evidence layer that closes the paper's
+//! profile → predict → schedule loop.
+//!
+//! Two questions, both answered post-run from recorded data only:
+//!
+//! 1. **How good were the predictions?** For every iteration whose
+//!    realized global batch was recorded ([`ObsConfig::audit`]), the
+//!    batch is re-priced under the plan that actually executed it
+//!    using the same `profiling::estimator` packed-microbatch frame
+//!    the optimizer scored candidates with ([`CfPricer`]). The
+//!    residual against the simulator's measured step time — bucketed
+//!    by modality mix and plan epoch — quantifies estimator error
+//!    *plus* everything the comm-free evaluator frame deliberately
+//!    ignores (pipeline hops, DP sync), which is exactly the gap a
+//!    predictive scheduler rides on.
+//! 2. **Did each replan pay off?** At every plan swap the *incumbent*
+//!    θ is counterfactually re-priced over the realized batches the
+//!    *new* plan executed, via PR-6 cost-only edits
+//!    (`SimWorkspace::update_leg` + `delta_run` — no fresh
+//!    simulation), so the swap gains a measured benefit next to the
+//!    optimizer's predicted one
+//!    (`ReplanEvent::expected_incumbent − expected_makespan`).
+//!
+//! **Bit-exactness contract.** The counterfactual pricer's delta
+//! replay is bit-identical to a fresh full simulation of the same
+//! plan over the same realized batches (property-tested): both paths
+//! write the same leg costs through `optimizer::batch::write_slot_legs`
+//! (the one leg-layout definition, shared with the batch evaluator)
+//! and the event core's replay recomputes with the operand order of
+//! the original run. Everything here runs after the simulation on the
+//! engine-loop thread over sim-time data, so the audit inherits the
+//! obs determinism contract: byte-identical at any `DFLOP_THREADS`.
+
+use crate::data::item::ItemShape;
+use crate::model::catalog::Mllm;
+use crate::obs::record::RunLog;
+use crate::optimizer::batch::write_slot_legs;
+use crate::optimizer::plan::Theta;
+use crate::pipeline::build::IterationStats;
+use crate::pipeline::sim::SimWorkspace;
+use crate::profiling::engine::ThroughputModel;
+use crate::profiling::estimator::Estimator;
+use crate::stream::replan::ReplanEvent;
+use crate::util::json::Json;
+
+/// Iterations priced after a swap for its measured benefit (bounded so
+/// one audit pass stays linear in run length even under replan storms).
+pub const REPLAN_WINDOW: usize = 16;
+
+/// One iteration's predicted-vs-measured record.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AuditRow {
+    pub iteration: usize,
+    /// Evaluator-frame price of the realized batch under the plan that
+    /// executed it (comm-free pipeline makespan, per-stage overheads
+    /// included — the quantity the optimizer compared candidates by).
+    pub predicted: f64,
+    /// The simulator's end-to-end step time (makespan + DP sync).
+    pub measured: f64,
+    /// `predicted − measured` (negative: the frame under-predicted,
+    /// usually by the comm + sync it ignores).
+    pub residual: f64,
+    /// `residual / measured`.
+    pub rel_err: f64,
+    /// Encoder share of the iteration's FLOP — the modality-mix key.
+    pub enc_flop_share: f64,
+    /// Plan epoch: 0 under the offline θ*, +1 per adopted swap.
+    pub plan_epoch: usize,
+}
+
+/// Measured (counterfactual) vs predicted benefit of one adopted swap.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplanAudit {
+    /// First iteration the adopted plan executed.
+    pub iteration: usize,
+    /// Realized iterations priced under both plans (≤ [`REPLAN_WINDOW`],
+    /// truncated at the next swap).
+    pub window: usize,
+    /// Mean evaluator-frame price of the *incumbent* θ over the window's
+    /// realized batches (delta replay, no fresh simulation).
+    pub incumbent_mean: f64,
+    /// Same for the adopted θ.
+    pub adopted_mean: f64,
+    /// `incumbent_mean − adopted_mean`: positive means the swap paid
+    /// off on the batches that actually arrived.
+    pub measured_benefit: f64,
+    /// `expected_incumbent − expected_makespan` from the replan event
+    /// (both Eq-1 scores under the refitted distribution); NaN when the
+    /// event predates incumbent re-scoring.
+    pub predicted_benefit: f64,
+}
+
+/// Mean absolute relative error over one bucket of audit rows.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ErrBucket {
+    /// Bucket key: modality-mix decile (`lo = d/10`) or plan epoch.
+    pub key: usize,
+    pub count: usize,
+    pub mean_abs_rel_err: f64,
+}
+
+/// The full audit: per-iteration residuals, aggregates, and per-swap
+/// counterfactual attribution. Stored on [`RunLog::audit`] and
+/// serialized into the `--json` summary and `AUDIT_REPORT.json`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AuditReport {
+    pub rows: Vec<AuditRow>,
+    pub replans: Vec<ReplanAudit>,
+    /// Mean `|rel_err|` over all rows.
+    pub mean_abs_rel_err: f64,
+    /// Mean residual in seconds (the frame's systematic bias).
+    pub bias: f64,
+    /// Rows bucketed by encoder-FLOP-share decile.
+    pub by_mix: Vec<ErrBucket>,
+    /// Rows bucketed by plan epoch.
+    pub by_epoch: Vec<ErrBucket>,
+}
+
+/// The counterfactual pricer: prices realized batches under a fixed θ
+/// in the batch evaluator's comm-free frame, reusing one standing route
+/// set across calls — after the first batch every re-price is
+/// `update_leg` edits + `delta_run` replay (cost-only, no topology
+/// rebuild, no fresh simulation).
+///
+/// Items are dealt round-robin into the plan's `buckets()` microbatch
+/// slots — the audit's fixed stand-in for the scheduler's LPT
+/// assignment, deterministic and θ-independent so incumbent and adopted
+/// plans price identical item groupings.
+pub struct CfPricer<'a> {
+    est: Estimator<'a>,
+    theta: Theta,
+    n_stages: usize,
+    e_ovh: f64,
+    l_ovh: f64,
+    sim: SimWorkspace,
+    seqs: Vec<f64>,
+    /// Bucket count of the standing route set (0 = none built yet).
+    built_buckets: usize,
+}
+
+impl<'a> CfPricer<'a> {
+    pub fn new(m: &'a Mllm, thr: &'a ThroughputModel, theta: Theta) -> CfPricer<'a> {
+        CfPricer {
+            est: Estimator::new(m, thr),
+            theta,
+            n_stages: theta.enc.dp * theta.enc.pp + theta.llm.dp * theta.llm.pp,
+            e_ovh: thr.enc_overhead(theta.enc.tp),
+            l_ovh: thr.llm_overhead(theta.llm.tp),
+            sim: SimWorkspace::new(),
+            seqs: Vec::new(),
+            built_buckets: 0,
+        }
+    }
+
+    pub fn theta(&self) -> Theta {
+        self.theta
+    }
+
+    /// Price one realized batch. First call (or a bucket-count change —
+    /// impossible for same-θ fixed-GBS runs) builds the route set and
+    /// runs tracked; every later call re-prices in place and replays.
+    pub fn price(&mut self, batch: &[ItemShape]) -> f64 {
+        let t = self.theta;
+        let nb = t.buckets().min(batch.len().max(1));
+        let rebuild = self.built_buckets != nb;
+        if rebuild {
+            self.sim.routes.clear();
+        }
+        for j in 0..nb {
+            let mut units = 0.0f64;
+            self.seqs.clear();
+            for shape in batch.iter().skip(j).step_by(nb) {
+                units += shape.units as f64;
+                let seq = shape.llm_seq as f64;
+                if seq > 0.0 {
+                    self.seqs.push(seq);
+                }
+            }
+            let e_t = self.est.enc_bucket_dur(units, t.enc.tp) / t.enc.pp as f64 + self.e_ovh;
+            let l_t = self.est.llm_bucket_dur(&self.seqs, t.llm.tp) / t.llm.pp as f64 + self.l_ovh;
+            write_slot_legs(
+                &mut self.sim,
+                j,
+                t.enc.pp,
+                t.llm.pp,
+                t.enc.dp,
+                t.llm.dp,
+                e_t,
+                l_t,
+                rebuild,
+            );
+        }
+        self.built_buckets = nb;
+        if rebuild {
+            self.sim.run_tracked(self.n_stages)
+        } else {
+            self.sim.delta_run(self.n_stages)
+        }
+    }
+
+    /// The fresh-simulation oracle: identical pricing, but the route set
+    /// is rebuilt and fully re-run — the reference [`CfPricer::price`]'s
+    /// delta replay must (and does, property-tested) bit-match.
+    pub fn price_fresh(&mut self, batch: &[ItemShape]) -> f64 {
+        self.built_buckets = 0;
+        self.price(batch)
+    }
+}
+
+/// Encoder share of an iteration's FLOP, from its per-bucket execution
+/// records (0 when no FLOP was recorded).
+fn enc_flop_share(stats: &IterationStats) -> f64 {
+    let (mut enc, mut total) = (0.0f64, 0.0f64);
+    for b in &stats.buckets {
+        enc += b.enc_flop;
+        total += b.enc_flop + b.llm_flop;
+    }
+    if total > 0.0 {
+        enc / total
+    } else {
+        0.0
+    }
+}
+
+/// The plan that executed each iteration: the offline θ* plus every
+/// *adopted* replan, as `(first_iteration, theta)` segments. Replan
+/// events record the iteration whose batch confirmed the drift — the
+/// swap applies to that same batch (it had not been scheduled yet).
+fn plan_segments(initial: Theta, replans: &[ReplanEvent]) -> Vec<(usize, Theta)> {
+    let mut segs = vec![(0usize, initial)];
+    for e in replans.iter().filter(|e| e.swapped) {
+        segs.push((e.iteration, e.new));
+    }
+    segs
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+fn bucket_errs(rows: &[AuditRow], key: impl Fn(&AuditRow) -> usize) -> Vec<ErrBucket> {
+    let mut acc: std::collections::BTreeMap<usize, (usize, f64)> = Default::default();
+    for r in rows {
+        let e = acc.entry(key(r)).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += r.rel_err.abs();
+    }
+    acc.into_iter()
+        .map(|(key, (count, sum))| ErrBucket {
+            key,
+            count,
+            mean_abs_rel_err: sum / count as f64,
+        })
+        .collect()
+}
+
+/// Run the full audit over a finished run's recorded batches and attach
+/// it to the log ([`RunLog::audit`], plus registry rows when metrics
+/// are on). `initial` is the offline θ*; `iterations`/`replans` are the
+/// run's own outputs. No-op (empty report) when no batches were
+/// recorded.
+pub fn run_audit(
+    log: &mut RunLog,
+    initial: Theta,
+    iterations: &[IterationStats],
+    replans: &[ReplanEvent],
+    m: &Mllm,
+    thr: &ThroughputModel,
+) {
+    let segs = plan_segments(initial, replans);
+    let n = iterations.len().min(log.iterations.len());
+
+    // Per-iteration residuals: one pricer per plan epoch, so within an
+    // epoch every price after the first is a delta replay.
+    let mut rows: Vec<AuditRow> = Vec::new();
+    for (epoch, &(seg_start, theta)) in segs.iter().enumerate() {
+        let seg_end = segs.get(epoch + 1).map_or(n, |&(s, _)| s.min(n));
+        let mut pricer = CfPricer::new(m, thr, theta);
+        for i in seg_start.min(n)..seg_end {
+            let batch = &log.iterations[i].batch;
+            if batch.is_empty() {
+                continue;
+            }
+            let predicted = pricer.price(batch);
+            let measured = iterations[i].iteration_time;
+            let residual = predicted - measured;
+            rows.push(AuditRow {
+                iteration: i,
+                predicted,
+                measured,
+                residual,
+                rel_err: if measured > 0.0 { residual / measured } else { 0.0 },
+                enc_flop_share: enc_flop_share(&iterations[i]),
+                plan_epoch: epoch,
+            });
+        }
+    }
+
+    // Counterfactual attribution: price incumbent and adopted θ over
+    // the realized batches following each adopted swap.
+    let mut replan_audits: Vec<ReplanAudit> = Vec::new();
+    for e in replans.iter().filter(|e| e.swapped) {
+        let start = e.iteration.min(n);
+        let next_swap = replans
+            .iter()
+            .filter(|o| o.swapped && o.iteration > e.iteration)
+            .map(|o| o.iteration)
+            .next()
+            .unwrap_or(n);
+        let end = (start + REPLAN_WINDOW).min(next_swap).min(n);
+        let mut old_p = CfPricer::new(m, thr, e.old);
+        let mut new_p = CfPricer::new(m, thr, e.new);
+        let (mut olds, mut news) = (Vec::new(), Vec::new());
+        for i in start..end {
+            let batch = &log.iterations[i].batch;
+            if batch.is_empty() {
+                continue;
+            }
+            olds.push(old_p.price(batch));
+            news.push(new_p.price(batch));
+        }
+        if olds.is_empty() {
+            continue;
+        }
+        let (incumbent_mean, adopted_mean) = (mean(&olds), mean(&news));
+        replan_audits.push(ReplanAudit {
+            iteration: e.iteration,
+            window: olds.len(),
+            incumbent_mean,
+            adopted_mean,
+            measured_benefit: incumbent_mean - adopted_mean,
+            predicted_benefit: e.expected_incumbent - e.expected_makespan,
+        });
+    }
+
+    let report = AuditReport {
+        mean_abs_rel_err: mean(&rows.iter().map(|r| r.rel_err.abs()).collect::<Vec<_>>()),
+        bias: mean(&rows.iter().map(|r| r.residual).collect::<Vec<_>>()),
+        by_mix: bucket_errs(&rows, |r| {
+            ((r.enc_flop_share * 10.0).floor() as usize).min(9)
+        }),
+        by_epoch: bucket_errs(&rows, |r| r.plan_epoch),
+        rows,
+        replans: replan_audits,
+    };
+    if let Some(reg) = log.metrics.as_mut() {
+        for r in &report.rows {
+            reg.observe("audit_abs_rel_err", r.rel_err.abs());
+        }
+        reg.counter_add("audit_rows", report.rows.len() as u64);
+        reg.counter_add("audit_replans", report.replans.len() as u64);
+        reg.gauge_set("audit_mean_abs_rel_err", report.mean_abs_rel_err);
+        reg.gauge_set("audit_bias_s", report.bias);
+        if !report.replans.is_empty() {
+            reg.gauge_set(
+                "audit_mean_measured_benefit_s",
+                mean(&report.replans.iter().map(|r| r.measured_benefit).collect::<Vec<_>>()),
+            );
+        }
+    }
+    log.audit = Some(report);
+}
+
+/// The audit as JSON (embedded in the `--json` run summary and emitted
+/// standalone by `examples/audit_report.rs`).
+pub fn audit_json(a: &AuditReport) -> Json {
+    let rows: Vec<Json> = a
+        .rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("iteration", Json::Num(r.iteration as f64)),
+                ("predicted_s", Json::Num(r.predicted)),
+                ("measured_s", Json::Num(r.measured)),
+                ("residual_s", Json::Num(r.residual)),
+                ("rel_err", Json::Num(r.rel_err)),
+                ("enc_flop_share", Json::Num(r.enc_flop_share)),
+                ("plan_epoch", Json::Num(r.plan_epoch as f64)),
+            ])
+        })
+        .collect();
+    let replans: Vec<Json> = a
+        .replans
+        .iter()
+        .map(|r| {
+            let mut fields = vec![
+                ("iteration", Json::Num(r.iteration as f64)),
+                ("window", Json::Num(r.window as f64)),
+                ("incumbent_mean_s", Json::Num(r.incumbent_mean)),
+                ("adopted_mean_s", Json::Num(r.adopted_mean)),
+                ("measured_benefit_s", Json::Num(r.measured_benefit)),
+            ];
+            // NaN (no incumbent re-score on the event) has no JSON form.
+            if r.predicted_benefit.is_finite() {
+                fields.push(("predicted_benefit_s", Json::Num(r.predicted_benefit)));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    let buckets = |bs: &[ErrBucket]| {
+        Json::Arr(
+            bs.iter()
+                .map(|b| {
+                    Json::obj(vec![
+                        ("key", Json::Num(b.key as f64)),
+                        ("count", Json::Num(b.count as f64)),
+                        ("mean_abs_rel_err", Json::Num(b.mean_abs_rel_err)),
+                    ])
+                })
+                .collect(),
+        )
+    };
+    Json::obj(vec![
+        ("schema", Json::str("dflop-audit-v1")),
+        ("mean_abs_rel_err", Json::Num(a.mean_abs_rel_err)),
+        ("bias_s", Json::Num(a.bias)),
+        ("rows", Json::Arr(rows)),
+        ("replans", Json::Arr(replans)),
+        ("by_mix_decile", buckets(&a.by_mix)),
+        ("by_plan_epoch", buckets(&a.by_epoch)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::model::catalog::{llama3, llava_ov};
+    use crate::optimizer::plan::ModPar;
+    use crate::perfmodel::{ClusterSpec, Truth};
+    use crate::profiling::backend::SimBackend;
+    use crate::profiling::engine::{ModelProfile, ModelProfiler, ProfilerGrids};
+    use crate::util::prop::forall;
+
+    fn fixture() -> (Mllm, ModelProfile) {
+        let m = llava_ov(llama3("8b"));
+        let cluster = ClusterSpec::hgx_a100(2);
+        let mut backend = SimBackend::new(Truth::new(cluster));
+        let profile =
+            ModelProfiler::new(&mut backend, ProfilerGrids::standard(8)).profile(&m);
+        (m, profile)
+    }
+
+    fn random_theta(g: &mut crate::util::prop::Gen) -> Theta {
+        let pick = |g: &mut crate::util::prop::Gen, xs: &[usize]| xs[g.rng.index(xs.len())];
+        Theta {
+            enc: ModPar {
+                tp: pick(g, &[1, 2]),
+                pp: pick(g, &[1, 2]),
+                dp: pick(g, &[1, 2]),
+            },
+            llm: ModPar {
+                tp: pick(g, &[1, 2, 4]),
+                pp: pick(g, &[1, 2, 4]),
+                dp: pick(g, &[1, 2]),
+            },
+            n_mb: pick(g, &[1, 2, 4]),
+        }
+    }
+
+    #[test]
+    fn delta_replay_pricing_bit_matches_fresh_simulation() {
+        let (m, profile) = fixture();
+        let mut ds = Dataset::mixed(0xA0D1);
+        forall("cf delta pricing == fresh sim, bit for bit", 25, |g| {
+            let theta = random_theta(g);
+            let mut inc = CfPricer::new(&m, &profile.throughput, theta);
+            let mut fresh = CfPricer::new(&m, &profile.throughput, theta);
+            let gbs = 8 + 8 * g.size(6);
+            for _ in 0..4 {
+                let batch = ds.shaped_batch(&m, gbs);
+                let a = inc.price(&batch);
+                let b = fresh.price_fresh(&batch);
+                if a.to_bits() != b.to_bits() {
+                    return (format!("θ={theta} gbs={gbs}: {a} != {b}"), false);
+                }
+            }
+            (format!("θ={theta} gbs={gbs}"), true)
+        });
+    }
+
+    #[test]
+    fn batch_length_change_rebuilds_and_still_matches() {
+        let (m, profile) = fixture();
+        let theta = Theta {
+            enc: ModPar { tp: 1, pp: 1, dp: 2 },
+            llm: ModPar { tp: 2, pp: 2, dp: 2 },
+            n_mb: 4,
+        };
+        let mut ds = Dataset::mixed(7);
+        let mut inc = CfPricer::new(&m, &profile.throughput, theta);
+        let mut fresh = CfPricer::new(&m, &profile.throughput, theta);
+        // buckets() = 8: a 4-item batch forces nb=4, then 32 restores 8.
+        for gbs in [32usize, 4, 32, 32] {
+            let batch = ds.shaped_batch(&m, gbs);
+            assert_eq!(
+                inc.price(&batch).to_bits(),
+                fresh.price_fresh(&batch).to_bits(),
+                "gbs={gbs}"
+            );
+        }
+    }
+
+    #[test]
+    fn audit_rows_and_epochs_follow_the_swap() {
+        use crate::pipeline::build::{iterate_ws, SystemPlan};
+        use crate::stream::drift::DriftStat;
+        let (m, profile) = fixture();
+        let truth = Truth::new(ClusterSpec::hgx_a100(2));
+        let theta0 = Theta {
+            enc: ModPar { tp: 1, pp: 1, dp: 2 },
+            llm: ModPar { tp: 1, pp: 2, dp: 2 },
+            n_mb: 2,
+        };
+        let theta1 = Theta { n_mb: 4, ..theta0 };
+        let mut ds = Dataset::mixed(0xBEEF);
+        let mut log = RunLog::default();
+        log.cfg.audit = true;
+        let mut ws = SimWorkspace::new();
+        let mut stats = Vec::new();
+        for i in 0..6 {
+            let batch = ds.shaped_batch(&m, 16);
+            let theta = if i < 3 { theta0 } else { theta1 };
+            let plan = SystemPlan { m: &m, truth: &truth, theta };
+            let mut bks: Vec<Vec<ItemShape>> = vec![Vec::new(); theta.buckets()];
+            for (k, s) in batch.iter().enumerate() {
+                bks[k % bks.len()].push(*s);
+            }
+            let s = iterate_ws(&plan, &bks, &mut ws);
+            let mut tr = crate::obs::record::IterationTrace::default();
+            tr.batch = batch;
+            log.iterations.push(tr);
+            stats.push(s);
+        }
+        let replans = vec![ReplanEvent {
+            iteration: 3,
+            stat: DriftStat { quantile_dist: 0.0, units_dist: 0.0, mix_tv: 0.0 },
+            old: theta0,
+            new: theta1,
+            swapped: true,
+            expected_makespan: 1.0,
+            expected_incumbent: 1.5,
+            elapsed: std::time::Duration::ZERO,
+        }];
+        run_audit(&mut log, theta0, &stats, &replans, &m, &profile.throughput);
+        let audit = log.audit.as_ref().expect("report attached");
+        assert_eq!(audit.rows.len(), 6);
+        assert!(audit.rows[..3].iter().all(|r| r.plan_epoch == 0));
+        assert!(audit.rows[3..].iter().all(|r| r.plan_epoch == 1));
+        assert!(audit.rows.iter().all(|r| {
+            r.predicted > 0.0 && r.measured > 0.0 && r.rel_err.is_finite()
+        }));
+        assert_eq!(audit.replans.len(), 1);
+        let ra = &audit.replans[0];
+        assert_eq!(ra.iteration, 3);
+        assert_eq!(ra.window, 3);
+        assert!((ra.predicted_benefit - 0.5).abs() < 1e-12);
+        assert!(ra.incumbent_mean > 0.0 && ra.adopted_mean > 0.0);
+        // JSON serializes without panicking and carries the schema tag.
+        let doc = audit_json(audit);
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some("dflop-audit-v1"));
+        assert_eq!(
+            doc.get("rows").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(6)
+        );
+    }
+
+    #[test]
+    fn no_recorded_batches_yields_empty_report() {
+        let (m, profile) = fixture();
+        let theta = Theta {
+            enc: ModPar { tp: 1, pp: 1, dp: 1 },
+            llm: ModPar { tp: 1, pp: 1, dp: 1 },
+            n_mb: 1,
+        };
+        let mut log = RunLog::default();
+        run_audit(&mut log, theta, &[], &[], &m, &profile.throughput);
+        let audit = log.audit.as_ref().expect("report attached");
+        assert!(audit.rows.is_empty() && audit.replans.is_empty());
+        assert_eq!(audit.mean_abs_rel_err, 0.0);
+    }
+}

@@ -10,10 +10,13 @@
 //!
 //! Timestamps are simulated seconds scaled to microseconds (the
 //! format's unit); `dur` may be fractional, which the format allows.
-//! Events are emitted only as `X` (complete), `i` (instant, global
-//! scope) and `M` (metadata) phases, sorted by `ts` with a stable
-//! `total_cmp` — the export is byte-deterministic because the `RunLog`
-//! it renders is.
+//! Events are emitted as `X` (complete), `i` (instant, global scope),
+//! `M` (metadata), `s`/`t`/`f` (flow: each confirmed drift is linked
+//! through its replan verdict to the plan swap it produced, one flow id
+//! per episode) and `C` (per-iteration predicted-vs-measured counter
+//! rows when an `obs::audit` report is attached) phases, sorted by `ts`
+//! with a stable `total_cmp` — the export is byte-deterministic because
+//! the `RunLog` it renders is.
 
 use crate::obs::bubble::stage_bubbles;
 use crate::obs::record::{EventKind, RunLog};
@@ -49,6 +52,25 @@ fn span(
     ];
     if !args.is_empty() {
         fields.push(("args", Json::obj(args)));
+    }
+    (ts_us, Json::obj(fields))
+}
+
+/// One flow-event phase (`s` start / `t` step / `f` end) of the
+/// drift-confirm → replan-verdict → plan-swap chain `id`.
+fn flow(ph: &str, id: usize, ts_us: f64) -> (f64, Json) {
+    let mut fields = vec![
+        ("name", Json::str("replan-flow")),
+        ("cat", Json::str("flow")),
+        ("ph", Json::str(ph)),
+        ("id", Json::Num(id as f64)),
+        ("pid", Json::Num(CLUSTER_PID as f64)),
+        ("tid", Json::Num(TID_ITER as f64)),
+        ("ts", Json::Num(ts_us)),
+    ];
+    if ph == "f" {
+        // Bind the arrow head to the enclosing slice's end.
+        fields.push(("bp", Json::str("e")));
     }
     (ts_us, Json::obj(fields))
 }
@@ -214,6 +236,84 @@ pub fn trace_json(log: &RunLog) -> String {
         ));
     }
 
+    // Flow chains: each confirmed drift opens an episode; the next
+    // replan verdict and plan swap (in event order — within one
+    // iteration live events precede the folded verdict) close it. An
+    // episode missing both is dropped whole, so every emitted flow id
+    // has its `s` paired with exactly one `f`.
+    #[derive(Clone, Copy, Default)]
+    struct Episode {
+        confirm: Option<f64>,
+        verdict: Option<f64>,
+        swap: Option<f64>,
+    }
+    let mut episodes: Vec<Episode> = Vec::new();
+    let mut open: Option<Episode> = None;
+    for e in &log.events {
+        match &e.kind {
+            EventKind::DriftPhase { phase: "drift-confirm" } => {
+                if let Some(ep) = open.take() {
+                    episodes.push(ep);
+                }
+                open = Some(Episode { confirm: Some(us(e.t)), ..Episode::default() });
+            }
+            EventKind::Replan { .. } => {
+                if let Some(ep) = open.as_mut() {
+                    if ep.verdict.is_none() {
+                        ep.verdict = Some(us(e.t));
+                    }
+                }
+            }
+            EventKind::PlanSwap { .. } => {
+                if let Some(ep) = open.as_mut() {
+                    if ep.swap.is_none() {
+                        ep.swap = Some(us(e.t));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    episodes.extend(open.take());
+    let mut flow_id = 0usize;
+    for ep in &episodes {
+        let Some(start) = ep.confirm else { continue };
+        let Some(end) = ep.swap.or(ep.verdict) else { continue };
+        flow_id += 1;
+        evs.push(flow("s", flow_id, start));
+        if let (Some(v), Some(_)) = (ep.verdict, ep.swap) {
+            evs.push(flow("t", flow_id, v));
+        }
+        evs.push(flow("f", flow_id, end));
+    }
+
+    // Audit counter rows: predicted vs measured step time per audited
+    // iteration, rendered as a counter track.
+    if let Some(audit) = &log.audit {
+        for r in &audit.rows {
+            let t = log.iterations.get(r.iteration).map_or(log.sim_now, |it| it.t_start);
+            let ts = us(t);
+            evs.push((
+                ts,
+                Json::obj(vec![
+                    ("name", Json::str("plan-audit")),
+                    ("cat", Json::str("audit")),
+                    ("ph", Json::str("C")),
+                    ("pid", Json::Num(CLUSTER_PID as f64)),
+                    ("tid", Json::Num(TID_ITER as f64)),
+                    ("ts", Json::Num(ts)),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("predicted_s", Json::Num(r.predicted)),
+                            ("measured_s", Json::Num(r.measured)),
+                        ]),
+                    ),
+                ]),
+            ));
+        }
+    }
+
     evs.sort_by(|a, b| a.0.total_cmp(&b.0));
     let doc = Json::obj(vec![
         ("displayTimeUnit", Json::str("ms")),
@@ -225,10 +325,12 @@ pub fn trace_json(log: &RunLog) -> String {
 /// Validate a trace document against the slice of the Chrome Trace
 /// Event Format this exporter emits: valid JSON with a `traceEvents`
 /// array; every event carries `name`/`ph`/`pid`/`tid`; timed phases
-/// (`X`, `i`) carry finite `ts` in non-decreasing order; `X` carries a
-/// finite non-negative `dur`; `i` carries a scope `s`; no other phases
-/// appear (durations are exported as complete `X` spans, never `B`/`E`
-/// pairs).
+/// carry finite `ts` in non-decreasing order; `X` carries a finite
+/// non-negative `dur`; `i` carries a scope `s`; `C` carries an `args`
+/// object; flow phases (`s`/`t`/`f`) carry a numeric `id` and pair up —
+/// per id exactly one `s` opens the chain, steps stay inside it, and
+/// exactly one `f` closes it. No other phases appear (durations are
+/// exported as complete `X` spans, never `B`/`E` pairs).
 pub fn validate_trace(text: &str) -> Result<(), String> {
     let doc = parse(text).map_err(|e| format!("invalid JSON: {e}"))?;
     let events = doc
@@ -236,6 +338,8 @@ pub fn validate_trace(text: &str) -> Result<(), String> {
         .and_then(Json::as_arr)
         .ok_or("missing traceEvents array")?;
     let mut last_ts = f64::NEG_INFINITY;
+    // Flow-chain state per id: 1 = open (`s` seen), 2 = closed (`f`).
+    let mut flows: std::collections::BTreeMap<u64, u8> = Default::default();
     for (i, ev) in events.iter().enumerate() {
         if ev.as_obj().is_none() {
             return Err(format!("event {i}: not an object"));
@@ -280,8 +384,33 @@ pub fn validate_trace(text: &str) -> Result<(), String> {
                     return Err(format!("event {i}: instant without scope"));
                 }
             }
+            "C" => {
+                if ev.get("args").and_then(Json::as_obj).is_none() {
+                    return Err(format!("event {i}: counter without args"));
+                }
+            }
+            "s" | "t" | "f" => {
+                let id = ev
+                    .get("id")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| format!("event {i}: flow without numeric id"))? as u64;
+                let state = flows.entry(id).or_insert(0);
+                match (ph, *state) {
+                    ("s", 0) => *state = 1,
+                    ("s", _) => return Err(format!("event {i}: duplicate flow start id {id}")),
+                    ("t", 1) => {}
+                    ("f", 1) => *state = 2,
+                    (_, 0) => return Err(format!("event {i}: flow id {id} not opened")),
+                    (_, _) => {
+                        return Err(format!("event {i}: flow id {id} already closed"))
+                    }
+                }
+            }
             other => return Err(format!("event {i}: unexpected phase '{other}'")),
         }
+    }
+    if let Some((id, _)) = flows.iter().find(|(_, &s)| s != 2) {
+        return Err(format!("flow id {id}: started but never finished"));
     }
     Ok(())
 }
@@ -293,16 +422,13 @@ mod tests {
     use crate::pipeline::build::IterationStats;
     use crate::pipeline::sim::OpRecord;
 
-    fn one_iteration_log() -> Box<RunLog> {
-        let mut rec =
-            Recorder::new(Some(&ObsConfig { timelines: true, metrics: false }));
-        rec.migrations(2);
-        rec.end_iteration(&IterationStats {
-            iteration_time: 1.5,
-            pipeline_makespan: 1.0,
-            dp_sync_time: 0.5,
-            stage_busy: vec![0.75],
-            stage_idle: vec![0.25],
+    fn stats_1op(t: f64) -> IterationStats {
+        IterationStats {
+            iteration_time: t * 1.5,
+            pipeline_makespan: t,
+            dp_sync_time: t * 0.5,
+            stage_busy: vec![t * 0.75],
+            stage_idle: vec![t * 0.25],
             stage_flop: vec![1.0],
             n_stages: 1,
             total_flop: 1.0,
@@ -311,10 +437,20 @@ mod tests {
                 bucket: 0,
                 stage: 0,
                 is_forward: true,
-                start: 0.25,
-                finish: 1.0,
+                start: t * 0.25,
+                finish: t,
             }],
-        });
+        }
+    }
+
+    fn one_iteration_log() -> Box<RunLog> {
+        let mut rec = Recorder::new(Some(&ObsConfig {
+            timelines: true,
+            metrics: false,
+            audit: false,
+        }));
+        rec.migrations(2);
+        rec.end_iteration(&stats_1op(1.0));
         rec.take_log(&[]).expect("on")
     }
 
@@ -346,5 +482,103 @@ mod tests {
             {"name":"a","ph":"B","pid":0,"tid":0,"ts":1}]}"#;
         assert!(validate_trace(bad_ph).is_err());
         assert!(validate_trace("not json").is_err());
+    }
+
+    #[test]
+    fn replan_chain_exports_paired_flow_events() {
+        use crate::engine::policy::PlanSet;
+        use crate::optimizer::plan::{ModPar, Theta};
+        use crate::stream::drift::DriftStat;
+        use crate::stream::replan::ReplanEvent;
+        let theta = Theta {
+            enc: ModPar { tp: 1, pp: 1, dp: 1 },
+            llm: ModPar { tp: 1, pp: 1, dp: 1 },
+            n_mb: 1,
+        };
+        let mut rec = Recorder::new(Some(&ObsConfig {
+            timelines: false,
+            metrics: false,
+            audit: false,
+        }));
+        rec.end_iteration(&stats_1op(1.0));
+        rec.drift_phase(Some("watch"));
+        rec.drift_phase(Some("drift"));
+        rec.plan_swap(theta, &PlanSet { global: theta, per_replica: None });
+        rec.end_iteration(&stats_1op(1.0));
+        let log = rec.take_log(&[ReplanEvent {
+            iteration: 1,
+            stat: DriftStat { quantile_dist: 0.0, units_dist: 0.0, mix_tv: 0.0 },
+            old: theta,
+            new: theta,
+            swapped: true,
+            expected_makespan: 1.0,
+            expected_incumbent: 1.2,
+            elapsed: std::time::Duration::ZERO,
+        }]);
+        let text = trace_json(&log.expect("on"));
+        validate_trace(&text).expect("flow ids pair up");
+        let doc = parse(&text).expect("json");
+        let phases: Vec<&str> = doc
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("replan-flow"))
+            .filter_map(|e| e.get("ph").and_then(Json::as_str))
+            .collect();
+        assert_eq!(phases, vec!["s", "t", "f"]);
+    }
+
+    #[test]
+    fn audit_report_exports_counter_rows() {
+        use crate::obs::audit::{AuditReport, AuditRow};
+        let mut log = one_iteration_log();
+        log.audit = Some(AuditReport {
+            rows: vec![AuditRow {
+                iteration: 0,
+                predicted: 1.4,
+                measured: 1.5,
+                residual: -0.1,
+                rel_err: -0.1 / 1.5,
+                enc_flop_share: 0.3,
+                plan_epoch: 0,
+            }],
+            ..AuditReport::default()
+        });
+        let text = trace_json(&log);
+        validate_trace(&text).expect("schema-valid with counters");
+        let doc = parse(&text).expect("json");
+        let counter = doc
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .find(|e| e.get("ph").and_then(Json::as_str) == Some("C"))
+            .expect("counter row present");
+        assert_eq!(counter.get("name").and_then(Json::as_str), Some("plan-audit"));
+        assert_eq!(
+            counter.path("args.predicted_s").and_then(Json::as_f64),
+            Some(1.4)
+        );
+    }
+
+    #[test]
+    fn validator_rejects_unpaired_or_reused_flow_ids() {
+        let dangling = r#"{"traceEvents":[
+            {"name":"x","cat":"flow","ph":"s","id":1,"pid":0,"tid":0,"ts":1}]}"#;
+        assert!(validate_trace(dangling).is_err());
+        let unopened = r#"{"traceEvents":[
+            {"name":"x","cat":"flow","ph":"f","id":1,"pid":0,"tid":0,"ts":1}]}"#;
+        assert!(validate_trace(unopened).is_err());
+        let reused = r#"{"traceEvents":[
+            {"name":"x","cat":"flow","ph":"s","id":1,"pid":0,"tid":0,"ts":1},
+            {"name":"x","cat":"flow","ph":"f","id":1,"pid":0,"tid":0,"ts":2},
+            {"name":"x","cat":"flow","ph":"s","id":1,"pid":0,"tid":0,"ts":3}]}"#;
+        assert!(validate_trace(reused).is_err());
+        let paired = r#"{"traceEvents":[
+            {"name":"x","cat":"flow","ph":"s","id":1,"pid":0,"tid":0,"ts":1},
+            {"name":"x","cat":"flow","ph":"t","id":1,"pid":0,"tid":0,"ts":2},
+            {"name":"x","cat":"flow","ph":"f","id":1,"pid":0,"tid":0,"ts":3}]}"#;
+        assert!(validate_trace(paired).is_ok());
     }
 }

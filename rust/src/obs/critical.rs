@@ -1,0 +1,542 @@
+//! Critical-path and slack extraction over recorded per-op timelines.
+//!
+//! The 1F1B event core schedules every op with the recurrence
+//! `start = stage_free[s].max(dep_finish + comm)` and `f64::max`
+//! returns one of its arguments, so every recorded op start bit-equals
+//! either its same-stage predecessor's finish (the stage was the
+//! binding constraint) or its dependency's finish plus the hop cost
+//! (the data edge bound it). Backtracking the binding constraint from
+//! the op whose finish realises the makespan therefore yields a chain
+//! of op spans and communication-wait spans that *tiles* `[0,
+//! makespan]` with bit-contiguous endpoints: each span starts exactly
+//! (same f64 bits) where the previous one ends. The span durations
+//! telescope — their sum, evaluated in chain order, is exactly the
+//! recorded makespan, which is the bit-exactness contract
+//! [`CriticalPath::total`] returns and the property tests pin.
+//!
+//! On top of the chain, [`op_slack`] computes per-op slack (how far an
+//! op's finish can slip without moving the makespan) by a backward pass
+//! over the recorded timeline — a topological order for both edge
+//! kinds, since an op is only executed (hence recorded) after its
+//! dependency finished and after its same-stage predecessor ran. The
+//! resulting slack/slot list is the machine-readable input a
+//! bubble-filling `ExecModel` (ROADMAP open item 1) consumes together
+//! with `obs::bubble`'s gap intervals: gaps say *where* idle time sits,
+//! slack says *which ops can slide into it*.
+//!
+//! Everything here is derivational over sim-time data already recorded;
+//! nothing feeds back into the simulation, so the determinism contract
+//! (byte-identical at any `DFLOP_THREADS`) holds trivially.
+
+use crate::pipeline::sim::OpRecord;
+use crate::util::json::Json;
+
+/// One element of the critical chain: an executed op span, or the
+/// communication wait between a dependency's finish and the bound op's
+/// start (`is_comm`). Spans tile `[0, makespan]` in chain order.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PathSpan {
+    /// Executing stage (for comm spans: the *destination* stage that
+    /// waited on the hop).
+    pub stage: usize,
+    pub bucket: usize,
+    pub is_forward: bool,
+    pub is_comm: bool,
+    pub start: f64,
+    pub end: f64,
+    /// Index into the source timeline for op spans (`None` for comm).
+    pub timeline_idx: Option<usize>,
+}
+
+impl PathSpan {
+    pub fn len(&self) -> f64 {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.end <= self.start
+    }
+}
+
+/// The extracted critical path of one iteration's pipeline execution.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CriticalPath {
+    /// The recorded makespan the chain terminates at (bit-exact).
+    pub makespan: f64,
+    /// Chain order (time order): `spans[0].start == 0.0`, each span's
+    /// start bit-equals its predecessor's end, and the last span's end
+    /// bit-equals `makespan`.
+    pub spans: Vec<PathSpan>,
+}
+
+impl CriticalPath {
+    /// The sum of the chain's span durations. The spans tile
+    /// `[0, makespan]` with bit-contiguous endpoints (verified at
+    /// extraction), so the durations telescope: evaluated in chain
+    /// order the sum is `last.end − first.start`, exactly the recorded
+    /// makespan bit for bit.
+    pub fn total(&self) -> f64 {
+        match (self.spans.first(), self.spans.last()) {
+            (Some(a), Some(b)) => b.end - a.start,
+            _ => 0.0,
+        }
+    }
+
+    /// Seconds of the chain spent waiting on communication hops.
+    pub fn comm_wait(&self) -> f64 {
+        self.spans.iter().filter(|s| s.is_comm).map(PathSpan::len).sum()
+    }
+
+    /// Per-stage blame: seconds of chain op time executed on each
+    /// stage (comm waits excluded — see [`CriticalPath::comm_wait`]).
+    pub fn stage_blame(&self, n_stages: usize) -> Vec<f64> {
+        let mut blame = vec![0.0f64; n_stages];
+        for s in self.spans.iter().filter(|s| !s.is_comm) {
+            if s.stage < n_stages {
+                blame[s.stage] += s.len();
+            }
+        }
+        blame
+    }
+
+    /// Modality blame `(encoder, llm, comm)`: chain seconds attributed
+    /// to encoder stages (`stage < enc_stages`, the build layout puts
+    /// all `E_dp · E_pp` encoder stages first), LLM stages, and
+    /// communication waits.
+    pub fn modality_blame(&self, enc_stages: usize) -> (f64, f64, f64) {
+        let (mut enc, mut llm, mut comm) = (0.0f64, 0.0f64, 0.0f64);
+        for s in &self.spans {
+            if s.is_comm {
+                comm += s.len();
+            } else if s.stage < enc_stages {
+                enc += s.len();
+            } else {
+                llm += s.len();
+            }
+        }
+        (enc, llm, comm)
+    }
+}
+
+/// One op's scheduling freedom in the recorded iteration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpSlack {
+    pub bucket: usize,
+    pub stage: usize,
+    pub is_forward: bool,
+    pub start: f64,
+    pub finish: f64,
+    /// How far the op's finish can slip without moving the makespan
+    /// (0 exactly for ops on the extracted critical chain). Hop costs
+    /// on non-binding edges are not recorded, so off-chain slack is an
+    /// upper bound by at most one hop — see module docs.
+    pub slack: f64,
+    pub critical: bool,
+}
+
+/// Reconstructed identity of each timeline entry: `(bucket, position,
+/// forward)`. The event core records ops in execution order and a
+/// bucket's forward chain (then its backward chain) is dependency
+/// ordered, so within one bucket forwards appear in position order
+/// `0..depth` followed by backwards in order `depth−1..=0`.
+struct OpIndex {
+    /// Per timeline entry: position along its bucket's route.
+    pos: Vec<usize>,
+    /// Per bucket: route depth (leg count).
+    depth: Vec<usize>,
+    /// Flat `(bucket, pos, forward) → timeline index` lookup
+    /// (`usize::MAX` = absent). Stride layout mirrors the sim core.
+    lookup: Vec<usize>,
+    stride: usize,
+}
+
+impl OpIndex {
+    fn build(timeline: &[OpRecord]) -> Option<OpIndex> {
+        let n_buckets = timeline.iter().map(|o| o.bucket + 1).max()?;
+        let mut depth = vec![0usize; n_buckets];
+        for op in timeline {
+            if op.is_forward {
+                depth[op.bucket] += 1;
+            }
+        }
+        let stride = depth.iter().copied().max().unwrap_or(0).max(1);
+        let mut pos = Vec::with_capacity(timeline.len());
+        let mut lookup = vec![usize::MAX; n_buckets * stride * 2];
+        let mut fwd_seen = vec![0usize; n_buckets];
+        let mut bwd_seen = vec![0usize; n_buckets];
+        for (i, op) in timeline.iter().enumerate() {
+            let b = op.bucket;
+            let p = if op.is_forward {
+                let p = fwd_seen[b];
+                fwd_seen[b] += 1;
+                p
+            } else {
+                if bwd_seen[b] >= depth[b] {
+                    return None; // more backwards than forwards
+                }
+                let p = depth[b] - 1 - bwd_seen[b];
+                bwd_seen[b] += 1;
+                p
+            };
+            pos.push(p);
+            lookup[Self::key(b, p, op.is_forward, stride)] = i;
+        }
+        Some(OpIndex { pos, depth, lookup, stride })
+    }
+
+    fn key(bucket: usize, pos: usize, forward: bool, stride: usize) -> usize {
+        (bucket * stride + pos) * 2 + usize::from(forward)
+    }
+
+    fn get(&self, bucket: usize, pos: usize, forward: bool) -> Option<usize> {
+        let i = self.lookup[Self::key(bucket, pos, forward, self.stride)];
+        (i != usize::MAX).then_some(i)
+    }
+
+    /// The timeline index of op `i`'s single data dependency (the sim
+    /// core's `dep_of`, reconstructed): previous forward leg, own
+    /// forward for the first backward, next backward otherwise.
+    fn dep_of(&self, timeline: &[OpRecord], i: usize) -> Option<usize> {
+        let op = &timeline[i];
+        let p = self.pos[i];
+        if op.is_forward {
+            if p == 0 {
+                None
+            } else {
+                self.get(op.bucket, p - 1, true)
+            }
+        } else if p + 1 == self.depth[op.bucket] {
+            self.get(op.bucket, p, true)
+        } else {
+            self.get(op.bucket, p + 1, false)
+        }
+    }
+}
+
+/// Extract the critical path of one recorded iteration.
+///
+/// Returns `None` when the timeline is empty, no recorded finish
+/// realises `makespan` bit-exactly, or the timeline is structurally
+/// inconsistent (hand-built records) — engine-recorded timelines always
+/// extract.
+pub fn critical_path(
+    timeline: &[OpRecord],
+    n_stages: usize,
+    makespan: f64,
+) -> Option<CriticalPath> {
+    if timeline.is_empty() || !(makespan > 0.0) {
+        return None;
+    }
+    let index = OpIndex::build(timeline)?;
+    // Same-stage predecessor per timeline entry, and each stage's last
+    // op — the candidates realising the makespan (`stage_free[s]` is
+    // the finish of the stage's last executed op).
+    let mut prev_on_stage = vec![usize::MAX; timeline.len()];
+    let mut stage_last = vec![usize::MAX; n_stages];
+    for (i, op) in timeline.iter().enumerate() {
+        if op.stage >= n_stages {
+            return None;
+        }
+        prev_on_stage[i] = stage_last[op.stage];
+        stage_last[op.stage] = i;
+    }
+    // Terminal: lowest stage whose last op's finish bit-equals the
+    // makespan (deterministic tie-break; `f64::max` folding guarantees
+    // at least one exists on engine timelines).
+    let terminal = stage_last
+        .iter()
+        .copied()
+        .filter(|&i| i != usize::MAX)
+        .find(|&i| timeline[i].finish.to_bits() == makespan.to_bits())?;
+
+    // Backtrack the binding constraint to time zero.
+    let mut spans_rev: Vec<PathSpan> = Vec::new();
+    let mut cur = terminal;
+    loop {
+        let op = &timeline[cur];
+        spans_rev.push(PathSpan {
+            stage: op.stage,
+            bucket: op.bucket,
+            is_forward: op.is_forward,
+            is_comm: false,
+            start: op.start,
+            end: op.finish,
+            timeline_idx: Some(cur),
+        });
+        if op.start == 0.0 {
+            break;
+        }
+        let p = prev_on_stage[cur];
+        if p != usize::MAX && timeline[p].finish.to_bits() == op.start.to_bits() {
+            cur = p; // the stage was busy right up to our start
+            continue;
+        }
+        // The data edge bound us: start == dep.finish + comm, so the
+        // interval [dep.finish, start] is the hop wait.
+        let d = index.dep_of(timeline, cur)?;
+        let dep = &timeline[d];
+        if !(dep.finish <= op.start) {
+            return None; // inconsistent record
+        }
+        if dep.finish.to_bits() != op.start.to_bits() {
+            spans_rev.push(PathSpan {
+                stage: op.stage,
+                bucket: op.bucket,
+                is_forward: op.is_forward,
+                is_comm: true,
+                start: dep.finish,
+                end: op.start,
+                timeline_idx: None,
+            });
+        }
+        cur = d;
+    }
+    spans_rev.reverse();
+    let spans = spans_rev;
+    // Verify the tiling the bit-exactness contract rests on.
+    if spans.first().map_or(true, |s| s.start != 0.0) {
+        return None;
+    }
+    for w in spans.windows(2) {
+        if w[0].end.to_bits() != w[1].start.to_bits() {
+            return None;
+        }
+    }
+    if spans.last().map_or(true, |s| s.end.to_bits() != makespan.to_bits()) {
+        return None;
+    }
+    Some(CriticalPath { makespan, spans })
+}
+
+/// Per-op slack over one recorded iteration, timeline order.
+///
+/// Backward pass over the timeline (a topological order for both the
+/// data-dependency and same-stage edges): an op's latest finish is the
+/// minimum over its successors of their latest start minus the edge's
+/// hop wait, seeded at `makespan` for ops with no successor. Ops on the
+/// extracted critical chain are forced to slack 0 exactly.
+pub fn op_slack(timeline: &[OpRecord], n_stages: usize, makespan: f64) -> Vec<OpSlack> {
+    let Some(index) = OpIndex::build(timeline) else {
+        return Vec::new();
+    };
+    let n = timeline.len();
+    // Successor edges, inverted from the dependency/stage predecessors.
+    let mut next_on_stage = vec![usize::MAX; n];
+    let mut stage_last = vec![usize::MAX; n_stages.max(1)];
+    for (i, op) in timeline.iter().enumerate() {
+        let s = op.stage.min(n_stages.max(1) - 1);
+        if stage_last[s] != usize::MAX {
+            next_on_stage[stage_last[s]] = i;
+        }
+        stage_last[s] = i;
+    }
+    let mut latest_finish = vec![makespan; n];
+    for i in (0..n).rev() {
+        // Data-dependent successor: the op whose dep is `i`.
+        let op = &timeline[i];
+        let p = index.pos[i];
+        let dependent = if op.is_forward {
+            if p + 1 < index.depth[op.bucket] {
+                index.get(op.bucket, p + 1, true)
+            } else {
+                index.get(op.bucket, p, false)
+            }
+        } else if p > 0 {
+            index.get(op.bucket, p - 1, false)
+        } else {
+            None
+        };
+        if let Some(v) = dependent {
+            let dur = timeline[v].finish - timeline[v].start;
+            // The hop cost is only observable when the edge bound the
+            // successor; the recorded wait is the best available bound.
+            let hop = (timeline[v].start - timeline[i].finish).max(0.0);
+            let cand = latest_finish[v] - dur - hop;
+            if cand < latest_finish[i] {
+                latest_finish[i] = cand;
+            }
+        }
+        if next_on_stage[i] != usize::MAX {
+            let v = next_on_stage[i];
+            let dur = timeline[v].finish - timeline[v].start;
+            let cand = latest_finish[v] - dur;
+            if cand < latest_finish[i] {
+                latest_finish[i] = cand;
+            }
+        }
+    }
+    let mut critical = vec![false; n];
+    if let Some(path) = critical_path(timeline, n_stages, makespan) {
+        for s in path.spans.iter().filter_map(|s| s.timeline_idx) {
+            critical[s] = true;
+        }
+    }
+    timeline
+        .iter()
+        .enumerate()
+        .map(|(i, op)| OpSlack {
+            bucket: op.bucket,
+            stage: op.stage,
+            is_forward: op.is_forward,
+            start: op.start,
+            finish: op.finish,
+            slack: if critical[i] { 0.0 } else { (latest_finish[i] - op.finish).max(0.0) },
+            critical: critical[i],
+        })
+        .collect()
+}
+
+/// The machine-readable slack/slot list a bubble-filling scheduler
+/// consumes (ROADMAP open item 1): every op with its placement, slack,
+/// and critical flag, timeline order.
+pub fn slack_json(slacks: &[OpSlack]) -> Json {
+    Json::Arr(
+        slacks
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("bucket", Json::Num(s.bucket as f64)),
+                    ("stage", Json::Num(s.stage as f64)),
+                    ("forward", Json::Bool(s.is_forward)),
+                    ("start", Json::Num(s.start)),
+                    ("finish", Json::Num(s.finish)),
+                    ("slack", Json::Num(s.slack)),
+                    ("critical", Json::Bool(s.critical)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::sim::SimWorkspace;
+    use crate::util::prop::forall;
+
+    /// Route a random (e_pp, l_pp, e_dp, l_dp, buckets) layout with
+    /// random durations and comm hops through the event core, recording
+    /// the timeline.
+    fn random_run(
+        g: &mut crate::util::prop::Gen,
+        ws: &mut SimWorkspace,
+    ) -> (usize, f64) {
+        let e_pp = g.size(2);
+        let l_pp = g.size(3);
+        let e_dp = g.size(2);
+        let l_dp = g.size(2);
+        let buckets = g.size(8);
+        let n_stages = e_dp * e_pp + l_dp * l_pp;
+        ws.routes.clear();
+        for j in 0..buckets {
+            let e = j % e_dp;
+            let gp = j % l_dp;
+            for s in 0..e_pp {
+                let t = g.rng.uniform(0.01, 1.0);
+                let comm = if s == 0 { 0.0 } else { g.rng.uniform(0.0, 0.05) };
+                ws.routes.push_leg(e * e_pp + s, t / 3.0, t * 2.0 / 3.0, comm);
+            }
+            for s in 0..l_pp {
+                let t = g.rng.uniform(0.01, 1.0);
+                let comm = g.rng.uniform(0.0, 0.05);
+                ws.routes.push_leg(e_dp * e_pp + gp * l_pp + s, t / 3.0, t * 2.0 / 3.0, comm);
+            }
+            ws.routes.end_route();
+        }
+        let makespan = ws.run(n_stages, true);
+        (n_stages, makespan)
+    }
+
+    #[test]
+    fn chain_tiles_zero_to_makespan_bit_exactly() {
+        let mut ws = SimWorkspace::new();
+        forall("critical path sums bit-exact to makespan", 60, |g| {
+            let (n_stages, makespan) = random_run(g, &mut ws);
+            let tl = ws.timeline().to_vec();
+            let Some(path) = critical_path(&tl, n_stages, makespan) else {
+                return (format!("no path (n_stages={n_stages})"), false);
+            };
+            let tiled = path.spans.first().map_or(false, |s| s.start == 0.0)
+                && path
+                    .spans
+                    .windows(2)
+                    .all(|w| w[0].end.to_bits() == w[1].start.to_bits());
+            let ok = tiled && path.total().to_bits() == makespan.to_bits();
+            (
+                format!("spans={} makespan={makespan}", path.spans.len()),
+                ok,
+            )
+        });
+    }
+
+    #[test]
+    fn slack_zero_on_chain_and_nonnegative_everywhere() {
+        let mut ws = SimWorkspace::new();
+        forall("slack: chain ops 0, all finite and nonnegative", 40, |g| {
+            let (n_stages, makespan) = random_run(g, &mut ws);
+            let tl = ws.timeline().to_vec();
+            let slacks = op_slack(&tl, n_stages, makespan);
+            let ok = slacks.len() == tl.len()
+                && slacks.iter().all(|s| {
+                    s.slack.is_finite()
+                        && s.slack >= 0.0
+                        && (!s.critical || s.slack == 0.0)
+                })
+                && slacks.iter().any(|s| s.critical);
+            (format!("ops={}", slacks.len()), ok)
+        });
+    }
+
+    #[test]
+    fn blame_partitions_the_chain() {
+        let mut ws = SimWorkspace::new();
+        forall("stage+modality blame partition the chain total", 30, |g| {
+            let (n_stages, makespan) = random_run(g, &mut ws);
+            let tl = ws.timeline().to_vec();
+            let Some(path) = critical_path(&tl, n_stages, makespan) else {
+                return ("no path".to_string(), false);
+            };
+            let stage_sum: f64 = path.stage_blame(n_stages).iter().sum();
+            let (enc, llm, comm) = path.modality_blame(1);
+            let tol = 1e-9 * makespan.max(1.0);
+            let ok = ((stage_sum + path.comm_wait()) - makespan).abs() < tol
+                && ((enc + llm + comm) - makespan).abs() < tol;
+            (format!("stage_sum={stage_sum} comm={comm}"), ok)
+        });
+    }
+
+    #[test]
+    fn empty_timeline_has_no_path() {
+        assert!(critical_path(&[], 2, 1.0).is_none());
+        assert!(op_slack(&[], 2, 1.0).is_empty());
+    }
+
+    #[test]
+    fn single_op_chain_is_the_op() {
+        let tl = vec![OpRecord {
+            bucket: 0,
+            stage: 0,
+            is_forward: true,
+            start: 0.0,
+            finish: 2.5,
+        }];
+        let path = critical_path(&tl, 1, 2.5).expect("path");
+        assert_eq!(path.spans.len(), 1);
+        assert_eq!(path.total().to_bits(), 2.5f64.to_bits());
+        let slacks = op_slack(&tl, 1, 2.5);
+        assert!(slacks[0].critical && slacks[0].slack == 0.0);
+    }
+
+    #[test]
+    fn slack_json_lists_every_op() {
+        let tl = vec![
+            OpRecord { bucket: 0, stage: 0, is_forward: true, start: 0.0, finish: 1.0 },
+            OpRecord { bucket: 0, stage: 0, is_forward: false, start: 1.0, finish: 3.0 },
+        ];
+        let slacks = op_slack(&tl, 1, 3.0);
+        let Json::Arr(rows) = slack_json(&slacks) else { panic!("array") };
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("stage").and_then(Json::as_usize), Some(0));
+        assert_eq!(rows[1].get("forward"), Some(&Json::Bool(false)));
+    }
+}

@@ -18,6 +18,80 @@ use crate::util::json::{emit, Json};
 use crate::util::stats::quantile;
 use std::collections::BTreeMap;
 
+/// Samples a histogram retains for quantile estimation. Below this the
+/// reservoir holds every sample and quantiles are exact; above it a
+/// seeded deterministic reservoir (Algorithm R) keeps a uniform sample
+/// while count/mean/min/max stay exact — so long-horizon fault
+/// scenarios observe O(1) memory per series instead of O(iterations).
+pub const RESERVOIR_CAP: usize = 512;
+
+/// A fixed-capacity histogram series: exact count/sum/min/max plus a
+/// bounded sample set. The replacement stream is a xorshift64 seeded
+/// from the metric name (FNV-1a), so retention is a pure function of
+/// the name and the sample sequence — identical at any `DFLOP_THREADS`
+/// and across runs, per the obs determinism contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Reservoir {
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    xs: Vec<f64>,
+    state: u64,
+}
+
+impl Reservoir {
+    fn new(name: &str) -> Reservoir {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in name.bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        Reservoir {
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            xs: Vec::new(),
+            state: h | 1, // xorshift64 must not start at 0
+        }
+    }
+
+    fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+        if self.xs.len() < RESERVOIR_CAP {
+            self.xs.push(x);
+        } else {
+            // Algorithm R: keep the newcomer with probability cap/n, in
+            // a uniformly random retained slot.
+            self.state ^= self.state << 13;
+            self.state ^= self.state >> 7;
+            self.state ^= self.state << 17;
+            let j = (self.state % self.n) as usize;
+            if j < RESERVOIR_CAP {
+                self.xs[j] = x;
+            }
+        }
+    }
+
+    /// Finite samples observed (exact, not capped).
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// The retained samples (every sample below [`RESERVOIR_CAP`]).
+    pub fn samples(&self) -> &[f64] {
+        &self.xs
+    }
+}
+
 /// Counter/gauge state captured at the end of one iteration.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Snapshot {
@@ -29,12 +103,12 @@ pub struct Snapshot {
 }
 
 /// The metrics registry: monotonic counters, last-value gauges, and
-/// raw-sample histograms (summarized on dump).
+/// bounded-memory histogram series (summarized on dump).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Registry {
     counters: BTreeMap<&'static str, u64>,
     gauges: BTreeMap<&'static str, f64>,
-    hists: BTreeMap<&'static str, Vec<f64>>,
+    hists: BTreeMap<&'static str, Reservoir>,
     snapshots: Vec<Snapshot>,
 }
 
@@ -54,9 +128,9 @@ impl Registry {
     /// Record one histogram sample (non-finite values register the
     /// series but are dropped from it).
     pub fn observe(&mut self, name: &'static str, value: f64) {
-        let xs = self.hists.entry(name).or_default();
+        let r = self.hists.entry(name).or_insert_with(|| Reservoir::new(name));
         if value.is_finite() {
-            xs.push(value);
+            r.push(value);
         }
     }
 
@@ -68,8 +142,15 @@ impl Registry {
         self.gauges.get(name).copied()
     }
 
+    /// A histogram's retained samples (all of them below
+    /// [`RESERVOIR_CAP`], a deterministic uniform subsample above).
     pub fn samples(&self, name: &str) -> &[f64] {
-        self.hists.get(name).map_or(&[], Vec::as_slice)
+        self.hists.get(name).map_or(&[], Reservoir::samples)
+    }
+
+    /// A histogram's exact observation count (0 if never registered).
+    pub fn hist_count(&self, name: &str) -> u64 {
+        self.hists.get(name).map_or(0, Reservoir::count)
     }
 
     pub fn snapshots(&self) -> &[Snapshot] {
@@ -97,7 +178,7 @@ impl Registry {
         let hists: Vec<(&str, Json)> = self
             .hists
             .iter()
-            .map(|(&k, xs)| (k, hist_summary(xs)))
+            .map(|(&k, r)| (k, hist_summary(r)))
             .collect();
         let snaps: Vec<Json> = self
             .snapshots
@@ -139,21 +220,22 @@ impl Registry {
     }
 }
 
-/// Summarize one histogram's samples. `quantile` asserts on empty
-/// input, so an empty series dumps as `{"count": 0}` only.
-fn hist_summary(xs: &[f64]) -> Json {
-    if xs.is_empty() {
+/// Summarize one histogram series. Count/mean/min/max are exact over
+/// every observed sample; quantiles are computed over the retained
+/// reservoir (exact below [`RESERVOIR_CAP`]). `quantile` asserts on
+/// empty input, so an empty series dumps as `{"count": 0}` only.
+fn hist_summary(r: &Reservoir) -> Json {
+    if r.n == 0 {
         return Json::obj(vec![("count", Json::Num(0.0))]);
     }
-    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
     Json::obj(vec![
-        ("count", Json::Num(xs.len() as f64)),
-        ("mean", Json::Num(mean)),
-        ("min", Json::Num(xs.iter().cloned().fold(f64::INFINITY, f64::min))),
-        ("max", Json::Num(xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max))),
-        ("p50", Json::Num(quantile(xs, 0.50))),
-        ("p90", Json::Num(quantile(xs, 0.90))),
-        ("p99", Json::Num(quantile(xs, 0.99))),
+        ("count", Json::Num(r.n as f64)),
+        ("mean", Json::Num(r.sum / r.n as f64)),
+        ("min", Json::Num(r.min)),
+        ("max", Json::Num(r.max)),
+        ("p50", Json::Num(quantile(&r.xs, 0.50))),
+        ("p90", Json::Num(quantile(&r.xs, 0.90))),
+        ("p99", Json::Num(quantile(&r.xs, 0.99))),
     ])
 }
 
@@ -190,6 +272,67 @@ mod tests {
         assert_eq!(
             doc.get("snapshots").and_then(Json::as_arr).map(<[Json]>::len),
             Some(2)
+        );
+    }
+
+    #[test]
+    fn reservoir_is_exact_below_capacity() {
+        use crate::util::prop::forall;
+        forall("below-cap reservoir keeps every sample in order", 30, |g| {
+            let n = 1 + g.size(RESERVOIR_CAP - 1);
+            let xs: Vec<f64> = (0..n).map(|_| g.rng.uniform(0.0, 10.0)).collect();
+            let mut reg = Registry::default();
+            for &x in &xs {
+                reg.observe("h", x);
+            }
+            let exact = reg.samples("h") == xs.as_slice()
+                && reg.hist_count("h") == n as u64;
+            // Below capacity the dumped quantiles are over the full set.
+            let doc = parse(&reg.dump()).expect("valid json");
+            let p50 = doc.path("histograms.h.p50").and_then(Json::as_f64);
+            let ok = exact && p50 == Some(quantile(&xs, 0.50));
+            (format!("n={n}"), ok)
+        });
+    }
+
+    #[test]
+    fn reservoir_above_capacity_is_bounded_deterministic_and_a_subsample() {
+        use crate::util::prop::forall;
+        forall("above-cap reservoir: bounded, deterministic, subset", 10, |g| {
+            let n = RESERVOIR_CAP + 1 + g.size(3 * RESERVOIR_CAP);
+            let xs: Vec<f64> = (0..n).map(|i| i as f64 + g.rng.uniform(0.0, 0.5)).collect();
+            let (mut a, mut b) = (Registry::default(), Registry::default());
+            for &x in &xs {
+                a.observe("h", x);
+                b.observe("h", x);
+            }
+            let ok = a.samples("h") == b.samples("h")
+                && a.samples("h").len() == RESERVOIR_CAP
+                && a.hist_count("h") == n as u64
+                && a.samples("h").iter().all(|x| xs.contains(x))
+                && a.dump() == b.dump();
+            (format!("n={n}"), ok)
+        });
+    }
+
+    #[test]
+    fn exact_aggregates_survive_capped_retention() {
+        let mut reg = Registry::default();
+        let n = 4 * RESERVOIR_CAP;
+        for i in 0..n {
+            reg.observe("h", i as f64);
+        }
+        let doc = parse(&reg.dump()).expect("valid json");
+        assert_eq!(doc.path("histograms.h.count").and_then(Json::as_usize), Some(n));
+        assert_eq!(doc.path("histograms.h.min").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(
+            doc.path("histograms.h.max").and_then(Json::as_f64),
+            Some((n - 1) as f64)
+        );
+        let sum: f64 = (0..n).map(|i| i as f64).sum();
+        assert_eq!(
+            doc.path("histograms.h.mean").and_then(Json::as_f64),
+            Some(sum / n as f64)
         );
     }
 

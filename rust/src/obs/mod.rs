@@ -1,22 +1,35 @@
-//! Observability: deterministic run tracing and telemetry export.
+//! Observability: deterministic run tracing, analysis, and telemetry
+//! export.
 //!
-//! Four layers on one seam:
+//! Recording layers on one seam:
 //!
 //! - [`record`] — the [`Recorder`] that `engine::run` threads through
 //!   `Telemetry`: structured sim-time-stamped events (plan swaps, drift
 //!   transitions, fault deltas, migrations, refit retries) plus opt-in
-//!   per-op / per-replica timelines, captured only at iteration
-//!   boundaries on the engine-loop thread.
-//! - [`bubble`] — per-stage bubble-interval extraction and
-//!   busy/idle/bubble-fraction accounting over recorded timelines
-//!   (`--fig bubbles`; the substrate for ROADMAP item 1's
-//!   bubble-exploiting execution model).
+//!   per-op / per-replica timelines and realized batches, captured only
+//!   at iteration boundaries on the engine-loop thread.
 //! - [`chrome`] — Chrome Trace Event Format export
 //!   (`dflop run ... --trace out.json`, loadable in Perfetto) plus a
-//!   schema validator.
+//!   schema validator (spans, instants, replan flow chains, audit
+//!   counter rows).
 //! - [`metrics`] — the std-only counter/gauge/histogram [`Registry`]
-//!   with per-iteration snapshots (`--metrics out.json`) — the one
-//!   place new subsystems register run telemetry.
+//!   with per-iteration snapshots and bounded-memory histogram
+//!   reservoirs (`--metrics out.json`) — the one place new subsystems
+//!   register run telemetry.
+//!
+//! Analysis layers on the recorded log:
+//!
+//! - [`bubble`] — per-stage bubble-interval extraction and
+//!   busy/idle/bubble-fraction accounting over recorded timelines
+//!   (`--fig bubbles`).
+//! - [`critical`] — critical-path extraction (span durations sum
+//!   bit-exactly to the recorded makespan), per-op slack, and
+//!   stage/modality blame (`--fig critpath`); together with
+//!   [`bubble`]'s gap intervals this is the slot list ROADMAP item 1's
+//!   bubble-exploiting execution model consumes.
+//! - [`audit`] — predicted-vs-measured residuals per iteration and
+//!   counterfactual replan attribution via delta replay
+//!   (`dflop run --audit`, `--fig audit`).
 //!
 //! **Determinism contract.** The recorder only copies values the
 //! simulation already produced, on one thread, at iteration
@@ -32,11 +45,14 @@
 //! arithmetic. `obs_bench` pins the guarantee with a paired
 //! recorder-off vs recorder-on row checked by `dflop-bench-compare`.
 
+pub mod audit;
 pub mod bubble;
 pub mod chrome;
+pub mod critical;
 pub mod metrics;
 pub mod record;
 
+pub use audit::AuditReport;
 pub use metrics::Registry;
 pub use record::{Event, EventKind, ObsConfig, Recorder, RunLog};
 
@@ -80,6 +96,9 @@ pub fn run_result_json(r: &RunResult) -> String {
             if e.expected_makespan.is_finite() {
                 fields.push(("expected_makespan_s", Json::Num(e.expected_makespan)));
             }
+            if e.expected_incumbent.is_finite() {
+                fields.push(("expected_incumbent_s", Json::Num(e.expected_incumbent)));
+            }
             fields.push(("elapsed_s", Json::Num(e.elapsed.as_secs_f64())));
             Json::obj(fields)
         })
@@ -92,7 +111,7 @@ pub fn run_result_json(r: &RunResult) -> String {
     let step_series: Vec<Json> =
         r.iterations.iter().map(|s| Json::Num(s.iteration_time)).collect();
     let sched_total: f64 = r.sched_elapsed.iter().map(|d| d.as_secs_f64()).sum();
-    let doc = Json::obj(vec![
+    let mut fields = vec![
         ("schema", Json::str("dflop-run-v1")),
         ("system", Json::str(r.system.label())),
         ("theta", theta_json(&r.theta)),
@@ -131,6 +150,11 @@ pub fn run_result_json(r: &RunResult) -> String {
                 ("sched_total_s", Json::Num(sched_total)),
             ]),
         ),
-    ]);
-    emit(&doc) + "\n"
+    ];
+    // The predicted-vs-measured audit, when the run recorded one
+    // (`--audit`): deterministic, so it rides in the main document.
+    if let Some(a) = r.obs.as_deref().and_then(|log| log.audit.as_ref()) {
+        fields.push(("audit", audit::audit_json(a)));
+    }
+    emit(&Json::obj(fields)) + "\n"
 }

@@ -24,8 +24,10 @@
 //! `ReplanEvent::elapsed`) never enter the log — they would break the
 //! byte-identity contract.
 
+use crate::data::item::ItemShape;
 use crate::engine::policy::PlanSet;
 use crate::fault::FaultDelta;
+use crate::obs::audit::AuditReport;
 use crate::obs::bubble::iteration_bubble_fraction;
 use crate::obs::metrics::Registry;
 use crate::optimizer::plan::Theta;
@@ -44,6 +46,9 @@ pub struct ObsConfig {
     /// Maintain the `obs::metrics` registry with per-iteration
     /// snapshots (`--metrics`).
     pub metrics: bool,
+    /// Record each iteration's realized global batch and run the
+    /// post-run predicted-vs-measured audit (`obs::audit`, `--audit`).
+    pub audit: bool,
 }
 
 /// One structured run event.
@@ -115,6 +120,9 @@ pub struct IterationTrace {
     pub replicas: Vec<ReplicaTrace>,
     /// Step-barrier breakdown (sharded systems only).
     pub barrier: Option<BarrierTrace>,
+    /// The realized global batch this iteration executed (pooled, shard
+    /// order on sharded systems). Empty unless [`ObsConfig::audit`].
+    pub batch: Vec<ItemShape>,
 }
 
 impl IterationTrace {
@@ -134,10 +142,15 @@ pub struct RunLog {
     pub events: Vec<Event>,
     /// The metrics registry (`ObsConfig::metrics`).
     pub metrics: Option<Registry>,
+    /// The post-run audit ([`ObsConfig::audit`]; attached by
+    /// `obs::audit::run_audit` after the engine loop finishes).
+    pub audit: Option<AuditReport>,
     /// Replica traces staged by the executor for the in-flight
     /// iteration, drained at the next `end_iteration`.
     pending_replicas: Vec<ReplicaTrace>,
     pending_barrier: Option<BarrierTrace>,
+    /// The in-flight iteration's realized batch ([`ObsConfig::audit`]).
+    pending_batch: Vec<ItemShape>,
     /// Last drift phase, so only transitions emit events.
     last_phase: Option<&'static str>,
 }
@@ -203,6 +216,7 @@ impl RunLog {
             n_stages: stats.n_stages,
             replicas,
             barrier,
+            batch: std::mem::take(&mut self.pending_batch),
         });
         self.sim_now += stats.iteration_time;
     }
@@ -241,6 +255,27 @@ impl Recorder {
     #[inline]
     pub fn wants_timelines(&self) -> bool {
         matches!(self, Recorder::On(log) if log.cfg.timelines)
+    }
+
+    /// Whether realized batches should be captured for the post-run
+    /// audit.
+    #[inline]
+    pub fn wants_audit(&self) -> bool {
+        matches!(self, Recorder::On(log) if log.cfg.audit)
+    }
+
+    /// Stage the in-flight iteration's realized global batch (pooled,
+    /// shard order on sharded systems; the engine calls this right
+    /// after drawing, before scheduling). No-op unless audit was
+    /// requested.
+    #[inline]
+    pub fn audit_batch(&mut self, batch: &[ItemShape]) {
+        if let Recorder::On(log) = self {
+            if log.cfg.audit {
+                log.pending_batch.clear();
+                log.pending_batch.extend_from_slice(batch);
+            }
+        }
     }
 
     /// Fleet activity at this boundary (no event for a quiet delta;
@@ -439,7 +474,7 @@ mod tests {
     #[test]
     fn sim_clock_advances_and_events_stamp_iteration_starts() {
         let mut rec =
-            Recorder::new(Some(&ObsConfig { timelines: true, metrics: false }));
+            Recorder::new(Some(&ObsConfig { timelines: true, metrics: false, audit: false }));
         rec.end_iteration(&stats(2.0));
         rec.migrations(3);
         rec.end_iteration(&stats(3.0));
@@ -460,7 +495,7 @@ mod tests {
     #[test]
     fn drift_phase_emits_transitions_only() {
         let mut rec =
-            Recorder::new(Some(&ObsConfig { timelines: false, metrics: false }));
+            Recorder::new(Some(&ObsConfig { timelines: false, metrics: false, audit: false }));
         rec.drift_phase(None);
         rec.drift_phase(Some("stable"));
         rec.drift_phase(Some("stable"));

@@ -73,6 +73,54 @@ fn bucket_count(gbs: usize, eval_n: usize, n_mb: usize, l_dp: usize) -> usize {
     ((n_mb * l_dp).div_ceil(scale)).min(eval_n).max(1)
 }
 
+/// Write emission slot `j`'s legs into `sim` under the evaluator's
+/// comm-free route frame: the encoder pipeline `j mod e_dp` then the LLM
+/// pipeline `j mod l_dp`, fwd = t/3 and bwd = 2t/3 per leg, zero hop
+/// cost. With `push` the route is appended to the workspace's route set
+/// (structural build — ends the route); otherwise the standing route
+/// `j`'s legs are re-priced in place via [`SimWorkspace::update_leg`]
+/// for a subsequent [`SimWorkspace::delta_run`].
+///
+/// This is the one leg-layout definition shared by the batch evaluator
+/// and `obs::audit`'s counterfactual pricer, so both frames are
+/// bit-identical by construction.
+#[allow(clippy::too_many_arguments)]
+pub fn write_slot_legs(
+    sim: &mut SimWorkspace,
+    j: usize,
+    e_pp: usize,
+    l_pp: usize,
+    e_dp: usize,
+    l_dp: usize,
+    e_t: f64,
+    l_t: f64,
+    push: bool,
+) {
+    if push {
+        let e = j % e_dp;
+        let g = j % l_dp;
+        for sidx in 0..e_pp {
+            sim.routes.push_leg(e * e_pp + sidx, e_t / 3.0, e_t * 2.0 / 3.0, 0.0);
+        }
+        for sidx in 0..l_pp {
+            sim.routes.push_leg(
+                e_dp * e_pp + g * l_pp + sidx,
+                l_t / 3.0,
+                l_t * 2.0 / 3.0,
+                0.0,
+            );
+        }
+        sim.routes.end_route();
+    } else {
+        for sidx in 0..e_pp {
+            sim.update_leg(j, sidx, e_t / 3.0, e_t * 2.0 / 3.0);
+        }
+        for sidx in 0..l_pp {
+            sim.update_leg(j, e_pp + sidx, l_t / 3.0, l_t * 2.0 / 3.0);
+        }
+    }
+}
+
 /// Eq 1: expected makespan over the sampled dataset D for one candidate.
 ///
 /// Where Algorithm 1's inner loop scores with the mean shape, the
@@ -126,20 +174,7 @@ pub(crate) fn expected_makespan(
             }
             let e_t = est.enc_bucket_dur(units, enc.tp) / enc.pp as f64 + e_ovh;
             let l_t = est.llm_bucket_dur(&sim.seqs, llm.tp) / llm.pp as f64 + l_ovh;
-            let e = j % enc.dp;
-            let g = j % llm.dp;
-            for sidx in 0..enc.pp {
-                sim.routes.push_leg(e * enc.pp + sidx, e_t / 3.0, e_t * 2.0 / 3.0, 0.0);
-            }
-            for sidx in 0..llm.pp {
-                sim.routes.push_leg(
-                    enc.dp * enc.pp + g * llm.pp + sidx,
-                    l_t / 3.0,
-                    l_t * 2.0 / 3.0,
-                    0.0,
-                );
-            }
-            sim.routes.end_route();
+            write_slot_legs(sim, j, enc.pp, llm.pp, enc.dp, llm.dp, e_t, l_t, true);
         }
         sim.run(n_stages, false)
     };
@@ -290,29 +325,7 @@ fn eval_keyed(
         }
         let e_t = est.enc_bucket_dur(units, e_tp) / e_pp as f64 + e_ovh;
         let l_t = est.llm_bucket_dur(&ws.sim.seqs, l_tp) / l_pp as f64 + l_ovh;
-        if reuse {
-            for sidx in 0..e_pp {
-                ws.sim.update_leg(j, sidx, e_t / 3.0, e_t * 2.0 / 3.0);
-            }
-            for sidx in 0..l_pp {
-                ws.sim.update_leg(j, e_pp + sidx, l_t / 3.0, l_t * 2.0 / 3.0);
-            }
-        } else {
-            let e = j % sig.e_dp;
-            let g = j % sig.l_dp;
-            for sidx in 0..e_pp {
-                ws.sim.routes.push_leg(e * e_pp + sidx, e_t / 3.0, e_t * 2.0 / 3.0, 0.0);
-            }
-            for sidx in 0..l_pp {
-                ws.sim.routes.push_leg(
-                    sig.e_dp * e_pp + g * l_pp + sidx,
-                    l_t / 3.0,
-                    l_t * 2.0 / 3.0,
-                    0.0,
-                );
-            }
-            ws.sim.routes.end_route();
-        }
+        write_slot_legs(&mut ws.sim, j, e_pp, l_pp, sig.e_dp, sig.l_dp, e_t, l_t, !reuse);
     }
     if reuse {
         ws.sim.delta_run(n_stages)

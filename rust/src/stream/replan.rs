@@ -23,6 +23,7 @@
 
 use crate::data::item::ItemShape;
 use crate::model::catalog::Mllm;
+use crate::optimizer::batch::{candidate_tables, eval_candidates};
 use crate::optimizer::plan::Theta;
 use crate::optimizer::search::{optimize_warm, OptimizerInputs};
 use crate::profiling::engine::{DataProfile, ModelProfile};
@@ -80,6 +81,13 @@ pub struct ReplanEvent {
     pub swapped: bool,
     /// Eq-1 expected makespan of `new` under the refitted distribution.
     pub expected_makespan: f64,
+    /// Eq-1 expected makespan of the *incumbent* `old` under the same
+    /// refitted distribution — scored via the batched evaluator before
+    /// the warm restart, so `expected_incumbent − expected_makespan` is
+    /// the optimizer's predicted benefit of the swap (`obs::audit`
+    /// compares it to the measured counterfactual benefit). NaN on
+    /// failed refits.
+    pub expected_incumbent: f64,
     /// Wall-clock of the warm-started optimizer run.
     pub elapsed: Duration,
 }
@@ -231,6 +239,13 @@ impl Replanner {
         let t0 = Instant::now();
         let live = live_profile(ctx.m, self.reservoir.shapes());
         let inp = ctx.inputs(&live);
+        // Score the incumbent under the refitted distribution first: one
+        // batched-evaluator simulation whose Eq-1 value anchors the
+        // replan's *predicted* benefit (audited against the measured
+        // counterfactual by `obs::audit`).
+        let incumbent = std::slice::from_ref(&self.theta);
+        let (keys, tables) = candidate_tables(&inp, incumbent);
+        let expected_incumbent = eval_candidates(&inp, &keys, &tables, incumbent)[0];
         match optimize_warm(&inp, Some(self.theta)) {
             Some(r) => {
                 let swapped = r.theta != self.theta;
@@ -241,6 +256,7 @@ impl Replanner {
                     new: r.theta,
                     swapped,
                     expected_makespan: r.expected_makespan,
+                    expected_incumbent,
                     elapsed: t0.elapsed(),
                 });
                 self.theta = r.theta;
@@ -264,6 +280,7 @@ impl Replanner {
                     new: self.theta,
                     swapped: false,
                     expected_makespan: f64::NAN,
+                    expected_incumbent: f64::NAN,
                     elapsed: t0.elapsed(),
                 });
                 if self.failed_refits <= self.cfg.max_refit_retries {
@@ -413,6 +430,14 @@ mod tests {
         let e = &rp.events[0];
         assert!(e.stat.score() >= rp.cfg.drift.enter);
         assert!(e.expected_makespan > 0.0);
+        assert!(
+            e.expected_incumbent > 0.0
+                && e.expected_incumbent >= e.expected_makespan * (1.0 - 1e-9),
+            "incumbent re-score must be finite and no better than the refit winner: \
+             incumbent {} vs adopted {}",
+            e.expected_incumbent,
+            e.expected_makespan
+        );
         assert_eq!(rp.theta.gpus(), cluster.total_gpus());
     }
 

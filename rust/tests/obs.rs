@@ -1,20 +1,25 @@
-//! Integration tests for the observability subsystem (PR 8).
+//! Integration tests for the observability subsystem (PR 8 recording,
+//! PR 9 analysis).
 //!
 //! The contract under test: switching the recorder on changes no bit of
 //! the simulation it observes; the Chrome trace and metrics exports are
 //! byte-identical at any `DFLOP_THREADS`; the exported trace passes the
 //! Trace Event Format schema checks and carries replica-tagged op spans,
 //! bubble spans, and fault/replan instant events on the acceptance fleet
-//! scenario; and the gap-interval bubble accounting agrees bit-exactly
-//! with the simulator's own `stage_busy`/`stage_idle` aggregates.
+//! scenario; the gap-interval bubble accounting agrees bit-exactly
+//! with the simulator's own `stage_busy`/`stage_idle` aggregates; the
+//! critical-path chain telescopes bit-exactly to the recorded makespan
+//! on real engine runs; and the predicted-vs-measured audit is present,
+//! internally consistent, and byte-identical across thread counts.
 
 use dflop::model::catalog::{llama3, llava_ov};
 use dflop::obs::bubble::{iteration_bubble_fraction, stage_bubbles, Gap};
 use dflop::obs::chrome::{trace_json, validate_trace, CLUSTER_PID};
+use dflop::obs::critical::{critical_path, op_slack};
 use dflop::obs::{run_result_json, ObsConfig};
 use dflop::shard::ShardConfig;
 use dflop::sim::{run_system, FaultConfig, RunConfig, RunResult, SystemKind};
-use dflop::util::json::{parse, Json};
+use dflop::util::json::{emit, parse, Json};
 use dflop::util::parallel::set_max_threads;
 use std::collections::BTreeSet;
 use std::sync::Mutex;
@@ -49,7 +54,7 @@ fn run_fleet(obs: Option<ObsConfig>) -> RunResult {
     run_system(SystemKind::DflopSharded, &m, "skewed-shard", &fleet_cfg(obs))
 }
 
-const FULL: ObsConfig = ObsConfig { timelines: true, metrics: true };
+const FULL: ObsConfig = ObsConfig { timelines: true, metrics: true, audit: false };
 
 #[test]
 fn recorder_on_leaves_the_simulation_bit_identical() {
@@ -145,7 +150,7 @@ fn fleet_trace_is_schema_valid_with_expected_lanes_and_events() {
 #[test]
 fn metrics_only_config_skips_timelines_but_counts_faults() {
     let _g = width_guard();
-    let r = run_fleet(Some(ObsConfig { timelines: false, metrics: true }));
+    let r = run_fleet(Some(ObsConfig { timelines: false, metrics: true, audit: false }));
     let log = r.obs.as_ref().expect("log");
     assert!(
         log.iterations.iter().all(|it| it.replicas.is_empty()),
@@ -170,7 +175,7 @@ fn bubble_accounting_is_bit_exact_against_the_simulator() {
     let m = llava_ov(llama3("8b"));
     let mut cfg = RunConfig::new(1, 32, 3, 42);
     cfg.profile_samples = 256;
-    cfg.obs = Some(ObsConfig { timelines: true, metrics: false });
+    cfg.obs = Some(ObsConfig { timelines: true, metrics: false, audit: false });
     let r = run_system(SystemKind::Megatron, &m, "mixed", &cfg);
     assert!(!r.iterations.is_empty());
     for it in &r.iterations {
@@ -238,4 +243,190 @@ fn run_summary_json_parses_with_expected_fields() {
     // deterministic body.
     assert!(doc.path("wall_clock.optimizer_s").is_some());
     assert!(doc.get("mean_iteration_time_s").and_then(Json::as_f64).is_some());
+}
+
+// ------------------------------------------------------------------
+// PR 9 — critical path, audit, long-horizon fault scenarios
+// ------------------------------------------------------------------
+
+#[test]
+fn critical_path_is_bit_exact_on_engine_runs() {
+    // The chain property holds on real engine timelines, not just the
+    // randomized property-test workloads: span durations telescope to
+    // the recorded makespan bit pattern, the chain tiles [0, makespan]
+    // with no gap, and slack is zero exactly on the chain.
+    let _g = width_guard();
+    let m = llava_ov(llama3("8b"));
+    let mut cfg = RunConfig::new(1, 32, 3, 42);
+    cfg.profile_samples = 256;
+    let r = run_system(SystemKind::Megatron, &m, "mixed", &cfg);
+    assert!(!r.iterations.is_empty());
+    let enc_stages = r.theta.enc.dp * r.theta.enc.pp;
+    for it in &r.iterations {
+        let cp = critical_path(&it.timeline, it.n_stages, it.pipeline_makespan)
+            .expect("engine timeline must yield a chain");
+        assert_eq!(
+            cp.total().to_bits(),
+            it.pipeline_makespan.to_bits(),
+            "chain does not telescope to the makespan"
+        );
+        let first = cp.spans.first().expect("non-empty chain");
+        assert_eq!(first.start.to_bits(), 0f64.to_bits());
+        for w in cp.spans.windows(2) {
+            assert_eq!(w[0].end.to_bits(), w[1].start.to_bits(), "chain has a seam");
+        }
+        let (enc, llm, comm) = cp.modality_blame(enc_stages);
+        let tol = 1e-9 * it.pipeline_makespan.max(1.0);
+        assert!(
+            (enc + llm + comm - cp.total()).abs() <= tol,
+            "modality blame does not partition the chain"
+        );
+        let slacks = op_slack(&it.timeline, it.n_stages, it.pipeline_makespan);
+        assert_eq!(slacks.len(), it.timeline.len());
+        assert!(slacks.iter().any(|s| s.critical), "no op marked critical");
+        for s in &slacks {
+            assert!(s.slack >= 0.0, "negative slack at stage {}", s.stage);
+            if s.critical {
+                assert_eq!(s.slack.to_bits(), 0f64.to_bits());
+            }
+        }
+    }
+}
+
+/// The audit acceptance run: adaptive replanning over the drifting
+/// curriculum stream, with batch recording + audit on.
+fn audit_cfg() -> RunConfig {
+    let mut cfg = RunConfig::new(1, 48, 24, 42);
+    cfg.profile_samples = 256;
+    cfg.obs = Some(ObsConfig { timelines: false, metrics: true, audit: true });
+    cfg
+}
+
+#[test]
+fn audit_report_is_present_and_internally_consistent() {
+    let _g = width_guard();
+    let m = llava_ov(llama3("8b"));
+    let r = run_system(SystemKind::DflopAdaptive, &m, "curriculum", &audit_cfg());
+    let log = r.obs.as_ref().expect("log");
+    let a = log.audit.as_ref().expect("audit-enabled run must record a report");
+    // One row per iteration, measured straight from the simulator.
+    assert_eq!(a.rows.len(), r.iterations.len());
+    for (row, it) in a.rows.iter().zip(&r.iterations) {
+        assert_eq!(row.measured.to_bits(), it.iteration_time.to_bits());
+        assert!(row.predicted > 0.0, "estimator predicted a non-positive step");
+        assert_eq!(row.residual.to_bits(), (row.predicted - row.measured).to_bits());
+    }
+    assert!(a.mean_abs_rel_err.is_finite() && a.mean_abs_rel_err >= 0.0);
+    assert!(a.bias.is_finite());
+    // One counterfactual attribution per adopted swap, windows non-empty.
+    let swaps = r.replan_events.iter().filter(|e| e.swapped).count();
+    assert_eq!(a.replans.len(), swaps);
+    for ra in &a.replans {
+        assert!(ra.window > 0);
+        assert!(ra.incumbent_mean > 0.0 && ra.adopted_mean > 0.0);
+        assert_eq!(
+            ra.measured_benefit.to_bits(),
+            (ra.incumbent_mean - ra.adopted_mean).to_bits()
+        );
+    }
+    // Metrics wiring.
+    let reg = log.metrics.as_ref().expect("metrics");
+    assert_eq!(reg.counter("audit_rows"), a.rows.len() as u64);
+    assert_eq!(reg.counter("audit_replans"), a.replans.len() as u64);
+    // The --json summary carries the audit section.
+    let doc = parse(&run_result_json(&r)).expect("summary json");
+    assert_eq!(doc.path("audit.schema").and_then(Json::as_str), Some("dflop-audit-v1"));
+    assert_eq!(
+        doc.path("audit.rows").and_then(Json::as_arr).map(<[Json]>::len),
+        Some(a.rows.len())
+    );
+}
+
+#[test]
+fn audit_output_byte_identical_across_thread_counts() {
+    let _g = width_guard();
+    let m = llava_ov(llama3("8b"));
+    set_max_threads(1);
+    let serial = run_system(SystemKind::DflopAdaptive, &m, "curriculum", &audit_cfg());
+    set_max_threads(8);
+    let parallel = run_system(SystemKind::DflopAdaptive, &m, "curriculum", &audit_cfg());
+    set_max_threads(0);
+    let audit_text = |r: &RunResult| {
+        emit(&dflop::obs::audit::audit_json(
+            r.obs.as_deref().and_then(|l| l.audit.as_ref()).expect("audit report"),
+        ))
+    };
+    assert_eq!(
+        audit_text(&serial),
+        audit_text(&parallel),
+        "audit export drifted with thread count"
+    );
+}
+
+/// The long-horizon scenario: the seeded ~512-iteration churn generator
+/// replayed over a 48-iteration fleet window (satellite of PR 9).
+fn long_fleet_cfg(obs: Option<ObsConfig>) -> RunConfig {
+    let mut cfg = RunConfig::new(1, 48, 48, 42);
+    cfg.profile_samples = 256;
+    cfg.shard = Some(ShardConfig {
+        dp_shards: 4,
+        rebalance: false,
+        window_batches: 4,
+        ..ShardConfig::default()
+    });
+    cfg.faults = Some(FaultConfig { trace: "long-horizon".to_string(), respond: true });
+    cfg.obs = obs;
+    cfg
+}
+
+fn run_long_fleet(obs: Option<ObsConfig>) -> RunResult {
+    let m = llava_ov(llama3("8b"));
+    run_system(SystemKind::DflopSharded, &m, "skewed-shard", &long_fleet_cfg(obs))
+}
+
+#[test]
+fn long_horizon_fault_trace_is_schema_valid_with_matching_counters() {
+    let _g = width_guard();
+    let r = run_long_fleet(Some(FULL));
+    let log = r.obs.as_ref().expect("log");
+    let text = trace_json(log);
+    validate_trace(&text).expect("schema-valid Chrome trace under long-horizon churn");
+    let reg = log.metrics.as_ref().expect("metrics");
+    assert_eq!(reg.counter("iterations"), 48);
+    // Counters mirror the run's own fault accounting exactly.
+    assert_eq!(reg.counter("fault_failures"), r.fault.failures as u64);
+    assert_eq!(reg.counter("fault_recoveries"), r.fault.recoveries as u64);
+    if r.fault.failures + r.fault.recoveries > 0 {
+        let doc = parse(&text).expect("valid json");
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        assert!(
+            evs.iter()
+                .any(|e| e.get("name").and_then(Json::as_str) == Some("fault")),
+            "fault counters non-zero but no fault instants in the trace"
+        );
+    }
+}
+
+#[test]
+fn long_horizon_trace_and_metrics_byte_identical_across_thread_counts() {
+    let _g = width_guard();
+    set_max_threads(1);
+    let serial = run_long_fleet(Some(FULL));
+    set_max_threads(8);
+    let parallel = run_long_fleet(Some(FULL));
+    set_max_threads(0);
+    let (ls, lp) = (
+        serial.obs.as_ref().expect("log"),
+        parallel.obs.as_ref().expect("log"),
+    );
+    assert_eq!(
+        trace_json(ls),
+        trace_json(lp),
+        "long-horizon Chrome trace drifted with thread count"
+    );
+    assert_eq!(
+        ls.metrics.as_ref().expect("metrics").dump(),
+        lp.metrics.as_ref().expect("metrics").dump(),
+        "long-horizon metrics dump drifted with thread count"
+    );
 }
