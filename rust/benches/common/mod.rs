@@ -9,8 +9,9 @@
 //! Setting `DFLOP_BENCH_JSON=<path>` additionally records every result in
 //! a machine-readable JSON document (see [`emit_json`]): the bench targets
 //! run sequentially under `cargo bench` and each merges its rows into the
-//! same file, which CI uploads as an artifact (`BENCH_PR9.json` since the
-//! run-analysis tier landed; the PR-2..8 protocol files read identically).
+//! same file, which CI uploads as an artifact (`BENCH_PR10.json` since the
+//! bubble-filling execution landed; the PR-2..9 protocol files read
+//! identically).
 //!
 //! Setting `DFLOP_BENCH_JSON_DIR=<dir>` writes one *per-target* document
 //! (`<dir>/BENCH_<target>.json`, same schema, only that target's rows) on

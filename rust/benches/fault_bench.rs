@@ -20,13 +20,14 @@ use dflop::sim::{run_system, FaultConfig, RunConfig, RunResult, SystemKind};
 /// The acceptance configuration shared with `tests/fleet.rs`: a 4-shard
 /// fleet of single-node replicas on the skewed-shard dataset, long enough
 /// for the scripted scenario (last heal at iteration 15) plus post-heal
-/// iterations.
+/// iterations. Rebalancing stays on — since PR 10 the balancer prices
+/// items by the confirmed per-shard slowdown, so it composes with the
+/// fault-aware weighting.
 fn fleet_cfg(trace: &str, respond: bool) -> RunConfig {
     let mut cfg = RunConfig::new(1, 48, 18, 42);
     cfg.profile_samples = 256;
     cfg.shard = Some(ShardConfig {
         dp_shards: 4,
-        rebalance: false,
         window_batches: 4,
         ..ShardConfig::default()
     });

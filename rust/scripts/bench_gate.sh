@@ -7,11 +7,15 @@
 # mean step within 1.02× of recorder-off on the same fleet — bit-identical
 # by contract), and the PR-9 audit pair (counterfactual pricing via delta
 # replay at ≤ ½× a fresh re-sim over the same 64 batches — bit-identical
-# by the pricer's own in-bench assertion).
+# by the pricer's own in-bench assertion), and the PR-10 interleaving
+# pairs (bubble-filling execution strictly faster mean step AND strictly
+# smaller bubble fraction than plain DFLOP on the video mixture —
+# simulated seconds from paired runs under a provably-optimal ILP
+# regime).
 #
 # Usage:  rust/scripts/bench_gate.sh [<out.json>]
 #
-# <out.json> defaults to BENCH_PR9.json at the repository root. The run is
+# <out.json> defaults to BENCH_PR10.json at the repository root. The run is
 # single-threaded (override with DFLOP_THREADS) and quick-mode by default
 # so CI finishes in seconds; set FULL=1 for stable full-rep statistics.
 # Alongside the merged document, per-target BENCH_<target>.json files are
@@ -24,7 +28,7 @@ set -eu
 
 root="$(git rev-parse --show-toplevel)"
 cd "$root"
-out="${1:-$root/BENCH_PR9.json}"
+out="${1:-$root/BENCH_PR10.json}"
 case "$out" in
     /*) ;;
     *) out="$root/$out" ;;

@@ -27,7 +27,7 @@ use crate::engine::Draw;
 use crate::fault::FleetView;
 use crate::model::catalog::Mllm;
 use crate::perfmodel::Truth;
-use crate::pipeline::build::{iterate_ws, IterationStats, SystemPlan};
+use crate::pipeline::build::{iterate_interleaved, iterate_ws, IterationStats, SystemPlan};
 use crate::pipeline::sim::SimWorkspace;
 use crate::profiling::estimator::Estimator;
 use crate::scheduler::correction::{Correction, CorrectionConfig};
@@ -78,6 +78,11 @@ pub trait ExecModel {
     fn health(&self) -> Option<&FleetView> {
         None
     }
+
+    /// Expose the fault layer's *confirmed* (debounced) health — what
+    /// responses may react to, as opposed to [`ExecModel::set_health`]'s
+    /// raw injected view, which only charges execution. Default no-op.
+    fn set_confirmed_health(&mut self, _view: &FleetView) {}
 }
 
 /// Materialize bucket index groups into item-shape buckets.
@@ -114,7 +119,10 @@ impl<'a> SingleReplicaExec<'a> {
     ) -> SingleReplicaExec<'a> {
         let uses_scheduler = matches!(
             kind,
-            SystemKind::Dflop | SystemKind::DflopAdaptive | SystemKind::DflopSchedulerOnly
+            SystemKind::Dflop
+                | SystemKind::DflopAdaptive
+                | SystemKind::DflopInterleaved
+                | SystemKind::DflopSchedulerOnly
         );
         let mut correction_cfg = CorrectionConfig::default();
         if cfg.disable_correction {
@@ -223,6 +231,72 @@ impl ExecModel for SingleReplicaExec<'_> {
     }
 }
 
+/// Bubble-filling interleaved execution (`SystemKind::DflopInterleaved`):
+/// schedules exactly like [`SingleReplicaExec`] (same ILP/LPT bucketing,
+/// same Adaptive Correction), but executes through
+/// `pipeline::build::iterate_interleaved`, which decomposes each
+/// microbatch's first encoder leg into unit-granularity sub-ops and packs
+/// them into the LLM stages' bubble slots. With the fill pass disabled
+/// (`RunConfig::bubble_fill = false`) every call delegates verbatim to the
+/// inner model, so the run is bit-identical to plain DFLOP — the parity
+/// baseline `tests/engine_parity.rs` pins.
+pub struct InterleavedExec<'a> {
+    inner: SingleReplicaExec<'a>,
+    fill: bool,
+}
+
+impl<'a> InterleavedExec<'a> {
+    pub fn new(
+        m: &'a Mllm,
+        truth: &'a Truth,
+        est: &'a Estimator<'a>,
+        theta: crate::optimizer::plan::Theta,
+        cfg: &RunConfig,
+    ) -> InterleavedExec<'a> {
+        InterleavedExec {
+            inner: SingleReplicaExec::new(
+                SystemKind::DflopInterleaved,
+                m,
+                truth,
+                est,
+                theta,
+                cfg,
+            ),
+            fill: cfg.bubble_fill,
+        }
+    }
+}
+
+impl ExecModel for InterleavedExec<'_> {
+    fn apply_plan(&mut self, plan: &PlanSet) {
+        self.inner.apply_plan(plan);
+    }
+
+    fn plan(&self) -> &PlanSet {
+        self.inner.plan()
+    }
+
+    fn schedule(&mut self, draw: &Draw, tel: &mut Telemetry) -> Scheduled {
+        self.inner.schedule(draw, tel)
+    }
+
+    fn execute(&mut self, sched: &Scheduled, tel: &mut Telemetry) -> IterationStats {
+        if !self.fill {
+            return self.inner.execute(sched, tel);
+        }
+        let plan = SystemPlan {
+            m: self.inner.m,
+            truth: self.inner.truth,
+            theta: self.inner.plan.global,
+        };
+        iterate_interleaved(&plan, &sched.replicas[0], &mut self.inner.ws)
+    }
+
+    fn correct(&mut self, sched: &Scheduled, stats: &IterationStats) {
+        self.inner.correct(sched, stats);
+    }
+}
+
 /// Combine one step's per-replica iteration stats into a cluster-level
 /// view: stage arrays concatenate in shard order, idle is charged against
 /// the slowest replica's pipeline (straggler wait shows up as idle on the
@@ -256,6 +330,7 @@ fn merge_shard_iterations(per: Vec<IterationStats>, barrier: &BarrierStats) -> I
         total_flop,
         buckets,
         timeline: Vec::new(),
+        fills: Vec::new(),
     }
 }
 
@@ -273,6 +348,11 @@ pub struct ShardedExec<'a> {
     /// only); `None` or an all-healthy view leaves the execution path
     /// bit-identical to a run without fault injection.
     health: Option<FleetView>,
+    /// Confirmed (debounced) health, active-member order — the response
+    /// side of the split: the rebalance pricing weights item costs by it.
+    /// `None` or all-ones leaves the pricing bit-identical to a healthy
+    /// run. Only set on degradation-aware arms (`FaultConfig::respond`).
+    confirmed: Option<FleetView>,
 }
 
 impl<'a> ShardedExec<'a> {
@@ -291,6 +371,7 @@ impl<'a> ShardedExec<'a> {
             gate: ShardWindows::new(sc.dp_shards, sc.window_batches),
             sc: sc.clone(),
             health: None,
+            confirmed: None,
         }
     }
 }
@@ -330,11 +411,31 @@ impl ExecModel for ShardedExec<'_> {
             .collect();
         let skewed = self.sc.rebalance && self.gate.skewed(self.sc.skew_enter);
         let groups: Vec<Vec<usize>> = if skewed {
+            // Degradation-aware pricing: a confirmed straggler executes
+            // its items slower, so each item's cost is weighted by its
+            // home shard's confirmed slowdown factor — the migration walk
+            // then moves work *off* degraded replicas instead of
+            // balancing blindly. A healthy / absent confirmed view leaves
+            // every cost bit-identical to the unweighted computation.
+            let conf = self.confirmed.as_ref().filter(|v| {
+                v.slowdown.len() == shards && v.slowdown.iter().any(|&f| f != 1.0)
+            });
             let items: Vec<ItemCost> = pooled
                 .iter()
-                .map(|s| ItemCost {
-                    enc: self.est.enc_item_dur(s, theta.enc.tp) / theta.enc.pp as f64,
-                    llm: self.est.llm_item_dur(s, theta.llm.tp) / theta.llm.pp as f64,
+                .enumerate()
+                .map(|(i, s)| {
+                    let mut c = ItemCost {
+                        enc: self.est.enc_item_dur(s, theta.enc.tp) / theta.enc.pp as f64,
+                        llm: self.est.llm_item_dur(s, theta.llm.tp) / theta.llm.pp as f64,
+                    };
+                    if let Some(v) = conf {
+                        let f = v.slowdown[home[i]];
+                        if f != 1.0 {
+                            c.enc *= f;
+                            c.llm *= f;
+                        }
+                    }
+                    c
                 })
                 .collect();
             let rb = rebalance(&items, &home, shards, &self.sc.balance);
@@ -369,6 +470,10 @@ impl ExecModel for ShardedExec<'_> {
 
     fn health(&self) -> Option<&FleetView> {
         self.health.as_ref()
+    }
+
+    fn set_confirmed_health(&mut self, view: &FleetView) {
+        self.confirmed = Some(view.clone());
     }
 
     fn execute(&mut self, sched: &Scheduled, tel: &mut Telemetry) -> IterationStats {

@@ -61,7 +61,7 @@ use crate::sim::trainer::{RunConfig, RunResult, SystemKind};
 use crate::stream::replan::ReplanContext;
 use crate::stream::window::ShapeStats;
 use crate::util::error::Result;
-use exec::{ExecModel, ShardedExec, SingleReplicaExec};
+use exec::{ExecModel, InterleavedExec, ShardedExec, SingleReplicaExec};
 use policy::{AdaptivePolicy, FaultAwarePolicy, PerShardPolicy, PlanPolicy, StaticPolicy};
 use std::time::Duration;
 use telemetry::Telemetry;
@@ -232,7 +232,10 @@ fn offline(kind: SystemKind, m: &Mllm, dataset_key: &str, cfg: &RunConfig) -> Of
     let profiling_seconds = backend.measured_seconds().max(data.profiling_seconds);
 
     let (theta, optimizer_elapsed) = match kind {
-        SystemKind::Dflop | SystemKind::DflopAdaptive | SystemKind::DflopOptimizerOnly => {
+        SystemKind::Dflop
+        | SystemKind::DflopInterleaved
+        | SystemKind::DflopAdaptive
+        | SystemKind::DflopOptimizerOnly => {
             let inp = OptimizerInputs {
                 m,
                 profile: &profile,
@@ -372,6 +375,8 @@ pub fn run(kind: SystemKind, m: &Mllm, dataset_key: &str, cfg: &RunConfig) -> Re
     // Execution model: how a scheduled iteration actually runs.
     let mut exec: Box<dyn ExecModel + '_> = if sharded {
         Box::new(ShardedExec::new(m, &off.truth, &est, off.theta, &sc))
+    } else if kind == SystemKind::DflopInterleaved {
+        Box::new(InterleavedExec::new(m, &off.truth, &est, off.theta, cfg))
     } else {
         Box::new(SingleReplicaExec::new(kind, m, &off.truth, &est, off.theta, cfg))
     };
@@ -392,6 +397,13 @@ pub fn run(kind: SystemKind, m: &Mllm, dataset_key: &str, cfg: &RunConfig) -> Re
             tel.record_fault(&delta);
             feed.set_fleet(fs.members(), fs.counts(cfg.gbs));
             exec.set_health(&fs.view());
+            // Responding fleets also steer the rebalance pricing by the
+            // *confirmed* (debounced) factors — the same view the batch
+            // split uses — so non-responding and healthy runs stay
+            // bit-identical to the un-injected path.
+            if cfg.faults.as_ref().is_some_and(|fc| fc.respond) {
+                exec.set_confirmed_health(&fs.confirmed_view());
+            }
             policy.observe_health(fs.confirmed_active());
         }
         let draw = feed.draw(m);

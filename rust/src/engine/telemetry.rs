@@ -173,6 +173,7 @@ mod tests {
                 llm_shape_bucket: 0,
             }],
             timeline: Vec::new(),
+            fills: Vec::new(),
         }
     }
 

@@ -156,6 +156,21 @@ impl FleetState {
         }
     }
 
+    /// The *confirmed* (debounced) factors in active-member order — what
+    /// a responding executor may steer by without thrashing on transient
+    /// blips. Same member mapping as [`FleetState::view`], but sourced
+    /// from the confirmed health the replanner already trusts.
+    pub fn confirmed_view(&self) -> FleetView {
+        FleetView {
+            slowdown: self
+                .members()
+                .iter()
+                .map(|&s| self.confirmed.slowdown[s])
+                .collect(),
+            link_factor: self.confirmed.link_factor,
+        }
+    }
+
     /// Confirmed active-member count — what a fault-aware policy plans
     /// for (debounced, so transient blips don't trigger replans).
     pub fn confirmed_active(&self) -> usize {
@@ -225,6 +240,26 @@ mod tests {
             st.advance(it);
         }
         assert_eq!(st.counts(48), vec![16, 16, 16], "static fleets split evenly");
+    }
+
+    #[test]
+    fn confirmed_view_maps_slots_to_active_member_order() {
+        let mut fs = fleet("skewed-churn", true);
+        for it in 0..9 {
+            fs.advance(it);
+        }
+        // Slot 3 is down, so the confirmed view must be 3-wide and index
+        // by *active* position — confirmed_view()[1] is slot 1's factor.
+        let cv = fs.confirmed_view();
+        assert_eq!(cv.slowdown.len(), fs.members().len());
+        for (pos, &slot) in fs.members().iter().enumerate() {
+            assert_eq!(
+                cv.slowdown[pos].to_bits(),
+                fs.confirmed_health().slowdown[slot].to_bits(),
+                "active position {pos} must carry slot {slot}'s confirmed factor"
+            );
+        }
+        assert!(cv.is_degrading(), "the 1.7x straggler is confirmed by now");
     }
 
     #[test]

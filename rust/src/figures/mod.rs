@@ -990,10 +990,11 @@ pub const FLEET_MIN_ITERS: usize = 18;
 /// seeded [`crate::fault::FaultTrace`] — identical failures, stragglers,
 /// and link degradation — and differ only in whether the system responds
 /// (slowdown-weighted resharding + warm topology replans). Rebalancing is
-/// off: the cost balancer is slowdown-blind, so it would fight the
-/// fault-aware batch weighting. The "none" control pins the zero-replans
-/// guarantee. Returns `(trace, dataset, static, aware)` rows in scenario
-/// order.
+/// on (the default): since PR 10 the cost balancer prices items by the
+/// *confirmed* per-shard slowdown (`engine::exec::ShardedExec`), so it
+/// composes with — instead of fighting — the fault-aware batch weighting.
+/// The "none" control pins the zero-replans guarantee. Returns
+/// `(trace, dataset, static, aware)` rows in scenario order.
 pub fn fleet_grid_with(
     o: &FigOpts,
     dp_shards: usize,
@@ -1013,7 +1014,6 @@ pub fn fleet_grid_with(
             let mut cfg = RunConfig::new(o.nodes, o.gbs, iters, o.seed);
             cfg.shard = Some(ShardConfig {
                 dp_shards,
-                rebalance: false,
                 window_batches: 4,
                 ..ShardConfig::default()
             });
@@ -1162,12 +1162,38 @@ pub fn fig_bubbles(o: &FigOpts) -> String {
             f(longest, 3),
         ]);
     }
+    // Before/after for the bubble-filling execution model (PR 10): plain
+    // DFLOP vs DFLOP (interleaved) on the video mixture, where encoder
+    // skew creates the bubbles the fill pass targets.
+    let vm = internvl_25(qwen25("7b"));
+    let pair = run_grid(
+        cross_specs(&[&vm], &[SystemKind::Dflop, SystemKind::DflopInterleaved], "video"),
+        o,
+    );
+    let mut t3 = Table::new(
+        "Bubbles — bubble-filling before/after (InternVL-2.5 / Qwen2.5 7B, video dataset)",
+        &["system", "mean step (s)", "bubble fraction", "sub-ops", "filled GPU.s"],
+    );
+    for (kind, r) in [SystemKind::Dflop, SystemKind::DflopInterleaved].into_iter().zip(&pair) {
+        let fracs: Vec<f64> = r.iterations.iter().map(iteration_bubble_fraction).collect();
+        let mean = fracs.iter().sum::<f64>() / fracs.len().max(1) as f64;
+        let subops: usize = r.iterations.iter().map(|s| s.fills.len()).sum();
+        let filled: f64 = r.iterations.iter().map(|s| s.filled_time()).sum();
+        t3.row(vec![
+            kind.label().to_string(),
+            f(r.mean_iteration_time, 4),
+            f(mean, 3),
+            format!("{subops}"),
+            f(filled, 3),
+        ]);
+    }
     t.render()
         + &t2.render()
         + &format!(
             "stage-area bubble fraction (last DFLOP iteration): {:.3}\n",
             sb.bubble_fraction()
         )
+        + &t3.render()
 }
 
 // ------------------------------------------------------------------
@@ -1243,6 +1269,34 @@ pub fn fig_critpath(o: &FigOpts) -> String {
             f(s.slack, 3),
         ]);
     }
+    // Before/after for the bubble-filling execution model (PR 10): the
+    // interleaved system consumes exactly these slack slots, so its chain
+    // accounting shows how much encoder blame the fill pass removed.
+    let vm = internvl_25(qwen25("7b"));
+    let pair = run_grid(
+        cross_specs(&[&vm], &[SystemKind::Dflop, SystemKind::DflopInterleaved], "video"),
+        o,
+    );
+    let mut t3 = Table::new(
+        "Critical path — bubble-filling before/after (InternVL-2.5 / Qwen2.5 7B, video dataset)",
+        &["system", "makespan", "enc (s)", "llm (s)", "comm wait (s)", "sub-ops"],
+    );
+    for (kind, r) in [SystemKind::Dflop, SystemKind::DflopInterleaved].into_iter().zip(&pair) {
+        let last = r.iterations.last().expect("at least one iteration");
+        let cp = critical_path(&last.timeline, last.n_stages, last.pipeline_makespan)
+            .expect("recorded timeline always yields a chain");
+        let enc_stages = r.theta.enc.dp * r.theta.enc.pp;
+        let (enc, llm, comm) = cp.modality_blame(enc_stages);
+        let subops: usize = r.iterations.iter().map(|s| s.fills.len()).sum();
+        t3.row(vec![
+            kind.label().to_string(),
+            secs(last.pipeline_makespan),
+            f(enc, 3),
+            f(llm, 3),
+            f(comm, 3),
+            format!("{subops}"),
+        ]);
+    }
     t.render()
         + &t2.render()
         + &format!(
@@ -1251,6 +1305,7 @@ pub fn fig_critpath(o: &FigOpts) -> String {
             slacks.len(),
             cp.comm_wait(),
         )
+        + &t3.render()
 }
 
 // ------------------------------------------------------------------

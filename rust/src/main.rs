@@ -4,7 +4,8 @@
 //! ```text
 //! dflop figures --fig <1|2|4|7|8|9|10|11|12|13|14|15|16|17|drift|18|shard|19|hetero|20|fleet|bubbles|critpath|audit|all> [--nodes N] [--gbs N] [--iters N] [--seed S] [--threads N]
 //! dflop table   --n <2|4>
-//! dflop run     --system <dflop|adaptive|sharded|megatron|pytorch|opt-only|sched-only> --model <key> --dataset <key>
+//! dflop run     --system <dflop|interleaved|adaptive|sharded|megatron|pytorch|opt-only|sched-only> --model <key> --dataset <key>
+//!               [--no-bubble-fill]                                                                   # --system interleaved
 //!               [--dp-shards N] [--shard-skew <skewed|hot|laggard|homogeneous>] [--static-sharding] [--hetero-plans]   # --system sharded
 //!               [--faults <none|churn|straggler|degraded-link|skewed-churn|long-horizon>] [--static-faults]            # fault-injected fleet
 //!               [--trace out.json] [--metrics out.json] [--audit] [--json out.json]   # obs: trace / metrics / audit / summary
@@ -55,7 +56,10 @@ fn real_main() -> Result<()> {
             "artifacts", "threads", "dp-shards", "shard-skew", "faults", "trace",
             "metrics", "json",
         ],
-        boolean: vec!["help", "static-sharding", "hetero-plans", "static-faults", "audit"],
+        boolean: vec![
+            "help", "static-sharding", "hetero-plans", "static-faults", "audit",
+            "no-bubble-fill",
+        ],
     };
     let args = Args::parse(std::env::args().skip(1), &spec)?;
     // Pool width for every parallel section below (0 = auto-detect).
@@ -82,6 +86,7 @@ fn real_main() -> Result<()> {
             let o = opts_from(&args)?;
             let kind = match args.get_or("system", "dflop").as_str() {
                 "dflop" => SystemKind::Dflop,
+                "interleaved" => SystemKind::DflopInterleaved,
                 "adaptive" => SystemKind::DflopAdaptive,
                 "sharded" => SystemKind::DflopSharded,
                 "megatron" => SystemKind::Megatron,
@@ -95,6 +100,9 @@ fn real_main() -> Result<()> {
                 .ok_or_else(|| err!("unknown model '{model_key}' (try `dflop models`)"))?;
             let mut dataset = args.get_or("dataset", "mixed");
             let mut cfg = RunConfig::new(o.nodes, o.gbs, o.iters, o.seed);
+            // --no-bubble-fill pins the interleaved system to the plain
+            // DFLOP execution path (the bit-parity anchor).
+            cfg.bubble_fill = !args.has("no-bubble-fill");
             if kind == SystemKind::DflopSharded {
                 // --dp-shards N replicas of the --nodes cluster; --shard-skew
                 // picks a `data::sources` shard scenario (homogeneous keeps
@@ -156,6 +164,16 @@ fn real_main() -> Result<()> {
             println!("profiling     : {:.1} min", r.profiling_seconds / 60.0);
             println!("optimizer     : {:?}", r.optimizer_elapsed);
             println!("LPT fallbacks : {}/{}", r.lpt_fallbacks, r.sched_elapsed.len());
+            if kind == SystemKind::DflopInterleaved {
+                let filled: f64 = r.iterations.iter().map(|s| s.filled_time()).sum();
+                let subops: usize = r.iterations.iter().map(|s| s.fills.len()).sum();
+                println!(
+                    "bubble fill   : {} sub-ops, {:.3} GPU·s packed into bubbles{}",
+                    subops,
+                    filled,
+                    if cfg.bubble_fill { "" } else { " (fill disabled)" }
+                );
+            }
             if kind == SystemKind::DflopSharded {
                 let sc = cfg.shard.as_ref().expect("shard config set above");
                 println!("dp shards     : {}", sc.dp_shards);
@@ -336,6 +354,11 @@ fn real_main() -> Result<()> {
         _ => {
             println!("usage: dflop <figures|table|run|optimize|profile-real|models> [options]");
             println!("common options: --threads N (evaluation thread pool; default all cores)");
+            println!(
+                "run --system interleaved: bubble-filling DFLOP (encoder sub-ops \
+                 packed into 1F1B bubbles); --no-bubble-fill pins it to the plain \
+                 DFLOP execution path (bit-parity anchor)"
+            );
             println!(
                 "run --system sharded: --dp-shards N (DP replicas, default 4), \
                  --shard-skew <skewed|hot|laggard|homogeneous> (per-shard data skew \

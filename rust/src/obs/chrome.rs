@@ -440,6 +440,7 @@ mod tests {
                 start: t * 0.25,
                 finish: t,
             }],
+            fills: Vec::new(),
         }
     }
 

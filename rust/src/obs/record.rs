@@ -458,6 +458,7 @@ mod tests {
                 start: 0.0,
                 finish: t,
             }],
+            fills: Vec::new(),
         }
     }
 

@@ -18,9 +18,12 @@
 
 use crate::data::item::ItemShape;
 use crate::model::catalog::Mllm;
+use crate::obs::bubble::{stage_bubbles, Gap};
+use crate::obs::critical::{critical_path, op_slack};
 use crate::optimizer::plan::Theta;
 use crate::perfmodel::Truth;
-use crate::pipeline::sim::{OpRecord, SimWorkspace};
+use crate::pipeline::sim::{FillOp, OpRecord, SimWorkspace};
+use crate::stream::window::ShapeStats;
 
 /// A system's execution plan for one iteration: the strategy plus the
 /// scheduled bucket contents.
@@ -60,6 +63,15 @@ pub struct IterationStats {
     pub total_flop: f64,
     pub buckets: Vec<BucketExec>,
     pub timeline: Vec<OpRecord>,
+    /// Encoder sub-ops the bubble-filling pass placed into other stages'
+    /// idle gaps ([`iterate_interleaved`]; empty on every other execution
+    /// path). The placed work is charged into the host stage's
+    /// `stage_busy` (so `stage_idle` reports true idle), but deliberately
+    /// kept out of `timeline` — the chain timeline stays
+    /// one-record-per-(bucket, stage, direction) for the critical-path op
+    /// index — and `stage_flop` is *not* re-attributed (total FLOP is
+    /// conserved; per-stage FLOP keeps the plan's static layout).
+    pub fills: Vec<FillOp>,
 }
 
 impl IterationStats {
@@ -67,6 +79,12 @@ impl IterationStats {
     /// (Fig 13's metric), summed over stages.
     pub fn total_idle(&self) -> f64 {
         self.stage_idle.iter().sum()
+    }
+
+    /// Total encoder work re-placed into bubbles by the bubble-filling
+    /// pass (0.0 on non-interleaved paths).
+    pub fn filled_time(&self) -> f64 {
+        self.fills.iter().map(FillOp::dur).sum()
     }
 
     /// Achieved cluster throughput in FLOP/s for this iteration.
@@ -123,6 +141,50 @@ pub fn iterate_ws(
     buckets: &[Vec<ItemShape>],
     ws: &mut SimWorkspace,
 ) -> IterationStats {
+    let built = build_routes(plan, buckets, ws);
+    let pipeline_makespan = ws.run(built.n_stages, true);
+    assemble(built, ws, pipeline_makespan)
+}
+
+/// The first encoder leg of one bucket's route: the decomposition source
+/// the bubble-filling pass offloads from. Its forward op has no
+/// dependency (inputs are host-resident at t = 0), so sub-ops split from
+/// it are placeable into any bubble that closes before the consumer —
+/// the op at route position 1 — starts.
+#[derive(Clone, Copy, Debug)]
+struct EncHead {
+    /// Stage hosting the leg (`enc_stage(e, 0)`).
+    stage: usize,
+    /// Stage of the route's position-1 op (every route has depth ≥ 2:
+    /// `e_pp` encoder legs followed by `l_pp` LLM legs).
+    consumer_stage: usize,
+    /// Forward / backward cost of the leg as built.
+    fwd: f64,
+    bwd: f64,
+}
+
+/// Everything [`build_routes`] produces besides the routes themselves
+/// (which live in the workspace arena).
+struct BuiltRoutes {
+    n_stages: usize,
+    /// Stages `[0, enc_stages)` host encoder pipeline legs; the rest are
+    /// LLM stages (the module-docs layout).
+    enc_stages: usize,
+    stage_flop: Vec<f64>,
+    total_flop: f64,
+    bucket_exec: Vec<BucketExec>,
+    dp_sync: f64,
+    /// Per bucket, aligned with `buckets`.
+    enc_head: Vec<EncHead>,
+}
+
+/// Translate θ plus scheduled buckets into routes in the workspace arena
+/// (shared by the plain and bubble-filling execution paths).
+fn build_routes(
+    plan: &SystemPlan,
+    buckets: &[Vec<ItemShape>],
+    ws: &mut SimWorkspace,
+) -> BuiltRoutes {
     let th = plan.theta;
     let (e_pp, e_dp) = (th.enc.pp, th.enc.dp);
     let (l_pp, l_dp) = (th.llm.pp, th.llm.dp);
@@ -135,6 +197,7 @@ pub fn iterate_ws(
 
     ws.routes.clear();
     let mut bucket_exec = Vec::with_capacity(buckets.len());
+    let mut enc_head = Vec::with_capacity(buckets.len());
     let mut stage_flop = vec![0.0f64; n_stages];
     let mut total_flop = 0.0f64;
 
@@ -193,9 +256,13 @@ pub fn iterate_ws(
             llm_flop,
             llm_shape_bucket: Truth::llm_bucket(total_seq),
         });
+        enc_head.push(EncHead {
+            stage: enc_stage(e, 0),
+            consumer_stage: if e_pp > 1 { enc_stage(e, 1) } else { llm_stage(g, 0) },
+            fwd: enc_t / 3.0,
+            bwd: enc_t * 2.0 / 3.0,
+        });
     }
-
-    let pipeline_makespan = ws.run(n_stages, true);
 
     // ---- data-parallel gradient synchronization (straggler-inclusive:
     // the all-reduce starts only after the slowest pipeline drains, which
@@ -209,17 +276,250 @@ pub fn iterate_ws(
         .dp_allreduce_time(enc_grad_bytes, e_dp)
         .max(plan.truth.dp_allreduce_time(llm_grad_bytes, l_dp));
 
+    BuiltRoutes {
+        n_stages,
+        enc_stages: e_dp * e_pp,
+        stage_flop,
+        total_flop,
+        bucket_exec,
+        dp_sync,
+        enc_head,
+    }
+}
+
+/// Package the workspace's last run into [`IterationStats`].
+fn assemble(built: BuiltRoutes, ws: &SimWorkspace, pipeline_makespan: f64) -> IterationStats {
     IterationStats {
-        iteration_time: pipeline_makespan + dp_sync,
+        iteration_time: pipeline_makespan + built.dp_sync,
         pipeline_makespan,
-        dp_sync_time: dp_sync,
+        dp_sync_time: built.dp_sync,
         stage_busy: ws.stage_busy().to_vec(),
         stage_idle: ws.stage_busy().iter().map(|&b| pipeline_makespan - b).collect(),
-        stage_flop,
-        n_stages,
-        total_flop,
-        buckets: bucket_exec,
+        stage_flop: built.stage_flop,
+        n_stages: built.n_stages,
+        total_flop: built.total_flop,
+        buckets: built.bucket_exec,
         timeline: ws.timeline().to_vec(),
+        fills: ws.fills.clone(),
+    }
+}
+
+/// Unit-granularity cap: one bucket's first encoder leg splits into at
+/// most this many equal sub-ops (chunk count = encoder units, capped).
+const MAX_SUBOPS: usize = 64;
+/// Fraction of the leg that may be offloaded into bubbles; the residual
+/// models the dispatch/launch work that cannot leave the home stage.
+const MAX_OFFLOAD_FRAC: f64 = 0.9;
+/// Safety cap on the place-or-drop refinement loop. Each failed round
+/// strictly shrinks the offload set, so termination never relies on it.
+const MAX_FILL_ROUNDS: usize = 8;
+
+/// One bucket's offload decision: `take` equal chunks of `chunk` seconds
+/// leave the first encoder leg (total `delta`).
+#[derive(Clone, Copy, Debug)]
+struct Offload {
+    bucket: usize,
+    take: usize,
+    chunk: f64,
+    delta: f64,
+}
+
+/// Bubble-filling interleaved execution of one iteration
+/// (`SystemKind::DflopInterleaved`): run the plain 1F1B schedule, then
+/// decompose each microbatch's first encoder leg into unit-granularity
+/// sub-ops — driven by the same per-microbatch [`ShapeStats`] the stream
+/// subsystem tracks — and pack them into the LLM stages' idle gaps
+/// (warm-up, steady-state, and drain bubbles alike).
+///
+/// Mechanics, two passes over the event core:
+///
+/// 1. **Measure.** Run the plain schedule; `obs::critical::op_slack`
+///    gates which encoder head legs are worth offloading (slack ≥ own
+///    duration ⇒ off-critical, skipped) and `critical_path`'s modality
+///    blame gates the pass as a whole (no encoder seconds on the chain ⇒
+///    nothing to win).
+/// 2. **Shrink & place.** Shrink the chosen legs by their offloaded
+///    share (`update_leg` + [`SimWorkspace::mark_duration_dependent`] —
+///    the edits are duration-derived, so delta replays must not trust
+///    the old record), re-run, and place each bucket's sub-ops
+///    earliest-deadline-first into the *new* schedule's idle gaps
+///    (`obs::bubble::stage_bubbles` on LLM stages), deadline = the
+///    bucket's route-position-1 op start (sub-op results must be
+///    gathered before the consumer starts; the sub-op duration includes
+///    its return transfer). Buckets whose sub-ops do not all fit are
+///    dropped from the offload set and the pass repeats; if no
+///    improving, fully-placed set remains, the iteration falls back to
+///    the plain schedule bit-for-bit.
+///
+/// Placed sub-ops are charged into the host stage's busy time and
+/// reported in [`IterationStats::fills`]; total work is conserved, the
+/// makespan strictly drops whenever fills are reported.
+pub fn iterate_interleaved(
+    plan: &SystemPlan,
+    buckets: &[Vec<ItemShape>],
+    ws: &mut SimWorkspace,
+) -> IterationStats {
+    let built = build_routes(plan, buckets, ws);
+    let n_stages = built.n_stages;
+    let baseline = ws.run(n_stages, true);
+    if baseline <= 0.0 {
+        return assemble(built, ws, baseline);
+    }
+
+    // ---- pass 1: measure — is encoder work on the critical chain, and
+    // which head legs are tight enough that shrinking them can move it?
+    let enc_blame = match critical_path(ws.timeline(), n_stages, baseline) {
+        Some(cp) => cp.modality_blame(built.enc_stages).0,
+        None => 0.0,
+    };
+    if enc_blame <= 0.0 {
+        return assemble(built, ws, baseline);
+    }
+    let mut head_slack = vec![f64::INFINITY; buckets.len()];
+    for o in op_slack(ws.timeline(), n_stages, baseline) {
+        if o.is_forward
+            && o.bucket < built.enc_head.len()
+            && o.stage == built.enc_head[o.bucket].stage
+        {
+            head_slack[o.bucket] = o.slack;
+        }
+    }
+
+    let mut active: Vec<Offload> = Vec::new();
+    for (j, items) in buckets.iter().enumerate() {
+        let head = built.enc_head[j];
+        if head.fwd <= 0.0 || head_slack[j] >= head.fwd {
+            continue;
+        }
+        // Decomposition granularity from the microbatch's shape stats:
+        // one sub-op per encoder unit (tile / frame / audio-second),
+        // capped — the per-unit share of the leg is the schedulable
+        // quantum.
+        let st = ShapeStats::of_batch(items);
+        let n_chunks = (st.units_sum as usize).clamp(1, MAX_SUBOPS);
+        let take = (n_chunks as f64 * MAX_OFFLOAD_FRAC) as usize;
+        if take == 0 {
+            continue;
+        }
+        let chunk = head.fwd / n_chunks as f64;
+        active.push(Offload { bucket: j, take, chunk, delta: chunk * take as f64 });
+    }
+
+    // ---- pass 2 (iterated): shrink, re-run, place or drop ----
+    for _round in 0..MAX_FILL_ROUNDS {
+        if active.is_empty() {
+            break;
+        }
+        for o in &active {
+            let h = built.enc_head[o.bucket];
+            ws.update_leg(o.bucket, 0, h.fwd - o.delta, h.bwd);
+        }
+        ws.mark_duration_dependent();
+        let makespan = ws.run(n_stages, true);
+        let placed = if makespan < baseline {
+            place_fills(ws.timeline(), n_stages, makespan, ws.stage_busy(), &built, &active)
+        } else {
+            // Shrinking did not move the makespan — the bubbles were not
+            // binding after all; give the whole offload back.
+            Err(active.iter().map(|o| o.bucket).collect())
+        };
+        match placed {
+            Ok(fills) => {
+                for &(bucket, stage, start, dur) in &fills {
+                    ws.record_fill(bucket, stage, start, dur);
+                }
+                return assemble(built, ws, makespan);
+            }
+            Err(failed) => {
+                for o in &active {
+                    let h = built.enc_head[o.bucket];
+                    ws.update_leg(o.bucket, 0, h.fwd, h.bwd);
+                }
+                active.retain(|o| !failed.contains(&o.bucket));
+            }
+        }
+    }
+
+    // Nothing could be placed: plain schedule, bit-for-bit.
+    let makespan = ws.run(n_stages, true);
+    assemble(built, ws, makespan)
+}
+
+/// Earliest-deadline-first packing of the active offloads' sub-ops into
+/// the schedule's LLM-stage idle gaps. Pure: validates against the given
+/// timeline only. `Ok` carries every placement as
+/// `(bucket, host stage, start, duration)`; `Err` carries the buckets
+/// whose sub-ops did not all fit (their placements are rolled back, so a
+/// failed bucket consumes no gap capacity).
+fn place_fills(
+    timeline: &[OpRecord],
+    n_stages: usize,
+    makespan: f64,
+    stage_busy: &[f64],
+    built: &BuiltRoutes,
+    active: &[Offload],
+) -> Result<Vec<(usize, usize, f64, f64)>, Vec<usize>> {
+    // Deadline per bucket: its consumer op's start in *this* schedule.
+    let mut deadline = vec![f64::INFINITY; built.enc_head.len()];
+    for op in timeline {
+        if op.is_forward
+            && op.bucket < built.enc_head.len()
+            && op.stage == built.enc_head[op.bucket].consumer_stage
+        {
+            deadline[op.bucket] = op.start;
+        }
+    }
+
+    // Slot list: idle gaps on LLM stages, earliest-opening first.
+    let sb = stage_bubbles(timeline, n_stages, makespan, stage_busy);
+    let mut slots: Vec<Gap> = sb
+        .gaps
+        .into_iter()
+        .filter(|g| g.stage >= built.enc_stages && !g.is_empty())
+        .collect();
+    slots.sort_by(|a, b| {
+        a.start.partial_cmp(&b.start).expect("finite gap times").then(a.stage.cmp(&b.stage))
+    });
+    let mut cursor: Vec<f64> = slots.iter().map(|g| g.start).collect();
+
+    let mut order: Vec<usize> = (0..active.len()).collect();
+    order.sort_by(|&a, &b| {
+        deadline[active[a].bucket]
+            .partial_cmp(&deadline[active[b].bucket])
+            .expect("finite deadlines")
+            .then(active[a].bucket.cmp(&active[b].bucket))
+    });
+
+    let mut placed = Vec::new();
+    let mut failed = Vec::new();
+    for &oi in &order {
+        let o = &active[oi];
+        let dl = deadline[o.bucket];
+        let mark = placed.len();
+        let snapshot = cursor.clone();
+        let mut ok = true;
+        'chunks: for _ in 0..o.take {
+            for (k, g) in slots.iter().enumerate() {
+                let end = cursor[k] + o.chunk;
+                if end <= g.end && end <= dl {
+                    placed.push((o.bucket, g.stage, cursor[k], o.chunk));
+                    cursor[k] = end;
+                    continue 'chunks;
+                }
+            }
+            ok = false;
+            break;
+        }
+        if !ok {
+            placed.truncate(mark);
+            cursor = snapshot;
+            failed.push(o.bucket);
+        }
+    }
+    if failed.is_empty() {
+        Ok(placed)
+    } else {
+        Err(failed)
     }
 }
 
@@ -227,7 +527,8 @@ pub fn iterate_ws(
 mod tests {
     use super::*;
     use crate::data::dataset::Dataset;
-    use crate::model::catalog::{llava_ov, llama3};
+    use crate::model::catalog::{internvl_25, llava_ov, llama3, qwen25};
+    use crate::obs::bubble::iteration_bubble_fraction;
     use crate::optimizer::plan::ModPar;
     use crate::perfmodel::ClusterSpec;
 
@@ -360,6 +661,115 @@ mod tests {
             }
             assert_eq!(first.timeline, r.timeline);
         }
+    }
+
+    #[test]
+    fn interleaved_fills_bubbles_and_cuts_the_makespan() {
+        // Encoder-dominant fixture: internvl's 6B encoder on one stage
+        // against a 3-stage LLM pipeline, pure-video items. The fill pass
+        // must place sub-ops, strictly cut the makespan and the bubble
+        // fraction, conserve total busy work, and keep every fill inside
+        // a legal slot (LLM stage, no overlap with the stage's ops or
+        // other fills, done before the bucket's consumer starts).
+        let m = internvl_25(qwen25("7b"));
+        let truth = Truth::smooth(ClusterSpec::hgx_a100(1));
+        let th = theta(1, 1, 3, 6);
+        let plan = SystemPlan { m: &m, truth: &truth, theta: th };
+        let mut ds = Dataset::by_key("video", 11).expect("video dataset");
+        let buckets: Vec<Vec<ItemShape>> =
+            (0..th.buckets()).map(|_| ds.shaped_batch(&m, 4)).collect();
+
+        let mut ws = SimWorkspace::new();
+        let plain = iterate_ws(&plan, &buckets, &mut ws);
+        let inter = iterate_interleaved(&plan, &buckets, &mut ws);
+
+        assert!(!inter.fills.is_empty(), "no sub-ops placed");
+        assert!(
+            inter.pipeline_makespan < plain.pipeline_makespan,
+            "interleaved {} !< plain {}",
+            inter.pipeline_makespan,
+            plain.pipeline_makespan
+        );
+        assert!(inter.iteration_time < plain.iteration_time);
+        assert!(iteration_bubble_fraction(&inter) < iteration_bubble_fraction(&plain));
+
+        // Work conservation: offloaded chunks are charged back into the
+        // host stages' busy time.
+        let pb: f64 = plain.stage_busy.iter().sum();
+        let ib: f64 = inter.stage_busy.iter().sum();
+        assert!((pb - ib).abs() <= 1e-9 * pb, "busy drifted: plain {pb} inter {ib}");
+        assert!(inter.filled_time() > 0.0);
+
+        // Fill legality against the interleaved schedule.
+        let enc_stages = 1; // e_dp · e_pp
+        let consumer_start = |j: usize| {
+            inter
+                .timeline
+                .iter()
+                .find(|o| o.bucket == j && o.stage == enc_stages && o.is_forward)
+                .expect("consumer op")
+                .start
+        };
+        for f in &inter.fills {
+            assert!(f.stage >= enc_stages, "fill on encoder stage: {f:?}");
+            assert!(f.start >= 0.0 && f.finish <= inter.pipeline_makespan + 1e-12);
+            assert!(f.finish <= consumer_start(f.bucket) + 1e-12, "late fill {f:?}");
+            for o in inter.timeline.iter().filter(|o| o.stage == f.stage) {
+                assert!(
+                    f.finish <= o.start + 1e-12 || o.finish <= f.start + 1e-12,
+                    "fill {f:?} overlaps op {o:?}"
+                );
+            }
+        }
+        for s in enc_stages..inter.n_stages {
+            let mut on_stage: Vec<_> =
+                inter.fills.iter().filter(|f| f.stage == s).collect();
+            on_stage.sort_by(|a, b| a.start.partial_cmp(&b.start).expect("finite"));
+            for w in on_stage.windows(2) {
+                assert!(w[1].start >= w[0].finish - 1e-12, "fills overlap on stage {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_without_placeable_work_is_bit_identical_to_plain() {
+        // Empty bucket set: the pass gates out immediately and the result
+        // must be the plain path bit-for-bit, with an empty fill ledger.
+        let (m, truth) = fixture();
+        let th = theta(1, 1, 2, 4);
+        let plan = SystemPlan { m: &m, truth: &truth, theta: th };
+        let empty: Vec<Vec<ItemShape>> = vec![Vec::new(); 4];
+        let mut ws = SimWorkspace::new();
+        let plain = iterate_ws(&plan, &empty, &mut ws);
+        let inter = iterate_interleaved(&plan, &empty, &mut ws);
+        assert!(inter.fills.is_empty());
+        assert_eq!(plain.iteration_time.to_bits(), inter.iteration_time.to_bits());
+        assert_eq!(plain.timeline, inter.timeline);
+    }
+
+    #[test]
+    fn interleaved_reuse_is_stateless() {
+        // A plain iteration after an interleaved one must be bit-identical
+        // to a fresh-workspace plain iteration: the fill pass leaves no
+        // residue (edited legs are rebuilt, the ledger is cleared).
+        let m = internvl_25(qwen25("7b"));
+        let truth = Truth::smooth(ClusterSpec::hgx_a100(1));
+        let th = theta(1, 1, 3, 6);
+        let plan = SystemPlan { m: &m, truth: &truth, theta: th };
+        let mut ds = Dataset::by_key("video", 23).expect("video dataset");
+        let buckets: Vec<Vec<ItemShape>> =
+            (0..th.buckets()).map(|_| ds.shaped_batch(&m, 4)).collect();
+        let mut ws = SimWorkspace::new();
+        let inter = iterate_interleaved(&plan, &buckets, &mut ws);
+        assert!(!inter.fills.is_empty());
+        let after = iterate_ws(&plan, &buckets, &mut ws);
+        let fresh = iterate(&plan, &buckets);
+        assert!(after.fills.is_empty());
+        assert_eq!(after.iteration_time.to_bits(), fresh.iteration_time.to_bits());
+        for (a, b) in after.stage_busy.iter().zip(&fresh.stage_busy) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(after.timeline, fresh.timeline);
     }
 
     #[test]

@@ -75,6 +75,31 @@ pub struct PipelineResult {
     pub timeline: Vec<OpRecord>,
 }
 
+/// One encoder sub-op placed into another stage's idle gap by the
+/// bubble-filling interleaved executor
+/// (`crate::pipeline::build::iterate_interleaved`). Fill ops are kept
+/// *out* of the op [`SimWorkspace::timeline`] on purpose: the chain
+/// timeline must stay one-record-per-(bucket, stage, direction) so the
+/// critical-path extractor's op index (`crate::obs::critical`) remains
+/// collision-free. Their work is charged into the host stage's busy
+/// accounting via [`SimWorkspace::record_fill`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FillOp {
+    /// Bucket whose encoder leg was decomposed.
+    pub bucket: usize,
+    /// Stage whose bubble hosts the sub-op.
+    pub stage: usize,
+    pub start: f64,
+    pub finish: f64,
+}
+
+impl FillOp {
+    /// Placed duration (`finish − start`).
+    pub fn dur(&self) -> f64 {
+        self.finish - self.start
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 struct OpId {
     bucket: usize,
@@ -233,6 +258,11 @@ pub struct SimWorkspace {
     /// Caller scratch for packed-bucket pricing inputs (e.g.
     /// `Estimator::llm_bucket_dur`); nothing in the core reads it.
     pub seqs: Vec<f64>,
+    /// Bubble-slot ledger: encoder sub-ops the bubble-filling pass placed
+    /// into other stages' idle gaps after the last run (see
+    /// [`SimWorkspace::record_fill`]). Cleared by every run; plain 1F1B
+    /// execution leaves it empty.
+    pub fills: Vec<FillOp>,
 
     // ---- static 1F1B order (rebuilt per run) ----
     /// (bucket, pos) legs grouped by stage, bucket-major within a stage.
@@ -290,6 +320,11 @@ pub struct SimWorkspace {
     /// a conservative full-rerun trigger for the one code path whose
     /// order mutation is hardest to audit.
     hoisted: bool,
+    /// Set by [`SimWorkspace::mark_duration_dependent`]: the current leg
+    /// costs were *derived from a previous run's measured durations*
+    /// (bubble-filling), so the cost-edits-are-exogenous assumption the
+    /// delta record relies on no longer holds. Cleared by every full run.
+    duration_dependent: bool,
 }
 
 impl SimWorkspace {
@@ -444,6 +479,7 @@ impl SimWorkspace {
         self.in_ready.resize(n_stages, false);
         self.ready.clear();
         self.timeline.clear();
+        self.fills.clear();
         self.exec.clear();
         let mut hoisted = false;
 
@@ -585,6 +621,9 @@ impl SimWorkspace {
 
         self.makespan = stage_free.iter().cloned().fold(0.0, f64::max);
         self.tracked = track;
+        // A full run re-derives every finish time from the routes as they
+        // stand, so any prior duration-derived edits are now baked in.
+        self.duration_dependent = false;
         if track {
             self.tracked_version = self.routes.version;
             self.tracked_stages = n_stages;
@@ -628,6 +667,29 @@ impl SimWorkspace {
         }
     }
 
+    /// Declare the pending cost edits *duration-derived*: they were
+    /// computed from a previous run's measured schedule (the bubble-filling
+    /// pass shrinks encoder legs by exactly the work it re-placed into
+    /// observed gaps). The delta record assumes edits are exogenous, so a
+    /// duration-driven editor must call this after its `update_leg` batch —
+    /// it bumps the route structure generation *and* pins a conservative
+    /// flag, forcing the next [`SimWorkspace::delta_run`] onto the full
+    /// tracked path instead of replaying a stale order.
+    pub fn mark_duration_dependent(&mut self) {
+        self.duration_dependent = true;
+        self.routes.version += 1;
+    }
+
+    /// Register one bubble-fill sub-op: append it to the
+    /// [`SimWorkspace::fills`] ledger and charge its duration into the host
+    /// stage's busy time (so `makespan − busy` keeps reporting true idle).
+    /// The caller guarantees `[start, start + dur)` lies inside an idle gap
+    /// of `stage` in the last run's schedule.
+    pub fn record_fill(&mut self, bucket: usize, stage: usize, start: f64, dur: f64) {
+        self.stage_busy[stage] += dur;
+        self.fills.push(FillOp { bucket, stage, start, finish: start + dur });
+    }
+
     /// Re-evaluate the makespan after cost-only edits by replaying the
     /// recorded execution order, recomputing only ops that can have moved:
     /// ops of dirty buckets, ops whose single dependency changed bits, and
@@ -637,11 +699,14 @@ impl SimWorkspace {
     ///
     /// Falls back to a full tracked run when no replayable record exists:
     /// never tracked, the route structure changed (generation mismatch),
-    /// the stage count changed, or the tracked run hoisted. The op
-    /// timeline is not maintained on this path.
+    /// the stage count changed, the tracked run hoisted, or the pending
+    /// edits are duration-derived
+    /// ([`SimWorkspace::mark_duration_dependent`]). The op timeline is not
+    /// maintained on this path.
     pub fn delta_run(&mut self, n_stages: usize) -> f64 {
         if !self.tracked
             || self.hoisted
+            || self.duration_dependent
             || n_stages != self.tracked_stages
             || self.routes.version != self.tracked_version
         {
@@ -1363,5 +1428,85 @@ mod tests {
             ws.delta_run(8);
             assert!(assert_matches_fresh(&ws, 8, &routes), "edit {k}");
         }
+    }
+
+    #[test]
+    fn duration_dependent_edits_force_bit_exact_full_replay() {
+        // Satellite: the bubble-fill hardening contract. A bubble-filling
+        // pass rewrites leg costs *derived from the previous run's measured
+        // schedule* and declares it via mark_duration_dependent(); after
+        // that, delta_run must reproduce a from-scratch simulation of the
+        // edited routes bit-for-bit by conservatively abandoning the stale
+        // record. Randomized edit streams mimic the pass: forward legs
+        // shrink by a duration-derived fraction, several buckets per round,
+        // interleaved with ordinary exogenous edits so the record's
+        // re-arming after each fallback is exercised too.
+        let mut ws = SimWorkspace::new();
+        forall("duration-dependent delta = fresh full sim", 100, |g| {
+            let n_stages = g.size(8);
+            let mut routes = random_routes(g, n_stages);
+            ws.routes.clear();
+            for r in &routes {
+                ws.routes.push_route(r);
+            }
+            ws.run_tracked(n_stages);
+            let mut ok = assert_matches_fresh(&ws, n_stages, &routes);
+            let mut edits = 0usize;
+            for round in 0..4 {
+                if routes.is_empty() || !ok {
+                    break;
+                }
+                let n_edits = g.size(3);
+                for _ in 0..n_edits {
+                    let b = g.rng.below(routes.len() as u64) as usize;
+                    if routes[b].depth() == 0 {
+                        continue;
+                    }
+                    let pos = g.rng.below(routes[b].depth() as u64) as usize;
+                    // Bubble-fill shape: shrink the forward leg by a
+                    // fraction of its *current* (measured) duration.
+                    let fwd = routes[b].fwd[pos] * (1.0 - g.rng.uniform(0.1, 0.9));
+                    let bwd = routes[b].bwd[pos];
+                    routes[b].fwd[pos] = fwd;
+                    ws.update_leg(b, pos, fwd, bwd);
+                    edits += 1;
+                }
+                if round % 2 == 0 {
+                    ws.mark_duration_dependent();
+                }
+                ws.delta_run(n_stages);
+                ok = assert_matches_fresh(&ws, n_stages, &routes);
+            }
+            (
+                format!(
+                    "n_stages={n_stages} n_routes={} edits={edits} makespan={}",
+                    routes.len(),
+                    ws.makespan()
+                ),
+                ok,
+            )
+        });
+    }
+
+    #[test]
+    fn record_fill_charges_busy_and_keeps_the_ledger() {
+        let routes = uniform(3, 4, 1.0, 2.0);
+        let mut ws = SimWorkspace::new();
+        for r in &routes {
+            ws.routes.push_route(r);
+        }
+        ws.run(3, true);
+        let busy0 = ws.stage_busy()[2];
+        ws.record_fill(1, 2, 0.0, 0.5);
+        assert_eq!(ws.fills, vec![FillOp { bucket: 1, stage: 2, start: 0.0, finish: 0.5 }]);
+        assert_eq!(ws.stage_busy()[2].to_bits(), (busy0 + 0.5).to_bits());
+        assert_eq!(ws.fills[0].dur(), 0.5);
+        // Any run clears the ledger.
+        ws.routes.clear();
+        for r in &routes {
+            ws.routes.push_route(r);
+        }
+        ws.run(3, false);
+        assert!(ws.fills.is_empty());
     }
 }

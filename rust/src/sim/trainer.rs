@@ -31,6 +31,13 @@ use std::time::Duration;
 pub enum SystemKind {
     /// Full DFLOP: data-aware optimizer + online scheduler + correction.
     Dflop,
+    /// Full DFLOP plus bubble-filling interleaved execution: per-bucket
+    /// encoder forward work is decomposed into sub-ops (sized by the
+    /// batch's shape stats) and packed into the LLM pipeline's 1F1B
+    /// bubbles (`pipeline::build::iterate_interleaved`).
+    /// `RunConfig::bubble_fill = false` degrades it to plain [`Dflop`]
+    /// bit-for-bit.
+    DflopInterleaved,
     /// Full DFLOP plus the `stream` subsystem: drift detection over the
     /// live batch stream and warm-started replanning on confirmed drift.
     DflopAdaptive,
@@ -56,6 +63,7 @@ impl SystemKind {
     pub fn label(&self) -> &'static str {
         match self {
             SystemKind::Dflop => "DFLOP",
+            SystemKind::DflopInterleaved => "DFLOP (interleaved)",
             SystemKind::DflopAdaptive => "DFLOP (adaptive)",
             SystemKind::DflopSharded => "DFLOP (sharded)",
             SystemKind::DflopOptimizerOnly => "DFLOP (optimizer only)",
@@ -96,6 +104,11 @@ pub struct RunConfig {
     /// default — keeps the recorder off, which is guaranteed zero-cost
     /// and bit-identical to a build without the seam.
     pub obs: Option<ObsConfig>,
+    /// Bubble-filling switch for [`SystemKind::DflopInterleaved`] runs
+    /// (ignored by every other system). `false` disables the fill pass,
+    /// making an interleaved run bit-identical to plain
+    /// [`SystemKind::Dflop`] on every statistic — the parity anchor.
+    pub bubble_fill: bool,
 }
 
 /// Fault-injection arm of a fleet run.
@@ -131,6 +144,7 @@ impl RunConfig {
             shard: None,
             faults: None,
             obs: None,
+            bubble_fill: true,
         }
     }
 }
@@ -364,6 +378,68 @@ mod tests {
             adaptive.replan_events
         );
         assert_eq!(adaptive.theta, frozen.theta);
+    }
+
+    #[test]
+    fn interleaved_beats_plain_dflop_on_video_heavy_mixture() {
+        // The PR-10 acceptance scenario: InternVL's 6B encoder on the
+        // video mixture, where per-bucket unit variance puts encoder
+        // heads on the critical path. Bubble-filling must strictly cut
+        // both the mean step time and the bubble fraction; with the fill
+        // switched off the interleaved system must be bit-identical to
+        // plain DFLOP on every statistic.
+        let m = crate::model::catalog::internvl_25(
+            crate::model::catalog::qwen25("7b"),
+        );
+        let mut cfg = RunConfig::new(2, 16, 4, 42);
+        cfg.profile_samples = 256;
+        // Provably-optimal schedules: the comparison is plan-for-plan,
+        // not incumbent-vs-incumbent.
+        cfg.ilp_budget = Duration::from_secs(10);
+        let plain = run_system(SystemKind::Dflop, &m, "video", &cfg);
+        let inter = run_system(SystemKind::DflopInterleaved, &m, "video", &cfg);
+        assert_eq!(plain.lpt_fallbacks, 0);
+        assert_eq!(inter.lpt_fallbacks, 0);
+        assert_eq!(inter.theta, plain.theta, "fill must not change the plan");
+        assert!(
+            inter.iterations.iter().any(|s| !s.fills.is_empty()),
+            "no iteration placed a single sub-op"
+        );
+        assert!(
+            inter.mean_iteration_time < plain.mean_iteration_time,
+            "interleaved step {:.4}s not below plain {:.4}s",
+            inter.mean_iteration_time,
+            plain.mean_iteration_time
+        );
+        let frac = |r: &RunResult| {
+            r.iterations
+                .iter()
+                .map(crate::obs::bubble::iteration_bubble_fraction)
+                .sum::<f64>()
+                / r.iterations.len() as f64
+        };
+        assert!(
+            frac(&inter) < frac(&plain),
+            "bubble fraction not reduced: {:.4} vs {:.4}",
+            frac(&inter),
+            frac(&plain)
+        );
+
+        // The parity anchor: bubble_fill = false degrades the new kind to
+        // plain DFLOP bit-for-bit.
+        let mut off_cfg = cfg.clone();
+        off_cfg.bubble_fill = false;
+        let off = run_system(SystemKind::DflopInterleaved, &m, "video", &off_cfg);
+        assert_eq!(off.theta, plain.theta);
+        assert_eq!(
+            off.mean_iteration_time.to_bits(),
+            plain.mean_iteration_time.to_bits()
+        );
+        assert_eq!(
+            off.per_gpu_throughput.to_bits(),
+            plain.per_gpu_throughput.to_bits()
+        );
+        assert!(off.iterations.iter().all(|s| s.fills.is_empty()));
     }
 
     fn sharded_cfg(rebalance: bool) -> RunConfig {

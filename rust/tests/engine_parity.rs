@@ -25,7 +25,8 @@ use dflop::baselines::homogeneous::{
 };
 use dflop::data::dataset::Dataset;
 use dflop::data::item::ItemShape;
-use dflop::model::catalog::{llama3, llava_ov, Mllm};
+use dflop::fault::FaultStats;
+use dflop::model::catalog::{internvl_25, llama3, llava_ov, qwen25, Mllm};
 use dflop::optimizer::plan::Theta;
 use dflop::optimizer::search::{optimize, OptimizerInputs};
 use dflop::perfmodel::{ClusterSpec, Truth};
@@ -95,7 +96,10 @@ fn reference_run_system(
     let profiling_seconds = backend.measured_seconds().max(data.profiling_seconds);
 
     let (mut theta, optimizer_elapsed) = match kind {
-        SystemKind::Dflop | SystemKind::DflopAdaptive | SystemKind::DflopOptimizerOnly => {
+        SystemKind::Dflop
+        | SystemKind::DflopInterleaved
+        | SystemKind::DflopAdaptive
+        | SystemKind::DflopOptimizerOnly => {
             let inp = OptimizerInputs {
                 m,
                 profile: &profile,
@@ -126,7 +130,10 @@ fn reference_run_system(
     let est = Estimator::new(m, &profile.throughput);
     let uses_scheduler = matches!(
         kind,
-        SystemKind::Dflop | SystemKind::DflopAdaptive | SystemKind::DflopSchedulerOnly
+        SystemKind::Dflop
+            | SystemKind::DflopInterleaved
+            | SystemKind::DflopAdaptive
+            | SystemKind::DflopSchedulerOnly
     );
     let mut correction_cfg = CorrectionConfig::default();
     if cfg.disable_correction {
@@ -278,9 +285,12 @@ fn reference_run_system(
         replans,
         replan_events,
         straggler_gaps: Vec::new(),
+        straggler_gap_percentiles: Vec::new(),
         migrations: 0,
+        fault: FaultStats::default(),
         hetero_thetas: Vec::new(),
         iterations,
+        obs: None,
     }
 }
 
@@ -309,6 +319,7 @@ fn merge_shard_iterations(per: Vec<IterationStats>, barrier: &BarrierStats) -> I
         total_flop,
         buckets,
         timeline: Vec::new(),
+        fills: Vec::new(),
     }
 }
 
@@ -452,9 +463,12 @@ fn reference_run_sharded(m: &Mllm, scenario: &str, cfg: &RunConfig) -> RunResult
         replans: replanner.swaps(),
         replan_events: replanner.events,
         straggler_gaps,
+        straggler_gap_percentiles: Vec::new(),
         migrations,
+        fault: FaultStats::default(),
         hetero_thetas: Vec::new(),
         iterations,
+        obs: None,
     }
 }
 
@@ -617,6 +631,74 @@ fn parity_adaptive_on_curriculum() {
     let r = dflop::engine::run(SystemKind::DflopAdaptive, &m, "curriculum", &cfg)
         .expect("valid run");
     assert_eq!(r.lpt_fallbacks, 0, "ILP budget expired — shrink the parity instance");
+}
+
+#[test]
+fn parity_interleaved_with_fill_disabled_is_plain_dflop() {
+    let _g = width_guard();
+    // PR-10 anchor: with `bubble_fill = false` the interleaved system
+    // must run the exact plain-DFLOP execution path — the reference
+    // transcription (which has no fill pass at all) is the oracle, at
+    // both pool widths. Same provably-optimal ILP regime as
+    // `parity_scheduled_kinds`.
+    let m = llava_ov(llama3("8b"));
+    let mut cfg = RunConfig::new(1, 16, 3, 42);
+    cfg.profile_samples = 256;
+    cfg.ilp_budget = Duration::from_secs(10);
+    cfg.bubble_fill = false;
+    check_kind_at_widths(SystemKind::DflopInterleaved, &m, "mixed", &cfg);
+    let r = dflop::engine::run(SystemKind::DflopInterleaved, &m, "mixed", &cfg)
+        .expect("valid run");
+    assert_eq!(r.lpt_fallbacks, 0, "ILP budget expired — shrink the parity instance");
+    assert!(r.iterations.iter().all(|s| s.fills.is_empty()), "fill ran while disabled");
+}
+
+#[test]
+fn interleaved_fill_is_bit_deterministic_across_thread_counts() {
+    let _g = width_guard();
+    // The fill pass itself (measure → shrink → pack on the re-simulated
+    // timeline) is serial f64 arithmetic, so an interleaved run must be
+    // bit-identical at any pool width — telemetry, traces, and metrics
+    // included. The video mixture on InternVL makes the pass actually
+    // place sub-ops, so this pins the live path, not a no-op.
+    let m = internvl_25(qwen25("7b"));
+    let mut cfg = RunConfig::new(2, 16, 3, 42);
+    cfg.profile_samples = 256;
+    cfg.ilp_budget = Duration::from_secs(10);
+    cfg.obs = Some(dflop::obs::ObsConfig { timelines: true, metrics: true, audit: false });
+    set_max_threads(1);
+    let serial = dflop::engine::run(SystemKind::DflopInterleaved, &m, "video", &cfg)
+        .expect("valid run");
+    set_max_threads(8);
+    let parallel = dflop::engine::run(SystemKind::DflopInterleaved, &m, "video", &cfg)
+        .expect("valid run");
+    set_max_threads(0);
+    assert_eq!(serial.lpt_fallbacks, 0, "ILP budget expired — shrink the instance");
+    assert!(
+        serial.iterations.iter().any(|s| !s.fills.is_empty()),
+        "fill pass never placed a sub-op — the determinism check is vacuous"
+    );
+    assert_parity(&serial, &parallel, "DflopInterleaved/video@threads=1-vs-8");
+    // The fill ledger bit-matches op for op.
+    for (i, (a, b)) in serial.iterations.iter().zip(&parallel.iterations).enumerate() {
+        assert_eq!(a.fills.len(), b.fills.len(), "iteration {i}: fill count");
+        for (x, y) in a.fills.iter().zip(&b.fills) {
+            assert_eq!(x, y, "iteration {i}: fill op drifted");
+        }
+    }
+    // Traces and metrics are part of the contract too.
+    let sl = serial.obs.as_ref().expect("obs log");
+    let pl = parallel.obs.as_ref().expect("obs log");
+    assert_eq!(
+        dflop::obs::chrome::trace_json(sl),
+        dflop::obs::chrome::trace_json(pl),
+        "Chrome trace drifted with thread count"
+    );
+    assert_eq!(
+        sl.metrics.as_ref().expect("metrics").dump(),
+        pl.metrics.as_ref().expect("metrics").dump(),
+        "metrics dump drifted with thread count"
+    );
 }
 
 #[test]

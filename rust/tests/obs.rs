@@ -40,7 +40,6 @@ fn fleet_cfg(obs: Option<ObsConfig>) -> RunConfig {
     cfg.profile_samples = 256;
     cfg.shard = Some(ShardConfig {
         dp_shards: 4,
-        rebalance: false,
         window_batches: 4,
         ..ShardConfig::default()
     });
@@ -370,7 +369,6 @@ fn long_fleet_cfg(obs: Option<ObsConfig>) -> RunConfig {
     cfg.profile_samples = 256;
     cfg.shard = Some(ShardConfig {
         dp_shards: 4,
-        rebalance: false,
         window_batches: 4,
         ..ShardConfig::default()
     });
